@@ -1,0 +1,142 @@
+//! `cargo bench --bench ablation` — design-choice ablations called out in
+//! DESIGN.md:
+//!
+//!  A. unstructured (engine-free) vs N:M structured sparsity at equal
+//!     global budget — the paper's motivating comparison;
+//!  B. engine-free vs CSR-style index-carrying compression;
+//!  C. DSE budget sweep → Pareto frontier (Proposed vs AutoFold);
+//!  D. FIFO-depth sensitivity of the measured pipeline;
+//!  E. latency-trim phase on/off (what step 4 of the DSE buys).
+
+use logicsparse::config::PruneProfile;
+use logicsparse::cost;
+use logicsparse::device::XCU50;
+use logicsparse::dse::{self, pareto, DseOptions, Strategy};
+use logicsparse::folding::{FoldingConfig, LayerFold};
+use logicsparse::graph::builder::lenet5;
+use logicsparse::sim::{self, Workload};
+use logicsparse::sparsity::{self, nm};
+use logicsparse::util::rng::Pcg32;
+
+fn main() {
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+
+    // ---- A: unstructured vs N:M at the same layer ----
+    println!("=== A. unstructured vs N:M (fc1, 30,720 weights) ===");
+    let fc1 = g.node("fc1").unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let w: Vec<f32> = (0..fc1.weights()).map(|_| rng.normal() as f32).collect();
+    for (n_, m_) in [(2usize, 4usize), (1, 4), (1, 8)] {
+        let mask = nm::nm_mask(&w, fc1.fold_in(), fc1.cout, n_, m_).unwrap();
+        let s_nm = mask.sparsity();
+        // Unstructured at the SAME sparsity: compare baked LUTs.
+        let luts_nm = cost::layer_cost(
+            fc1,
+            &LayerFold::unrolled_sparse(fc1, s_nm),
+            4,
+            4,
+        )
+        .luts;
+        let unstructured =
+            sparsity::magnitude::layer_mask(&w, s_nm).unwrap();
+        // Engine-free hardware cannot tell the masks apart (same nnz) —
+        // the difference is ACCURACY headroom: unstructured keeps the
+        // globally largest weights, N:M only the locally largest.
+        let kept_mag_nm: f32 = w
+            .iter()
+            .zip(&mask.keep)
+            .filter(|(_, &k)| k)
+            .map(|(v, _)| v.abs())
+            .sum();
+        let kept_mag_un: f32 = w
+            .iter()
+            .zip(&unstructured.keep)
+            .filter(|(_, &k)| k)
+            .map(|(v, _)| v.abs())
+            .sum();
+        println!(
+            "  {n_}:{m_}  sparsity {:.2}  baked {luts_nm} LUTs  kept-|w| N:M {:.1} vs unstructured {:.1} ({:+.1}%)",
+            s_nm,
+            kept_mag_nm,
+            kept_mag_un,
+            100.0 * (kept_mag_un - kept_mag_nm) / kept_mag_nm
+        );
+    }
+
+    // ---- B: engine-free vs CSR compression ----
+    println!("\n=== B. engine-free vs CSR-equivalent compression (whole model) ===");
+    let total = g.total_weights();
+    for keep in [0.5, 0.25, 0.155, 0.10] {
+        let nnz = (total as f64 * keep) as usize;
+        let free = sparsity::compression_ratio(total, nnz, 4);
+        let csr = sparsity::compression_ratio_csr(total, nnz, 4, 16);
+        println!(
+            "  keep {:>5.1}%: engine-free {free:>6.1}x vs CSR {csr:>6.1}x ({:.1}x advantage)",
+            keep * 100.0,
+            free / csr
+        );
+    }
+
+    // ---- C: budget sweep -> Pareto frontier ----
+    println!("\n=== C. Pareto frontier: Proposed vs AutoFold under budget sweep ===");
+    let mut prop_pts = Vec::new();
+    let mut auto_pts = Vec::new();
+    for i in 0..7 {
+        let frac = 0.01 + 0.99 * (i as f64 / 6.0);
+        let mut o = DseOptions { budget_fraction: frac, ..Default::default() };
+        if let Ok(r) = dse::run(Strategy::Proposed, &g, &XCU50, &profile, &o) {
+            prop_pts.push(pareto::Point {
+                label: format!("prop@{frac:.2}"),
+                luts: r.cost.total_luts,
+                throughput_fps: r.cost.throughput_fps,
+            });
+        }
+        o.auto_fold_target_fps = 1e9;
+        if let Ok(r) = dse::run(Strategy::AutoFold, &g, &XCU50, &profile, &o) {
+            auto_pts.push(pareto::Point {
+                label: format!("auto@{frac:.2}"),
+                luts: r.cost.total_luts,
+                throughput_fps: r.cost.throughput_fps,
+            });
+        }
+    }
+    let hv_prop = pareto::hypervolume(&pareto::frontier(&prop_pts), XCU50.lut_budget(), 0.0);
+    let hv_auto = pareto::hypervolume(&pareto::frontier(&auto_pts), XCU50.lut_budget(), 0.0);
+    println!(
+        "  hypervolume proposed {hv_prop:.3e} vs auto-fold {hv_auto:.3e} ({:.2}x — \"advances the Pareto frontier\")",
+        hv_prop / hv_auto
+    );
+
+    // ---- D: FIFO depth sensitivity ----
+    println!("\n=== D. FIFO depth sensitivity (measured, unrolled design) ===");
+    let cfg = FoldingConfig::unrolled(&g);
+    for depth in [2usize, 4, 8, 32, 128] {
+        let mut p = sim::build(&g, &cfg, &XCU50, depth).unwrap();
+        let rep = p.run(&Workload::Saturated { frames: 60 });
+        println!(
+            "  depth {depth:>3}: {:>9.0} FPS | latency {:.2} us | max occupancy {:?}",
+            rep.throughput_fps,
+            rep.latency_s * 1e6,
+            rep.fifo_max_occupancy.iter().max().unwrap()
+        );
+    }
+
+    // ---- E: latency-trim ablation (max_iterations starves phase 4) ----
+    println!("\n=== E. latency-trim phase ablation ===");
+    let with = dse::run(Strategy::Proposed, &g, &XCU50, &profile, &DseOptions::default()).unwrap();
+    let without_opts = DseOptions { max_iterations: 10, ..Default::default() };
+    let without = dse::run(Strategy::Proposed, &g, &XCU50, &profile, &without_opts).unwrap();
+    println!(
+        "  full DSE:     {:.2} us latency, {} LUTs, {:.0} FPS",
+        with.cost.latency_s * 1e6,
+        with.cost.total_luts,
+        with.cost.throughput_fps
+    );
+    println!(
+        "  capped DSE:   {:.2} us latency, {} LUTs, {:.0} FPS",
+        without.cost.latency_s * 1e6,
+        without.cost.total_luts,
+        without.cost.throughput_fps
+    );
+}

@@ -1,0 +1,34 @@
+//! `cargo bench --bench dse_perf` — DSE wall time per strategy and its
+//! scaling with model size (the paper markets the flow as *fast* design
+//! space exploration from ONNX-graph estimates).
+
+use logicsparse::config::PruneProfile;
+use logicsparse::device::XCU50;
+use logicsparse::dse::{self, DseOptions, Strategy};
+use logicsparse::graph::builder::{convnet, lenet5};
+use logicsparse::util::bench::Bencher;
+
+fn main() {
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+    let opts = DseOptions::default();
+    let b = Bencher::default();
+
+    for st in [Strategy::AutoFold, Strategy::AutoFoldPrune, Strategy::Proposed] {
+        b.run(&format!("dse/lenet/{}", st.as_str()), || {
+            dse::run(st, &g, &XCU50, &profile, &opts).unwrap().cost.total_luts
+        });
+    }
+
+    for blocks in [1usize, 2, 4] {
+        let big = convnet(blocks, 8, 64, 10);
+        let p = PruneProfile::uniform(&big, &[0.6, 0.8], 0.9);
+        let o = DseOptions { auto_fold_target_fps: 2_000.0, ..Default::default() };
+        b.run(&format!("dse/convnet-{blocks}-blocks/proposed"), || {
+            dse::run(Strategy::Proposed, &big, &XCU50, &p, &o)
+                .unwrap()
+                .cost
+                .total_luts
+        });
+    }
+}

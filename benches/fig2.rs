@@ -1,0 +1,34 @@
+//! `cargo bench --bench fig2` — regenerates Fig. 2 (per-layer estimated
+//! latency and LUT utilisation across folding/pruning strategies).
+
+use logicsparse::config::PruneProfile;
+use logicsparse::device::XCU50;
+use logicsparse::experiments::fig2;
+use logicsparse::graph::builder::lenet5;
+use logicsparse::graph::import;
+use logicsparse::util::bench::Bencher;
+
+fn main() {
+    let g = if std::path::Path::new("artifacts/graph.json").exists() {
+        import::load("artifacts/graph.json").unwrap()
+    } else {
+        lenet5()
+    };
+    let profile = if std::path::Path::new("artifacts/prune_profile.json").exists() {
+        PruneProfile::load("artifacts/prune_profile.json").unwrap()
+    } else {
+        PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95)
+    };
+
+    println!("=== Fig. 2 (estimated per-layer latency + LUTs) ===\n");
+    let series = fig2::measure(&g, &XCU50, &profile).unwrap();
+    println!("{}", fig2::render(&series));
+    for v in fig2::shape_checks(&series) {
+        println!("{v}");
+    }
+
+    println!("\n=== harness timings ===");
+    Bencher::default().run("fig2/measure(4 strategies)", || {
+        fig2::measure(&g, &XCU50, &profile).unwrap().len()
+    });
+}

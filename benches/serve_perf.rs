@@ -1,0 +1,72 @@
+//! `cargo bench --bench serve_perf` — end-to-end serving performance of
+//! the coordinator over the AOT artifacts: requests/second and batch
+//! execute time per batch size and policy. Skips (with a notice) when
+//! `make artifacts` has not been run.
+
+use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::runtime::{ModelRuntime, IMG};
+use logicsparse::util::bench::Bencher;
+use logicsparse::util::lstw::Store;
+use std::time::Duration;
+
+fn main() {
+    if !std::path::Path::new("artifacts/lenet_proposed_b1.hlo.txt").exists() {
+        println!("serve_perf: artifacts missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    let ts = Store::read_file("artifacts/testset.lstw").unwrap();
+    let images = ts.req("images").unwrap().data.as_f32().unwrap().to_vec();
+    let px = IMG * IMG;
+    let b = Bencher { warmup_s: 1.0, sample_s: 0.5, n_samples: 6 };
+
+    // Raw PJRT executable rates per batch variant (no coordinator).
+    let rt = ModelRuntime::load("artifacts", "proposed").unwrap();
+    for batch in rt.batch_sizes() {
+        let x = images[..batch * px].to_vec();
+        let stats = b.run(&format!("pjrt/proposed/b{batch}"), || {
+            rt.pick(batch).infer(&x).unwrap().len()
+        });
+        println!(
+            "    -> {:.0} img/s through the executable",
+            batch as f64 / stats.median()
+        );
+    }
+
+    // Coordinator end-to-end under a closed-loop client.
+    for (name, policy) in [
+        ("low-latency", BatchPolicy::low_latency()),
+        ("high-throughput", BatchPolicy::high_throughput()),
+    ] {
+        let server = Server::start(ServerOptions {
+            policy,
+            engines: 1,
+            artifacts_dir: "artifacts".into(),
+            tag: "proposed".into(),
+        })
+        .unwrap();
+        let n = 256usize;
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::with_capacity(64);
+        for j in 0..n {
+            pending.push(server.submit(images[(j % 512) * px..(j % 512 + 1) * px].to_vec()).unwrap());
+            if pending.len() == 64 {
+                for rx in pending.drain(..) {
+                    rx.recv().unwrap();
+                }
+            }
+        }
+        for rx in pending.drain(..) {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.shutdown();
+        println!(
+            "coordinator/{name}: {:.0} req/s | mean batch {:.1} | p50 {:.1}ms p99 {:.1}ms",
+            n as f64 / wall,
+            snap.mean_batch_size,
+            snap.p50_latency_s * 1e3,
+            snap.p99_latency_s * 1e3
+        );
+        let _ = Duration::ZERO;
+    }
+}

@@ -1,0 +1,55 @@
+//! `cargo bench --bench sim_perf` — simulator performance (the L3 hot
+//! path of the experiment harness): events/second and frames/second of
+//! the DES across folding regimes and FIFO depths.
+//!
+//! §Perf target: the whole Table-I measurement must be interactive
+//! (< 10 s); this bench tracks the underlying rates.
+
+use logicsparse::device::XCU50;
+use logicsparse::folding::FoldingConfig;
+use logicsparse::graph::builder::{convnet, lenet5};
+use logicsparse::sim::{self, Workload};
+use logicsparse::util::bench::Bencher;
+
+fn main() {
+    let g = lenet5();
+    let b = Bencher::default();
+
+    for (label, cfg) in [
+        ("minimal-fold", FoldingConfig::minimal(&g)),
+        ("unrolled", FoldingConfig::unrolled(&g)),
+    ] {
+        let stats = b.run(&format!("sim/lenet/{label}/50-frames"), || {
+            let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
+            p.run(&Workload::Saturated { frames: 50 }).frames
+        });
+        println!(
+            "    -> {:.0} simulated frames/s",
+            50.0 / stats.median()
+        );
+    }
+
+    for depth in [2usize, 8, 64] {
+        let cfg = FoldingConfig::unrolled(&g);
+        b.run(&format!("sim/lenet/fifo-depth-{depth}/50-frames"), || {
+            let mut p = sim::build(&g, &cfg, &XCU50, depth).unwrap();
+            p.run(&Workload::Saturated { frames: 50 }).frames
+        });
+    }
+
+    // Bigger topology: scaling check.
+    let big = convnet(3, 8, 32, 10);
+    let cfg = FoldingConfig::unrolled(&big);
+    b.run("sim/convnet3/unrolled/20-frames", || {
+        let mut p = sim::build(&big, &cfg, &XCU50, 8).unwrap();
+        p.run(&Workload::Saturated { frames: 20 }).frames
+    });
+
+    // Poisson traffic (serving-shaped workload).
+    let cfg = FoldingConfig::unrolled(&g);
+    b.run("sim/lenet/poisson/100-frames", || {
+        let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
+        p.run(&Workload::Poisson { frames: 100, rate_fps: 100_000.0, seed: 1 })
+            .frames
+    });
+}

@@ -1,0 +1,43 @@
+//! `cargo bench --bench table1` — regenerates Table I of the paper
+//! (DESIGN.md §6 E1/E2) and reports the wall time of each pipeline stage.
+//!
+//! Uses real artifacts when present (accuracies from metrics.json),
+//! otherwise the built-in graph + uniform profile.
+
+use logicsparse::config::PruneProfile;
+use logicsparse::device::XCU50;
+use logicsparse::experiments::{headline, table1, Accuracies};
+use logicsparse::graph::builder::lenet5;
+use logicsparse::graph::import;
+use logicsparse::util::bench::Bencher;
+
+fn main() {
+    let g = if std::path::Path::new("artifacts/graph.json").exists() {
+        import::load("artifacts/graph.json").unwrap()
+    } else {
+        lenet5()
+    };
+    let profile = if std::path::Path::new("artifacts/prune_profile.json").exists() {
+        PruneProfile::load("artifacts/prune_profile.json").unwrap()
+    } else {
+        PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95)
+    };
+    let acc = Accuracies::load("artifacts").unwrap_or_default();
+
+    println!("=== Table I (paper columns vs measured) ===\n");
+    let rows = table1::measure(&g, &XCU50, &profile, &acc, 150).unwrap();
+    println!("{}", table1::render(&rows));
+    for v in table1::shape_checks(&rows) {
+        println!("{v}");
+    }
+    println!();
+    let h = headline::measure(&rows, "artifacts").unwrap();
+    println!("{}", headline::render(&h));
+
+    println!("=== harness timings ===");
+    let b = Bencher::quick();
+    b.run("table1/full-measure(5 strategies, 60 frames)", || {
+        table1::measure(&g, &XCU50, &profile, &acc, 60).unwrap().len()
+    });
+    b.run("table1/render", || table1::render(&rows).len());
+}

@@ -1,0 +1,68 @@
+//! The Fig. 1 workflow in one example: run the LogicSparse DSE on
+//! LeNet-5 for the XCU50 and print the full decision trace — global
+//! pruning reference, heuristic folding with secondary relaxation, then
+//! iterative bottleneck elimination with sparse/factor unfolding.
+//!
+//! Works with or without `make artifacts` (falls back to the built-in
+//! graph and a uniform pruning profile).
+
+use logicsparse::config::PruneProfile;
+use logicsparse::device::XCU50;
+use logicsparse::dse::{self, DseOptions, Strategy};
+use logicsparse::folding::space;
+use logicsparse::graph::builder::lenet5;
+use logicsparse::graph::import;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let g = if std::path::Path::new("artifacts/graph.json").exists() {
+        import::load("artifacts/graph.json")?
+    } else {
+        lenet5()
+    };
+    let profile = if std::path::Path::new("artifacts/prune_profile.json").exists() {
+        PruneProfile::load("artifacts/prune_profile.json")?
+    } else {
+        PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95)
+    };
+
+    let nodes: Vec<_> = g.mac_nodes().collect();
+    println!(
+        "model {}: {} MAC layers, {} weights, {} MACs/frame",
+        g.model,
+        nodes.len(),
+        g.total_weights(),
+        g.total_macs_per_frame()
+    );
+    println!(
+        "joint folding space: {:.2e} points (why the search is heuristic)\n",
+        space::joint_space_size(&nodes) as f64
+    );
+
+    // Run the paper's strategies and contrast their estimates.
+    for st in [Strategy::AutoFold, Strategy::Unfold, Strategy::Proposed] {
+        let r = dse::run(st, &g, &XCU50, &profile, &DseOptions::default())?;
+        println!("=== {} ===", st.label());
+        if st == Strategy::Proposed {
+            println!("{}", r.report.render());
+        } else if let Some(s) = &r.report.final_summary {
+            println!("{s}");
+        }
+        for (name, f) in &r.folding.layers {
+            println!(
+                "  {name:<8} {:<16} PE={:<4} SIMD={:<4} sparsity={:.2}",
+                f.style.as_str(),
+                f.pe,
+                f.simd,
+                f.sparsity
+            );
+        }
+        println!(
+            "  => {} LUTs | f={:.1} MHz | {:.0} FPS | {:.2} us\n",
+            r.cost.total_luts,
+            r.cost.f_mhz,
+            r.cost.throughput_fps,
+            r.cost.latency_s * 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! END-TO-END DRIVER (DESIGN.md §6 E6): the full LogicSparse system on a
+//! real workload, proving all layers compose.
+//!
+//!  1. load the python-exported ONNX-like graph + pruning reference;
+//!  2. run the DSE for every Table-I strategy (L3 contribution);
+//!  3. *measure* latency/throughput in the cycle-level dataflow simulator
+//!     and print Table I + Fig. 2 against the paper's numbers;
+//!  4. load the AOT artifacts (Pallas kernels -> HLO, L1+L2) and serve the
+//!     entire exported test set through the batching coordinator,
+//!     reporting accuracy and wallclock serving throughput;
+//!  5. verify the headline claims (51.6x compression / 1.23x throughput /
+//!     ~5% LUTs) from measured masks and measured rows.
+//!
+//! Requires `make artifacts`. The run is recorded in EXPERIMENTS.md.
+
+use logicsparse::config::PruneProfile;
+use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::device::XCU50;
+use logicsparse::experiments::{fig2, headline, table1, Accuracies};
+use logicsparse::graph::import;
+use logicsparse::runtime::IMG;
+use logicsparse::util::lstw::Store;
+use std::time::Duration;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---- 1. compile-path exports ----
+    let g = import::load("artifacts/graph.json")?;
+    let profile = PruneProfile::load("artifacts/prune_profile.json")?;
+    let acc = Accuracies::load("artifacts")?;
+    println!(
+        "[1] graph '{}' loaded: {} weights; dense accuracy {}%",
+        g.model,
+        g.total_weights(),
+        Accuracies::fmt(acc.dense)
+    );
+
+    // ---- 2+3. DSE + simulator: Table I and Fig. 2 ----
+    println!("\n[2] running DSE + cycle-level simulation for all strategies…\n");
+    let rows = table1::measure(&g, &XCU50, &profile, &acc, 300)?;
+    println!("{}", table1::render(&rows));
+    for v in table1::shape_checks(&rows) {
+        println!("{v}");
+    }
+    println!();
+    let series = fig2::measure(&g, &XCU50, &profile)?;
+    println!("{}", fig2::render(&series));
+    for v in fig2::shape_checks(&series) {
+        println!("{v}");
+    }
+
+    // ---- 4. serve the test set through the coordinator ----
+    println!("\n[4] serving the exported test set through the coordinator…");
+    let ts = Store::read_file("artifacts/testset.lstw")?;
+    let images = ts.req("images")?.data.as_f32()?.to_vec();
+    let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+    let px = IMG * IMG;
+    let n = labels.len();
+
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
+        engines: 1,
+        artifacts_dir: "artifacts".into(),
+        tag: "proposed".into(),
+    })?;
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut pending = Vec::with_capacity(256);
+    for j in 0..n {
+        pending.push((server.submit(images[j * px..(j + 1) * px].to_vec())?, labels[j]));
+        if pending.len() == 256 {
+            for (rx, label) in pending.drain(..) {
+                correct += (rx.recv()?.class() == label as usize) as usize;
+            }
+        }
+    }
+    for (rx, label) in pending.drain(..) {
+        correct += (rx.recv()?.class() == label as usize) as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    let served_acc = 100.0 * correct as f64 / n as f64;
+    println!("    {}", snap.render());
+    println!(
+        "    served accuracy {served_acc:.2}% over {n} images | {:.0} img/s wallclock",
+        n as f64 / wall
+    );
+
+    // ---- 5. headline claims ----
+    println!("\n[5] headline verification");
+    let h = headline::measure(&rows, "artifacts")?;
+    println!("{}", headline::render(&h));
+
+    // Cross-layer consistency: the accuracy served by the rust runtime
+    // must match what python measured at export time.
+    if let Some(pa) = acc.proposed {
+        let diff = (served_acc - pa * 100.0).abs();
+        println!(
+            "cross-layer accuracy check: python {:.2}% vs served {served_acc:.2}% (|Δ| = {diff:.2} pts) {}",
+            pa * 100.0,
+            if diff < 0.5 { "PASS" } else { "FAIL" }
+        );
+    }
+    Ok(())
+}

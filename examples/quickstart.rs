@@ -1,0 +1,46 @@
+//! Quickstart: load the AOT-compiled LogicSparse accelerator model and
+//! classify a few test digits — the smallest possible end-to-end use of
+//! the public API.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use logicsparse::runtime::{argmax_classes, ModelRuntime, IMG};
+use logicsparse::util::lstw::Store;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Load the engine-free sparse model variants compiled by
+    //    `make artifacts` (python never runs from here on).
+    let rt = ModelRuntime::load("artifacts", "proposed")?;
+    println!(
+        "loaded '{}' on {} with batch variants {:?}",
+        rt.tag,
+        rt.platform(),
+        rt.batch_sizes()
+    );
+
+    // 2. Load the exported test set.
+    let ts = Store::read_file("artifacts/testset.lstw")?;
+    let images = ts.req("images")?.data.as_f32()?.to_vec();
+    let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+    let px = IMG * IMG;
+
+    // 3. Classify ten digits through the PJRT executable.
+    let n = 10.min(labels.len());
+    let logits = rt.infer_padded(&images[..n * px], n)?;
+    let classes = argmax_classes(&logits);
+    let mut correct = 0;
+    for i in 0..n {
+        let ok = classes[i] == labels[i] as usize;
+        correct += ok as usize;
+        println!(
+            "  digit {i}: predicted {} | label {} {}",
+            classes[i],
+            labels[i],
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!("{correct}/{n} correct");
+    Ok(())
+}

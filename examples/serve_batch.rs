@@ -1,0 +1,63 @@
+//! Serving example: run the coordinator against the AOT artifacts with an
+//! open-loop client (bursty arrivals), comparing two batching policies —
+//! the classic latency/throughput trade-off of dynamic batching.
+//!
+//! Requires `make artifacts`.
+
+use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::runtime::IMG;
+use logicsparse::util::lstw::Store;
+use logicsparse::util::rng::Pcg32;
+use std::time::Duration;
+
+fn run_policy(name: &str, policy: BatchPolicy, images: &[f32], labels: &[i32]) -> Result<(), Box<dyn std::error::Error>> {
+    let px = IMG * IMG;
+    let n_avail = labels.len();
+    let server = Server::start(ServerOptions {
+        policy,
+        engines: 1,
+        artifacts_dir: "artifacts".into(),
+        tag: "proposed".into(),
+    })?;
+
+    // Open-loop bursty client: bursts of 8..48 requests with small gaps.
+    let mut rng = Pcg32::seeded(42);
+    let mut pending = Vec::new();
+    let mut correct = 0usize;
+    let total = 768usize;
+    let mut sent = 0usize;
+    while sent < total {
+        let burst = rng.range(8, 48).min(total - sent);
+        for _ in 0..burst {
+            let j = sent % n_avail;
+            pending.push((server.submit(images[j * px..(j + 1) * px].to_vec())?, labels[j]));
+            sent += 1;
+        }
+        std::thread::sleep(Duration::from_millis(rng.range(0, 4) as u64));
+        if pending.len() > 512 {
+            for (rx, label) in pending.drain(..) {
+                correct += (rx.recv()?.class() == label as usize) as usize;
+            }
+        }
+    }
+    for (rx, label) in pending.drain(..) {
+        correct += (rx.recv()?.class() == label as usize) as usize;
+    }
+    let snap = server.shutdown();
+    println!("[{name}] {}", snap.render());
+    println!(
+        "[{name}] accuracy {:.2}% ({total} bursty requests)\n",
+        100.0 * correct as f64 / total as f64
+    );
+    Ok(())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let ts = Store::read_file("artifacts/testset.lstw")?;
+    let images = ts.req("images")?.data.as_f32()?.to_vec();
+    let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+
+    run_policy("low-latency ", BatchPolicy::low_latency(), &images, &labels)?;
+    run_policy("high-thrpt  ", BatchPolicy::high_throughput(), &images, &labels)?;
+    Ok(())
+}

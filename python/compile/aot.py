@@ -1,0 +1,249 @@
+"""AOT compile driver (Fig. 1 workflow, python half).
+
+Stage 1 (`--stage 1`): train the dense W4A4 LeNet-5, run the global-
+magnitude pruning reference sweep, export everything the rust DSE needs
+(graph.json, prune_profile.json), the serving test set, and the *dense*
+accelerator HLO variants.
+
+Stage 2 (`--stage 2`): consume the rust DSE's folding_config.json —
+per-layer styles + sparsity targets — re-prune, re-sparse fine-tune, and
+export the *proposed* engine-free sparse HLO variants plus final metrics.
+
+HLO is exported as TEXT (never `.serialize()`): jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Python runs only here, at build time; the rust binary serves from
+artifacts/ alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as dataset
+from . import export as ex
+from . import model as M
+from . import prune
+from . import quant
+from . import train as T
+
+BATCH_VARIANTS = (1, 8, 32)
+
+# Reference global sparsity for the "+Pruning" Table-I rows; the proposed
+# row instead uses the per-layer targets from the rust DSE.
+REF_GLOBAL_SPARSITY = 0.80
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    print_large_constants=True is LOAD-BEARING: the default HLO printer
+    elides big literals as `{...}`, which the parser silently reads back
+    as ZEROS — the served model would run with zero weights (bias-only
+    logits, ~10% accuracy). The baked engine-free weights must survive the
+    text round-trip verbatim.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_accel(params, masks, styles, batch: int) -> str:
+    fn, _ = M.build_accel_fn(params, masks, styles)
+    spec = jax.ShapeDtypeStruct((batch, M.IMG, M.IMG, 1), jnp.float32)
+    lowered = jax.jit(lambda x: (fn(x),)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def export_hlo_variants(out: Path, tag: str, params, masks, styles, log) -> None:
+    for b in BATCH_VARIANTS:
+        t0 = time.time()
+        text = lower_accel(params, masks, styles, b)
+        path = out / f"lenet_{tag}_b{b}.hlo.txt"
+        path.write_text(text)
+        log(f"  wrote {path.name}  ({len(text)/1e3:.0f} kB, {time.time()-t0:.1f}s)")
+
+
+def params_to_tensors(params) -> dict:
+    t = {}
+    for name, p in params.items():
+        t[f"{name}.w"] = np.asarray(p["w"], np.float32)
+        t[f"{name}.b"] = np.asarray(p["b"], np.float32)
+    return t
+
+
+def tensors_to_params(t: dict) -> dict:
+    params = {}
+    for key, arr in t.items():
+        name, kind = key.rsplit(".", 1)
+        if kind in ("w", "b"):
+            params.setdefault(name, {})[kind] = jnp.asarray(arr)
+    return params
+
+
+def masks_from_tensors(t: dict) -> dict:
+    return {
+        key.rsplit(".", 1)[0]: jnp.asarray(arr.astype(np.float32))
+        for key, arr in t.items()
+        if key.endswith(".mask")
+    }
+
+
+def stage1(out: Path, fast: bool, seed: int, log) -> None:
+    log("[stage1] dataset")
+    n_train, n_test = (2048, 512) if fast else (6144, 2048)
+    steps = 200 if fast else 700
+    x_train, y_train, x_test, y_test = dataset.make_dataset(n_train, n_test, seed)
+
+    log("[stage1] dense QAT training")
+    params, losses = T.train_qat(
+        x_train, y_train, x_test, y_test, steps=steps, seed=seed, log=log
+    )
+    dense_acc = T.evaluate(params, x_test, y_test)
+    log(f"[stage1] dense QAT accuracy: {100*dense_acc:.2f}%")
+
+    log("[stage1] global magnitude pruning reference sweep")
+    profile = T.prune_profile(params, x_test, y_test, log=log)
+    profile["reference_global_sparsity"] = REF_GLOBAL_SPARSITY
+
+    log("[stage1] exports")
+    ex.write_json(out / "graph.json", M.graph_dict())
+    ex.write_json(out / "prune_profile.json", profile)
+    ex.write_lstw(out / "params_stage1.lstw", params_to_tensors(params))
+    ex.export_testset(out / "testset.lstw", x_test, y_test)
+    ex.write_json(
+        out / "metrics_stage1.json",
+        {
+            "dense_accuracy": dense_acc,
+            "train_steps": steps,
+            "final_loss": losses[-1],
+            "loss_curve_tail": [round(l, 5) for l in losses[-50:]],
+            "n_train": n_train,
+            "n_test": n_test,
+            "weight_bits": quant.DEFAULT_WEIGHT_BITS,
+            "act_bits": quant.DEFAULT_ACT_BITS,
+        },
+    )
+
+    masks = M.ones_masks(params)
+    styles = {l.name: "folded" for l in M.LAYERS}
+    log("[stage1] lowering dense accelerator HLO variants")
+    export_hlo_variants(out, "dense", params, masks, styles, log)
+    log("[stage1] done")
+
+
+def stage2(out: Path, fast: bool, seed: int, log) -> None:
+    cfg_path = out / "folding_config.json"
+    if not cfg_path.exists():
+        sys.exit(
+            f"{cfg_path} missing — run the rust DSE first:\n"
+            "  cargo run --release -- dse --artifacts artifacts"
+        )
+    cfg = ex.read_json(cfg_path)
+    params = tensors_to_params(ex.read_lstw(out / "params_stage1.lstw"))
+
+    n_train, n_test = (2048, 512) if fast else (6144, 2048)
+    ft_steps = 150 if fast else 450
+    x_train, y_train, x_test, y_test = dataset.make_dataset(n_train, n_test, seed)
+
+    # ---- "+Pruning" rows: global magnitude at the reference sparsity ----
+    log(f"[stage2] global-pruned fine-tune at s={REF_GLOBAL_SPARSITY}")
+    g_masks = prune.global_magnitude_masks(params, REF_GLOBAL_SPARSITY)
+    gp_params, _ = T.finetune(
+        params, g_masks, x_train, y_train, x_test, y_test, steps=ft_steps, log=log
+    )
+    acc_pruned_global = T.evaluate(gp_params, x_test, y_test, g_masks)
+    log(f"[stage2] global-pruned accuracy: {100*acc_pruned_global:.2f}%")
+
+    # ---- proposed row: per-layer styles + sparsity targets from the DSE ----
+    layer_cfg = cfg["layers"]
+    styles = {name: c["style"] for name, c in layer_cfg.items()}
+    targets = {
+        name: float(c.get("target_sparsity", 0.0))
+        for name, c in layer_cfg.items()
+        if c["style"] in ("unrolled_sparse", "partial_sparse")
+    }
+    log(f"[stage2] proposed styles: {styles}")
+    log(f"[stage2] proposed sparsity targets: {targets}")
+    p_masks = prune.layerwise_prune(params, targets)
+    pp_params, losses = T.finetune(
+        params, p_masks, x_train, y_train, x_test, y_test, steps=ft_steps, log=log
+    )
+    acc_proposed = T.evaluate(pp_params, x_test, y_test, p_masks)
+    log(f"[stage2] proposed accuracy: {100*acc_proposed:.2f}%")
+
+    st_global = prune.sparsity_stats(g_masks)
+    st_prop = prune.sparsity_stats(p_masks)
+    stage1_metrics = ex.read_json(out / "metrics_stage1.json")
+
+    log("[stage2] exports")
+    ex.export_params(out / "params_proposed.lstw", pp_params, p_masks)
+    ex.export_params(out / "params_pruned_global.lstw", gp_params, g_masks)
+    ex.write_json(
+        out / "metrics.json",
+        {
+            "dense_accuracy": stage1_metrics["dense_accuracy"],
+            "pruned_global_accuracy": acc_pruned_global,
+            "proposed_accuracy": acc_proposed,
+            "finetune_steps": ft_steps,
+            "finetune_final_loss": losses[-1],
+            "global_masks": st_global,
+            "proposed_masks": st_prop,
+            "compression_global": prune.compression_ratio(
+                g_masks, quant.DEFAULT_WEIGHT_BITS
+            ),
+            "compression_proposed": prune.compression_ratio(
+                p_masks, quant.DEFAULT_WEIGHT_BITS
+            ),
+            "weight_bits": quant.DEFAULT_WEIGHT_BITS,
+            "act_bits": quant.DEFAULT_ACT_BITS,
+        },
+    )
+
+    log("[stage2] lowering proposed (engine-free sparse) HLO variants")
+    export_hlo_variants(out, "proposed", pp_params, p_masks, styles, log)
+    # Unfold+Pruning variant: every MAC layer unrolled sparse with the
+    # global masks (Table I row 6).
+    log("[stage2] lowering unfold+pruning HLO variants")
+    all_sparse = {l.name: "unrolled_sparse" for l in M.LAYERS}
+    export_hlo_variants(out, "unfold_pruned", gp_params, g_masks, all_sparse, log)
+    log("[stage2] done")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--stage", choices=["1", "2", "all"], default="all")
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    log = print
+
+    t0 = time.time()
+    if args.stage in ("1", "all"):
+        stage1(out, args.fast, args.seed, log)
+    if args.stage in ("2", "all"):
+        if args.stage == "all" and not (out / "folding_config.json").exists():
+            log("[aot] folding_config.json absent — stopping after stage 1 "
+                "(run the rust DSE, then `--stage 2`)")
+        else:
+            stage2(out, args.fast, args.seed, log)
+    log(f"[aot] total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

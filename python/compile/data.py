@@ -1,0 +1,165 @@
+"""Synthetic MNIST-like digit dataset (build-time substrate).
+
+The paper evaluates LeNet-5 on MNIST. This sandbox has no dataset access, so
+we procedurally render a 10-class digit task with the same tensor shapes
+(28x28x1, labels 0..9) and enough intra-class variation (affine jitter,
+stroke-width variation, pixel noise) that the QAT -> prune -> re-sparse
+fine-tune pipeline is exercised on a genuinely learnable problem. The
+substitution is recorded in DESIGN.md §2.
+
+Rendering is fully vectorised numpy: each sample applies a random inverse
+affine map from the 28x28 canvas to a 7x5 glyph bitmap and bilinearly
+samples it, then adds noise. Deterministic in the seed.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# Classic 7x5 bitmap font, one string row per scanline per digit.
+_GLYPHS_TXT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+GLYPH_H, GLYPH_W = 7, 5
+IMG = 28
+NUM_CLASSES = 10
+
+
+def glyph_array(digit: int) -> np.ndarray:
+    """7x5 float bitmap for one digit."""
+    rows = _GLYPHS_TXT[digit]
+    return np.array([[float(c) for c in r] for r in rows], dtype=np.float32)
+
+
+_GLYPHS = None
+
+
+def _glyphs() -> np.ndarray:
+    global _GLYPHS
+    if _GLYPHS is None:
+        _GLYPHS = np.stack([glyph_array(d) for d in range(NUM_CLASSES)])
+    return _GLYPHS
+
+
+def render_batch(
+    labels: np.ndarray,
+    rng: np.random.Generator,
+    noise: float = 0.08,
+    jitter_px: float = 3.0,
+    scale_lo: float = 2.2,
+    scale_hi: float = 3.4,
+    rot_deg: float = 12.0,
+) -> np.ndarray:
+    """Render a batch of digits -> float32 [B, 28, 28, 1] in [0, 1].
+
+    Each sample gets an independent random scale, rotation, translation and
+    stroke softness; the glyph is bilinearly sampled through the inverse
+    affine map so edges are anti-aliased (closer to handwriting than crisp
+    block glyphs).
+    """
+    b = labels.shape[0]
+    glyphs = _glyphs()[labels]  # [B, 7, 5]
+
+    scale = rng.uniform(scale_lo, scale_hi, size=b).astype(np.float32)
+    theta = np.deg2rad(rng.uniform(-rot_deg, rot_deg, size=b)).astype(np.float32)
+    # Shear adds a handwriting-like slant.
+    shear = rng.uniform(-0.15, 0.15, size=b).astype(np.float32)
+    tx = rng.uniform(-jitter_px, jitter_px, size=b).astype(np.float32)
+    ty = rng.uniform(-jitter_px, jitter_px, size=b).astype(np.float32)
+
+    # Output pixel grid, centred.
+    ys, xs = np.meshgrid(
+        np.arange(IMG, dtype=np.float32), np.arange(IMG, dtype=np.float32), indexing="ij"
+    )
+    yc = ys - (IMG - 1) / 2.0
+    xc = xs - (IMG - 1) / 2.0
+
+    cos_t = np.cos(theta)[:, None, None]
+    sin_t = np.sin(theta)[:, None, None]
+    sc = scale[:, None, None]
+    sh = shear[:, None, None]
+
+    # Inverse map canvas -> glyph coordinates.
+    u = (cos_t * (xc - tx[:, None, None]) + sin_t * (yc - ty[:, None, None])) / sc
+    v = (-sin_t * (xc - tx[:, None, None]) + cos_t * (yc - ty[:, None, None])) / sc
+    u = u - sh * v
+
+    gu = u + (GLYPH_W - 1) / 2.0
+    gv = v + (GLYPH_H - 1) / 2.0
+
+    # Bilinear sample with zero padding outside the glyph.
+    u0 = np.floor(gu).astype(np.int32)
+    v0 = np.floor(gv).astype(np.int32)
+    du = gu - u0
+    dv = gv - v0
+
+    def tap(vv: np.ndarray, uu: np.ndarray) -> np.ndarray:
+        inside = (vv >= 0) & (vv < GLYPH_H) & (uu >= 0) & (uu < GLYPH_W)
+        vvc = np.clip(vv, 0, GLYPH_H - 1)
+        uuc = np.clip(uu, 0, GLYPH_W - 1)
+        bidx = np.arange(b)[:, None, None]
+        vals = glyphs[bidx, vvc, uuc]
+        return np.where(inside, vals, 0.0).astype(np.float32)
+
+    img = (
+        tap(v0, u0) * (1 - du) * (1 - dv)
+        + tap(v0, u0 + 1) * du * (1 - dv)
+        + tap(v0 + 1, u0) * (1 - du) * dv
+        + tap(v0 + 1, u0 + 1) * du * dv
+    )
+
+    # Stroke softness: per-sample gamma on intensity.
+    gamma = rng.uniform(0.7, 1.5, size=b).astype(np.float32)[:, None, None]
+    img = np.clip(img, 0.0, 1.0) ** gamma
+
+    # Additive Gaussian noise + salt specks, then clip.
+    img = img + rng.normal(0.0, noise, size=img.shape).astype(np.float32)
+    salt = rng.random(img.shape) < 0.003
+    img = np.where(salt, np.float32(1.0), img)
+    img = np.clip(img, 0.0, 1.0).astype(np.float32)
+    return img[..., None]
+
+
+def make_dataset(
+    n_train: int = 6144,
+    n_test: int = 2048,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Balanced train/test split with disjoint RNG streams.
+
+    Returns (x_train, y_train, x_test, y_test); images float32 [N,28,28,1].
+    """
+    rng_train = np.random.default_rng(seed)
+    rng_test = np.random.default_rng(seed + 10_000)
+
+    y_train = np.arange(n_train, dtype=np.int32) % NUM_CLASSES
+    rng_train.shuffle(y_train)
+    y_test = np.arange(n_test, dtype=np.int32) % NUM_CLASSES
+    rng_test.shuffle(y_test)
+
+    x_train = render_batch(y_train, rng_train)
+    x_test = render_batch(y_test, rng_test)
+    return x_train, y_train, x_test, y_test
+
+
+def batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int):
+    """Infinite shuffled batch iterator (numpy-side, cheap)."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    while True:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i : i + batch]
+            yield x[idx], y[idx]

@@ -1,0 +1,112 @@
+"""Build-time exporters: LSTW tensor binaries + JSON sidecars.
+
+LSTW ("LogicSparse Tensor Weights") is the tensor interchange between the
+python compile path and the rust runtime — serde/npy crates are not
+available offline, so the format is deliberately trivial and implemented
+twice (here and in rust `util::lstw`), with round-trip tests on both sides.
+
+Layout (all little-endian):
+  magic   8 bytes  b"LSTW0001"
+  u32     n_tensors
+  per tensor:
+    u16   name_len,  name utf-8 bytes
+    u8    dtype      (0=f32, 1=i32, 2=i8, 3=u8)
+    u8    ndim
+    u32   dims[ndim]
+    u64   payload bytes
+    raw   payload (C-order)
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"LSTW0001"
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.int8): 2,
+    np.dtype(np.uint8): 3,
+}
+_DTYPES_INV = {v: k for k, v in _DTYPES.items()}
+
+
+def write_lstw(path: str | Path, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name->tensor dict; iteration order is preserved."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read_lstw(path: str | Path) -> Dict[str, np.ndarray]:
+    """Read back (python-side round-trip partner for the tests)."""
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        out: Dict[str, np.ndarray] = {}
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=_DTYPES_INV[dt])
+            out[name] = arr.reshape(dims).copy()
+        return out
+
+
+def write_json(path: str | Path, obj) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def read_json(path: str | Path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def export_params(path: str | Path, params, masks) -> None:
+    """Flatten params+masks into one LSTW file (names `<layer>.w/.b/.mask`)."""
+    tensors: Dict[str, np.ndarray] = {}
+    for name, p in params.items():
+        tensors[f"{name}.w"] = np.asarray(p["w"], np.float32)
+        tensors[f"{name}.b"] = np.asarray(p["b"], np.float32)
+    for name, m in masks.items():
+        tensors[f"{name}.mask"] = np.asarray(m, np.uint8)
+    write_lstw(path, tensors)
+
+
+def export_testset(path: str | Path, x: np.ndarray, y: np.ndarray) -> None:
+    """Test images + labels for the rust-side accuracy evaluation."""
+    write_lstw(
+        path,
+        {
+            "images": np.asarray(x, np.float32),
+            "labels": np.asarray(y, np.int32),
+        },
+    )

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels + pure-jnp oracle (build-time only; see DESIGN.md §3)."""
+from . import conv2d, matmul, ref, sparse_matmul  # noqa: F401

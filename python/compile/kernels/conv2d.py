@@ -1,0 +1,85 @@
+"""L1: convolution kernels (sliding-window unit + matmul, FINN-style).
+
+FINN decomposes conv into SWU (sliding-window unit, pure wiring) followed by
+an MVAU matmul. We keep the same decomposition: `im2col` is static slicing +
+concat (wiring — free on the FPGA, constant-folded slices in HLO), and the
+MACs run through the Pallas matmul kernels, dense or engine-free sparse.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+from . import ref
+from . import sparse_matmul as sp
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool = mm.INTERPRET,
+) -> jnp.ndarray:
+    """VALID conv via SWU (im2col wiring) + Pallas matmul.
+
+    x:[B,H,W,Cin], w:[KH,KW,Cin,Cout] -> [B,OH,OW,Cout].
+    """
+    kh, kw, cin, cout = w.shape
+    cols = ref.im2col(x, kh, kw)  # [B, OH, OW, KH*KW*Cin]
+    b, oh, ow, patch = cols.shape
+    y = mm.matmul(
+        cols.reshape(b * oh * ow, patch),
+        w.reshape(patch, cout),
+        bm=bm,
+        bk=bk,
+        bn=bn,
+        interpret=interpret,
+    )
+    return y.reshape(b, oh, ow, cout)
+
+
+def conv2d_sparse(
+    x: jnp.ndarray,
+    plan: dict,
+    kh: int,
+    kw: int,
+    *,
+    interpret: bool = mm.INTERPRET,
+) -> jnp.ndarray:
+    """Engine-free sparse conv: SWU wiring + packed sparse matmul.
+
+    `plan` is `sp.plan_sparse_matmul` of the [KH*KW*Cin, Cout] weight matrix;
+    zero SIMD-blocks of the patch axis are never materialised.
+    """
+    cols = ref.im2col(x, kh, kw)
+    b, oh, ow, patch = cols.shape
+    assert patch == plan["in_dim"], (patch, plan["in_dim"])
+    y = sp.sparse_matmul(cols.reshape(b * oh * ow, patch), plan, interpret=interpret)
+    return y.reshape(b, oh, ow, plan["out_dim"])
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    """2x2/2 max pool over one [B,H,W,C] block (whole-tensor block)."""
+    x = x_ref[...]
+    a = jnp.maximum(x[:, 0::2, 0::2, :], x[:, 0::2, 1::2, :])
+    b = jnp.maximum(x[:, 1::2, 0::2, :], x[:, 1::2, 1::2, :])
+    o_ref[...] = jnp.maximum(a, b)
+
+
+def maxpool2x2(x: jnp.ndarray, *, interpret: bool = mm.INTERPRET) -> jnp.ndarray:
+    """Pallas 2x2/stride-2 max pooling; H and W must be even (LeNet's are)."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {x.shape}"
+    return pl.pallas_call(
+        _maxpool_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,205 @@
+"""L1 Pallas kernels: tiled (quantised) matmul for the dataflow layers.
+
+TPU adaptation of the paper's LUT-mapped compute (DESIGN.md §3):
+
+- the FPGA's PE/SIMD unroll becomes an (bm, bk, bn) VMEM tile schedule —
+  BlockSpec index maps express the HBM->VMEM streaming the FPGA did with
+  AXI-stream FIFOs;
+- tiles default to MXU-friendly shapes (lane dim 128, sublane 8); LeNet's
+  small matrices are zero-padded up to tile multiples at trace time (static
+  pads, free at run time after XLA folds them);
+- kernels MUST run with interpret=True here: the CPU PJRT client cannot
+  execute Mosaic custom-calls. Real-TPU numbers are estimated from the VMEM
+  footprint + MXU occupancy recorded by `vmem_footprint()` (EXPERIMENTS.md
+  §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes: sublane x lane = 8 x 128 is the MXU-native layout.
+DEF_BM = 8
+DEF_BK = 128
+DEF_BN = 128
+
+INTERPRET = True  # CPU-PJRT constraint; see module docstring.
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+#: VMEM budget for the X tile of one grid step (bytes). A TPU core has
+#: ~16 MB of VMEM; 4 MB for the streaming operand leaves room for the
+#: weight tile, output tile and double buffering.
+VMEM_X_BUDGET = 4 << 20
+#: Hard cap on the sublane axis so every problem retains tiling structure.
+MAX_BM = 2048
+
+
+def auto_tiles(m: int, k: int, n: int) -> tuple:
+    """Tile heuristic for the problem shape (perf pass, EXPERIMENTS.md §Perf).
+
+    LeNet's matrices are far smaller than one MXU-native (8,128,128) tile;
+    padding every axis to the default tiles wasted up to ~100x MACs on
+    conv1 (K 25->128, N 6->128) and, worse for the CPU-interpret path,
+    multiplied the number of grid steps (each step is one iteration of the
+    lowered while loop; measured ~0.4-1.5 ms per step on this CPU).
+
+    Policy: round K and N to the next power of two (lane-friendly, single
+    k-step when possible), then grow the sublane axis `bm` until the X
+    tile hits the VMEM budget — fewer, fatter grid steps. Measured on the
+    served b32 model: 3.69 s -> 62.5 ms (bm<=128) -> 6.8 ms (VMEM-budget
+    bm) per forward; see EXPERIMENTS.md §Perf for the iteration log.
+    """
+    bk = max(8, min(512, _next_pow2(k)))
+    bn = max(8, min(128, _next_pow2(n)))
+    vmem_rows = max(8, VMEM_X_BUDGET // (bk * 4))
+    bm = max(8, min(min(MAX_BM, _next_pow2(vmem_rows)), _next_pow2(m)))
+    return bm, bk, bn
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad `axis` of x up to a multiple of `mult` (static, trace time)."""
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ w[k,j].
+
+    The k axis is the reduction; the output block is revisited nk times and
+    accumulated in place (initialised at k == 0).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(
+    x: jnp.ndarray,
+    w_t: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """y = x @ w_t via the tiled Pallas kernel.  x:[B,IN], w_t:[IN,OUT].
+
+    Tiles default to `auto_tiles` for the problem shape (see §Perf);
+    shapes are padded to tile multiples and the result sliced back.
+    """
+    b, inn = x.shape
+    inn2, out = w_t.shape
+    assert inn == inn2, f"inner dims mismatch {inn} vs {inn2}"
+    abm, abk, abn = auto_tiles(b, inn, out)
+    bm, bk, bn = bm or abm, bk or abk, bn or abn
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_t, 0, bk), 1, bn)
+    m, kdim = xp.shape
+    _, n = wp.shape
+    nk = kdim // bk
+
+    grid = (m // bm, n // bn, nk)
+    out_padded = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out_padded[:b, :out]
+
+
+def _matmul_int8_kernel(x_ref, wq_ref, scale_ref, o_ref, *, nk: int):
+    """Quantised variant: weights arrive as int8 codes + per-column scale and
+    are dequantised in VMEM — the accelerator-side analogue of baking int4/8
+    codes into logic and widening only at the accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def matmul_int8(
+    x: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """y = x @ (codes * scale).  codes:[IN,OUT] int8, scale:[1,OUT] f32."""
+    b, inn = x.shape
+    inn2, out = w_codes.shape
+    assert inn == inn2
+    abm, abk, abn = auto_tiles(b, inn, out)
+    bm, bk, bn = bm or abm, bk or abk, bn or abn
+    assert scale.shape == (1, out), f"scale must be [1,OUT], got {scale.shape}"
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_codes, 0, bk), 1, bn)
+    sp = _pad_to(scale, 1, bn)
+    m, kdim = xp.shape
+    _, n = wp.shape
+    nk = kdim // bk
+
+    grid = (m // bm, n // bn, nk)
+    out_padded = pl.pallas_call(
+        functools.partial(_matmul_int8_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out_padded[:b, :out]
+
+
+def vmem_footprint(
+    bm: int = DEF_BM, bk: int = DEF_BK, bn: int = DEF_BN, bytes_per_el: int = 4
+) -> dict:
+    """Static VMEM/MXU occupancy estimate for one grid step (perf deliverable).
+
+    Returned fields:
+      vmem_bytes   — x-tile + w-tile + o-tile resident bytes;
+      mxu_passes   — 128x128 MXU invocations per step;
+      mxu_util     — fraction of MXU lanes doing useful work for these tiles.
+    """
+    vmem = (bm * bk + bk * bn + bm * bn) * bytes_per_el
+    passes = max(1, (bk // 128) * (bn // 128)) * max(1, bm // 8)
+    util = min(1.0, bm / 8) * min(1.0, bk / 128) * min(1.0, bn / 128)
+    return {"vmem_bytes": vmem, "mxu_passes": passes, "mxu_util": util}

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness ground
+truth).
+
+Every Pallas kernel in this package has an entry here implemented with plain
+jax.numpy / lax ops only — no pallas, no custom control flow. pytest (and the
+hypothesis sweeps) assert `assert_allclose(kernel(...), ref(...))` across
+shapes and dtypes; the rust integration tests then check the PJRT-executed
+artifact against tensors produced by these same functions, so one oracle
+anchors all three layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(x: jnp.ndarray, w_t: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ w_t  with  x:[B, IN], w_t:[IN, OUT]."""
+    return jnp.dot(x, w_t, preferred_element_type=jnp.float32)
+
+
+def matmul_bias(x: jnp.ndarray, w_t: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return matmul(x, w_t) + b[None, :]
+
+
+def masked_matmul(x: jnp.ndarray, w_t: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle for the engine-free sparse matmul: zeros behave exactly
+    like pruned connections."""
+    return jnp.dot(x, w_t * mask, preferred_element_type=jnp.float32)
+
+
+def conv2d_nhwc(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """VALID conv, x:[B,H,W,Cin], w:[KH,KW,Cin,Cout] -> [B,H',W',Cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """Unfold VALID patches: [B,H,W,C] -> [B, H', W', KH*KW*C].
+
+    Patch layout is (kh, kw, c) row-major — the layout the Pallas matmul
+    kernels and the rust-side weight packer both assume (DESIGN.md §3).
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + oh, j : j + ow, :])
+    return jnp.concatenate(cols, axis=-1).reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Conv as im2col + matmul — bit-identical path to the Pallas conv."""
+    kh, kw, cin, cout = w.shape
+    cols = im2col(x, kh, kw)  # [B, OH, OW, KH*KW*Cin]
+    b, oh, ow, patch = cols.shape
+    wm = w.reshape(kh * kw * cin, cout)
+    out = jnp.dot(cols.reshape(-1, patch), wm, preferred_element_type=jnp.float32)
+    return out.reshape(b, oh, ow, cout)
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 max pooling, NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def pack_sparse_blocks(
+    w_t: np.ndarray, mask: np.ndarray, block: int
+) -> tuple[np.ndarray, list[int]]:
+    """Build-time block packing for the engine-free sparse kernel.
+
+    Partition the IN axis of w_t:[IN, OUT] into `block`-row groups; drop
+    groups whose mask rows are all zero. Returns the packed dense weights
+    [n_live*block, OUT] and the static list of surviving block indices.
+    This mirrors the FPGA flow where pruned weights synthesise to *nothing*:
+    the surviving indices become constants in the lowered HLO, never data.
+    """
+    inn, out = w_t.shape
+    if inn % block != 0:
+        pad = block - inn % block
+        w_t = np.concatenate([w_t, np.zeros((pad, out), w_t.dtype)], axis=0)
+        mask = np.concatenate([mask, np.zeros((pad, out), mask.dtype)], axis=0)
+        inn += pad
+    n_blocks = inn // block
+    live: list[int] = []
+    for i in range(n_blocks):
+        blk = mask[i * block : (i + 1) * block]
+        if np.any(blk != 0):
+            live.append(i)
+    if not live:  # degenerate fully-pruned layer: keep one zero block
+        live = [0]
+    packed = np.concatenate(
+        [(w_t * mask)[i * block : (i + 1) * block] for i in live], axis=0
+    )
+    return packed.astype(np.float32), live
+
+
+def sparse_matmul_packed_ref(
+    x: np.ndarray, packed: np.ndarray, live: list[int], block: int, out_dim: int
+) -> np.ndarray:
+    """Oracle for the packed engine-free matmul (numpy, no jax)."""
+    b = x.shape[0]
+    acc = np.zeros((b, out_dim), np.float32)
+    for k, blk_idx in enumerate(live):
+        xs = x[:, blk_idx * block : (blk_idx + 1) * block]
+        if xs.shape[1] < block:  # padded tail block
+            xs = np.pad(xs, ((0, 0), (0, block - xs.shape[1])))
+        acc += xs @ packed[k * block : (k + 1) * block]
+    return acc

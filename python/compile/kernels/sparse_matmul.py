@@ -1,0 +1,126 @@
+"""L1: engine-free unstructured-sparse matmul (the paper's core mechanism).
+
+FPGA story: a fully-unrolled layer bakes each non-zero weight into LUTs;
+pruned weights synthesise to *nothing* — no sparse engine, no index decode,
+no scheduler. TPU/Pallas re-think (DESIGN.md §3): all sparsity bookkeeping is
+resolved at **trace time**:
+
+  1. `pack_sparse_blocks` partitions the IN axis into SIMD-like blocks and
+     drops blocks whose mask is entirely zero (build time, numpy);
+  2. the surviving block indices become *static* slices of the activation —
+     in the lowered HLO they are constant-offset `slice` ops (wiring, not
+     computation), exactly like FPGA routing;
+  3. a single dense Pallas matmul runs over the packed weights.
+
+The run-time executable therefore contains no mask tensor, no gather, no
+CSR walk: it is a smaller dense matmul plus static wiring — engine-free.
+The denser the pruning, the fewer MXU passes and the smaller the VMEM
+footprint (the TPU analogue of "fewer LUTs, shallower adder tree").
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import matmul as mm
+from . import ref
+
+DEFAULT_BLOCK = 16  # SIMD-block granularity of zero-block elision.
+
+
+def plan_sparse_matmul(
+    w_t: np.ndarray, mask: np.ndarray, block: int = DEFAULT_BLOCK
+) -> dict:
+    """Build-time plan: packed weights + static live-block index list.
+
+    Returns a dict (kept JSON-friendly for export into DESIGN/EXPERIMENTS
+    perf notes): packed [L*block, OUT] f32, live indices, elision stats.
+    """
+    packed, live = ref.pack_sparse_blocks(w_t, mask, block)
+    n_blocks = (w_t.shape[0] + block - 1) // block
+    return {
+        "packed": packed,
+        "live": live,
+        "block": block,
+        "in_dim": int(w_t.shape[0]),
+        "out_dim": int(w_t.shape[1]),
+        "n_blocks_total": int(n_blocks),
+        "n_blocks_live": len(live),
+        "elision_ratio": 1.0 - len(live) / max(1, n_blocks),
+    }
+
+
+def gather_live_blocks(
+    x: jnp.ndarray, live: Sequence[int], block: int, in_dim: int
+) -> jnp.ndarray:
+    """Static re-wiring of activations: concat of the surviving IN blocks.
+
+    All offsets are python ints at trace time, so the lowered HLO contains
+    only constant slices + one concat — no runtime index arithmetic.
+    """
+    xp = x
+    pad = (-in_dim) % block
+    if pad:
+        xp = jnp.pad(x, ((0, 0), (0, pad)))
+    parts = [xp[:, i * block : (i + 1) * block] for i in live]
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def sparse_matmul(
+    x: jnp.ndarray,
+    plan: dict,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool = mm.INTERPRET,
+) -> jnp.ndarray:
+    """y = x @ (w_t * mask) with compile-time-specialised sparsity.
+
+    x:[B, IN] -> [B, OUT]; `plan` comes from `plan_sparse_matmul`. Tiles
+    default to `mm.auto_tiles` over the PACKED inner dim — the engine-free
+    win shows up here as fewer k-steps after elision.
+    """
+    assert x.shape[1] == plan["in_dim"], (x.shape, plan["in_dim"])
+    xg = gather_live_blocks(x, plan["live"], plan["block"], plan["in_dim"])
+    packed = jnp.asarray(plan["packed"])
+    return mm.matmul(xg, packed, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+def sparse_matmul_dense_fallback(
+    x: jnp.ndarray, w_t: jnp.ndarray, mask: jnp.ndarray, **kw
+) -> jnp.ndarray:
+    """Masked-dense path (used for folded layers and as a differential test
+    partner for the packed path)."""
+    return mm.matmul(x, jnp.asarray(w_t) * jnp.asarray(mask), **kw)
+
+
+def perf_estimate(plan: dict, batch: int, bm: int = mm.DEF_BM,
+                  bk: int = mm.DEF_BK, bn: int = mm.DEF_BN) -> dict:
+    """Static perf model of the engine-free kernel vs its dense equivalent.
+
+    MXU passes scale with live blocks only — the TPU analogue of the paper's
+    LUT reduction. Recorded in EXPERIMENTS.md §Perf.
+    """
+    k_dense = plan["n_blocks_total"] * plan["block"]
+    k_live = plan["n_blocks_live"] * plan["block"]
+    n = plan["out_dim"]
+
+    def passes(kdim: int) -> int:
+        return (
+            max(1, -(-batch // bm))
+            * max(1, -(-n // bn))
+            * max(1, -(-kdim // bk))
+        )
+
+    fp = mm.vmem_footprint(bm, bk, bn)
+    return {
+        "dense_mxu_passes": passes(k_dense),
+        "sparse_mxu_passes": passes(k_live),
+        "pass_reduction": 1.0 - passes(k_live) / passes(k_dense),
+        "vmem_bytes_per_step": fp["vmem_bytes"],
+        "elision_ratio": plan["elision_ratio"],
+    }

@@ -1,0 +1,261 @@
+"""L2: LeNet-5 QNN — the paper's evaluation network — in JAX.
+
+Two forward paths share one set of parameters:
+
+- `forward` — pure-jnp (via kernels.ref): used for QAT training / pruning /
+  fine-tuning where trace speed matters and gradients must flow (STE);
+- `forward_accel` — the *accelerator* path: every MAC layer goes through the
+  L1 Pallas kernels, with per-layer style decided by the rust DSE (folded
+  dense, unrolled dense, or engine-free unrolled sparse). This is the path
+  `aot.py` lowers to HLO for the rust runtime, so what the coordinator
+  serves is exactly what the kernels tests validated.
+
+Topology (FINN-flavoured LeNet-5 on 28x28x1, VALID convs):
+  conv1 1->6 k5  -> relu/q -> maxpool2
+  conv2 6->16 k5 -> relu/q -> maxpool2
+  fc1 256->120   -> relu/q
+  fc2 120->84    -> relu/q
+  fc3 84->10     -> logits
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmm
+from .kernels import ref
+from .kernels import sparse_matmul as ksp
+
+NUM_CLASSES = 10
+IMG = 28
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one MAC layer (mirrors rust graph::Node)."""
+
+    name: str
+    kind: str  # "conv" | "fc"
+    cin: int
+    cout: int
+    k: int  # kernel size (conv) or 1
+    ifm: int  # input spatial dim (conv) or 1
+    ofm: int  # output spatial dim (conv) or 1
+
+    @property
+    def weight_count(self) -> int:
+        return self.cout * self.cin * self.k * self.k
+
+    @property
+    def fold_in(self) -> int:
+        """SIMD axis extent (K^2 * Cin for conv, IN for fc)."""
+        return self.cin * self.k * self.k
+
+    @property
+    def macs_per_frame(self) -> int:
+        return self.ofm * self.ofm * self.weight_count
+
+
+# Canonical LeNet-5 layer list — single source of truth, exported to
+# graph.json and re-built independently by rust::graph::builder (tested
+# against each other in the integration tests).
+LAYERS: List[LayerSpec] = [
+    LayerSpec("conv1", "conv", 1, 6, 5, 28, 24),
+    LayerSpec("conv2", "conv", 6, 16, 5, 12, 8),
+    LayerSpec("fc1", "fc", 256, 120, 1, 1, 1),
+    LayerSpec("fc2", "fc", 120, 84, 1, 1, 1),
+    LayerSpec("fc3", "fc", 84, 10, 1, 1, 1),
+]
+
+LAYER_BY_NAME = {l.name: l for l in LAYERS}
+
+
+def init_params(seed: int = 0) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """He-init parameters. Conv weights [KH,KW,Cin,Cout]; fc [IN,OUT]."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for spec in LAYERS:
+        key, kw = jax.random.split(key)
+        fan_in = spec.fold_in
+        std = float(np.sqrt(2.0 / fan_in))
+        if spec.kind == "conv":
+            shape = (spec.k, spec.k, spec.cin, spec.cout)
+        else:
+            shape = (spec.cin, spec.cout)
+        params[spec.name] = {
+            "w": jax.random.normal(kw, shape, jnp.float32) * std,
+            "b": jnp.zeros((spec.cout,), jnp.float32),
+        }
+    return params
+
+
+def ones_masks(params) -> Dict[str, jnp.ndarray]:
+    return {name: jnp.ones_like(p["w"]) for name, p in params.items()}
+
+
+def _qw(w: jnp.ndarray, mask: Optional[jnp.ndarray], wbits: int) -> jnp.ndarray:
+    """Prune -> per-output-channel fake-quant -> re-mask.
+
+    Output channel is the LAST axis in both layouts; quant.weight_scale
+    expects channels leading, so move it for the scale computation.
+    """
+    wm = w if mask is None else w * mask
+    wmc = jnp.moveaxis(wm, -1, 0)
+    wq = quant.fake_quant_weight(wmc, wbits, per_channel=True)
+    wq = jnp.moveaxis(wq, 0, -1)
+    return wq if mask is None else wq * mask
+
+
+def forward(
+    params,
+    x: jnp.ndarray,
+    masks: Optional[Dict[str, jnp.ndarray]] = None,
+    wbits: int = quant.DEFAULT_WEIGHT_BITS,
+    abits: int = quant.DEFAULT_ACT_BITS,
+    quantize: bool = True,
+) -> jnp.ndarray:
+    """Reference/training forward: x [B,28,28,1] -> logits [B,10]."""
+
+    def qa(h):
+        return quant.fake_quant_act(h, abits) if quantize else ref.relu(h)
+
+    def w_of(name):
+        w = params[name]["w"]
+        m = None if masks is None else masks.get(name)
+        return _qw(w, m, wbits) if quantize else (w if m is None else w * m)
+
+    h = ref.conv2d_nhwc(x, w_of("conv1")) + params["conv1"]["b"]
+    h = ref.maxpool2x2(qa(h))
+    h = ref.conv2d_nhwc(h, w_of("conv2")) + params["conv2"]["b"]
+    h = ref.maxpool2x2(qa(h))
+    h = h.reshape(h.shape[0], -1)  # [B, 256], (h, w, c) row-major
+    h = qa(ref.matmul_bias(h, w_of("fc1"), params["fc1"]["b"]))
+    h = qa(ref.matmul_bias(h, w_of("fc2"), params["fc2"]["b"]))
+    return ref.matmul_bias(h, w_of("fc3"), params["fc3"]["b"])
+
+
+# --------------------------------------------------------------------------
+# Accelerator path (what gets lowered to HLO and served by rust).
+# --------------------------------------------------------------------------
+
+#: Layer styles assigned by the rust DSE (folding_config.json):
+#:   folded          — time-multiplexed PE/SIMD, dense weights from BRAM;
+#:   unrolled_dense  — fully unrolled, dense weights baked;
+#:   unrolled_sparse — fully unrolled + engine-free unstructured sparsity;
+#:   partial_sparse  — partially unrolled with sparse packing.
+STYLES = ("folded", "unrolled_dense", "unrolled_sparse", "partial_sparse")
+
+
+def build_accel_fn(
+    params,
+    masks: Dict[str, jnp.ndarray],
+    styles: Dict[str, str],
+    wbits: int = quant.DEFAULT_WEIGHT_BITS,
+    abits: int = quant.DEFAULT_ACT_BITS,
+    block: int = ksp.DEFAULT_BLOCK,
+    interpret: bool = kmm.INTERPRET,
+):
+    """Close over baked (pruned + quantised) weights and return a jittable
+    `x -> logits` whose MACs all run through the L1 Pallas kernels.
+
+    Weight values are resolved to numpy *here* (build time). Layers styled
+    `unrolled_sparse`/`partial_sparse` get an engine-free plan: their lowered
+    HLO contains only surviving SIMD blocks.
+    """
+    for name, s in styles.items():
+        if s not in STYLES:
+            raise ValueError(f"unknown style {s!r} for layer {name}")
+
+    baked: Dict[str, dict] = {}
+    for spec in LAYERS:
+        name = spec.name
+        w = np.asarray(_qw(params[name]["w"], masks.get(name), wbits))
+        b = np.asarray(params[name]["b"])
+        style = styles.get(name, "folded")
+        w_t = w.reshape(spec.fold_in, spec.cout)
+        m_t = np.asarray(masks[name]).reshape(spec.fold_in, spec.cout)
+        entry = {"b": jnp.asarray(b), "style": style, "spec": spec}
+        if style in ("unrolled_sparse", "partial_sparse"):
+            entry["plan"] = ksp.plan_sparse_matmul(w_t, m_t, block)
+        else:
+            entry["w_t"] = jnp.asarray(w_t)
+        baked[name] = entry
+
+    def qa(h):
+        return quant.fake_quant_act(h, abits)
+
+    def mac(name: str, h: jnp.ndarray) -> jnp.ndarray:
+        e = baked[name]
+        spec: LayerSpec = e["spec"]
+        if spec.kind == "conv":
+            if e["style"] in ("unrolled_sparse", "partial_sparse"):
+                y = kconv.conv2d_sparse(h, e["plan"], spec.k, spec.k, interpret=interpret)
+            else:
+                w4 = e["w_t"].reshape(spec.k, spec.k, spec.cin, spec.cout)
+                y = kconv.conv2d(h, w4, interpret=interpret)
+            return y + e["b"]
+        if e["style"] in ("unrolled_sparse", "partial_sparse"):
+            y = ksp.sparse_matmul(h, e["plan"], interpret=interpret)
+        else:
+            y = kmm.matmul(h, e["w_t"], interpret=interpret)
+        return y + e["b"]
+
+    def fn(x: jnp.ndarray) -> jnp.ndarray:
+        h = kconv.maxpool2x2(qa(mac("conv1", x)), interpret=interpret)
+        h = kconv.maxpool2x2(qa(mac("conv2", h)), interpret=interpret)
+        h = h.reshape(h.shape[0], -1)
+        h = qa(mac("fc1", h))
+        h = qa(mac("fc2", h))
+        return mac("fc3", h)
+
+    return fn, baked
+
+
+def graph_dict(batch: int = 1) -> dict:
+    """ONNX-like graph export consumed by rust::graph::import (graph.json)."""
+    nodes = []
+    for spec in LAYERS:
+        nodes.append(
+            {
+                "name": spec.name,
+                "op": spec.kind,
+                "cin": spec.cin,
+                "cout": spec.cout,
+                "k": spec.k,
+                "ifm": spec.ifm,
+                "ofm": spec.ofm,
+                "weights": spec.weight_count,
+                "macs_per_frame": spec.macs_per_frame,
+            }
+        )
+        if spec.kind == "conv":
+            nodes.append(
+                {
+                    "name": spec.name + "_pool",
+                    "op": "maxpool",
+                    "cin": spec.cout,
+                    "cout": spec.cout,
+                    "k": 2,
+                    "ifm": spec.ofm,
+                    "ofm": spec.ofm // 2,
+                    "weights": 0,
+                    "macs_per_frame": 0,
+                }
+            )
+    return {
+        "model": "lenet5",
+        "dataset": "synthetic-digits(28x28x1,10)",
+        "batch": batch,
+        "input": [batch, IMG, IMG, 1],
+        "output": [batch, NUM_CLASSES],
+        "weight_bits": quant.DEFAULT_WEIGHT_BITS,
+        "act_bits": quant.DEFAULT_ACT_BITS,
+        "nodes": nodes,
+    }

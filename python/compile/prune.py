@@ -1,0 +1,139 @@
+"""Build-time pruning: global magnitude + per-layer targeted (paper Fig. 1).
+
+The DSE workflow starts from *global magnitude pruning as a reference*
+(Sec. II): one threshold across all weight tensors gives the per-layer
+achievable sparsity profile that the rust DSE consumes. After the DSE picks
+which layers are sparse-unfolded, `layerwise_prune` re-prunes exactly those
+layers at their target sparsity (the "re-sparse fine-tuning" input); the
+rest stay dense to preserve accuracy.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_weights(params) -> np.ndarray:
+    """All weight magnitudes concatenated (biases excluded — FINN keeps
+    thresholds/bias in dedicated logic; only MAC weights prune)."""
+    return np.concatenate(
+        [np.abs(np.asarray(p["w"])).ravel() for p in params.values()]
+    )
+
+
+def global_magnitude_masks(
+    params, sparsity: float, layer_floor: float = 0.02
+) -> Dict[str, jnp.ndarray]:
+    """One global |w| threshold; keep at least `layer_floor` of each layer.
+
+    The floor prevents the global threshold from deleting an entire small
+    layer (conv1 has only 150 weights), which would disconnect the pipeline
+    — the hardware equivalent of a dangling stream.
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0,1), got {sparsity}")
+    allw = flatten_weights(params)
+    thr = float(np.quantile(allw, sparsity)) if sparsity > 0 else -1.0
+    masks = {}
+    for name, p in params.items():
+        w = np.asarray(p["w"])
+        m = (np.abs(w) > thr).astype(np.float32)
+        keep = m.mean()
+        if keep < layer_floor:
+            # keep the top `layer_floor` fraction of this layer instead
+            k = max(1, int(np.ceil(layer_floor * w.size)))
+            idx = np.argpartition(np.abs(w).ravel(), -k)[-k:]
+            m = np.zeros(w.size, np.float32)
+            m[idx] = 1.0
+            m = m.reshape(w.shape)
+        masks[name] = jnp.asarray(m)
+    return masks
+
+
+def layerwise_prune(
+    params, layer_sparsity: Dict[str, float]
+) -> Dict[str, jnp.ndarray]:
+    """Per-layer magnitude pruning at the DSE-chosen target sparsities.
+
+    Layers absent from `layer_sparsity` stay dense (mask of ones) — the
+    paper keeps non-selected layers dense to preserve accuracy.
+    """
+    masks = {}
+    for name, p in params.items():
+        w = np.asarray(p["w"])
+        s = float(layer_sparsity.get(name, 0.0))
+        if s <= 0.0:
+            masks[name] = jnp.ones_like(p["w"])
+            continue
+        if s >= 1.0:
+            raise ValueError(f"layer {name}: sparsity {s} >= 1")
+        k = max(1, int(round((1.0 - s) * w.size)))
+        idx = np.argpartition(np.abs(w).ravel(), -k)[-k:]
+        m = np.zeros(w.size, np.float32)
+        m[idx] = 1.0
+        masks[name] = jnp.asarray(m.reshape(w.shape))
+    return masks
+
+
+def nm_masks(params, n: int = 2, m: int = 4) -> Dict[str, jnp.ndarray]:
+    """N:M structured baseline (what mainstream hardware supports — the
+    comparison point motivating unstructured sparsity in the paper intro).
+
+    Keeps the N largest of every M consecutive weights along the input axis.
+    """
+    masks = {}
+    for name, p in params.items():
+        w = np.asarray(p["w"])
+        flat = w.reshape(-1, w.shape[-1])  # [IN-ish, OUT]
+        inn, out = flat.shape
+        pad = (-inn) % m
+        mag = np.abs(np.pad(flat, ((0, pad), (0, 0))))
+        groups = mag.reshape(-1, m, out)  # [G, M, OUT]
+        order = np.argsort(groups, axis=1)  # ascending
+        mask_g = np.ones_like(groups)
+        # zero the (m - n) smallest in each group
+        drop = order[:, : m - n, :]
+        np.put_along_axis(mask_g, drop, 0.0, axis=1)
+        mk = mask_g.reshape(-1, out)[:inn].reshape(w.shape)
+        masks[name] = jnp.asarray(mk.astype(np.float32))
+    return masks
+
+
+def sparsity_stats(masks: Dict[str, jnp.ndarray]) -> dict:
+    """Per-layer + global keep/nnz statistics (prune_profile.json rows)."""
+    layers = {}
+    tot_w = 0
+    tot_nnz = 0
+    for name, m in masks.items():
+        m = np.asarray(m)
+        nnz = int(m.sum())
+        layers[name] = {
+            "weights": int(m.size),
+            "nnz": nnz,
+            "sparsity": 1.0 - nnz / m.size,
+        }
+        tot_w += m.size
+        tot_nnz += nnz
+    return {
+        "layers": layers,
+        "total_weights": tot_w,
+        "total_nnz": tot_nnz,
+        "global_sparsity": 1.0 - tot_nnz / max(1, tot_w),
+    }
+
+
+def compression_ratio(
+    masks: Dict[str, jnp.ndarray], weight_bits: int, fp_bits: int = 32
+) -> float:
+    """Engine-free compression: fp32 dense bits / (nnz * weight_bits).
+
+    No index-storage term — positions are baked into logic (the paper's
+    headline 51.6x combines ~8x from 32->4 bit and ~6.45x from pruning).
+    """
+    st = sparsity_stats(masks)
+    dense_bits = st["total_weights"] * fp_bits
+    sparse_bits = max(1, st["total_nnz"] * weight_bits)
+    return dense_bits / sparse_bits

@@ -1,0 +1,125 @@
+"""Uniform affine quantisation primitives (build-time, L2).
+
+The paper targets FINN-style QNNs: low-bit weights and activations whose
+values are *baked into logic* after the DSE decides the layer style. Here we
+model the same arithmetic in JAX:
+
+- weights: symmetric signed uniform quantisation, per-output-channel scales
+  (int4 by default — the LogicSparse LeNet-5 operating point);
+- activations: unsigned affine quantisation after ReLU (uint4 by default);
+- training uses the straight-through estimator (STE) so QAT gradients flow
+  through the rounding.
+
+All functions are pure and shape-polymorphic; they are shared by the
+training path (`train.py`), the reference oracle (`kernels/ref.py`) and the
+exported inference model (`model.py`), so the numbers that reach the rust
+runtime are exactly the numbers the tests check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Default LogicSparse operating point (see DESIGN.md §7): W4A4.
+DEFAULT_WEIGHT_BITS = 4
+DEFAULT_ACT_BITS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static quantisation configuration for one layer."""
+
+    weight_bits: int = DEFAULT_WEIGHT_BITS
+    act_bits: int = DEFAULT_ACT_BITS
+    per_channel: bool = True
+
+    def weight_levels(self) -> int:
+        """Number of representable magnitudes on each side of zero."""
+        return 2 ** (self.weight_bits - 1) - 1
+
+    def act_levels(self) -> int:
+        return 2**self.act_bits - 1
+
+
+def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def weight_scale(w: jnp.ndarray, bits: int, per_channel: bool = True) -> jnp.ndarray:
+    """Symmetric scale so that max|w| maps to the largest level.
+
+    For per-channel mode the leading axis is treated as the output channel
+    (FINN convention: one threshold/scale block per PE lane).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    if per_channel:
+        reduce_axes = tuple(range(1, w.ndim))
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    # Guard fully-pruned channels: scale 0 would produce NaNs.
+    amax = jnp.maximum(amax, 1e-8)
+    return amax / qmax
+
+
+def fake_quant_weight(
+    w: jnp.ndarray, bits: int = DEFAULT_WEIGHT_BITS, per_channel: bool = True
+) -> jnp.ndarray:
+    """Symmetric fake quantisation with STE; output lies on the int grid."""
+    scale = weight_scale(w, bits, per_channel)
+    qmax = 2 ** (bits - 1) - 1
+    q = _ste_round(w / scale)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * scale
+
+
+def quantize_weight_int(
+    w: jnp.ndarray, bits: int = DEFAULT_WEIGHT_BITS, per_channel: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Integer codes + scale (the pair the FPGA flow would bake into LUTs)."""
+    scale = weight_scale(w, bits, per_channel)
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_weight(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant_act(
+    x: jnp.ndarray, bits: int = DEFAULT_ACT_BITS, ceil: float = 6.0
+) -> jnp.ndarray:
+    """Unsigned fake quantisation for post-ReLU activations.
+
+    A fixed clipping ceiling (ReLU6-style) keeps the scale static, which is
+    what a dataflow accelerator does: thresholds are compiled in, not
+    computed at run time.
+    """
+    qmax = 2**bits - 1
+    scale = ceil / qmax
+    x = jnp.clip(x, 0.0, ceil)
+    q = _ste_round(x / scale)
+    return q * scale
+
+
+def quant_error(w: jnp.ndarray, bits: int, per_channel: bool = True) -> jnp.ndarray:
+    """Mean-squared fake-quantisation error (used by tests/diagnostics)."""
+    return jnp.mean((w - fake_quant_weight(w, bits, per_channel)) ** 2)
+
+
+def model_bits_dense(n_weights: int, bits_fp: int = 32) -> int:
+    """Bit cost of the uncompressed fp32 model (compression-ratio numerator)."""
+    return n_weights * bits_fp
+
+
+def model_bits_engine_free(nnz: int, weight_bits: int) -> int:
+    """Bit cost of the engine-free sparse model: only surviving weights,
+    *no index storage* — positions are baked into logic (the paper's point:
+    unstructured sparsity without CSR/bitmap overhead)."""
+    return nnz * weight_bits

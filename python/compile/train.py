@@ -1,0 +1,191 @@
+"""Build-time QAT training, pruning calibration and re-sparse fine-tuning.
+
+Hand-rolled Adam (optax is not available in this sandbox); everything jit'd
+and deterministic in the seed. Three entry points used by aot.py:
+
+  train_qat      — dense W4A4 QAT from scratch (Table I dense accuracy);
+  prune_profile  — global-magnitude sweep: sparsity -> accuracy + per-layer
+                   nnz, the reference the rust DSE starts from (Fig. 1);
+  finetune       — re-sparse fine-tuning with the DSE-chosen fixed masks
+                   (paper: only layers selected for sparse-unfolding).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dataset
+from . import model as M
+from . import prune
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1**tf)
+    vhat_scale = 1.0 / (1 - b2**tf)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnames=("use_masks",))
+def _train_step(params, opt, xb, yb, masks, lr, use_masks: bool):
+    mk = masks if use_masks else None
+
+    def loss_fn(p):
+        return cross_entropy(M.forward(p, xb, mk), yb)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    if use_masks:
+        # Pruned weights stay pruned: gradient is masked so fine-tuning only
+        # moves surviving weights (fixed-topology re-sparse fine-tune).
+        grads = {
+            name: {
+                "w": g["w"] * masks[name],
+                "b": g["b"],
+            }
+            for name, g in grads.items()
+        }
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("use_masks",))
+def _eval_logits(params, x, masks, use_masks: bool):
+    return M.forward(params, x, masks if use_masks else None)
+
+
+def evaluate(params, x, y, masks=None, batch: int = 512) -> float:
+    """Top-1 accuracy of the QAT reference path."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        xb = jnp.asarray(x[i : i + batch])
+        logits = _eval_logits(params, xb, masks, masks is not None)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(y[i : i + batch])))
+    return correct / x.shape[0]
+
+
+def train_qat(
+    x_train,
+    y_train,
+    x_test,
+    y_test,
+    steps: int = 700,
+    batch: int = 96,
+    lr: float = 2e-3,
+    seed: int = 0,
+    masks: Optional[Dict[str, jnp.ndarray]] = None,
+    params=None,
+    log_every: int = 100,
+    log=print,
+) -> Tuple[dict, list]:
+    """QAT training loop; returns (params, loss_log)."""
+    if params is None:
+        params = M.init_params(seed)
+    use_masks = masks is not None
+    if masks is None:
+        masks = M.ones_masks(params)  # dummy pytree for jit signature
+    opt = adam_init(params)
+    it = dataset.batches(x_train, y_train, batch, seed + 1)
+    losses = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        xb, yb = next(it)
+        # cosine decay
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * step / steps))
+        params, opt, loss = _train_step(
+            params, opt, jnp.asarray(xb), jnp.asarray(yb), masks, lr_t, use_masks
+        )
+        losses.append(float(loss))
+        if log_every and step % log_every == 0:
+            acc = evaluate(params, x_test[:512], y_test[:512], masks if use_masks else None)
+            log(
+                f"  step {step:4d}/{steps}  loss {float(loss):.4f}  "
+                f"val@512 {100*acc:.2f}%  ({time.time()-t0:.1f}s)"
+            )
+    return params, losses
+
+
+def prune_profile(
+    params,
+    x_test,
+    y_test,
+    sparsities=(0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95),
+    eval_n: int = 1024,
+    log=print,
+) -> dict:
+    """Global-magnitude reference sweep (no fine-tune): the DSE's input.
+
+    For each global sparsity: accuracy of the pruned+quantised model and the
+    per-layer achieved sparsity. The rust DSE uses this to pick per-layer
+    sparsity targets that respect the accuracy budget.
+    """
+    rows = []
+    for s in sparsities:
+        masks = prune.global_magnitude_masks(params, s)
+        acc = evaluate(params, x_test[:eval_n], y_test[:eval_n], masks)
+        st = prune.sparsity_stats(masks)
+        rows.append(
+            {
+                "global_sparsity_target": s,
+                "global_sparsity": st["global_sparsity"],
+                "accuracy": acc,
+                "layers": {
+                    name: round(v["sparsity"], 6) for name, v in st["layers"].items()
+                },
+            }
+        )
+        log(f"  prune sweep s={s:.2f}: acc {100*acc:.2f}%  global {st['global_sparsity']:.3f}")
+    return {"rows": rows}
+
+
+def finetune(
+    params,
+    masks,
+    x_train,
+    y_train,
+    x_test,
+    y_test,
+    steps: int = 400,
+    batch: int = 96,
+    lr: float = 5e-4,
+    seed: int = 7,
+    log=print,
+) -> Tuple[dict, list]:
+    """Re-sparse fine-tuning: masked gradients, fixed topology."""
+    return train_qat(
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+        steps=steps,
+        batch=batch,
+        lr=lr,
+        seed=seed,
+        masks=masks,
+        params=params,
+        log=log,
+    )

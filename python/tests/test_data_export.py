@@ -1,0 +1,111 @@
+"""Synthetic dataset determinism/learnability signals + LSTW round-trip
+(the rust side re-reads these bytes; `tests/artifacts_e2e.rs` covers the
+cross-language direction)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, export as ex
+
+
+class TestDataset:
+    def test_shapes_and_range(self):
+        x_tr, y_tr, x_te, y_te = data.make_dataset(n_train=256, n_test=64, seed=0)
+        assert x_tr.shape == (256, 28, 28, 1)
+        assert x_te.shape == (64, 28, 28, 1)
+        assert x_tr.dtype == np.float32
+        assert 0.0 <= x_tr.min() and x_tr.max() <= 1.0
+        assert set(np.unique(y_tr)) == set(range(10))
+
+    def test_deterministic_in_seed(self):
+        a = data.make_dataset(64, 16, seed=5)
+        b = data.make_dataset(64, 16, seed=5)
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(xa, xb)
+
+    def test_train_test_disjoint_streams(self):
+        x_tr, _, x_te, _ = data.make_dataset(64, 64, seed=1)
+        assert not np.allclose(x_tr[:16], x_te[:16])
+
+    def test_classes_are_distinguishable(self):
+        # Nearest-centroid accuracy must be far above chance: the task is
+        # learnable (sanity floor, way below what LeNet achieves).
+        x_tr, y_tr, x_te, y_te = data.make_dataset(1024, 256, seed=2)
+        cent = np.stack([x_tr[y_tr == c].mean(axis=0).ravel() for c in range(10)])
+        d = ((x_te.reshape(len(x_te), -1)[:, None, :] - cent[None]) ** 2).sum(-1)
+        acc = (d.argmin(1) == y_te).mean()
+        assert acc > 0.5, f"nearest-centroid accuracy only {acc}"
+
+    def test_intra_class_variation(self):
+        labels = np.zeros(8, np.int32)
+        rng = np.random.default_rng(0)
+        imgs = data.render_batch(labels, rng)
+        flat = imgs.reshape(8, -1)
+        # No two renderings of the same digit identical (augmentation on).
+        for i in range(8):
+            for j in range(i + 1, 8):
+                assert not np.allclose(flat[i], flat[j])
+
+    def test_glyphs_complete(self):
+        for d in range(10):
+            g = data.glyph_array(d)
+            assert g.shape == (7, 5)
+            assert g.sum() > 0
+
+
+class TestLstw:
+    def test_roundtrip_all_dtypes(self, tmp_path):
+        tensors = {
+            "f": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "i": np.array([-5, 0, 7], np.int32),
+            "b": np.array([[1, 0], [0, 1]], np.uint8),
+            "c": np.array([-7, 7], np.int8),
+        }
+        p = tmp_path / "t.lstw"
+        ex.write_lstw(p, tensors)
+        back = ex.read_lstw(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(0, 6),
+        seed=st.integers(0, 1000),
+    )
+    def test_roundtrip_hypothesis(self, tmp_path_factory, n, seed):
+        rng = np.random.default_rng(seed)
+        tensors = {}
+        for i in range(n):
+            ndim = rng.integers(0, 4)
+            shape = tuple(int(rng.integers(1, 6)) for _ in range(ndim))
+            tensors[f"t{i}"] = rng.normal(size=shape).astype(np.float32)
+        p = tmp_path_factory.mktemp("lstw") / "x.lstw"
+        ex.write_lstw(p, tensors)
+        back = ex.read_lstw(p)
+        for k, v in tensors.items():
+            np.testing.assert_array_equal(back[k], v)
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = tmp_path / "bad.lstw"
+        p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            ex.read_lstw(p)
+
+    def test_unsupported_dtype_rejected(self, tmp_path):
+        with pytest.raises(TypeError):
+            ex.write_lstw(tmp_path / "x.lstw", {"d": np.zeros(3, np.float64)})
+
+    def test_export_params_layout(self, tmp_path):
+        from compile import model as M
+
+        params = M.init_params(0)
+        masks = M.ones_masks(params)
+        p = tmp_path / "params.lstw"
+        ex.export_params(p, params, masks)
+        back = ex.read_lstw(p)
+        assert "conv1.w" in back and "conv1.mask" in back and "fc3.b" in back
+        assert back["conv1.w"].shape == (5, 5, 1, 6)
+        assert back["conv1.mask"].dtype == np.uint8

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compile path: the rust runtime
+executes the HLO lowered from exactly these kernels, so allclose here plus
+HLO round-trip tests on the rust side transitively validate the served
+numbers. Hypothesis sweeps shapes (and the int8 grid) beyond the
+hand-picked cases.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return RNG.normal(size=shape).astype(np.float32)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "b,inn,out",
+        [
+            (1, 8, 8),
+            (3, 70, 33),
+            (8, 128, 128),
+            (5, 256, 120),  # fc1 shape
+            (2, 120, 84),  # fc2
+            (1, 84, 10),  # fc3
+            (17, 150, 6),  # conv1 im2col shape
+        ],
+    )
+    def test_matches_ref(self, b, inn, out):
+        x, w = randf(b, inn), randf(inn, out)
+        got = kmm.matmul(jnp.asarray(x), jnp.asarray(w))
+        want = ref.matmul(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_nonsquare_tiles(self):
+        x, w = randf(9, 100), randf(100, 50)
+        got = kmm.matmul(jnp.asarray(x), jnp.asarray(w), bm=4, bk=32, bn=16)
+        assert_allclose(np.asarray(got), x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_single_element(self):
+        x, w = randf(1, 1), randf(1, 1)
+        got = kmm.matmul(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), x @ w, rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 12),
+        inn=st.integers(1, 200),
+        out=st.integers(1, 160),
+    )
+    def test_hypothesis_shapes(self, b, inn, out):
+        rng = np.random.default_rng(b * 100003 + inn * 101 + out)
+        x = rng.normal(size=(b, inn)).astype(np.float32)
+        w = rng.normal(size=(inn, out)).astype(np.float32)
+        got = kmm.matmul(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), x @ w, rtol=2e-4, atol=2e-4)
+
+
+class TestMatmulInt8:
+    def test_matches_dequant(self):
+        x = randf(4, 64)
+        codes = RNG.integers(-7, 8, size=(64, 24)).astype(np.int8)
+        scale = np.abs(randf(1, 24)) + 0.01
+        got = kmm.matmul_int8(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(scale))
+        want = x @ (codes.astype(np.float32) * scale)
+        assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(inn=st.integers(1, 130), out=st.integers(1, 100))
+    def test_hypothesis_grid(self, inn, out):
+        rng = np.random.default_rng(inn * 31 + out)
+        x = rng.normal(size=(3, inn)).astype(np.float32)
+        codes = rng.integers(-7, 8, size=(inn, out)).astype(np.int8)
+        scale = (np.abs(rng.normal(size=(1, out))) + 0.01).astype(np.float32)
+        got = kmm.matmul_int8(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(scale))
+        want = x @ (codes.astype(np.float32) * scale)
+        assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+class TestConv:
+    @pytest.mark.parametrize(
+        "b,h,cin,cout,k",
+        [
+            (1, 28, 1, 6, 5),  # conv1
+            (2, 12, 6, 16, 5),  # conv2
+            (1, 6, 3, 4, 3),
+            (3, 5, 2, 2, 1),  # 1x1 kernel edge case
+        ],
+    )
+    def test_matches_lax_conv(self, b, h, cin, cout, k):
+        x, w = randf(b, h, h, cin), randf(k, k, cin, cout)
+        got = kconv.conv2d(jnp.asarray(x), jnp.asarray(w))
+        want = ref.conv2d_nhwc(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+    def test_im2col_equals_direct(self):
+        x, w = randf(2, 10, 10, 4), randf(3, 3, 4, 8)
+        a = ref.conv2d_im2col(jnp.asarray(x), jnp.asarray(w))
+        b_ = ref.conv2d_nhwc(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-5)
+
+    def test_im2col_layout_is_khkwc(self):
+        # The packing layout contract the rust weight packer relies on.
+        x = np.arange(2 * 3 * 3 * 2, dtype=np.float32).reshape(2, 3, 3, 2)
+        cols = np.asarray(ref.im2col(jnp.asarray(x), 2, 2))
+        assert cols.shape == (2, 2, 2, 8)
+        # patch element (kh=0, kw=1, c=0) of output pixel (0,0) is x[0,0,1,0]
+        assert cols[0, 0, 0, 2] == x[0, 0, 1, 0]
+
+
+class TestPool:
+    def test_matches_ref(self):
+        x = randf(3, 8, 8, 5)
+        got = kconv.maxpool2x2(jnp.asarray(x))
+        want = ref.maxpool2x2(jnp.asarray(x))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+    def test_negative_values(self):
+        x = -np.abs(randf(1, 4, 4, 2)) - 1.0
+        got = np.asarray(kconv.maxpool2x2(jnp.asarray(x)))
+        assert (got < 0).all()
+
+    def test_odd_dims_rejected(self):
+        with pytest.raises(AssertionError):
+            kconv.maxpool2x2(jnp.zeros((1, 5, 4, 1)))
+
+
+class TestVmemFootprint:
+    def test_default_tile(self):
+        fp = kmm.vmem_footprint()
+        assert fp["vmem_bytes"] == (8 * 128 + 128 * 128 + 8 * 128) * 4
+        assert 0 < fp["mxu_util"] <= 1.0
+
+    def test_full_mxu_tile(self):
+        fp = kmm.vmem_footprint(bm=8, bk=128, bn=128)
+        assert fp["mxu_util"] == 1.0

@@ -1,0 +1,109 @@
+"""L2 model: shapes, ref-vs-accelerator agreement (the path equivalence
+the served system relies on), style handling, graph export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import prune
+
+RNG = np.random.default_rng(5)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(seed=1)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return jnp.asarray(RNG.random((4, 28, 28, 1)).astype(np.float32))
+
+
+class TestForward:
+    def test_shapes(self, params, batch):
+        logits = M.forward(params, batch)
+        assert logits.shape == (4, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_masks_change_output(self, params, batch):
+        dense = M.forward(params, batch)
+        masks = prune.layerwise_prune(params, {n: 0.9 for n in params})
+        pruned = M.forward(params, batch, masks)
+        assert not np.allclose(np.asarray(dense), np.asarray(pruned))
+
+    def test_quantize_toggle(self, params, batch):
+        q = M.forward(params, batch, quantize=True)
+        f = M.forward(params, batch, quantize=False)
+        assert not np.allclose(np.asarray(q), np.asarray(f))
+
+
+class TestAccelPath:
+    @pytest.mark.parametrize(
+        "styles_fn",
+        [
+            lambda: {l.name: "folded" for l in M.LAYERS},
+            lambda: {l.name: "unrolled_sparse" for l in M.LAYERS},
+            lambda: {
+                "conv1": "unrolled_sparse",
+                "conv2": "partial_sparse",
+                "fc1": "partial_sparse",
+                "fc2": "folded",
+                "fc3": "folded",
+            },
+        ],
+        ids=["all-folded", "all-sparse", "mixed"],
+    )
+    def test_accel_matches_ref(self, params, batch, styles_fn):
+        masks = prune.layerwise_prune(params, {n: 0.6 for n in params})
+        styles = styles_fn()
+        fn, _ = M.build_accel_fn(params, masks, styles)
+        got = np.asarray(fn(batch))
+        want = np.asarray(M.forward(params, batch, masks))
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_dense_accel_matches_ref(self, params, batch):
+        masks = M.ones_masks(params)
+        styles = {l.name: "folded" for l in M.LAYERS}
+        fn, _ = M.build_accel_fn(params, masks, styles)
+        assert_allclose(
+            np.asarray(fn(batch)),
+            np.asarray(M.forward(params, batch)),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_unknown_style_rejected(self, params):
+        masks = M.ones_masks(params)
+        with pytest.raises(ValueError):
+            M.build_accel_fn(params, masks, {"conv1": "magic"})
+
+    def test_jittable(self, params, batch):
+        masks = M.ones_masks(params)
+        styles = {l.name: "folded" for l in M.LAYERS}
+        fn, _ = M.build_accel_fn(params, masks, styles)
+        jitted = jax.jit(fn)
+        assert_allclose(
+            np.asarray(jitted(batch)), np.asarray(fn(batch)), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestLayerSpecs:
+    def test_paper_arithmetic(self):
+        total_w = sum(l.weight_count for l in M.LAYERS)
+        total_mac = sum(l.macs_per_frame for l in M.LAYERS)
+        assert total_w == 44_190
+        assert total_mac == 281_640
+
+    def test_graph_dict_consistency(self):
+        g = M.graph_dict()
+        mac_nodes = [n for n in g["nodes"] if n["op"] in ("conv", "fc")]
+        assert len(mac_nodes) == 5
+        for n, spec in zip(mac_nodes, M.LAYERS):
+            assert n["weights"] == spec.weight_count
+            assert n["macs_per_frame"] == spec.macs_per_frame
+        pools = [n for n in g["nodes"] if n["op"] == "maxpool"]
+        assert len(pools) == 2

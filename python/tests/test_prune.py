@@ -1,0 +1,92 @@
+"""Pruning: global magnitude semantics, per-layer targets, N:M baseline,
+sparsity statistics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import prune
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(seed=3)
+
+
+class TestGlobalMagnitude:
+    def test_hits_global_target(self, params):
+        for s in [0.5, 0.8]:
+            masks = prune.global_magnitude_masks(params, s, layer_floor=0.0)
+            st_ = prune.sparsity_stats(masks)
+            assert abs(st_["global_sparsity"] - s) < 0.02
+
+    def test_large_layers_prune_more(self, params):
+        # Global thresholding prunes fc1 (30k weights, small magnitudes)
+        # harder than conv1 (150 weights, larger magnitudes) — exactly the
+        # per-layer imbalance the DSE exploits.
+        masks = prune.global_magnitude_masks(params, 0.8)
+        st_ = prune.sparsity_stats(masks)["layers"]
+        assert st_["fc1"]["sparsity"] > st_["conv1"]["sparsity"]
+
+    def test_layer_floor(self, params):
+        masks = prune.global_magnitude_masks(params, 0.97, layer_floor=0.05)
+        for name, m in masks.items():
+            keep = float(np.asarray(m).mean())
+            assert keep >= 0.049, f"{name} kept only {keep}"
+
+    def test_rejects_bad_sparsity(self, params):
+        with pytest.raises(ValueError):
+            prune.global_magnitude_masks(params, 1.0)
+
+
+class TestLayerwise:
+    def test_exact_targets(self, params):
+        targets = {"conv1": 0.4, "fc1": 0.85}
+        masks = prune.layerwise_prune(params, targets)
+        st_ = prune.sparsity_stats(masks)["layers"]
+        assert abs(st_["conv1"]["sparsity"] - 0.4) < 0.02
+        assert abs(st_["fc1"]["sparsity"] - 0.85) < 0.01
+        # untargeted layers stay dense
+        assert st_["conv2"]["sparsity"] == 0.0
+
+    def test_keeps_largest(self, params):
+        masks = prune.layerwise_prune(params, {"fc2": 0.7})
+        w = np.asarray(params["fc2"]["w"])
+        m = np.asarray(masks["fc2"])
+        kept_min = np.abs(w[m > 0]).min()
+        dropped_max = np.abs(w[m == 0]).max()
+        assert kept_min >= dropped_max
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.floats(0.05, 0.95))
+    def test_hypothesis_rate(self, params, s):
+        masks = prune.layerwise_prune(params, {"fc1": s})
+        got = prune.sparsity_stats(masks)["layers"]["fc1"]["sparsity"]
+        assert abs(got - s) < 0.02
+
+
+class TestNM:
+    def test_nm_rate(self, params):
+        masks = prune.nm_masks(params, 2, 4)
+        st_ = prune.sparsity_stats(masks)
+        # 2:4 = 50% (up to tail-group effects on non-multiple layers)
+        assert abs(st_["global_sparsity"] - 0.5) < 0.05
+
+    def test_group_structure(self):
+        p = {"x": {"w": jnp.asarray(np.arange(16, dtype=np.float32).reshape(8, 2))}}
+        masks = prune.nm_masks(p, 1, 2)
+        m = np.asarray(masks["x"])
+        # exactly one kept per group of 2 along the input axis, per column
+        groups = m.reshape(4, 2, 2)
+        assert (groups.sum(axis=1) == 1).all()
+
+
+class TestCompression:
+    def test_compression_engine_free(self, params):
+        masks = prune.layerwise_prune(
+            params, {n: 0.845 for n in params}
+        )
+        c = prune.compression_ratio(masks, weight_bits=4)
+        assert 45 < c < 60  # ≈ the paper's 51.6x operating point

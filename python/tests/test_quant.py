@@ -1,0 +1,78 @@
+"""Quantisation: grid properties, STE behaviour, compression arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import quant
+
+RNG = np.random.default_rng(11)
+
+
+class TestWeightQuant:
+    def test_values_on_grid(self):
+        w = jnp.asarray(RNG.normal(size=(8, 16)).astype(np.float32))
+        wq = np.asarray(quant.fake_quant_weight(w, 4))
+        scales = np.asarray(quant.weight_scale(w, 4))
+        q = wq / scales
+        assert np.allclose(q, np.round(q), atol=1e-4)
+        assert np.abs(q).max() <= 7 + 1e-4
+
+    def test_idempotent(self):
+        w = jnp.asarray(RNG.normal(size=(4, 30)).astype(np.float32))
+        w1 = quant.fake_quant_weight(w, 4)
+        w2 = quant.fake_quant_weight(w1, 4)
+        assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(2, 8), ch=st.integers(1, 12), n=st.integers(1, 64))
+    def test_error_bounded(self, bits, ch, n):
+        rng = np.random.default_rng(bits * 1000 + ch * 10 + n)
+        w = jnp.asarray(rng.normal(size=(ch, n)).astype(np.float32))
+        wq = np.asarray(quant.fake_quant_weight(w, bits))
+        scale = np.asarray(quant.weight_scale(w, bits))
+        assert (np.abs(np.asarray(w) - wq) <= scale * 0.5 + 1e-6).all()
+
+    def test_zero_channel_safe(self):
+        w = jnp.zeros((2, 5))
+        wq = quant.fake_quant_weight(w, 4)
+        assert np.isfinite(np.asarray(wq)).all()
+
+    def test_ste_gradient_passes_through(self):
+        # d/dw mean(fake_quant(w)) should be ~1/N, not 0 (STE).
+        w = jnp.asarray(RNG.normal(size=(1, 8)).astype(np.float32))
+        g = jax.grad(lambda x: jnp.sum(quant.fake_quant_weight(x, 4)))(w)
+        assert np.abs(np.asarray(g)).max() > 0.5
+
+
+class TestActQuant:
+    def test_levels_and_clipping(self):
+        x = jnp.asarray(np.linspace(-2, 10, 101).astype(np.float32))
+        xq = np.asarray(quant.fake_quant_act(x, 4, ceil=6.0))
+        assert xq.min() == 0.0
+        assert xq.max() == 6.0
+        scale = 6.0 / 15
+        assert np.allclose(xq / scale, np.round(xq / scale), atol=1e-4)
+        assert len(np.unique(xq)) <= 16
+
+    def test_monotone(self):
+        x = jnp.asarray(np.linspace(0, 6, 200).astype(np.float32))
+        xq = np.asarray(quant.fake_quant_act(x, 4))
+        assert (np.diff(xq) >= -1e-6).all()
+
+
+class TestCompressionAccounting:
+    def test_engine_free_headline(self):
+        # 44,190 weights, 15.5% kept, 32->4 bit ≈ 51.6x (paper).
+        dense = quant.model_bits_dense(44_190)
+        nnz = int(44_190 * 0.155)
+        sparse = quant.model_bits_engine_free(nnz, 4)
+        assert abs(dense / sparse - 51.6) < 0.7
+
+    def test_spec_validation(self):
+        spec = quant.QuantSpec(weight_bits=4, act_bits=4)
+        assert spec.weight_levels() == 7
+        assert spec.act_levels() == 15

@@ -1,0 +1,109 @@
+"""Engine-free sparse matmul: plan construction invariants + numeric
+equivalence with the masked-dense oracle, hypothesis-swept."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import sparse_matmul as sp
+
+RNG = np.random.default_rng(7)
+
+
+def rand_problem(inn, out, block_sparsity, rng):
+    w = rng.normal(size=(inn, out)).astype(np.float32)
+    mask = (rng.random((inn, out)) < 0.3).astype(np.float32)
+    # Zero whole input blocks with some probability (the elision target).
+    block = sp.DEFAULT_BLOCK
+    for b in range(0, inn, block):
+        if rng.random() < block_sparsity:
+            mask[b : b + block] = 0.0
+    return w, mask
+
+
+class TestPlan:
+    def test_elision_counts(self):
+        w, mask = rand_problem(160, 12, 0.5, np.random.default_rng(0))
+        plan = sp.plan_sparse_matmul(w, mask, block=16)
+        assert plan["n_blocks_total"] == 10
+        assert 1 <= plan["n_blocks_live"] <= 10
+        assert plan["packed"].shape == (plan["n_blocks_live"] * 16, 12)
+        assert plan["elision_ratio"] == 1.0 - plan["n_blocks_live"] / 10
+
+    def test_fully_pruned_layer_keeps_one_block(self):
+        w = RNG.normal(size=(32, 4)).astype(np.float32)
+        mask = np.zeros((32, 4), np.float32)
+        plan = sp.plan_sparse_matmul(w, mask, block=16)
+        assert plan["n_blocks_live"] == 1
+        x = RNG.normal(size=(3, 32)).astype(np.float32)
+        y = sp.sparse_matmul(jnp.asarray(x), plan)
+        assert_allclose(np.asarray(y), np.zeros((3, 4)), atol=1e-7)
+
+    def test_non_divisible_input_padded(self):
+        w, mask = rand_problem(70, 5, 0.3, np.random.default_rng(1))
+        plan = sp.plan_sparse_matmul(w, mask, block=16)
+        x = RNG.normal(size=(2, 70)).astype(np.float32)
+        y = sp.sparse_matmul(jnp.asarray(x), plan)
+        assert_allclose(np.asarray(y), x @ (w * mask), rtol=1e-4, atol=1e-4)
+
+    def test_dense_mask_keeps_all_blocks(self):
+        w = RNG.normal(size=(64, 8)).astype(np.float32)
+        plan = sp.plan_sparse_matmul(w, np.ones_like(w), block=16)
+        assert plan["n_blocks_live"] == 4
+        assert plan["elision_ratio"] == 0.0
+
+
+class TestNumerics:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        inn=st.integers(8, 200),
+        out=st.integers(1, 40),
+        seed=st.integers(0, 10_000),
+        bs=st.floats(0.0, 0.9),
+    )
+    def test_matches_masked_dense(self, inn, out, seed, bs):
+        rng = np.random.default_rng(seed)
+        w, mask = rand_problem(inn, out, bs, rng)
+        plan = sp.plan_sparse_matmul(w, mask)
+        x = rng.normal(size=(4, inn)).astype(np.float32)
+        got = sp.sparse_matmul(jnp.asarray(x), plan)
+        want = ref.masked_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_packed_oracle_agrees(self):
+        rng = np.random.default_rng(3)
+        w, mask = rand_problem(96, 7, 0.4, rng)
+        plan = sp.plan_sparse_matmul(w, mask, block=16)
+        x = rng.normal(size=(5, 96)).astype(np.float32)
+        ours = np.asarray(sp.sparse_matmul(jnp.asarray(x), plan))
+        oracle = ref.sparse_matmul_packed_ref(
+            x, plan["packed"], plan["live"], plan["block"], plan["out_dim"]
+        )
+        assert_allclose(ours, oracle, rtol=1e-4, atol=1e-4)
+
+
+class TestPerfModel:
+    def test_pass_reduction_scales_with_elision(self):
+        rng = np.random.default_rng(9)
+        w, mask_lo = rand_problem(512, 16, 0.2, rng)
+        _, mask_hi = rand_problem(512, 16, 0.8, np.random.default_rng(10))
+        lo = sp.perf_estimate(sp.plan_sparse_matmul(w, mask_lo), batch=8)
+        hi = sp.perf_estimate(sp.plan_sparse_matmul(w, mask_hi), batch=8)
+        assert hi["sparse_mxu_passes"] <= lo["sparse_mxu_passes"]
+        assert hi["elision_ratio"] >= lo["elision_ratio"]
+        assert lo["dense_mxu_passes"] == hi["dense_mxu_passes"]
+
+    def test_engine_free_invariant_no_mask_at_runtime(self):
+        # The jitted function must not take the mask as an argument: the
+        # plan bakes everything. (API-level check of the core claim.)
+        w, mask = rand_problem(64, 4, 0.5, np.random.default_rng(2))
+        plan = sp.plan_sparse_matmul(w, mask)
+        import inspect
+
+        sig = inspect.signature(sp.sparse_matmul)
+        assert "mask" not in sig.parameters
+        assert isinstance(plan["live"], list)  # static python ints
+        assert all(isinstance(i, int) for i in plan["live"])

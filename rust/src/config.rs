@@ -1,0 +1,228 @@
+//! Run configuration + the `folding_config.json` interchange (S16).
+//!
+//! `folding_config.json` is the contract between the rust DSE (producer)
+//! and the python stage-2 compile path (consumer: re-sparse fine-tune and
+//! AOT of the proposed design), and between the CLI and the serving
+//! coordinator (artifact selection).
+
+use crate::folding::{FoldingConfig, LayerFold, Style};
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Serializable DSE outcome for one strategy.
+#[derive(Debug, Clone)]
+pub struct FoldingConfigFile {
+    pub device: String,
+    pub strategy: String,
+    /// Estimated clock (MHz) at the chosen configuration.
+    pub f_mhz: f64,
+    /// Estimated totals, recorded for provenance.
+    pub est_luts: u64,
+    pub est_throughput_fps: f64,
+    pub est_latency_us: f64,
+    pub folding: FoldingConfig,
+}
+
+impl FoldingConfigFile {
+    pub fn to_json(&self) -> Value {
+        let layers = self
+            .folding
+            .layers
+            .iter()
+            .map(|(name, f)| {
+                (
+                    name.clone(),
+                    json::obj(vec![
+                        ("style", json::s(f.style.as_str())),
+                        ("pe", json::num(f.pe as f64)),
+                        ("simd", json::num(f.simd as f64)),
+                        ("target_sparsity", json::num(f.sparsity)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("device", json::s(self.device.clone())),
+            ("strategy", json::s(self.strategy.clone())),
+            ("f_mhz", json::num(self.f_mhz)),
+            ("est_luts", json::num(self.est_luts as f64)),
+            ("est_throughput_fps", json::num(self.est_throughput_fps)),
+            ("est_latency_us", json::num(self.est_latency_us)),
+            ("layers", Value::Obj(layers)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let layers_v = v
+            .req("layers")?
+            .as_obj()
+            .ok_or_else(|| Error::config("'layers' is not an object"))?;
+        let mut folding = FoldingConfig::default();
+        for (name, lv) in layers_v {
+            let fold = LayerFold {
+                style: Style::parse(lv.req_str("style")?)?,
+                pe: lv.req_usize("pe")?,
+                simd: lv.req_usize("simd")?,
+                sparsity: lv.req_f64("target_sparsity")?,
+            };
+            folding.layers.push((name.clone(), fold));
+        }
+        Ok(FoldingConfigFile {
+            device: v.req_str("device")?.to_string(),
+            strategy: v.req_str("strategy")?.to_string(),
+            f_mhz: v.req_f64("f_mhz")?,
+            est_luts: v.req_f64("est_luts")? as u64,
+            est_throughput_fps: v.req_f64("est_throughput_fps")?,
+            est_latency_us: v.req_f64("est_latency_us")?,
+            folding,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// Validate the folding against a graph (after loading).
+    pub fn check(&self, g: &Graph) -> Result<()> {
+        self.folding.check(g)
+    }
+}
+
+/// Pruning profile exported by python stage 1 (the DSE's reference input):
+/// per-global-sparsity rows of accuracy + per-layer achieved sparsity.
+#[derive(Debug, Clone)]
+pub struct PruneProfile {
+    pub rows: Vec<PruneRow>,
+    pub reference_global_sparsity: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PruneRow {
+    pub global_sparsity: f64,
+    pub accuracy: f64,
+    /// (layer, achieved sparsity at this global threshold)
+    pub layers: Vec<(String, f64)>,
+}
+
+impl PruneProfile {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let rows_v = v
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| Error::config("'rows' is not an array"))?;
+        let mut rows = Vec::with_capacity(rows_v.len());
+        for rv in rows_v {
+            let layers = rv
+                .req("layers")?
+                .as_obj()
+                .ok_or_else(|| Error::config("'layers' is not an object"))?
+                .iter()
+                .map(|(k, s)| {
+                    s.as_f64()
+                        .map(|f| (k.clone(), f))
+                        .ok_or_else(|| Error::config("layer sparsity not a number"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            rows.push(PruneRow {
+                global_sparsity: rv.req_f64("global_sparsity")?,
+                accuracy: rv.req_f64("accuracy")?,
+                layers,
+            });
+        }
+        Ok(PruneProfile {
+            rows,
+            reference_global_sparsity: v
+                .get("reference_global_sparsity")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.8),
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// Layer sparsity achievable at the reference operating point.
+    pub fn layer_sparsity_at_reference(&self, layer: &str) -> Option<f64> {
+        let row = self
+            .rows
+            .iter()
+            .min_by(|a, b| {
+                let da = (a.global_sparsity - self.reference_global_sparsity).abs();
+                let db = (b.global_sparsity - self.reference_global_sparsity).abs();
+                da.partial_cmp(&db).unwrap()
+            })?;
+        row.layers.iter().find(|(n, _)| n == layer).map(|(_, s)| *s)
+    }
+
+    /// A synthetic profile for tests / offline runs without artifacts:
+    /// every layer prunes to `s` at every operating point.
+    pub fn uniform(g: &Graph, sparsities: &[f64], accuracy: f64) -> Self {
+        PruneProfile {
+            reference_global_sparsity: sparsities.last().copied().unwrap_or(0.8),
+            rows: sparsities
+                .iter()
+                .map(|&s| PruneRow {
+                    global_sparsity: s,
+                    accuracy,
+                    layers: g.mac_nodes().map(|n| (n.name.clone(), s)).collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+
+    #[test]
+    fn folding_config_roundtrip() {
+        let g = lenet5();
+        let folding = FoldingConfig::unrolled(&g);
+        let f = FoldingConfigFile {
+            device: "xcu50".into(),
+            strategy: "proposed".into(),
+            f_mhz: 287.5,
+            est_luts: 23_465,
+            est_throughput_fps: 265_429.0,
+            est_latency_us: 18.13,
+            folding,
+        };
+        let text = f.to_json().to_string_pretty();
+        let f2 = FoldingConfigFile::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(f.folding, f2.folding);
+        assert_eq!(f2.strategy, "proposed");
+        f2.check(&g).unwrap();
+    }
+
+    #[test]
+    fn prune_profile_parses_python_shape() {
+        let text = r#"{
+            "reference_global_sparsity": 0.8,
+            "rows": [
+                {"global_sparsity_target": 0.5, "global_sparsity": 0.5,
+                 "accuracy": 0.95, "layers": {"conv1": 0.1, "fc1": 0.6}},
+                {"global_sparsity_target": 0.8, "global_sparsity": 0.8,
+                 "accuracy": 0.70, "layers": {"conv1": 0.3, "fc1": 0.85}}
+            ]
+        }"#;
+        let p = PruneProfile::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(p.rows.len(), 2);
+        assert_eq!(p.layer_sparsity_at_reference("fc1"), Some(0.85));
+        assert_eq!(p.layer_sparsity_at_reference("nope"), None);
+    }
+
+    #[test]
+    fn uniform_profile() {
+        let g = lenet5();
+        let p = PruneProfile::uniform(&g, &[0.5, 0.8], 0.9);
+        assert_eq!(p.layer_sparsity_at_reference("conv2"), Some(0.8));
+    }
+}

@@ -1,0 +1,198 @@
+//! Dynamic batcher: size- or deadline-triggered batch formation.
+//!
+//! The classic serving trade-off (vLLM router, Triton dynamic batching):
+//! wait a little to fill bigger batches (throughput) but never longer than
+//! `max_wait` (latency). The policy is deliberately simple and fully
+//! deterministic given arrival times, so the batching ablation bench can
+//! sweep `max_batch`/`max_wait` and attribute effects cleanly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{Batch, Request};
+use crate::coordinator::stats::ServerStats;
+
+/// Batch formation policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// Dispatch a non-empty batch at latest this long after its oldest
+    /// request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // serve_perf measured the b8 variant as the per-image sweet spot
+        // of the interpret-lowered executables (6,983 img/s vs 4,351 at
+        // b32 — see EXPERIMENTS.md §Perf), so the default batches to 8.
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) }
+    }
+}
+
+impl BatchPolicy {
+    pub fn low_latency() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) }
+    }
+
+    pub fn high_throughput() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Batcher loop: drain `rx`, form batches, send to `tx`.
+///
+/// Exits when the submit channel closes (all `Server` senders dropped) or
+/// shutdown is flagged and the queue is drained.
+pub(crate) fn run(
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Batch>,
+    policy: BatchPolicy,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+    let mut oldest: Option<Instant> = None;
+
+    let flush =
+        |pending: &mut Vec<Request>, oldest: &mut Option<Instant>| -> bool {
+            if pending.is_empty() {
+                return true;
+            }
+            let batch = Batch { requests: std::mem::take(pending) };
+            stats.on_dispatch(batch.requests.len());
+            *oldest = None;
+            tx.send(batch).is_ok()
+        };
+
+    loop {
+        // How long may we wait? Until the oldest request's deadline.
+        let timeout = match oldest {
+            Some(t0) => policy
+                .max_wait
+                .checked_sub(t0.elapsed())
+                .unwrap_or(Duration::ZERO),
+            None => Duration::from_millis(10),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if oldest.is_none() {
+                    oldest = Some(req.enqueued);
+                }
+                pending.push(req);
+                if pending.len() >= policy.max_batch {
+                    if !flush(&mut pending, &mut oldest) {
+                        return;
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let deadline_hit = oldest
+                    .map(|t0| t0.elapsed() >= policy.max_wait)
+                    .unwrap_or(false);
+                if deadline_hit && !flush(&mut pending, &mut oldest) {
+                    return;
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    // Drain whatever remains, then exit.
+                    while let Ok(req) = rx.try_recv() {
+                        pending.push(req);
+                        if pending.len() >= policy.max_batch
+                            && !flush(&mut pending, &mut oldest)
+                        {
+                            return;
+                        }
+                    }
+                    let _ = flush(&mut pending, &mut oldest);
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let _ = flush(&mut pending, &mut oldest);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request { id, image: vec![0.0; 784], enqueued: Instant::now(), resp: tx },
+            rx,
+        )
+    }
+
+    fn harness(policy: BatchPolicy) -> (
+        mpsc::Sender<Request>,
+        mpsc::Receiver<Batch>,
+        Arc<AtomicBool>,
+        std::thread::JoinHandle<()>,
+    ) {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let stats = Arc::new(ServerStats::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stats, sd));
+        (in_tx, out_rx, shutdown, h)
+    }
+
+    #[test]
+    fn size_triggered_dispatch() {
+        let (tx, out, sd, h) = harness(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i);
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        sd.store(true, Ordering::SeqCst);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_triggered_dispatch() {
+        let (tx, out, sd, h) = harness(BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(5),
+        });
+        let (r, _rx) = req(0);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        sd.store(true, Ordering::SeqCst);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drains_on_disconnect() {
+        let (tx, out, _sd, h) = harness(BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_secs(10),
+        });
+        let (r, _rx) = req(0);
+        tx.send(r).unwrap();
+        drop(tx); // disconnect before any trigger
+        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        h.join().unwrap();
+    }
+}

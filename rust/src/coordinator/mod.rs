@@ -1,0 +1,293 @@
+//! Serving coordinator (L3 request path — substrate S12).
+//!
+//! The deployment vehicle for the generated accelerator: clients submit
+//! single images; a **dynamic batcher** groups them (size- or
+//! deadline-triggered, vLLM-router style); **engine threads** execute
+//! batches on the PJRT runtime and complete per-request futures. The PJRT
+//! client is `Rc`-based (not `Send`), so each engine thread owns a full
+//! `ModelRuntime` replica — the same shape as one process per accelerator
+//! card.
+//!
+//! Python is never on this path: the engines consume only
+//! `artifacts/*.hlo.txt`.
+
+pub mod batcher;
+pub mod queue;
+pub mod stats;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::{ModelRuntime, IMG, NUM_CLASSES};
+use crate::util::error::{Error, Result};
+
+pub use batcher::BatchPolicy;
+pub use stats::{ServerStats, StatsSnapshot};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    /// 28*28 f32 image.
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Queue + batch + execute time.
+    pub latency_s: f64,
+}
+
+impl Response {
+    pub fn class(&self) -> usize {
+        crate::runtime::argmax_classes(&self.logits)[0]
+    }
+}
+
+/// A batch formed by the batcher.
+pub(crate) struct Batch {
+    pub requests: Vec<Request>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    pub policy: BatchPolicy,
+    /// Engine replicas (each compiles its own runtime).
+    pub engines: usize,
+    pub artifacts_dir: String,
+    pub tag: String,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            policy: BatchPolicy::default(),
+            engines: 1,
+            artifacts_dir: "artifacts".into(),
+            tag: "proposed".into(),
+        }
+    }
+}
+
+/// A running server: batcher thread + engine threads.
+pub struct Server {
+    submit_tx: mpsc::Sender<Request>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    batcher: Option<JoinHandle<()>>,
+    engines: Option<Vec<JoinHandle<()>>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the server; fails fast if artifacts are missing (each engine
+    /// verifies its runtime before the server is returned).
+    pub fn start(opts: ServerOptions) -> Result<Self> {
+        if opts.engines == 0 {
+            return Err(Error::config("engines must be >= 1"));
+        }
+        let stats = Arc::new(ServerStats::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        // Engines: verify runtimes load before spawning loops.
+        let mut engines = Vec::with_capacity(opts.engines);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for eid in 0..opts.engines {
+            let rx = Arc::clone(&batch_rx);
+            let st = Arc::clone(&stats);
+            let sd = Arc::clone(&shutdown);
+            let dir = opts.artifacts_dir.clone();
+            let tag = opts.tag.clone();
+            let ready = ready_tx.clone();
+            engines.push(std::thread::spawn(move || {
+                let rt = match ModelRuntime::load(&dir, &tag) {
+                    Ok(rt) => {
+                        let _ = ready.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(eid, rt, rx, st, sd);
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..opts.engines {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    return Err(e);
+                }
+                Err(_) => return Err(Error::QueueClosed),
+            }
+        }
+
+        // Batcher thread.
+        let policy = opts.policy.clone();
+        let st = Arc::clone(&stats);
+        let sd = Arc::clone(&shutdown);
+        let batcher = std::thread::spawn(move || {
+            batcher::run(submit_rx, batch_tx, policy, st, sd);
+        });
+
+        Ok(Server {
+            submit_tx,
+            stats,
+            shutdown,
+            batcher: Some(batcher),
+            engines: Some(engines),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one image; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        if image.len() != IMG * IMG {
+            return Err(Error::config(format!(
+                "image must be {} floats, got {}",
+                IMG * IMG,
+                image.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        self.stats.on_submit();
+        self.submit_tx.send(req).map_err(|_| Error::QueueClosed)?;
+        Ok(rx)
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| Error::QueueClosed)
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting, drain, join.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.shutdown_impl();
+        self.stats.snapshot()
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Close the submit channel by dropping a cloned sender set: the
+        // batcher exits when the channel is closed AND the flag is set.
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        if let Some(es) = self.engines.take() {
+            for e in es {
+                let _ = e.join();
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Engine loop: execute batches until shutdown + drained.
+fn engine_loop(
+    _eid: usize,
+    rt: ModelRuntime,
+    rx: Arc<std::sync::Mutex<mpsc::Receiver<Batch>>>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().expect("batch queue poisoned");
+            match guard.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok(b) => Some(b),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        let Some(batch) = batch else {
+            if shutdown.load(Ordering::SeqCst) {
+                // One last non-blocking drain attempt, then exit.
+                let drained = {
+                    let guard = rx.lock().expect("batch queue poisoned");
+                    guard.try_recv().ok()
+                };
+                match drained {
+                    Some(b) => {
+                        execute_batch(&rt, b, &stats);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            continue;
+        };
+        execute_batch(&rt, batch, &stats);
+    }
+}
+
+fn execute_batch(rt: &ModelRuntime, batch: Batch, stats: &ServerStats) {
+    let n = batch.requests.len();
+    if n == 0 {
+        return;
+    }
+    let px = IMG * IMG;
+    let mut x = Vec::with_capacity(n * px);
+    for r in &batch.requests {
+        x.extend_from_slice(&r.image);
+    }
+    let t0 = Instant::now();
+    match rt.infer_padded(&x, n) {
+        Ok(logits) => {
+            let exec_s = t0.elapsed().as_secs_f64();
+            stats.on_batch(n, exec_s);
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let latency_s = req.enqueued.elapsed().as_secs_f64();
+                stats.on_complete(latency_s);
+                let resp = Response {
+                    id: req.id,
+                    logits: logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec(),
+                    latency_s,
+                };
+                let _ = req.resp.send(resp); // client may have gone away
+            }
+        }
+        Err(e) => {
+            stats.on_error();
+            log::error!("batch of {n} failed: {e}");
+            // Complete with empty logits so clients unblock.
+            for req in batch.requests {
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    logits: vec![f32::NAN; NUM_CLASSES],
+                    latency_s: req.enqueued.elapsed().as_secs_f64(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Bounded admission queue with load shedding.
+//!
+//! The raw `mpsc` channel is unbounded; production routers bound admission
+//! and shed early under overload rather than letting queue latency grow
+//! without bound. [`AdmissionGate`] is that bound: a cheap atomic
+//! depth counter consulted at submit time (no lock on the hot path).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    /// Queue at capacity — caller should retry later or drop.
+    Shed,
+}
+
+/// Depth-bounded admission gate.
+pub struct AdmissionGate {
+    depth: AtomicUsize,
+    capacity: usize,
+    shed_total: AtomicU64,
+}
+
+impl AdmissionGate {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        AdmissionGate {
+            depth: AtomicUsize::new(0),
+            capacity,
+            shed_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit one request.
+    pub fn try_enter(&self) -> Admission {
+        // Optimistic increment with rollback keeps this a single RMW in
+        // the common case.
+        let prev = self.depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.capacity {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.shed_total.fetch_add(1, Ordering::Relaxed);
+            Admission::Shed
+        } else {
+            Admission::Accepted
+        }
+    }
+
+    /// Mark one admitted request as finished.
+    pub fn exit(&self) {
+        let prev = self.depth.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "exit without enter");
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sheds_at_capacity() {
+        let g = AdmissionGate::new(2);
+        assert_eq!(g.try_enter(), Admission::Accepted);
+        assert_eq!(g.try_enter(), Admission::Accepted);
+        assert_eq!(g.try_enter(), Admission::Shed);
+        assert_eq!(g.shed_total(), 1);
+        g.exit();
+        assert_eq!(g.try_enter(), Admission::Accepted);
+        assert_eq!(g.depth(), 2);
+    }
+
+    #[test]
+    fn concurrent_never_exceeds_capacity() {
+        let g = Arc::new(AdmissionGate::new(16));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                let mut max_seen = 0;
+                for _ in 0..2000 {
+                    if g.try_enter() == Admission::Accepted {
+                        max_seen = max_seen.max(g.depth());
+                        g.exit();
+                    }
+                }
+                max_seen
+            }));
+        }
+        for h in handles {
+            let max_seen = h.join().unwrap();
+            assert!(max_seen <= 16, "depth {max_seen} exceeded capacity");
+        }
+        assert_eq!(g.depth(), 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Serving statistics: counters + latency reservoir, lock-light.
+//!
+//! Counters are atomics (hot path); latencies go into a bounded reservoir
+//! behind a mutex taken once per completed request — profiled as noise at
+//! LeNet batch rates (see EXPERIMENTS.md §Perf).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Live server statistics.
+pub struct ServerStats {
+    started: Instant,
+    submitted: AtomicU64,
+    dispatched_batches: AtomicU64,
+    dispatched_requests: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    exec_time_us: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+const RESERVOIR: usize = 100_000;
+
+impl ServerStats {
+    pub fn new() -> Self {
+        ServerStats {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            dispatched_batches: AtomicU64::new(0),
+            dispatched_requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            exec_time_us: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_dispatch(&self, n: usize) {
+        self.dispatched_batches.fetch_add(1, Ordering::Relaxed);
+        self.dispatched_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, _n: usize, exec_s: f64) {
+        self.exec_time_us
+            .fetch_add((exec_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut res = self.latencies_us.lock().expect("stats poisoned");
+        if res.len() < RESERVOIR {
+            res.push((latency_s * 1e6) as u64);
+        }
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
+        lat.sort_unstable();
+        let pct = |q: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() - 1) as f64 * q).round() as usize;
+            lat[idx] as f64 / 1e6
+        };
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.dispatched_batches.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64();
+        StatsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches > 0 {
+                self.dispatched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            exec_time_s: self.exec_time_us.load(Ordering::Relaxed) as f64 / 1e6,
+            p50_latency_s: pct(0.5),
+            p95_latency_s: pct(0.95),
+            p99_latency_s: pct(0.99),
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    /// Total engine execute time (batch-level, summed across engines).
+    pub exec_time_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub elapsed_s: f64,
+}
+
+impl StatsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "served {}/{} ({} errors) in {:.2}s | {:.0} req/s | \
+             batches {} (mean {:.1}) | latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+            self.completed,
+            self.submitted,
+            self.errors,
+            self.elapsed_s,
+            self.throughput_rps,
+            self.batches,
+            self.mean_batch_size,
+            self.p50_latency_s * 1e3,
+            self.p95_latency_s * 1e3,
+            self.p99_latency_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_flow() {
+        let s = ServerStats::new();
+        for _ in 0..10 {
+            s.on_submit();
+        }
+        s.on_dispatch(6);
+        s.on_dispatch(4);
+        s.on_batch(6, 0.001);
+        s.on_batch(4, 0.002);
+        for i in 0..10 {
+            s.on_complete(0.001 * (i + 1) as f64);
+        }
+        s.on_error();
+        let snap = s.snapshot();
+        assert_eq!(snap.submitted, 10);
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.batches, 2);
+        assert!((snap.mean_batch_size - 5.0).abs() < 1e-9);
+        assert!(snap.p50_latency_s > 0.0);
+        assert!(snap.p50_latency_s <= snap.p99_latency_s);
+        assert!((snap.exec_time_s - 0.003).abs() < 1e-6);
+        assert!(snap.render().contains("served 10/10"));
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let snap = ServerStats::new().snapshot();
+        assert_eq!(snap.p99_latency_s, 0.0);
+        assert_eq!(snap.mean_batch_size, 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Initiation-interval and analytic latency models.
+//!
+//! `ii_cycles` is the steady-state cycles/frame of one stage; the chain's
+//! throughput is `f_max / max_ii`. First-frame latency is the sum of stage
+//! fills (SWU window buffering for convs, compute for MVAUs) — the
+//! cycle-accurate value comes from [`crate::sim`], which the integration
+//! tests compare against this estimate.
+
+use crate::folding::{LayerFold, Style};
+use crate::graph::{Node, Op};
+
+use super::LayerCost;
+
+/// Steady-state initiation interval (cycles/frame) of a MAC stage.
+pub fn ii_cycles(node: &Node, fold: &LayerFold) -> u64 {
+    match fold.style {
+        Style::Folded | Style::UnrolledDense => fold.cycles_per_frame(node),
+        Style::UnrolledSparse => {
+            // Fully unrolled: one window per cycle regardless of sparsity
+            // (all surviving MACs fire in parallel).
+            node.out_pixels() as u64
+        }
+        Style::PartialSparse => {
+            // The packed schedule skips all-zero SIMD blocks: the input
+            // axis shrinks to the live fraction (rounded up to SIMD).
+            let live_in = ((node.fold_in() as f64) * (1.0 - fold.sparsity)).ceil() as usize;
+            let live_folds = live_in.div_ceil(fold.simd).max(1) as u64;
+            let out_folds = (node.fold_out() / fold.pe) as u64;
+            node.out_pixels() as u64 * live_folds * out_folds
+        }
+    }
+}
+
+/// First-frame fill contribution of a MAC stage.
+pub fn fill_cycles(node: &Node, fold: &LayerFold) -> u64 {
+    match node.op {
+        Op::Conv => {
+            // SWU must buffer k-1 input rows plus k pixels before the first
+            // window is complete.
+            let swu = ((node.k - 1) * node.ifm + node.k) as u64;
+            swu + per_output_cycles(node, fold)
+        }
+        Op::Fc => per_output_cycles(node, fold),
+        Op::MaxPool => pool_fill_cycles(node),
+    }
+}
+
+/// Cycles from first input to first output element.
+fn per_output_cycles(node: &Node, fold: &LayerFold) -> u64 {
+    match fold.style {
+        Style::Folded | Style::UnrolledDense => {
+            ((node.fold_in() / fold.simd) * (node.fold_out() / fold.pe)) as u64
+        }
+        Style::UnrolledSparse => 1,
+        Style::PartialSparse => {
+            let live_in = ((node.fold_in() as f64) * (1.0 - fold.sparsity)).ceil() as usize;
+            (live_in.div_ceil(fold.simd).max(1) * (node.fold_out() / fold.pe)) as u64
+        }
+    }
+}
+
+/// Pooling II: one output per k² inputs, fully streaming.
+pub fn pool_ii_cycles(node: &Node) -> u64 {
+    (node.ofm * node.ofm) as u64
+}
+
+pub fn pool_fill_cycles(node: &Node) -> u64 {
+    ((node.k - 1) * node.ifm + node.k) as u64
+}
+
+/// Analytic first-frame latency of the whole pipeline at `f_mhz`.
+///
+/// Every stage must fill before its successor starts producing, and the
+/// last stage then streams its frame at its own II; the dominant stage's
+/// II bounds the drain. This matches the simulator to first order.
+pub fn pipeline_latency_s(layers: &[LayerCost], f_mhz: f64) -> f64 {
+    let fill: u64 = layers.iter().map(|l| l.fill_cycles).sum();
+    let drain = layers.iter().map(|l| l.ii_cycles).max().unwrap_or(1);
+    (fill + drain) as f64 / (f_mhz * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::folding::LayerFold;
+    use crate::graph::builder::lenet5;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn sparse_unroll_ii_ignores_sparsity() {
+        let g = lenet5();
+        let c1 = g.node("conv1").unwrap();
+        for s in [0.1, 0.5, 0.9] {
+            let f = LayerFold::unrolled_sparse(c1, s);
+            assert_eq!(ii_cycles(c1, &f), 576);
+        }
+    }
+
+    #[test]
+    fn partial_sparse_skips_zero_blocks() {
+        let g = lenet5();
+        let fc1 = g.node("fc1").unwrap(); // fold_in 256
+        let dense = LayerFold { pe: 8, simd: 16, style: Style::Folded, sparsity: 0.0 };
+        let sparse = LayerFold { pe: 8, simd: 16, style: Style::PartialSparse, sparsity: 0.75 };
+        // dense: (256/16)*(120/8) = 16*15 = 240 cycles
+        assert_eq!(ii_cycles(fc1, &dense), 240);
+        // sparse: live_in = 64 -> 4 folds * 15 = 60 cycles
+        assert_eq!(ii_cycles(fc1, &sparse), 60);
+    }
+
+    #[test]
+    fn prop_partial_sparse_never_slower_than_folded() {
+        let g = lenet5();
+        check("packed schedule <= dense schedule", 150, |gen| {
+            let node = *gen.choose(&g.mac_nodes().collect::<Vec<_>>());
+            let pe = gen.divisor_of(node.fold_out());
+            let simd = gen.divisor_of(node.fold_in());
+            let s = gen.f64(0.0, 0.95);
+            let dense = LayerFold { pe, simd, style: Style::Folded, sparsity: 0.0 };
+            let sparse = LayerFold { pe, simd, style: Style::PartialSparse, sparsity: s };
+            assert!(ii_cycles(node, &sparse) <= ii_cycles(node, &dense));
+        });
+    }
+
+    #[test]
+    fn conv_fill_includes_window_buffer() {
+        let g = lenet5();
+        let c1 = g.node("conv1").unwrap();
+        let f = LayerFold::unrolled(c1);
+        // (5-1)*28 + 5 = 117 window cycles + 1-cycle unrolled MVAU... the
+        // dense unrolled per-output latency is fold product = 1*1.
+        assert!(fill_cycles(c1, &f) >= 117);
+    }
+
+    #[test]
+    fn latency_positive_and_fill_dominated_when_deeply_folded() {
+        let g = lenet5();
+        let cfg = crate::folding::FoldingConfig::minimal(&g);
+        let mc = crate::cost::evaluate(&g, &cfg, &crate::device::XCU50).unwrap();
+        assert!(mc.latency_s > 0.0);
+        let unr = crate::cost::evaluate(
+            &g,
+            &crate::folding::FoldingConfig::unrolled(&g),
+            &crate::device::XCU50,
+        )
+        .unwrap();
+        assert!(unr.latency_s < mc.latency_s);
+    }
+}

@@ -1,0 +1,189 @@
+//! LUT / BRAM resource models per layer style (DESIGN.md §7).
+//!
+//! Constants follow FINN-R's published area characterisation in spirit and
+//! are calibrated against Table I's absolute scale (dense unroll ≈ 433k
+//! LUTs, auto-fold ≈ 9.4k on LeNet-5 W4A4); the calibration tests in
+//! `cost::tests` and `experiments::tests` pin them.
+
+use crate::folding::{LayerFold, Style};
+use crate::graph::Node;
+
+// ---- folded MVAU (weights streamed from BRAM) ----
+/// LUTs per MAC lane per (weight-bit × act-bit) product.
+pub const C_MAC_FOLDED: f64 = 1.15;
+/// Per-PE accumulator/threshold overhead (LUTs per accumulator bit).
+pub const C_PE: f64 = 3.2;
+/// Fixed per-layer control (counters, stream decode).
+pub const C_LAYER: f64 = 420.0;
+
+// ---- unrolled, weights baked into logic ----
+/// LUTs per baked constant-multiplier bit-product. A constant multiplier
+/// is much cheaper than a generic one: only the set bits of the constant
+/// survive synthesis.
+pub const C_MUL_BAKED: f64 = 0.38;
+/// LUTs per adder-tree node bit.
+pub const C_ADD: f64 = 0.30;
+
+// ---- sliding window unit (conv only) ----
+pub const C_SWU_PER_BIT: f64 = 0.9;
+pub const C_SWU_FIXED: f64 = 180.0;
+
+// ---- pooling ----
+pub const C_POOL_PER_CH_BIT: f64 = 1.1;
+pub const C_POOL_FIXED: f64 = 60.0;
+
+/// Accumulator width for a MAC column with `fan_in` addends.
+pub fn acc_bits(wbits: usize, abits: usize, fan_in: usize) -> f64 {
+    wbits as f64 + abits as f64 + (fan_in.max(2) as f64).log2().ceil()
+}
+
+/// LUTs of the MVAU implementing `node` under `fold`.
+pub fn layer_luts(node: &Node, fold: &LayerFold, wbits: usize, abits: usize) -> u64 {
+    let swu = if node.op == crate::graph::Op::Conv {
+        // The sliding-window buffer feeds SIMD lanes; its mux network
+        // scales with the window bits it must present per cycle.
+        let bits = (node.k * node.k * node.cin * abits) as f64;
+        bits * C_SWU_PER_BIT + C_SWU_FIXED
+    } else {
+        0.0
+    };
+
+    let mac = match fold.style {
+        Style::Folded => folded_mac_luts(node, fold, wbits, abits),
+        Style::UnrolledDense => baked_mac_luts(node, node.weights() as u64, wbits, abits),
+        Style::UnrolledSparse => baked_mac_luts(node, fold.nnz(node), wbits, abits),
+        Style::PartialSparse => partial_sparse_luts(node, fold, wbits, abits),
+    };
+
+    (mac + swu).round() as u64
+}
+
+fn folded_mac_luts(node: &Node, fold: &LayerFold, wbits: usize, abits: usize) -> f64 {
+    let lanes = fold.lanes() as f64;
+    let acc = acc_bits(wbits, abits, node.fold_in());
+    lanes * (wbits * abits) as f64 * C_MAC_FOLDED + fold.pe as f64 * acc * C_PE + C_LAYER
+}
+
+/// Fully unrolled with `nnz` surviving weights: constant multipliers plus
+/// a pruned adder tree. Zero weights contribute NOTHING — the engine-free
+/// mechanism. `nnz = weights` gives the dense-unrolled cost.
+fn baked_mac_luts(node: &Node, nnz: u64, wbits: usize, abits: usize) -> f64 {
+    let nnz = nnz as f64;
+    let cout = node.fold_out() as f64;
+    // Average surviving fan-in per output neuron drives the adder tree.
+    let fan_in = (nnz / cout).max(1.0);
+    let acc = acc_bits(wbits, abits, fan_in.ceil() as usize);
+    let mults = nnz * (wbits * abits) as f64 * C_MUL_BAKED;
+    // nnz - cout two-input adders in total across all trees (a tree with
+    // f leaves has f-1 internal nodes).
+    let adders = (nnz - cout).max(0.0) * acc * C_ADD;
+    mults + adders + C_LAYER * 0.5 // unrolled layers need almost no control
+}
+
+/// Partially unrolled sparse: a folded MVAU over the *packed* (live-block)
+/// input axis. Lanes cost as folded; the win is fewer cycles + less BRAM.
+fn partial_sparse_luts(node: &Node, fold: &LayerFold, wbits: usize, abits: usize) -> f64 {
+    let lanes = fold.lanes() as f64;
+    let acc = acc_bits(wbits, abits, node.fold_in());
+    // Slightly higher per-lane cost than plain folded: the packed schedule
+    // needs static block-offset ROMs (tiny, but not free).
+    lanes * (wbits * abits) as f64 * C_MAC_FOLDED * 1.08
+        + fold.pe as f64 * acc * C_PE
+        + C_LAYER
+}
+
+/// BRAM36 blocks for weight storage (folded styles only; baked = 0).
+pub fn layer_bram(node: &Node, fold: &LayerFold, wbits: usize) -> u64 {
+    match fold.style {
+        Style::UnrolledDense | Style::UnrolledSparse => 0,
+        Style::Folded => bram_for_bits((node.weights() * wbits) as u64, fold.pe),
+        Style::PartialSparse => bram_for_bits((fold.nnz(node) * wbits as u64).max(1), fold.pe),
+    }
+}
+
+fn bram_for_bits(bits: u64, pe: usize) -> u64 {
+    // Each PE needs an independent read port; BRAM36 = 36kb.
+    let per_pe_bits = bits.div_ceil(pe as u64);
+    let blocks_per_pe = per_pe_bits.div_ceil(36 * 1024).max(1);
+    blocks_per_pe * pe as u64
+}
+
+/// Pooling stage LUTs: comparator tree per channel lane.
+pub fn pool_luts(node: &Node, abits: usize) -> u64 {
+    (node.cin as f64 * abits as f64 * C_POOL_PER_CH_BIT + C_POOL_FIXED).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::folding::LayerFold;
+    use crate::graph::builder::lenet5;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn sparse_luts_scale_with_nnz() {
+        let g = lenet5();
+        let fc1 = g.node("fc1").unwrap();
+        let dense = LayerFold::unrolled(fc1);
+        let l_dense = layer_luts(fc1, &dense, 4, 4);
+        for s in [0.5, 0.8, 0.95] {
+            let f = LayerFold::unrolled_sparse(fc1, s);
+            let l = layer_luts(fc1, &f, 4, 4);
+            let expect_max = (l_dense as f64 * (1.0 - s) * 1.6) as u64 + 300;
+            assert!(l < expect_max, "s={s}: {l} vs dense {l_dense}");
+            assert!(l < l_dense);
+        }
+    }
+
+    #[test]
+    fn prop_sparser_never_costs_more() {
+        let g = lenet5();
+        check("unrolled-sparse LUTs monotone in sparsity", 150, |gen| {
+            let node = *gen.choose(&g.mac_nodes().collect::<Vec<_>>());
+            let s1 = gen.f64(0.0, 0.9);
+            let s2 = gen.f64(s1, 0.95);
+            let l1 = layer_luts(node, &LayerFold::unrolled_sparse(node, s1), 4, 4);
+            let l2 = layer_luts(node, &LayerFold::unrolled_sparse(node, s2), 4, 4);
+            assert!(l2 <= l1, "s {s1}->{s2}: {l1} -> {l2}");
+        });
+    }
+
+    #[test]
+    fn prop_folded_luts_scale_with_lanes() {
+        let g = lenet5();
+        check("folded LUTs grow with PE*SIMD", 150, |gen| {
+            let node = *gen.choose(&g.mac_nodes().collect::<Vec<_>>());
+            let pe = gen.divisor_of(node.fold_out());
+            let simd = gen.divisor_of(node.fold_in());
+            let f1 = LayerFold { pe, simd, style: Style::Folded, sparsity: 0.0 };
+            let f2 = LayerFold {
+                pe: node.fold_out(),
+                simd: node.fold_in(),
+                style: Style::Folded,
+                sparsity: 0.0,
+            };
+            assert!(layer_luts(node, &f1, 4, 4) <= layer_luts(node, &f2, 4, 4));
+        });
+    }
+
+    #[test]
+    fn bram_port_replication() {
+        // 10k weights * 4b = 40kb: 2 blocks at PE=1, but PE=8 forces 8.
+        assert_eq!(bram_for_bits(40_000, 1), 2);
+        assert_eq!(bram_for_bits(40_000, 8), 8);
+    }
+
+    #[test]
+    fn higher_precision_costs_more() {
+        let g = lenet5();
+        let c2 = g.node("conv2").unwrap();
+        let f = LayerFold { pe: 4, simd: 25, style: Style::Folded, sparsity: 0.0 };
+        assert!(layer_luts(c2, &f, 8, 8) > layer_luts(c2, &f, 4, 4));
+    }
+
+    #[test]
+    fn acc_bits_grows_with_fan_in() {
+        assert!(acc_bits(4, 4, 256) > acc_bits(4, 4, 16));
+        assert_eq!(acc_bits(4, 4, 2), 9.0);
+    }
+}

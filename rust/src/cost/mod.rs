@@ -1,0 +1,237 @@
+//! Analytic cost models of the dataflow accelerator (substrate S6) — the
+//! stand-in for FINN + Vivado on the XCU50 (DESIGN.md §2, §7).
+//!
+//! The paper's DSE makes its decisions from *fast ONNX-graph estimates* of
+//! per-layer latency and resources (Sec. III); these models implement that
+//! estimate→decide loop:
+//!
+//! * [`luts`]   — LUT cost per layer per [`Style`]: folded MVAU, unrolled
+//!   baked dense, unrolled baked **sparse** (nnz-proportional: the
+//!   engine-free claim), partial sparse;
+//! * [`clock`]  — achievable f_max from combinational depth (adder-tree
+//!   fan-in) and routing congestion: *why pruning speeds up an unrolled
+//!   design* (Table I rows 5→6);
+//! * [`latency`] — initiation intervals and analytic pipeline latency (the
+//!   cycle-accurate number comes from [`crate::sim`]).
+//!
+//! Constants are calibrated so the *shape* of Table I holds (who wins, by
+//! what factor); the calibration tests in this module pin the dense-unroll
+//! and auto-fold totals to the paper's order of magnitude.
+
+pub mod clock;
+pub mod latency;
+pub mod luts;
+
+use crate::device::Device;
+use crate::folding::{FoldingConfig, LayerFold};
+use crate::graph::{Graph, Node, Op};
+use crate::util::error::Result;
+
+/// Cost estimate for one dataflow stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    pub name: String,
+    /// Initiation interval: cycles between frames in steady state.
+    pub ii_cycles: u64,
+    /// First-frame fill latency contribution (cycles).
+    pub fill_cycles: u64,
+    pub luts: u64,
+    pub bram36: u64,
+    pub dsps: u64,
+    /// Combinational depth (levels of logic) — drives f_max.
+    pub logic_depth: f64,
+}
+
+/// Whole-accelerator estimate under one folding configuration.
+#[derive(Debug, Clone)]
+pub struct ModelCost {
+    pub layers: Vec<LayerCost>,
+    pub total_luts: u64,
+    pub total_bram: u64,
+    pub total_dsps: u64,
+    /// Achievable clock after depth + congestion derating (MHz).
+    pub f_mhz: f64,
+    /// Steady-state bottleneck II (cycles/frame).
+    pub max_ii: u64,
+    /// Analytic first-frame latency (seconds).
+    pub latency_s: f64,
+    /// Steady-state throughput (frames/second).
+    pub throughput_fps: f64,
+}
+
+impl ModelCost {
+    pub fn layer(&self, name: &str) -> Option<&LayerCost> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The stage with the largest II.
+    pub fn bottleneck(&self) -> &LayerCost {
+        self.layers
+            .iter()
+            .max_by_key(|l| l.ii_cycles)
+            .expect("non-empty model")
+    }
+
+    pub fn fits(&self, dev: &Device) -> bool {
+        self.total_luts <= dev.lut_budget()
+            && self.total_bram <= dev.bram_budget()
+            && self.total_dsps <= dev.dsp_budget()
+    }
+}
+
+/// Evaluate a folding configuration on a device.
+pub fn evaluate(g: &Graph, cfg: &FoldingConfig, dev: &Device) -> Result<ModelCost> {
+    cfg.check(g)?;
+    let mut layers = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let lc = match node.op {
+            Op::Conv | Op::Fc => {
+                let fold = cfg
+                    .get(&node.name)
+                    .expect("checked config covers all MAC nodes");
+                layer_cost(node, fold, g.weight_bits, g.act_bits)
+            }
+            Op::MaxPool => pool_cost(node, g.act_bits),
+        };
+        layers.push(lc);
+    }
+
+    let total_luts: u64 = layers.iter().map(|l| l.luts).sum();
+    let total_bram: u64 = layers.iter().map(|l| l.bram36).sum();
+    let total_dsps: u64 = layers.iter().map(|l| l.dsps).sum();
+    let max_depth = layers.iter().map(|l| l.logic_depth).fold(0.0, f64::max);
+    let f_mhz = clock::f_max_mhz(dev, max_depth, total_luts);
+    let max_ii = layers.iter().map(|l| l.ii_cycles).max().unwrap_or(1).max(1);
+    let latency_s = latency::pipeline_latency_s(&layers, f_mhz);
+    let throughput_fps = f_mhz * 1e6 / max_ii as f64;
+
+    Ok(ModelCost {
+        layers,
+        total_luts,
+        total_bram,
+        total_dsps,
+        f_mhz,
+        max_ii,
+        latency_s,
+        throughput_fps,
+    })
+}
+
+/// Cost of one MAC stage under a folding decision.
+pub fn layer_cost(node: &Node, fold: &LayerFold, wbits: usize, abits: usize) -> LayerCost {
+    let ii = latency::ii_cycles(node, fold);
+    LayerCost {
+        name: node.name.clone(),
+        ii_cycles: ii,
+        fill_cycles: latency::fill_cycles(node, fold),
+        luts: luts::layer_luts(node, fold, wbits, abits),
+        bram36: luts::layer_bram(node, fold, wbits),
+        dsps: 0, // 4-bit MACs map to LUTs in this flow (FINN-style)
+        logic_depth: clock::layer_depth(node, fold),
+    }
+}
+
+/// Cost of a pooling stage (pure streaming, no weights).
+pub fn pool_cost(node: &Node, abits: usize) -> LayerCost {
+    LayerCost {
+        name: node.name.clone(),
+        ii_cycles: latency::pool_ii_cycles(node),
+        fill_cycles: latency::pool_fill_cycles(node),
+        luts: luts::pool_luts(node, abits),
+        bram36: 0,
+        dsps: 0,
+        logic_depth: clock::POOL_DEPTH,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::XCU50;
+    use crate::folding::FoldingConfig;
+    use crate::graph::builder::lenet5;
+
+    /// Calibration: dense full unroll lands in the paper's order of
+    /// magnitude (Table I: 433,249 LUTs).
+    #[test]
+    fn dense_unroll_lut_scale() {
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        let mc = evaluate(&g, &cfg, &XCU50).unwrap();
+        assert!(
+            (300_000..600_000).contains(&mc.total_luts),
+            "dense unroll total {} out of calibration band",
+            mc.total_luts
+        );
+        // It must fit the XCU50 (it did in the paper).
+        assert!(mc.fits(&XCU50));
+    }
+
+    /// Calibration: fully folded is tiny and slow.
+    #[test]
+    fn minimal_fold_is_small_and_slow() {
+        let g = lenet5();
+        let cfg = FoldingConfig::minimal(&g);
+        let mc = evaluate(&g, &cfg, &XCU50).unwrap();
+        assert!(mc.total_luts < 20_000, "minimal fold {} LUTs", mc.total_luts);
+        // conv2 is the bottleneck of the fully folded net (paper Fig. 2).
+        assert_eq!(mc.bottleneck().name, "conv2");
+        // Far slower than unrolled.
+        let un = evaluate(&g, &FoldingConfig::unrolled(&g), &XCU50).unwrap();
+        assert!(mc.throughput_fps * 20.0 < un.throughput_fps);
+    }
+
+    /// The paper's key mechanism: pruning an unrolled design *increases*
+    /// throughput (shallower trees, less congestion) while slashing LUTs.
+    #[test]
+    fn sparse_unroll_beats_dense_unroll() {
+        let g = lenet5();
+        let dense = FoldingConfig::unrolled(&g);
+        let mut sparse = FoldingConfig::unrolled(&g);
+        for (name, f) in sparse.layers.iter_mut() {
+            let node = g.node(name).unwrap();
+            *f = crate::folding::LayerFold::unrolled_sparse(node, 0.8);
+        }
+        let d = evaluate(&g, &dense, &XCU50).unwrap();
+        let s = evaluate(&g, &sparse, &XCU50).unwrap();
+        assert!(s.total_luts < d.total_luts / 3, "luts {} vs {}", s.total_luts, d.total_luts);
+        assert!(s.throughput_fps > d.throughput_fps, "{} vs {}", s.throughput_fps, d.throughput_fps);
+        assert!(s.latency_s < d.latency_s);
+    }
+
+    #[test]
+    fn unrolled_fc_ii_is_one() {
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        let mc = evaluate(&g, &cfg, &XCU50).unwrap();
+        assert_eq!(mc.layer("fc1").unwrap().ii_cycles, 1);
+        assert_eq!(mc.layer("conv1").unwrap().ii_cycles, 576);
+    }
+
+    #[test]
+    fn pool_layers_cheap() {
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        let mc = evaluate(&g, &cfg, &XCU50).unwrap();
+        let pool = mc.layer("conv1_pool").unwrap();
+        assert!(pool.luts < 500);
+        assert_eq!(pool.bram36, 0);
+    }
+
+    #[test]
+    fn folded_uses_bram_unrolled_does_not() {
+        let g = lenet5();
+        let folded = evaluate(&g, &FoldingConfig::minimal(&g), &XCU50).unwrap();
+        let unrolled = evaluate(&g, &FoldingConfig::unrolled(&g), &XCU50).unwrap();
+        assert!(folded.total_bram > 0);
+        assert_eq!(unrolled.total_bram, 0, "baked weights need no BRAM");
+    }
+
+    #[test]
+    fn throughput_is_clock_over_ii() {
+        let g = lenet5();
+        let mc = evaluate(&g, &FoldingConfig::unrolled(&g), &XCU50).unwrap();
+        let expect = mc.f_mhz * 1e6 / mc.max_ii as f64;
+        assert!((mc.throughput_fps - expect).abs() < 1e-6);
+    }
+}

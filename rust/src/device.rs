@@ -1,0 +1,115 @@
+//! FPGA device models — the substitute for the paper's physical XCU50
+//! board (DESIGN.md §2). A device is a resource budget plus base timing;
+//! the cost models in [`crate::cost`] estimate per-layer usage against it
+//! and the DSE treats the budget as its hard constraint.
+
+use crate::util::error::{Error, Result};
+
+/// Static description of a target FPGA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// Total 6-input LUTs.
+    pub luts: u64,
+    /// Total flip-flops.
+    pub ffs: u64,
+    /// Total 36kb BRAM blocks.
+    pub bram36: u64,
+    /// Total DSP48 slices.
+    pub dsps: u64,
+    /// Nominal dataflow clock in MHz for shallow logic (the f_max model in
+    /// `cost::clock` derates this with combinational depth).
+    pub f_base_mhz: f64,
+    /// Fraction of LUTs usable by the accelerator (shell/infrastructure
+    /// overhead reserves the rest — Alveo shells are substantial).
+    pub usable_fraction: f64,
+}
+
+impl Device {
+    /// LUT budget available to the generated accelerator.
+    pub fn lut_budget(&self) -> u64 {
+        (self.luts as f64 * self.usable_fraction) as u64
+    }
+
+    pub fn bram_budget(&self) -> u64 {
+        (self.bram36 as f64 * self.usable_fraction) as u64
+    }
+
+    pub fn dsp_budget(&self) -> u64 {
+        (self.dsps as f64 * self.usable_fraction) as u64
+    }
+}
+
+/// Xilinx Alveo U50 (XCU50): the paper's evaluation board.
+pub const XCU50: Device = Device {
+    name: "xcu50",
+    luts: 871_680,
+    ffs: 1_743_360,
+    bram36: 1_344,
+    dsps: 5_952,
+    f_base_mhz: 300.0,
+    usable_fraction: 0.80,
+};
+
+/// Zynq UltraScale+ ZCU104 — a smaller edge board used by several FINN
+/// papers; exercised by the resource-constraint ablations.
+pub const ZCU104: Device = Device {
+    name: "zcu104",
+    luts: 230_400,
+    ffs: 460_800,
+    bram36: 312,
+    dsps: 1_728,
+    f_base_mhz: 250.0,
+    usable_fraction: 0.85,
+};
+
+/// Tiny synthetic device for tests: forces the DSE into its constrained
+/// branches with LeNet-scale workloads.
+pub const TINY: Device = Device {
+    name: "tiny",
+    luts: 30_000,
+    ffs: 60_000,
+    bram36: 64,
+    dsps: 128,
+    f_base_mhz: 200.0,
+    usable_fraction: 1.0,
+};
+
+/// Look up a device preset by name.
+pub fn by_name(name: &str) -> Result<Device> {
+    match name {
+        "xcu50" => Ok(XCU50),
+        "zcu104" => Ok(ZCU104),
+        "tiny" => Ok(TINY),
+        other => Err(Error::config(format!(
+            "unknown device '{other}' (known: xcu50, zcu104, tiny)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_below_totals() {
+        for d in [XCU50, ZCU104, TINY] {
+            assert!(d.lut_budget() <= d.luts);
+            assert!(d.bram_budget() <= d.bram36);
+            assert!(d.dsp_budget() <= d.dsps);
+            assert!(d.f_base_mhz > 0.0);
+        }
+    }
+
+    #[test]
+    fn xcu50_is_large_enough_for_dense_unroll() {
+        // Table I's Unfold row needs ~433k LUTs; the XCU50 (871k) fits it.
+        assert!(XCU50.luts > 433_249);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("xcu50").unwrap(), XCU50);
+        assert!(by_name("virtex2").is_err());
+    }
+}

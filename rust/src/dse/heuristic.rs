@@ -1,0 +1,283 @@
+//! Heuristic folding search with secondary relaxation (Fig. 1, step 2).
+//!
+//! Objective: the cheapest legal folding whose estimated throughput meets
+//! the target, i.e. FINN-R's throughput-oriented DSE plus the paper's
+//! resource awareness:
+//!
+//! * **forward pass** — repeatedly raise parallelism (next legal SIMD/PE
+//!   divisor) on the current bottleneck layer, choosing the axis with the
+//!   best cycles-saved per LUT-added, until the target FPS is met or the
+//!   budget would be exceeded;
+//! * **secondary relaxation** — walk non-bottleneck layers from most to
+//!   least over-provisioned and step their parallelism back down while
+//!   the target still holds: inter-layer balance for free LUTs.
+//!
+//! With `sparsities` provided (Auto+Pruning), folded layers carry the
+//! `PartialSparse` style: the packed schedule skips all-zero SIMD blocks,
+//! so the same throughput needs less parallelism (fewer LUTs) — the
+//! quantitative content of Table I row 4 vs row 3.
+
+use crate::cost::{self};
+use crate::device::Device;
+use crate::folding::{space, FoldingConfig, LayerFold, Style};
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+
+use super::report::{DseReport, Step};
+use super::DseOptions;
+
+/// Run the heuristic folding search.
+pub fn auto_fold(
+    g: &Graph,
+    dev: &Device,
+    opts: &DseOptions,
+    sparsities: Option<&[(String, f64)]>,
+    report: &mut DseReport,
+) -> Result<FoldingConfig> {
+    let budget = (dev.lut_budget() as f64 * opts.budget_fraction) as u64;
+    let spars_of = |name: &str| -> f64 {
+        sparsities
+            .and_then(|ss| ss.iter().find(|(n, _)| n == name).map(|(_, s)| *s))
+            .unwrap_or(0.0)
+    };
+
+    // Start minimal; with pruning enabled every folded layer is
+    // partial-sparse from the outset.
+    let mut cfg = FoldingConfig::minimal(g);
+    if sparsities.is_some() {
+        for (name, f) in cfg.layers.iter_mut() {
+            let s = spars_of(name);
+            if s > 0.0 {
+                f.style = Style::PartialSparse;
+                f.sparsity = s;
+            }
+        }
+    }
+
+    let target_ii = |f_mhz: f64| -> u64 {
+        ((f_mhz * 1e6 / opts.auto_fold_target_fps).floor() as u64).max(1)
+    };
+
+    // ---- forward pass ----
+    for _ in 0..10_000 {
+        let mc = cost::evaluate(g, &cfg, dev)?;
+        if mc.throughput_fps >= opts.auto_fold_target_fps {
+            break;
+        }
+        // Bottleneck MAC layer (pools are fixed-function), by the cost
+        // model's II — partial-sparse layers skip zero blocks, so the
+        // dense folding formula would finger the wrong layer.
+        let bname = cfg
+            .layers
+            .iter()
+            .map(|(n, f)| (n.clone(), cost::latency::ii_cycles(g.node(n).unwrap(), f)))
+            .max_by_key(|(_, ii)| *ii)
+            .map(|(n, _)| n)
+            .expect("non-empty config");
+        let node = g.node(&bname)?;
+        let cur = cfg.get(&bname).unwrap().clone();
+
+        // Candidate moves: next SIMD step, next PE step.
+        let mut cands: Vec<LayerFold> = Vec::new();
+        if let Some(s) = space::next_step(&space::legal_simd(node), cur.simd) {
+            cands.push(LayerFold { simd: s, ..cur.clone() });
+        }
+        if let Some(p) = space::next_step(&space::legal_pe(node), cur.pe) {
+            cands.push(LayerFold { pe: p, ..cur.clone() });
+        }
+        if cands.is_empty() {
+            report.push(Step::Stop {
+                reason: format!("{bname} fully parallel but target not met"),
+            });
+            break;
+        }
+
+        // Pick the candidate with best cycles-saved per LUT-added.
+        let cur_ii = cost::latency::ii_cycles(node, &cur);
+        let cur_luts = cost::layer_cost(node, &cur, g.weight_bits, g.act_bits).luts;
+        let mut best: Option<(f64, LayerFold, u64)> = None;
+        for cand in cands {
+            cand.check(node)?;
+            let ii = cost::latency::ii_cycles(node, &cand);
+            let luts = cost::layer_cost(node, &cand, g.weight_bits, g.act_bits).luts;
+            let saved = cur_ii.saturating_sub(ii) as f64;
+            let added = (luts.saturating_sub(cur_luts)).max(1) as f64;
+            let score = saved / added;
+            if best.as_ref().map(|(b, _, _)| score > *b).unwrap_or(true) {
+                best = Some((score, cand, ii));
+            }
+        }
+        let (_, chosen, new_ii) = best.unwrap();
+
+        // Budget check on the whole design.
+        let mut trial = cfg.clone();
+        trial.set(&bname, chosen.clone());
+        let tc = cost::evaluate(g, &trial, dev)?;
+        if tc.total_luts > budget {
+            report.push(Step::Stop {
+                reason: format!("budget {budget} LUTs reached at {bname}"),
+            });
+            break;
+        }
+        report.push(Step::FoldUp {
+            layer: bname.clone(),
+            pe: chosen.pe,
+            simd: chosen.simd,
+            ii: new_ii,
+        });
+        cfg = trial;
+    }
+
+    // ---- secondary relaxation ----
+    // The bottleneck sets the frame rate; any layer with slack can give
+    // back parallelism as long as it stays at or under the bottleneck II
+    // for the achieved clock.
+    let mc = cost::evaluate(g, &cfg, dev)?;
+    let cost_max_ii = cfg
+        .layers
+        .iter()
+        .map(|(n, f)| cost::latency::ii_cycles(g.node(n).unwrap(), f))
+        .max()
+        .unwrap_or(1);
+    let ii_cap = cost_max_ii.max(target_ii(mc.f_mhz));
+    let names: Vec<String> = cfg.layers.iter().map(|(n, _)| n.clone()).collect();
+    for name in names {
+        loop {
+            let node = g.node(&name)?;
+            let cur = cfg.get(&name).unwrap().clone();
+            let mut relaxed: Option<LayerFold> = None;
+            // Prefer stepping the axis whose reduction saves most LUTs.
+            let mut options: Vec<LayerFold> = Vec::new();
+            if let Some(s) = space::prev_step(&space::legal_simd(node), cur.simd) {
+                options.push(LayerFold { simd: s, ..cur.clone() });
+            }
+            if let Some(p) = space::prev_step(&space::legal_pe(node), cur.pe) {
+                options.push(LayerFold { pe: p, ..cur.clone() });
+            }
+            let cur_luts = cost::layer_cost(node, &cur, g.weight_bits, g.act_bits).luts;
+            let mut best_save = 0u64;
+            for cand in options {
+                if cost::latency::ii_cycles(node, &cand) > ii_cap {
+                    continue;
+                }
+                let luts = cost::layer_cost(node, &cand, g.weight_bits, g.act_bits).luts;
+                let save = cur_luts.saturating_sub(luts);
+                if save > best_save {
+                    best_save = save;
+                    relaxed = Some(cand);
+                }
+            }
+            match relaxed {
+                Some(r) => {
+                    report.push(Step::Relax {
+                        layer: name.clone(),
+                        pe: r.pe,
+                        simd: r.simd,
+                        luts_saved: best_save,
+                    });
+                    cfg.set(&name, r);
+                }
+                None => break,
+            }
+        }
+    }
+
+    cfg.check(g)?;
+    let final_cost = cost::evaluate(g, &cfg, dev)?;
+    if final_cost.total_luts > budget {
+        return Err(Error::dse(format!(
+            "auto-fold exceeded budget: {} > {budget} LUTs",
+            final_cost.total_luts
+        )));
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{TINY, XCU50};
+    use crate::graph::builder::{convnet, lenet5};
+
+    fn opts() -> DseOptions {
+        DseOptions::default()
+    }
+
+    #[test]
+    fn meets_target_on_lenet() {
+        let g = lenet5();
+        let mut rep = DseReport::new("auto_fold");
+        let cfg = auto_fold(&g, &XCU50, &opts(), None, &mut rep).unwrap();
+        let mc = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+        assert!(
+            mc.throughput_fps >= opts().auto_fold_target_fps,
+            "got {} FPS",
+            mc.throughput_fps
+        );
+        // Paper scale: auto folding ~9.4k LUTs; allow a generous band.
+        assert!(
+            (3_000..25_000).contains(&mc.total_luts),
+            "auto-fold {} LUTs out of band",
+            mc.total_luts
+        );
+    }
+
+    #[test]
+    fn pruned_variant_is_cheaper_at_same_target() {
+        let g = lenet5();
+        let sp: Vec<(String, f64)> =
+            g.mac_nodes().map(|n| (n.name.clone(), 0.8)).collect();
+        let mut r1 = DseReport::new("a");
+        let mut r2 = DseReport::new("b");
+        let dense = auto_fold(&g, &XCU50, &opts(), None, &mut r1).unwrap();
+        let pruned = auto_fold(&g, &XCU50, &opts(), Some(&sp), &mut r2).unwrap();
+        let cd = cost::evaluate(&g, &dense, &XCU50).unwrap();
+        let cp = cost::evaluate(&g, &pruned, &XCU50).unwrap();
+        assert!(cp.throughput_fps >= opts().auto_fold_target_fps);
+        assert!(
+            cp.total_luts < cd.total_luts,
+            "pruned {} !< dense {}",
+            cp.total_luts,
+            cd.total_luts
+        );
+    }
+
+    #[test]
+    fn respects_tiny_budget() {
+        let g = lenet5();
+        let mut rep = DseReport::new("auto_fold");
+        // On the tiny device the target may be unreachable; the search
+        // must stop at the budget rather than exceed it.
+        let o = DseOptions { auto_fold_target_fps: 1e9, ..opts() };
+        let cfg = auto_fold(&g, &TINY, &o, None, &mut rep).unwrap();
+        let mc = cost::evaluate(&g, &cfg, &TINY).unwrap();
+        assert!(mc.total_luts <= TINY.lut_budget());
+    }
+
+    #[test]
+    fn relaxation_balances_layers() {
+        // After relaxation no layer should be absurdly over-provisioned:
+        // every MAC layer's II within ~one step of the cap is acceptable;
+        // we check the aggregate: sum of IIs <= n_layers * bottleneck II.
+        let g = lenet5();
+        let mut rep = DseReport::new("auto_fold");
+        let cfg = auto_fold(&g, &XCU50, &opts(), None, &mut rep).unwrap();
+        let bottleneck = cfg.max_ii(&g).unwrap();
+        for (name, f) in &cfg.layers {
+            let node = g.node(name).unwrap();
+            assert!(f.cycles_per_frame(node) <= bottleneck);
+        }
+        assert!(rep.moves() > 0);
+    }
+
+    #[test]
+    fn works_on_other_topologies() {
+        let g = convnet(3, 8, 32, 10);
+        let mut rep = DseReport::new("auto_fold");
+        let o = DseOptions { auto_fold_target_fps: 5_000.0, ..opts() };
+        let cfg = auto_fold(&g, &XCU50, &o, None, &mut rep).unwrap();
+        cfg.check(&g).unwrap();
+        let mc = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+        assert!(mc.throughput_fps >= 5_000.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Design-space exploration — the paper's contribution (Fig. 1).
+//!
+//! The automated workflow:
+//!
+//! 1. **Global magnitude pruning as a reference** — stage 1 of the python
+//!    compile path exports `prune_profile.json`: per-layer achievable
+//!    sparsity vs accuracy; [`crate::config::PruneProfile`] carries it.
+//! 2. **Heuristic folding search with secondary relaxation** —
+//!    [`heuristic`]: find the cheapest folding that meets a throughput
+//!    target, then relax non-bottleneck layers to reclaim resources.
+//! 3. **Iterative bottleneck elimination** — [`bottleneck`]: estimate
+//!    per-layer latency/LUTs from the graph, and mitigate the latency
+//!    bottleneck with *sparse unfolding* (full unroll + engine-free
+//!    unstructured pruning) or *factor unfolding* (next legal PE/SIMD
+//!    step), whichever is better per LUT, under the device budget; free
+//!    wins (sparse-unfold cheaper than current folded form) are applied
+//!    immediately. Stops when no legal move improves throughput within
+//!    the constraint.
+//!
+//! [`Strategy`] enumerates the Table-I design points; [`run`] produces the
+//! folding configuration + cost estimate for any of them, and
+//! `report::DseReport` records the iteration log (the Fig. 1 trace).
+
+pub mod bottleneck;
+pub mod heuristic;
+pub mod pareto;
+pub mod report;
+
+use crate::config::{FoldingConfigFile, PruneProfile};
+use crate::cost::{self, ModelCost};
+use crate::device::Device;
+use crate::folding::{FoldingConfig, LayerFold};
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+
+pub use report::DseReport;
+
+/// The design strategies of Table I (plus the fully folded Fig. 2 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// PE = SIMD = 1 everywhere (Fig. 2 "fully folded").
+    FullyFolded,
+    /// FINN-style throughput-target folding, dense (Table I row 3).
+    AutoFold,
+    /// Auto folding with partial-sparse folded layers (row 4).
+    AutoFoldPrune,
+    /// Dense full unroll of every MAC layer (row 5).
+    Unfold,
+    /// Full unroll + engine-free global pruning (row 6).
+    UnfoldPrune,
+    /// The LogicSparse DSE (row 7).
+    Proposed,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 6] = [
+        Strategy::FullyFolded,
+        Strategy::AutoFold,
+        Strategy::AutoFoldPrune,
+        Strategy::Unfold,
+        Strategy::UnfoldPrune,
+        Strategy::Proposed,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::FullyFolded => "fully_folded",
+            Strategy::AutoFold => "auto_fold",
+            Strategy::AutoFoldPrune => "auto_fold_prune",
+            Strategy::Unfold => "unfold",
+            Strategy::UnfoldPrune => "unfold_prune",
+            Strategy::Proposed => "proposed",
+        }
+    }
+
+    /// Paper Table-I row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::FullyFolded => "Fully folded",
+            Strategy::AutoFold => "Auto folding",
+            Strategy::AutoFoldPrune => "Auto+Pruning",
+            Strategy::Unfold => "Unfold",
+            Strategy::UnfoldPrune => "Unfold+Pruning",
+            Strategy::Proposed => "Proposed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Strategy::ALL
+            .iter()
+            .copied()
+            .find(|st| st.as_str() == s)
+            .ok_or_else(|| Error::config(format!("unknown strategy '{s}'")))
+    }
+}
+
+/// DSE tuning knobs.
+#[derive(Debug, Clone)]
+pub struct DseOptions {
+    /// AutoFold throughput target (FPS); `None` picks the paper's balanced
+    /// operating point (bottleneck II within 2x of the cheapest balanced
+    /// solution).
+    pub auto_fold_target_fps: f64,
+    /// Fraction of the device LUT budget the accelerator may use.
+    pub budget_fraction: f64,
+    /// Maximum bottleneck-elimination iterations (safety bound).
+    pub max_iterations: usize,
+    /// Minimum accuracy the pruning reference must retain before its
+    /// sparsities are trusted (rows below this are ignored).
+    pub min_reference_accuracy: f64,
+}
+
+impl Default for DseOptions {
+    fn default() -> Self {
+        DseOptions {
+            auto_fold_target_fps: 65_000.0,
+            budget_fraction: 1.0,
+            max_iterations: 64,
+            // Rows below 50% accuracy are beyond what re-sparse fine-tuning
+            // reliably recovers; the profile's reference point caps the rest.
+            min_reference_accuracy: 0.5,
+        }
+    }
+}
+
+/// Outcome of one DSE run.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub strategy: Strategy,
+    pub folding: FoldingConfig,
+    pub cost: ModelCost,
+    pub report: DseReport,
+}
+
+impl DseResult {
+    /// Package as the interchange file python stage 2 consumes.
+    pub fn to_file(&self, device: &Device) -> FoldingConfigFile {
+        FoldingConfigFile {
+            device: device.name.to_string(),
+            strategy: self.strategy.as_str().to_string(),
+            f_mhz: self.cost.f_mhz,
+            est_luts: self.cost.total_luts,
+            est_throughput_fps: self.cost.throughput_fps,
+            est_latency_us: self.cost.latency_s * 1e6,
+            folding: self.folding.clone(),
+        }
+    }
+}
+
+/// Per-layer sparsity the pruning reference supports, respecting the
+/// accuracy floor.
+pub fn reference_sparsities(profile: &PruneProfile, opts: &DseOptions, g: &Graph) -> Vec<(String, f64)> {
+    // Use the best (sparsest) row that clears the accuracy floor and does
+    // not exceed the calibrated reference operating point; fall back to
+    // the reference row if none do (fine-tuning recovers accuracy — the
+    // floor guards only against absurd operating points).
+    let row = profile
+        .rows
+        .iter()
+        .filter(|r| r.accuracy >= opts.min_reference_accuracy)
+        .filter(|r| r.global_sparsity <= profile.reference_global_sparsity + 0.05)
+        .max_by(|a, b| a.global_sparsity.partial_cmp(&b.global_sparsity).unwrap())
+        .or_else(|| {
+            profile.rows.iter().min_by(|a, b| {
+                let da = (a.global_sparsity - profile.reference_global_sparsity).abs();
+                let db = (b.global_sparsity - profile.reference_global_sparsity).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+        });
+    match row {
+        Some(r) => g
+            .mac_nodes()
+            .map(|n| {
+                let s = r
+                    .layers
+                    .iter()
+                    .find(|(name, _)| name == &n.name)
+                    .map(|(_, s)| *s)
+                    .unwrap_or(0.0);
+                (n.name.clone(), s.clamp(0.0, 0.97))
+            })
+            .collect(),
+        None => g.mac_nodes().map(|n| (n.name.clone(), 0.0)).collect(),
+    }
+}
+
+/// Run one strategy end to end: folding decisions + cost estimate.
+pub fn run(
+    strategy: Strategy,
+    g: &Graph,
+    dev: &Device,
+    profile: &PruneProfile,
+    opts: &DseOptions,
+) -> Result<DseResult> {
+    let mut report = DseReport::new(strategy.as_str());
+    let sparsities = reference_sparsities(profile, opts, g);
+    let spars_of = |name: &str| -> f64 {
+        sparsities
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    };
+
+    let folding = match strategy {
+        Strategy::FullyFolded => FoldingConfig::minimal(g),
+        Strategy::Unfold => FoldingConfig::unrolled(g),
+        Strategy::UnfoldPrune => {
+            let mut cfg = FoldingConfig::unrolled(g);
+            for (name, f) in cfg.layers.iter_mut() {
+                let node = g.node(name)?;
+                *f = LayerFold::unrolled_sparse(node, spars_of(name));
+            }
+            cfg
+        }
+        Strategy::AutoFold => {
+            heuristic::auto_fold(g, dev, opts, /*allow_sparse=*/ None, &mut report)?
+        }
+        Strategy::AutoFoldPrune => {
+            heuristic::auto_fold(g, dev, opts, Some(&sparsities), &mut report)?
+        }
+        Strategy::Proposed => {
+            // Balanced baseline first (Fig. 1), then iterative bottleneck
+            // elimination with sparse/factor unfolding.
+            let base = heuristic::auto_fold(g, dev, opts, None, &mut report)?;
+            bottleneck::eliminate(g, dev, base, &sparsities, opts, &mut report)?
+        }
+    };
+
+    folding.check(g)?;
+    let cost = cost::evaluate(g, &folding, dev)?;
+    report.finish(&cost);
+    Ok(DseResult { strategy, folding, cost, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::XCU50;
+    use crate::graph::builder::lenet5;
+
+    fn profile(g: &Graph) -> PruneProfile {
+        PruneProfile::uniform(g, &[0.5, 0.7, 0.8], 0.95)
+    }
+
+    #[test]
+    fn all_strategies_produce_legal_configs() {
+        let g = lenet5();
+        let p = profile(&g);
+        for st in Strategy::ALL {
+            let r = run(st, &g, &XCU50, &p, &DseOptions::default()).unwrap();
+            r.folding.check(&g).unwrap();
+            assert!(r.cost.total_luts > 0);
+            assert!(r.cost.throughput_fps > 0.0);
+        }
+    }
+
+    #[test]
+    fn table1_shape_holds() {
+        // The core reproduction claim, at the estimate level:
+        //  - Proposed throughput > dense Unfold (paper: 1.23x);
+        //  - Proposed LUTs < ~10% of dense Unfold (paper: ~5%);
+        //  - UnfoldPrune between them;
+        //  - AutoFold far cheaper and far slower.
+        let g = lenet5();
+        let p = profile(&g);
+        let opts = DseOptions::default();
+        let unfold = run(Strategy::Unfold, &g, &XCU50, &p, &opts).unwrap().cost;
+        let unfold_p = run(Strategy::UnfoldPrune, &g, &XCU50, &p, &opts).unwrap().cost;
+        let proposed = run(Strategy::Proposed, &g, &XCU50, &p, &opts).unwrap().cost;
+        let auto = run(Strategy::AutoFold, &g, &XCU50, &p, &opts).unwrap().cost;
+
+        assert!(
+            proposed.throughput_fps > unfold.throughput_fps * 1.1,
+            "proposed {} vs unfold {}",
+            proposed.throughput_fps,
+            unfold.throughput_fps
+        );
+        assert!(
+            (proposed.total_luts as f64) < unfold.total_luts as f64 * 0.12,
+            "proposed {} vs unfold {} LUTs",
+            proposed.total_luts,
+            unfold.total_luts
+        );
+        assert!(unfold_p.throughput_fps >= unfold.throughput_fps);
+        assert!(unfold_p.total_luts < unfold.total_luts / 2);
+        assert!(auto.total_luts < 20_000);
+        assert!(auto.throughput_fps < proposed.throughput_fps / 2.0);
+    }
+
+    #[test]
+    fn strategy_roundtrip() {
+        for st in Strategy::ALL {
+            assert_eq!(Strategy::parse(st.as_str()).unwrap(), st);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn accuracy_floor_limits_sparsity() {
+        let g = lenet5();
+        let mut p = PruneProfile::uniform(&g, &[0.5, 0.9], 0.95);
+        p.rows[1].accuracy = 0.3; // 0.9-sparsity row is bad
+        let opts = DseOptions { min_reference_accuracy: 0.9, ..Default::default() };
+        let s = reference_sparsities(&p, &opts, &g);
+        assert!(s.iter().all(|(_, v)| (*v - 0.5).abs() < 1e-9), "{s:?}");
+    }
+}

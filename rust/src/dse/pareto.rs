@@ -1,0 +1,113 @@
+//! Pareto-frontier utilities (LUTs vs throughput).
+//!
+//! The paper claims the proposed scheme "advances the design's Pareto
+//! frontier"; the ablation bench sweeps budgets/targets through the DSE
+//! and uses this module to extract and compare frontiers.
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    pub label: String,
+    pub luts: u64,
+    pub throughput_fps: f64,
+}
+
+impl Point {
+    /// Does `self` dominate `other` (no worse in both, better in one)?
+    pub fn dominates(&self, other: &Point) -> bool {
+        let no_worse = self.luts <= other.luts && self.throughput_fps >= other.throughput_fps;
+        let better = self.luts < other.luts || self.throughput_fps > other.throughput_fps;
+        no_worse && better
+    }
+}
+
+/// Extract the Pareto-optimal subset, sorted by LUTs ascending.
+pub fn frontier(points: &[Point]) -> Vec<Point> {
+    let mut front: Vec<Point> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    front.sort_by(|a, b| a.luts.cmp(&b.luts).then(b.throughput_fps.total_cmp(&a.throughput_fps)));
+    front.dedup_by(|a, b| a.luts == b.luts && a.throughput_fps == b.throughput_fps);
+    front
+}
+
+/// Hypervolume indicator against a reference corner (bigger is better):
+/// the area dominated by the frontier within [0, ref_luts] x [0, ref_fps].
+pub fn hypervolume(front: &[Point], ref_luts: u64, _ref_fps: f64) -> f64 {
+    // Sweep LUTs left->right; each frontier point contributes a rectangle
+    // from its LUTs to the next point's LUTs at its throughput.
+    let mut pts: Vec<&Point> = front.iter().filter(|p| p.luts <= ref_luts).collect();
+    pts.sort_by_key(|p| p.luts);
+    let mut hv = 0.0;
+    for (i, p) in pts.iter().enumerate() {
+        let next_luts = pts.get(i + 1).map(|q| q.luts).unwrap_or(ref_luts).min(ref_luts);
+        let width = (next_luts.saturating_sub(p.luts)) as f64;
+        hv += width * p.throughput_fps;
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    fn p(label: &str, luts: u64, fps: f64) -> Point {
+        Point { label: label.into(), luts, throughput_fps: fps }
+    }
+
+    #[test]
+    fn dominance() {
+        assert!(p("a", 100, 10.0).dominates(&p("b", 200, 5.0)));
+        assert!(p("a", 100, 10.0).dominates(&p("b", 100, 5.0)));
+        assert!(!p("a", 100, 10.0).dominates(&p("b", 50, 20.0)));
+        assert!(!p("a", 100, 10.0).dominates(&p("a2", 100, 10.0)));
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![
+            p("cheap-slow", 10, 1.0),
+            p("dominated", 50, 0.5),
+            p("mid", 50, 5.0),
+            p("fast", 500, 50.0),
+            p("bad", 600, 40.0),
+        ];
+        let f = frontier(&pts);
+        let labels: Vec<_> = f.iter().map(|q| q.label.as_str()).collect();
+        assert_eq!(labels, vec!["cheap-slow", "mid", "fast"]);
+    }
+
+    #[test]
+    fn prop_frontier_mutually_nondominated() {
+        check("frontier points don't dominate each other", 100, |g| {
+            let pts: Vec<Point> = (0..g.usize(1, 30))
+                .map(|i| p(&format!("p{i}"), g.usize(1, 1000) as u64, g.f64(0.1, 100.0)))
+                .collect();
+            let f = frontier(&pts);
+            for a in &f {
+                for b in &f {
+                    assert!(!a.dominates(b), "{a:?} dominates {b:?}");
+                }
+            }
+            // Every input point is dominated-by-or-on the frontier.
+            for q in &pts {
+                assert!(
+                    f.iter().any(|a| a == q || a.dominates(q)),
+                    "{q:?} neither on nor dominated by frontier"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn hypervolume_grows_with_better_points() {
+        let f1 = frontier(&[p("a", 100, 10.0)]);
+        let f2 = frontier(&[p("a", 100, 10.0), p("b", 200, 30.0)]);
+        let h1 = hypervolume(&f1, 1000, 100.0);
+        let h2 = hypervolume(&f2, 1000, 100.0);
+        assert!(h2 > h1);
+    }
+}

@@ -1,0 +1,134 @@
+//! DSE iteration log — the textual trace of the Fig. 1 workflow.
+//!
+//! Every decision (fold step, relaxation, sparse unfold, rejection) is
+//! recorded with its estimated effect, so `logicsparse dse --verbose`
+//! reproduces the narrative of the paper's Sec. II and EXPERIMENTS.md can
+//! quote real traces.
+
+use crate::cost::ModelCost;
+
+/// One DSE decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Heuristic folding raised parallelism on a layer.
+    FoldUp { layer: String, pe: usize, simd: usize, ii: u64 },
+    /// Secondary relaxation lowered parallelism on a non-bottleneck.
+    Relax { layer: String, pe: usize, simd: usize, luts_saved: u64 },
+    /// A layer was sparse-unfolded (engine-free full unroll).
+    SparseUnfold { layer: String, sparsity: f64, luts_before: u64, luts_after: u64 },
+    /// A layer was partially unrolled with sparse packing.
+    PartialSparse { layer: String, pe: usize, simd: usize, sparsity: f64 },
+    /// Factor unfolding on the bottleneck.
+    FactorUnfold { layer: String, pe: usize, simd: usize, ii: u64 },
+    /// A candidate move was evaluated and rejected.
+    Reject { layer: String, reason: String },
+    /// Loop terminated.
+    Stop { reason: String },
+}
+
+impl Step {
+    pub fn render(&self) -> String {
+        match self {
+            Step::FoldUp { layer, pe, simd, ii } => {
+                format!("fold-up    {layer}: PE={pe} SIMD={simd} (II -> {ii})")
+            }
+            Step::Relax { layer, pe, simd, luts_saved } => {
+                format!("relax      {layer}: PE={pe} SIMD={simd} (-{luts_saved} LUTs)")
+            }
+            Step::SparseUnfold { layer, sparsity, luts_before, luts_after } => format!(
+                "sparse-unfold {layer}: s={sparsity:.2} ({luts_before} -> {luts_after} LUTs)"
+            ),
+            Step::PartialSparse { layer, pe, simd, sparsity } => {
+                format!("partial-sparse {layer}: PE={pe} SIMD={simd} s={sparsity:.2}")
+            }
+            Step::FactorUnfold { layer, pe, simd, ii } => {
+                format!("factor-unfold {layer}: PE={pe} SIMD={simd} (II -> {ii})")
+            }
+            Step::Reject { layer, reason } => format!("reject     {layer}: {reason}"),
+            Step::Stop { reason } => format!("stop: {reason}"),
+        }
+    }
+}
+
+/// The full trace of one DSE run.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    pub strategy: String,
+    pub steps: Vec<Step>,
+    pub iterations: usize,
+    pub final_summary: Option<String>,
+}
+
+impl DseReport {
+    pub fn new(strategy: &str) -> Self {
+        DseReport {
+            strategy: strategy.to_string(),
+            steps: Vec::new(),
+            iterations: 0,
+            final_summary: None,
+        }
+    }
+
+    pub fn push(&mut self, step: Step) {
+        self.steps.push(step);
+    }
+
+    pub fn next_iteration(&mut self) {
+        self.iterations += 1;
+    }
+
+    pub fn finish(&mut self, cost: &ModelCost) {
+        self.final_summary = Some(format!(
+            "{}: {} LUTs, f={:.1} MHz, II={} cyc, {:.0} FPS, {:.2} us",
+            self.strategy,
+            cost.total_luts,
+            cost.f_mhz,
+            cost.max_ii,
+            cost.throughput_fps,
+            cost.latency_s * 1e6
+        ));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("DSE trace [{}] ({} iterations)\n", self.strategy, self.iterations);
+        for s in &self.steps {
+            out.push_str("  ");
+            out.push_str(&s.render());
+            out.push('\n');
+        }
+        if let Some(sum) = &self.final_summary {
+            out.push_str(sum);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Count of applied (non-reject) optimisation moves.
+    pub fn moves(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| !matches!(s, Step::Reject { .. } | Step::Stop { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_steps() {
+        let mut r = DseReport::new("proposed");
+        r.push(Step::SparseUnfold {
+            layer: "conv1".into(),
+            sparsity: 0.6,
+            luts_before: 2000,
+            luts_after: 800,
+        });
+        r.push(Step::Stop { reason: "II floor reached".into() });
+        let text = r.render();
+        assert!(text.contains("sparse-unfold conv1"));
+        assert!(text.contains("II floor"));
+        assert_eq!(r.moves(), 1);
+    }
+}

@@ -1,0 +1,183 @@
+//! Fig. 2 regeneration: estimated per-layer latency and LUT utilisation of
+//! LeNet-5 under the different folding/pruning strategies.
+//!
+//! The paper plots two bar groups per layer (latency µs, LUTs) for the
+//! fully-folded, auto-folded, fully-unrolled and proposed designs; we
+//! print the same series as aligned tables (and expose the raw numbers to
+//! the bench target).
+
+use crate::config::PruneProfile;
+use crate::cost;
+use crate::device::Device;
+use crate::dse::{self, DseOptions, Strategy};
+use crate::graph::Graph;
+use crate::util::error::Result;
+use crate::util::table::{fmt_int, Align, Table};
+
+/// Per-layer series for one strategy.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub strategy: Strategy,
+    /// (layer, latency_us_per_frame, luts)
+    pub layers: Vec<(String, f64, u64)>,
+}
+
+/// Strategies Fig. 2 compares.
+pub const FIG2_STRATEGIES: [Strategy; 4] = [
+    Strategy::FullyFolded,
+    Strategy::AutoFold,
+    Strategy::Unfold,
+    Strategy::Proposed,
+];
+
+/// Compute the per-layer estimate series for each strategy.
+pub fn measure(g: &Graph, dev: &Device, profile: &PruneProfile) -> Result<Vec<Series>> {
+    let opts = DseOptions::default();
+    let mut out = Vec::new();
+    for st in FIG2_STRATEGIES {
+        let r = dse::run(st, g, dev, profile, &opts)?;
+        let mc = cost::evaluate(g, &r.folding, dev)?;
+        let layers = mc
+            .layers
+            .iter()
+            .filter(|l| g.node(&l.name).map(|n| n.op.has_weights()).unwrap_or(false))
+            .map(|l| {
+                let us = l.ii_cycles as f64 / (mc.f_mhz * 1e6) * 1e6;
+                (l.name.clone(), us, l.luts)
+            })
+            .collect();
+        out.push(Series { strategy: st, layers });
+    }
+    Ok(out)
+}
+
+/// The layer that dominates latency in a series.
+pub fn bottleneck(series: &Series) -> &(String, f64, u64) {
+    series
+        .layers
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("non-empty series")
+}
+
+/// Render both panels of Fig. 2.
+pub fn render(series: &[Series]) -> String {
+    let mut headers = vec!["Layer"];
+    let labels: Vec<String> = series.iter().map(|s| s.strategy.label().to_string()).collect();
+    for l in &labels {
+        headers.push(l);
+    }
+
+    let layer_names: Vec<&str> = series[0].layers.iter().map(|(n, _, _)| n.as_str()).collect();
+
+    let mut lat = Table::new(&headers).align(0, Align::Left);
+    for (i, name) in layer_names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for s in series {
+            row.push(format!("{:.3}", s.layers[i].1));
+        }
+        lat.row(row);
+    }
+
+    let mut luts = Table::new(&headers).align(0, Align::Left);
+    for (i, name) in layer_names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for s in series {
+            row.push(fmt_int(s.layers[i].2 as f64));
+        }
+        luts.row(row);
+    }
+
+    format!(
+        "Fig. 2a — estimated per-layer latency (us/frame):\n{}\n\
+         Fig. 2b — estimated per-layer LUT utilisation:\n{}",
+        lat.render(),
+        luts.render()
+    )
+}
+
+/// The paper's Fig. 2 narrative, as checkable assertions.
+pub fn shape_checks(series: &[Series]) -> Vec<String> {
+    let get = |st: Strategy| series.iter().find(|s| s.strategy == st);
+    let mut out = Vec::new();
+    let (Some(folded), Some(auto), Some(unfold), Some(proposed)) = (
+        get(Strategy::FullyFolded),
+        get(Strategy::AutoFold),
+        get(Strategy::Unfold),
+        get(Strategy::Proposed),
+    ) else {
+        return vec!["FAIL missing series".into()];
+    };
+    let mut check = |name: &str, ok: bool, detail: String| {
+        out.push(format!("{} {name}: {detail}", if ok { "PASS" } else { "FAIL" }));
+    };
+
+    // "For the fully folded network, the second convolutional layer
+    // constitutes the major bottleneck."
+    let fb = bottleneck(folded);
+    check("fully-folded bottleneck is conv2", fb.0 == "conv2", fb.0.clone());
+
+    // "In the automatic unfolding scenario, this bottleneck is
+    // significantly alleviated."
+    let fold_conv2 = folded.layers.iter().find(|(n, _, _)| n == "conv2").unwrap().1;
+    let auto_conv2 = auto.layers.iter().find(|(n, _, _)| n == "conv2").unwrap().1;
+    check(
+        "auto folding alleviates conv2",
+        auto_conv2 < fold_conv2 / 10.0,
+        format!("{fold_conv2:.1} -> {auto_conv2:.3} us"),
+    );
+
+    // "Fully unrolling achieves the lowest bottleneck latency but at the
+    // cost of a huge resource increase" (paper: ~1300x vs fully folded).
+    let unfold_luts: u64 = unfold.layers.iter().map(|(_, _, l)| l).sum();
+    let folded_luts: u64 = folded.layers.iter().map(|(_, _, l)| l).sum();
+    let ratio = unfold_luts as f64 / folded_luts as f64;
+    check(
+        "unroll costs orders of magnitude more LUTs (paper ~1300x)",
+        ratio > 25.0,
+        format!("{ratio:.0}x"),
+    );
+    check(
+        "unroll has the lowest bottleneck latency",
+        bottleneck(unfold).1 <= bottleneck(folded).1 && bottleneck(unfold).1 <= bottleneck(auto).1,
+        format!("{:.3} us", bottleneck(unfold).1),
+    );
+
+    // "Our design achieves performance close to the fully unrolled
+    // configuration, while consuming significantly fewer resources."
+    let prop_luts: u64 = proposed.layers.iter().map(|(_, _, l)| l).sum();
+    check(
+        "proposed near-unroll latency at a fraction of the LUTs",
+        bottleneck(proposed).1 <= bottleneck(unfold).1 * 1.5
+            && (prop_luts as f64) < unfold_luts as f64 * 0.12,
+        format!(
+            "lat {:.3} vs {:.3} us, LUTs {} vs {}",
+            bottleneck(proposed).1,
+            bottleneck(unfold).1,
+            prop_luts,
+            unfold_luts
+        ),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::XCU50;
+    use crate::graph::builder::lenet5;
+
+    #[test]
+    fn fig2_shape_reproduced() {
+        let g = lenet5();
+        let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+        let series = measure(&g, &XCU50, &profile).unwrap();
+        assert_eq!(series.len(), 4);
+        for v in shape_checks(&series) {
+            assert!(v.starts_with("PASS"), "{v}");
+        }
+        let text = render(&series);
+        assert!(text.contains("Fig. 2a"));
+        assert!(text.contains("conv2"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Headline-claim verification: "51.6× compression, 1.23× throughput,
+//! ~5% of LUTs" — computed from our measured rows and the exported masks.
+
+use crate::sparsity::{compression_ratio, compression_ratio_csr, ModelSparsity};
+use crate::util::error::Result;
+use crate::util::json::{self, Value};
+use std::path::Path;
+
+use super::table1::Row;
+use crate::dse::Strategy;
+
+/// Measured headline numbers.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub compression: Option<f64>,
+    pub compression_csr_equiv: Option<f64>,
+    pub throughput_gain: f64,
+    pub lut_fraction: f64,
+}
+
+/// Compression from real exported masks (metrics.json written by stage 2);
+/// `None` before artifacts exist.
+pub fn compression_from_metrics(artifacts: impl AsRef<Path>) -> Result<Option<(f64, f64)>> {
+    let path = artifacts.as_ref().join("metrics.json");
+    if !path.exists() {
+        return Ok(None);
+    }
+    let v = json::parse_file(path)?;
+    let Some(masks) = v.get("proposed_masks") else {
+        return Ok(None);
+    };
+    let wb = v.get("weight_bits").and_then(Value::as_usize).unwrap_or(4);
+    let mut ms = ModelSparsity::default();
+    if let Some(layers) = masks.get("layers").and_then(|l| l.as_obj()) {
+        for (name, lv) in layers {
+            let w = lv.req_usize("weights")?;
+            let nnz = lv.req_usize("nnz")?;
+            ms.push(name.clone(), w, nnz);
+        }
+    }
+    let free = compression_ratio(ms.total_weights(), ms.total_nnz(), wb);
+    let csr = compression_ratio_csr(ms.total_weights(), ms.total_nnz(), wb, 16);
+    Ok(Some((free, csr)))
+}
+
+/// Assemble the headline from measured Table-I rows (+ optional metrics).
+pub fn measure(rows: &[Row], artifacts: impl AsRef<Path>) -> Result<Headline> {
+    let get = |s: Strategy| {
+        rows.iter()
+            .find(|r| r.strategy == s)
+            .expect("row present")
+    };
+    let unfold = get(Strategy::Unfold);
+    let proposed = get(Strategy::Proposed);
+    let comp = compression_from_metrics(artifacts)?;
+    Ok(Headline {
+        compression: comp.map(|(f, _)| f),
+        compression_csr_equiv: comp.map(|(_, c)| c),
+        throughput_gain: proposed.throughput_fps / unfold.throughput_fps,
+        lut_fraction: proposed.luts as f64 / unfold.luts as f64,
+    })
+}
+
+pub fn render(h: &Headline) -> String {
+    let mut s = String::from("Headline claims (paper -> measured):\n");
+    s.push_str(&format!(
+        "  compression       51.6x  -> {}\n",
+        h.compression
+            .map(|c| format!("{c:.1}x (CSR-engine equivalent would be {:.1}x)",
+                h.compression_csr_equiv.unwrap_or(0.0)))
+            .unwrap_or_else(|| "n/a (build artifacts for measured masks)".into())
+    ));
+    s.push_str(&format!(
+        "  throughput gain   1.23x  -> {:.2}x (proposed vs dense unfold)\n",
+        h.throughput_gain
+    ));
+    s.push_str(&format!(
+        "  LUT fraction      5.4%   -> {:.1}% (proposed vs dense unfold)\n",
+        h.lut_fraction * 100.0
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PruneProfile;
+    use crate::device::XCU50;
+    use crate::experiments::{table1, Accuracies};
+    use crate::graph::builder::lenet5;
+
+    #[test]
+    fn headline_without_artifacts() {
+        let g = lenet5();
+        let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+        let rows =
+            table1::measure(&g, &XCU50, &profile, &Accuracies::default(), 30).unwrap();
+        let h = measure(&rows, "/no/artifacts").unwrap();
+        assert!(h.throughput_gain > 1.05);
+        assert!(h.lut_fraction < 0.12);
+        assert!(h.compression.is_none());
+        assert!(render(&h).contains("throughput gain"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment drivers: every table and figure of the paper's evaluation
+//! (DESIGN.md §6), shared between the `cargo bench` targets, the examples
+//! and the CLI so all three print identical rows.
+
+pub mod baselines;
+pub mod fig2;
+pub mod headline;
+pub mod table1;
+
+use crate::util::error::Result;
+use crate::util::json::{self, Value};
+use std::path::Path;
+
+/// Accuracies measured by the python compile path (metrics.json), when
+/// artifacts have been built; table rows fall back to "n/a" otherwise.
+#[derive(Debug, Clone, Default)]
+pub struct Accuracies {
+    pub dense: Option<f64>,
+    pub pruned_global: Option<f64>,
+    pub proposed: Option<f64>,
+}
+
+impl Accuracies {
+    pub fn load(artifacts: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts.as_ref();
+        let full = dir.join("metrics.json");
+        let stage1 = dir.join("metrics_stage1.json");
+        if full.exists() {
+            let v = json::parse_file(full)?;
+            Ok(Accuracies {
+                dense: v.get("dense_accuracy").and_then(Value::as_f64),
+                pruned_global: v.get("pruned_global_accuracy").and_then(Value::as_f64),
+                proposed: v.get("proposed_accuracy").and_then(Value::as_f64),
+            })
+        } else if stage1.exists() {
+            let v = json::parse_file(stage1)?;
+            Ok(Accuracies {
+                dense: v.get("dense_accuracy").and_then(Value::as_f64),
+                ..Default::default()
+            })
+        } else {
+            Ok(Accuracies::default())
+        }
+    }
+
+    pub fn fmt(a: Option<f64>) -> String {
+        match a {
+            Some(v) => format!("{:.2}", v * 100.0),
+            None => "n/a".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_metrics_is_default() {
+        let a = Accuracies::load("/definitely/not/here").unwrap();
+        assert!(a.dense.is_none());
+        assert_eq!(Accuracies::fmt(None), "n/a");
+        assert_eq!(Accuracies::fmt(Some(0.9782)), "97.82");
+    }
+}

@@ -1,0 +1,356 @@
+//! FINN-style folding algebra (substrate S5).
+//!
+//! A MAC layer is implemented by a Matrix-Vector-Activation Unit with `PE`
+//! output lanes and `SIMD` input lanes. Folding trades area for time:
+//!
+//! ```text
+//! II_cycles/frame = out_pixels · (fold_in / SIMD) · (fold_out / PE)
+//! ```
+//!
+//! `PE` must divide the output-channel axis and `SIMD` the input axis
+//! (K²·Cin for conv) — the same legality rule FINN's transformation checks.
+//! A layer's *style* records how the DSE decided to implement it; styles
+//! other than `Folded` are where LogicSparse departs from stock FINN.
+
+pub mod space;
+
+use crate::graph::{Graph, Node};
+use crate::util::error::{Error, Result};
+
+/// Implementation style of a MAC layer (paper Sec. II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Style {
+    /// Time-multiplexed PE/SIMD array, dense weights streamed from BRAM.
+    Folded,
+    /// Fully unrolled; every weight baked into logic (dense).
+    UnrolledDense,
+    /// Fully unrolled with engine-free unstructured sparsity: pruned
+    /// weights synthesise to nothing.
+    UnrolledSparse,
+    /// Partially unrolled (PE/SIMD > baseline) with sparse packing.
+    PartialSparse,
+}
+
+impl Style {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Style::Folded => "folded",
+            Style::UnrolledDense => "unrolled_dense",
+            Style::UnrolledSparse => "unrolled_sparse",
+            Style::PartialSparse => "partial_sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Style> {
+        match s {
+            "folded" => Ok(Style::Folded),
+            "unrolled_dense" => Ok(Style::UnrolledDense),
+            "unrolled_sparse" => Ok(Style::UnrolledSparse),
+            "partial_sparse" => Ok(Style::PartialSparse),
+            other => Err(Error::folding(format!("unknown style '{other}'"))),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Style::UnrolledSparse | Style::PartialSparse)
+    }
+
+    pub fn is_unrolled(&self) -> bool {
+        matches!(self, Style::UnrolledDense | Style::UnrolledSparse)
+    }
+}
+
+/// Folding decision for one MAC layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerFold {
+    pub pe: usize,
+    pub simd: usize,
+    pub style: Style,
+    /// Fraction of weights pruned (0 for dense styles).
+    pub sparsity: f64,
+}
+
+impl LayerFold {
+    /// Minimal folding: one PE, one SIMD lane (the fully folded baseline).
+    pub fn minimal() -> Self {
+        LayerFold { pe: 1, simd: 1, style: Style::Folded, sparsity: 0.0 }
+    }
+
+    /// Full unroll of `node`, dense.
+    pub fn unrolled(node: &Node) -> Self {
+        LayerFold {
+            pe: node.fold_out(),
+            simd: node.fold_in(),
+            style: Style::UnrolledDense,
+            sparsity: 0.0,
+        }
+    }
+
+    /// Full unroll of `node` with engine-free sparsity.
+    pub fn unrolled_sparse(node: &Node, sparsity: f64) -> Self {
+        LayerFold {
+            pe: node.fold_out(),
+            simd: node.fold_in(),
+            style: Style::UnrolledSparse,
+            sparsity,
+        }
+    }
+
+    /// Is this folding legal for `node`?
+    pub fn check(&self, node: &Node) -> Result<()> {
+        if self.pe == 0 || self.simd == 0 {
+            return Err(Error::folding(format!("{}: zero PE/SIMD", node.name)));
+        }
+        if node.fold_out() % self.pe != 0 {
+            return Err(Error::folding(format!(
+                "{}: PE {} does not divide output axis {}",
+                node.name,
+                self.pe,
+                node.fold_out()
+            )));
+        }
+        if node.fold_in() % self.simd != 0 {
+            return Err(Error::folding(format!(
+                "{}: SIMD {} does not divide input axis {}",
+                node.name,
+                self.simd,
+                node.fold_in()
+            )));
+        }
+        if !(0.0..1.0).contains(&self.sparsity) {
+            return Err(Error::folding(format!(
+                "{}: sparsity {} out of [0,1)",
+                node.name, self.sparsity
+            )));
+        }
+        if self.style.is_unrolled()
+            && (self.pe != node.fold_out() || self.simd != node.fold_in())
+        {
+            return Err(Error::folding(format!(
+                "{}: style {:?} requires full PE/SIMD unroll",
+                node.name, self.style
+            )));
+        }
+        if !self.style.is_sparse() && self.sparsity != 0.0 {
+            return Err(Error::folding(format!(
+                "{}: dense style with nonzero sparsity {}",
+                node.name, self.sparsity
+            )));
+        }
+        Ok(())
+    }
+
+    /// Initiation interval in cycles per frame for `node` under this fold.
+    pub fn cycles_per_frame(&self, node: &Node) -> u64 {
+        let in_folds = (node.fold_in() / self.simd) as u64;
+        let out_folds = (node.fold_out() / self.pe) as u64;
+        node.out_pixels() as u64 * in_folds * out_folds
+    }
+
+    /// Total MAC lanes instantiated.
+    pub fn lanes(&self) -> u64 {
+        (self.pe * self.simd) as u64
+    }
+
+    /// Surviving weights under the sparsity annotation.
+    pub fn nnz(&self, node: &Node) -> u64 {
+        ((node.weights() as f64) * (1.0 - self.sparsity)).round() as u64
+    }
+}
+
+/// Folding decisions for every MAC layer of a graph, name-keyed and
+/// insertion-ordered (stream order).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FoldingConfig {
+    pub layers: Vec<(String, LayerFold)>,
+}
+
+impl FoldingConfig {
+    /// Fully folded baseline for `g` (PE = SIMD = 1 everywhere).
+    pub fn minimal(g: &Graph) -> Self {
+        FoldingConfig {
+            layers: g
+                .mac_nodes()
+                .map(|n| (n.name.clone(), LayerFold::minimal()))
+                .collect(),
+        }
+    }
+
+    /// Dense full unroll of every MAC layer.
+    pub fn unrolled(g: &Graph) -> Self {
+        FoldingConfig {
+            layers: g
+                .mac_nodes()
+                .map(|n| (n.name.clone(), LayerFold::unrolled(n)))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LayerFold> {
+        self.layers.iter().find(|(n, _)| n == name).map(|(_, f)| f)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut LayerFold> {
+        self.layers.iter_mut().find(|(n, _)| n == name).map(|(_, f)| f)
+    }
+
+    pub fn set(&mut self, name: &str, fold: LayerFold) {
+        match self.get_mut(name) {
+            Some(f) => *f = fold,
+            None => self.layers.push((name.to_string(), fold)),
+        }
+    }
+
+    /// Validate every layer against the graph.
+    pub fn check(&self, g: &Graph) -> Result<()> {
+        for (name, fold) in &self.layers {
+            fold.check(g.node(name)?)?;
+        }
+        // Every MAC node must be covered.
+        for n in g.mac_nodes() {
+            if self.get(&n.name).is_none() {
+                return Err(Error::folding(format!("layer '{}' missing from config", n.name)));
+            }
+        }
+        Ok(())
+    }
+
+    /// The slowest layer's II (cycles/frame) — the pipeline's steady-state
+    /// bottleneck.
+    pub fn max_ii(&self, g: &Graph) -> Result<u64> {
+        let mut max = 0;
+        for (name, fold) in &self.layers {
+            max = max.max(fold.cycles_per_frame(g.node(name)?));
+        }
+        Ok(max)
+    }
+
+    /// Name of the bottleneck layer.
+    pub fn bottleneck<'a>(&'a self, g: &Graph) -> Result<(&'a str, u64)> {
+        let mut best: Option<(&str, u64)> = None;
+        for (name, fold) in &self.layers {
+            let ii = fold.cycles_per_frame(g.node(name)?);
+            if best.map(|(_, b)| ii > b).unwrap_or(true) {
+                best = Some((name, ii));
+            }
+        }
+        best.ok_or_else(|| Error::folding("empty config"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn minimal_ii_is_total_folds() {
+        let g = lenet5();
+        let cfg = FoldingConfig::minimal(&g);
+        let c1 = g.node("conv1").unwrap();
+        let f = cfg.get("conv1").unwrap();
+        // 576 pixels * 25 in-folds * 6 out-folds
+        assert_eq!(f.cycles_per_frame(c1), 576 * 25 * 6);
+    }
+
+    #[test]
+    fn unrolled_ii_is_out_pixels() {
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        assert_eq!(cfg.get("conv1").unwrap().cycles_per_frame(g.node("conv1").unwrap()), 576);
+        assert_eq!(cfg.get("fc1").unwrap().cycles_per_frame(g.node("fc1").unwrap()), 1);
+        cfg.check(&g).unwrap();
+    }
+
+    #[test]
+    fn bottleneck_of_unrolled_lenet_is_conv1() {
+        // After full unroll the largest out_pixels dominates: conv1 (576).
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        let (name, ii) = cfg.bottleneck(&g).unwrap();
+        assert_eq!(name, "conv1");
+        assert_eq!(ii, 576);
+    }
+
+    #[test]
+    fn legality() {
+        let g = lenet5();
+        let c2 = g.node("conv2").unwrap();
+        // fold_in = 150, fold_out = 16
+        assert!(LayerFold { pe: 16, simd: 150, style: Style::UnrolledDense, sparsity: 0.0 }
+            .check(c2)
+            .is_ok());
+        assert!(LayerFold { pe: 3, simd: 1, style: Style::Folded, sparsity: 0.0 }
+            .check(c2)
+            .is_err()); // 3 does not divide 16
+        assert!(LayerFold { pe: 1, simd: 7, style: Style::Folded, sparsity: 0.0 }
+            .check(c2)
+            .is_err()); // 7 does not divide 150
+        assert!(LayerFold { pe: 8, simd: 150, style: Style::UnrolledSparse, sparsity: 0.5 }
+            .check(c2)
+            .is_err()); // sparse-unroll must fully unroll
+        assert!(LayerFold { pe: 1, simd: 1, style: Style::Folded, sparsity: 0.5 }
+            .check(c2)
+            .is_err()); // dense style can't carry sparsity
+    }
+
+    #[test]
+    fn config_requires_all_layers() {
+        let g = lenet5();
+        let mut cfg = FoldingConfig::minimal(&g);
+        cfg.layers.retain(|(n, _)| n != "fc2");
+        assert!(cfg.check(&g).is_err());
+    }
+
+    #[test]
+    fn prop_legal_folds_have_exact_ii_division() {
+        let g = lenet5();
+        check("II * PE * SIMD == pixels * in * out", 200, |gen| {
+            let node = *gen.choose(&g.mac_nodes().collect::<Vec<_>>());
+            let pe = gen.divisor_of(node.fold_out());
+            let simd = gen.divisor_of(node.fold_in());
+            let f = LayerFold { pe, simd, style: Style::Folded, sparsity: 0.0 };
+            f.check(node).unwrap();
+            let ii = f.cycles_per_frame(node);
+            assert_eq!(
+                ii * pe as u64 * simd as u64,
+                (node.out_pixels() * node.fold_in() * node.fold_out()) as u64
+            );
+        });
+    }
+
+    #[test]
+    fn prop_more_parallelism_never_slower() {
+        let g = lenet5();
+        check("increasing PE/SIMD never increases II", 200, |gen| {
+            let node = *gen.choose(&g.mac_nodes().collect::<Vec<_>>());
+            let pe1 = gen.divisor_of(node.fold_out());
+            let simd1 = gen.divisor_of(node.fold_in());
+            // pick a multiple of pe1 that still divides
+            let pe2s: Vec<usize> = (1..=node.fold_out())
+                .filter(|p| node.fold_out() % p == 0 && p % pe1 == 0)
+                .collect();
+            let pe2 = *gen.choose(&pe2s);
+            let a = LayerFold { pe: pe1, simd: simd1, style: Style::Folded, sparsity: 0.0 };
+            let b = LayerFold { pe: pe2, simd: simd1, style: Style::Folded, sparsity: 0.0 };
+            assert!(b.cycles_per_frame(node) <= a.cycles_per_frame(node));
+        });
+    }
+
+    #[test]
+    fn nnz_rounding() {
+        let g = lenet5();
+        let c1 = g.node("conv1").unwrap(); // 150 weights
+        let f = LayerFold::unrolled_sparse(c1, 0.75);
+        assert_eq!(f.nnz(c1), 38); // 150 * 0.25 = 37.5 -> 38
+    }
+
+    #[test]
+    fn style_roundtrip() {
+        for st in [Style::Folded, Style::UnrolledDense, Style::UnrolledSparse, Style::PartialSparse] {
+            assert_eq!(Style::parse(st.as_str()).unwrap(), st);
+        }
+        assert!(Style::parse("magic").is_err());
+    }
+}

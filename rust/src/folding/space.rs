@@ -1,0 +1,119 @@
+//! Design-space enumeration helpers: legal PE/SIMD values, neighbourhood
+//! moves for the heuristic search, and exhaustive iteration for small
+//! layers (used by tests and the ablation benches).
+
+use crate::graph::Node;
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Legal PE values for a node (divisors of the output axis).
+pub fn legal_pe(node: &Node) -> Vec<usize> {
+    divisors(node.fold_out())
+}
+
+/// Legal SIMD values for a node (divisors of the input axis).
+pub fn legal_simd(node: &Node) -> Vec<usize> {
+    divisors(node.fold_in())
+}
+
+/// The next legal value above `cur` (None when already maximal) — the
+/// "factor unfolding" move of the DSE.
+pub fn next_step(legal: &[usize], cur: usize) -> Option<usize> {
+    legal.iter().copied().find(|&v| v > cur)
+}
+
+/// The previous legal value below `cur` — the relaxation move.
+pub fn prev_step(legal: &[usize], cur: usize) -> Option<usize> {
+    legal.iter().rev().copied().find(|&v| v < cur)
+}
+
+/// Exhaustive (PE, SIMD) space of a node; |divisors(out)|·|divisors(in)|
+/// points. LeNet layers are small enough for this to be exact.
+pub fn full_space(node: &Node) -> Vec<(usize, usize)> {
+    let pes = legal_pe(node);
+    let simds = legal_simd(node);
+    let mut out = Vec::with_capacity(pes.len() * simds.len());
+    for &pe in &pes {
+        for &simd in &simds {
+            out.push((pe, simd));
+        }
+    }
+    out
+}
+
+/// Size of the joint folding space across nodes (reported in DSE logs —
+/// it motivates the heuristic search over brute force).
+pub fn joint_space_size(nodes: &[&Node]) -> u128 {
+    nodes
+        .iter()
+        .map(|n| (legal_pe(n).len() as u128) * (legal_simd(n).len() as u128))
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(25), vec![1, 5, 25]);
+        assert_eq!(divisors(150), vec![1, 2, 3, 5, 6, 10, 15, 25, 30, 50, 75, 150]);
+    }
+
+    #[test]
+    fn prop_divisors_divide_and_sorted() {
+        check("divisors are sorted divisors", 300, |g| {
+            let n = g.usize(1, 5000);
+            let ds = divisors(n);
+            assert!(ds.windows(2).all(|w| w[0] < w[1]));
+            assert!(ds.iter().all(|&d| n % d == 0));
+            assert_eq!(*ds.first().unwrap(), 1);
+            assert_eq!(*ds.last().unwrap(), n);
+            // completeness: count matches brute force
+            let brute = (1..=n).filter(|d| n % d == 0).count();
+            assert_eq!(ds.len(), brute);
+        });
+    }
+
+    #[test]
+    fn steps() {
+        let legal = divisors(12);
+        assert_eq!(next_step(&legal, 1), Some(2));
+        assert_eq!(next_step(&legal, 4), Some(6));
+        assert_eq!(next_step(&legal, 12), None);
+        assert_eq!(prev_step(&legal, 12), Some(6));
+        assert_eq!(prev_step(&legal, 1), None);
+    }
+
+    #[test]
+    fn lenet_space_sizes() {
+        let g = lenet5();
+        let conv2 = g.node("conv2").unwrap();
+        // fold_out 16 -> 5 divisors; fold_in 150 -> 12 divisors
+        assert_eq!(full_space(conv2).len(), 5 * 12);
+        let nodes: Vec<_> = g.mac_nodes().collect();
+        // The joint space motivates heuristics: large even for LeNet.
+        assert!(joint_space_size(&nodes) > 100_000);
+    }
+}

@@ -1,0 +1,185 @@
+//! Native model builders: the canonical LeNet-5 (must agree with
+//! `python/compile/model.py::LAYERS` — checked by the integration tests
+//! against the exported graph.json) plus parametric generators used by the
+//! DSE/simulator test suites and the scaling ablations.
+
+use super::{Graph, Node, Op};
+
+/// A fluent chain builder that tracks the running stream shape.
+pub struct ChainBuilder {
+    nodes: Vec<Node>,
+    ch: usize,
+    dim: usize,
+    counter: usize,
+}
+
+impl ChainBuilder {
+    /// Start from an input of `ch` channels at `dim`x`dim` (dim=1 for
+    /// vector inputs).
+    pub fn input(ch: usize, dim: usize) -> Self {
+        ChainBuilder { nodes: Vec::new(), ch, dim, counter: 0 }
+    }
+
+    fn next_name(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}{}", self.counter)
+    }
+
+    pub fn conv(mut self, cout: usize, k: usize) -> Self {
+        let name = self.next_name("conv");
+        let ifm = self.dim;
+        assert!(ifm >= k, "conv '{name}': input {ifm} smaller than kernel {k}");
+        let ofm = ifm - k + 1;
+        self.nodes.push(Node { name, op: Op::Conv, cin: self.ch, cout, k, ifm, ofm });
+        self.ch = cout;
+        self.dim = ofm;
+        self
+    }
+
+    pub fn named_conv(mut self, name: &str, cout: usize, k: usize) -> Self {
+        let ifm = self.dim;
+        assert!(ifm >= k, "conv '{name}': input {ifm} smaller than kernel {k}");
+        let ofm = ifm - k + 1;
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op: Op::Conv,
+            cin: self.ch,
+            cout,
+            k,
+            ifm,
+            ofm,
+        });
+        self.ch = cout;
+        self.dim = ofm;
+        self
+    }
+
+    pub fn maxpool(mut self, name: &str, k: usize) -> Self {
+        let ifm = self.dim;
+        let ofm = ifm / k;
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op: Op::MaxPool,
+            cin: self.ch,
+            cout: self.ch,
+            k,
+            ifm,
+            ofm,
+        });
+        self.dim = ofm;
+        self
+    }
+
+    pub fn fc(mut self, name: &str, out: usize) -> Self {
+        let cin = self.ch * self.dim * self.dim;
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op: Op::Fc,
+            cin,
+            cout: out,
+            k: 1,
+            ifm: 1,
+            ofm: 1,
+        });
+        self.ch = out;
+        self.dim = 1;
+        self
+    }
+
+    pub fn build(self, model: &str, input: Vec<usize>, wbits: usize, abits: usize) -> Graph {
+        let out = self.ch * self.dim * self.dim;
+        Graph {
+            model: model.to_string(),
+            input,
+            output: vec![1, out],
+            weight_bits: wbits,
+            act_bits: abits,
+            nodes: self.nodes,
+        }
+    }
+}
+
+/// The paper's LeNet-5 (W4A4, 28x28x1) — single source of truth on the
+/// rust side, cross-checked against python's export.
+pub fn lenet5() -> Graph {
+    ChainBuilder::input(1, 28)
+        .named_conv("conv1", 6, 5)
+        .maxpool("conv1_pool", 2)
+        .named_conv("conv2", 16, 5)
+        .maxpool("conv2_pool", 2)
+        .fc("fc1", 120)
+        .fc("fc2", 84)
+        .fc("fc3", 10)
+        .build("lenet5", vec![1, 28, 28, 1], 4, 4)
+}
+
+/// A 3-layer MLP — minimal chain for unit tests.
+pub fn mlp(inp: usize, hidden: usize, out: usize) -> Graph {
+    ChainBuilder::input(inp, 1)
+        .fc("fc1", hidden)
+        .fc("fc2", hidden)
+        .fc("fc3", out)
+        .build("mlp", vec![1, inp], 4, 4)
+}
+
+/// A parametric VGG-ish conv stack for DSE scaling tests: `blocks` of
+/// (conv k3, pool2) starting at `ch0` channels, doubling per block, then a
+/// classifier head.
+pub fn convnet(blocks: usize, ch0: usize, img: usize, classes: usize) -> Graph {
+    assert!(blocks >= 1);
+    let mut b = ChainBuilder::input(3, img);
+    let mut ch = ch0;
+    for i in 0..blocks {
+        b = b.named_conv(&format!("conv{}", i + 1), ch, 3);
+        b = b.maxpool(&format!("pool{}", i + 1), 2);
+        ch *= 2;
+    }
+    b.fc("head", classes).build("convnet", vec![1, img, img, 3], 4, 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_validates() {
+        lenet5().validate().unwrap();
+    }
+
+    #[test]
+    fn lenet_shapes() {
+        let g = lenet5();
+        let names: Vec<_> = g.nodes.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["conv1", "conv1_pool", "conv2", "conv2_pool", "fc1", "fc2", "fc3"]
+        );
+        assert_eq!(g.node("conv2").unwrap().ifm, 12);
+        assert_eq!(g.node("conv2").unwrap().ofm, 8);
+        assert_eq!(g.node("fc1").unwrap().cin, 256);
+    }
+
+    #[test]
+    fn mlp_validates() {
+        let g = mlp(64, 32, 10);
+        g.validate().unwrap();
+        assert_eq!(g.total_weights(), 64 * 32 + 32 * 32 + 32 * 10);
+    }
+
+    #[test]
+    fn convnet_validates_multiple_sizes() {
+        for blocks in 1..=3 {
+            let g = convnet(blocks, 8, 32, 10);
+            g.validate().unwrap();
+            assert_eq!(g.mac_nodes().count(), blocks + 1);
+        }
+    }
+
+    #[test]
+    fn convnet_channel_doubling() {
+        let g = convnet(3, 8, 32, 10);
+        assert_eq!(g.node("conv1").unwrap().cout, 8);
+        assert_eq!(g.node("conv2").unwrap().cout, 16);
+        assert_eq!(g.node("conv3").unwrap().cout, 32);
+    }
+}

@@ -1,0 +1,151 @@
+//! Import the python-exported `graph.json` (the compile path's ONNX-like
+//! dump) into a [`Graph`]. Schema errors carry node names so a mismatched
+//! exporter fails loudly at load time, not deep inside the DSE.
+
+use super::{Graph, Node, Op};
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Parse a graph from a JSON value (see `python/compile/model.py::graph_dict`).
+pub fn from_json(v: &Value) -> Result<Graph> {
+    let nodes_v = v
+        .req("nodes")?
+        .as_arr()
+        .ok_or_else(|| Error::graph("'nodes' is not an array"))?;
+
+    let mut nodes = Vec::with_capacity(nodes_v.len());
+    for nv in nodes_v {
+        let name = nv.req_str("name")?.to_string();
+        let node = Node {
+            op: Op::parse(nv.req_str("op")?)
+                .map_err(|e| Error::graph(format!("node '{name}': {e}")))?,
+            cin: nv.req_usize("cin")?,
+            cout: nv.req_usize("cout")?,
+            k: nv.req_usize("k")?,
+            ifm: nv.req_usize("ifm")?,
+            ofm: nv.req_usize("ofm")?,
+            name,
+        };
+        // Cross-check the exporter's derived fields when present: a
+        // disagreement means the two layers' models have diverged.
+        if let Some(w) = nv.get("weights").and_then(Value::as_usize) {
+            if w != node.weights() {
+                return Err(Error::graph(format!(
+                    "node '{}': exporter says {} weights, rust derives {}",
+                    node.name,
+                    w,
+                    node.weights()
+                )));
+            }
+        }
+        if let Some(m) = nv.get("macs_per_frame").and_then(Value::as_usize) {
+            if m != node.macs_per_frame() {
+                return Err(Error::graph(format!(
+                    "node '{}': exporter says {} MACs, rust derives {}",
+                    node.name,
+                    m,
+                    node.macs_per_frame()
+                )));
+            }
+        }
+        nodes.push(node);
+    }
+
+    let dims = |key: &str| -> Result<Vec<usize>> {
+        v.req(key)?
+            .as_arr()
+            .ok_or_else(|| Error::graph(format!("'{key}' is not an array")))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::graph(format!("'{key}' has non-integer dim")))
+            })
+            .collect()
+    };
+
+    let g = Graph {
+        model: v.req_str("model")?.to_string(),
+        input: dims("input")?,
+        output: dims("output")?,
+        weight_bits: v.req_usize("weight_bits")?,
+        act_bits: v.req_usize("act_bits")?,
+        nodes,
+    };
+    g.validate()?;
+    Ok(g)
+}
+
+/// Load `graph.json` from disk.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<Graph> {
+    from_json(&json::parse_file(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+
+    /// Emit the same JSON shape python produces, from a native graph.
+    fn to_json(g: &Graph) -> Value {
+        let nodes = g
+            .nodes
+            .iter()
+            .map(|n| {
+                json::obj(vec![
+                    ("name", json::s(n.name.clone())),
+                    ("op", json::s(n.op.as_str())),
+                    ("cin", json::num(n.cin as f64)),
+                    ("cout", json::num(n.cout as f64)),
+                    ("k", json::num(n.k as f64)),
+                    ("ifm", json::num(n.ifm as f64)),
+                    ("ofm", json::num(n.ofm as f64)),
+                    ("weights", json::num(n.weights() as f64)),
+                    ("macs_per_frame", json::num(n.macs_per_frame() as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("model", json::s(g.model.clone())),
+            ("input", json::arr(g.input.iter().map(|&d| json::num(d as f64)).collect())),
+            ("output", json::arr(g.output.iter().map(|&d| json::num(d as f64)).collect())),
+            ("weight_bits", json::num(g.weight_bits as f64)),
+            ("act_bits", json::num(g.act_bits as f64)),
+            ("nodes", Value::Arr(nodes)),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_via_json() {
+        let g = lenet5();
+        let v = to_json(&g);
+        let text = v.to_string_pretty();
+        let g2 = from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_derived_field_mismatch() {
+        let g = lenet5();
+        let mut v = to_json(&g);
+        // Corrupt conv1's weight count.
+        if let Value::Obj(kv) = &mut v {
+            if let Some((_, Value::Arr(nodes))) = kv.iter_mut().find(|(k, _)| k == "nodes") {
+                if let Value::Obj(n0) = &mut nodes[0] {
+                    for (k, val) in n0.iter_mut() {
+                        if k == "weights" {
+                            *val = Value::Num(999.0);
+                        }
+                    }
+                }
+            }
+        }
+        let err = from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("conv1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        let v = json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! ONNX-like layer graph of the QNN (substrate S4).
+//!
+//! The paper's DSE works on "the ONNX graph" of the model; this module is
+//! that graph: a linear chain of dataflow stages (LeNet-class models are
+//! chains; the representation allows any chain of conv/pool/fc). Imported
+//! from the python exporter (`graph.json`) or built natively by
+//! [`builder`]; the integration tests assert the two agree node-for-node.
+
+pub mod builder;
+pub mod import;
+
+use crate::util::error::{Error, Result};
+
+/// Operator kind of a dataflow stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// VALID 2-D convolution, square kernel `k`.
+    Conv,
+    /// Fully connected (matrix–vector per frame).
+    Fc,
+    /// Max pooling, square window `k`, stride `k`.
+    MaxPool,
+}
+
+impl Op {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Op::Conv => "conv",
+            Op::Fc => "fc",
+            Op::MaxPool => "maxpool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Op> {
+        match s {
+            "conv" => Ok(Op::Conv),
+            "fc" => Ok(Op::Fc),
+            "maxpool" => Ok(Op::MaxPool),
+            other => Err(Error::graph(format!("unknown op '{other}'"))),
+        }
+    }
+
+    /// Does this stage perform MACs (and therefore carry weights)?
+    pub fn has_weights(&self) -> bool {
+        matches!(self, Op::Conv | Op::Fc)
+    }
+}
+
+/// One dataflow stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    /// Input channels (fc: input features).
+    pub cin: usize,
+    /// Output channels (fc: output features).
+    pub cout: usize,
+    /// Square kernel size (fc: 1).
+    pub k: usize,
+    /// Input spatial dim (fc: 1).
+    pub ifm: usize,
+    /// Output spatial dim (fc: 1).
+    pub ofm: usize,
+}
+
+impl Node {
+    /// Number of weights in this stage.
+    pub fn weights(&self) -> usize {
+        if self.op.has_weights() {
+            self.cout * self.cin * self.k * self.k
+        } else {
+            0
+        }
+    }
+
+    /// MACs per inference frame.
+    pub fn macs_per_frame(&self) -> usize {
+        match self.op {
+            Op::Conv => self.ofm * self.ofm * self.weights(),
+            Op::Fc => self.weights(),
+            Op::MaxPool => 0,
+        }
+    }
+
+    /// Output pixels per frame (1 for fc).
+    pub fn out_pixels(&self) -> usize {
+        self.ofm * self.ofm
+    }
+
+    /// SIMD (input-parallelism) axis extent: K²·Cin for conv, IN for fc.
+    pub fn fold_in(&self) -> usize {
+        match self.op {
+            Op::Conv => self.k * self.k * self.cin,
+            Op::Fc => self.cin,
+            Op::MaxPool => self.cin,
+        }
+    }
+
+    /// PE (output-parallelism) axis extent.
+    pub fn fold_out(&self) -> usize {
+        self.cout
+    }
+
+    /// Elements streamed out per frame.
+    pub fn out_elements(&self) -> usize {
+        self.out_pixels() * self.cout
+    }
+
+    fn validate(&self) -> Result<()> {
+        let e = |m: String| Err(Error::Graph(m));
+        if self.cin == 0 || self.cout == 0 || self.k == 0 || self.ifm == 0 || self.ofm == 0 {
+            return e(format!("{}: zero dimension", self.name));
+        }
+        match self.op {
+            Op::Conv => {
+                if self.ifm < self.k {
+                    return e(format!("{}: ifm {} < k {}", self.name, self.ifm, self.k));
+                }
+                if self.ofm != self.ifm - self.k + 1 {
+                    return e(format!(
+                        "{}: VALID conv shape mismatch: ofm {} != ifm {} - k {} + 1",
+                        self.name, self.ofm, self.ifm, self.k
+                    ));
+                }
+            }
+            Op::MaxPool => {
+                if self.cin != self.cout {
+                    return e(format!("{}: pool must preserve channels", self.name));
+                }
+                if self.ofm != self.ifm / self.k {
+                    return e(format!(
+                        "{}: pool shape mismatch: ofm {} != ifm {} / k {}",
+                        self.name, self.ofm, self.ifm, self.k
+                    ));
+                }
+            }
+            Op::Fc => {
+                if self.k != 1 || self.ifm != 1 || self.ofm != 1 {
+                    return e(format!("{}: fc must have k=ifm=ofm=1", self.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A dataflow model: metadata + an ordered chain of stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub model: String,
+    pub input: Vec<usize>,
+    pub output: Vec<usize>,
+    pub weight_bits: usize,
+    pub act_bits: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Validate per-node shapes and inter-node stream compatibility.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            return Err(Error::graph("empty graph"));
+        }
+        for n in &self.nodes {
+            n.validate()?;
+        }
+        for w in self.nodes.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            match b.op {
+                Op::Conv | Op::MaxPool => {
+                    if a.cout != b.cin {
+                        return Err(Error::graph(format!(
+                            "{} -> {}: channel mismatch {} vs {}",
+                            a.name, b.name, a.cout, b.cin
+                        )));
+                    }
+                    if a.op != Op::Fc && a.ofm != b.ifm {
+                        return Err(Error::graph(format!(
+                            "{} -> {}: spatial mismatch {} vs {}",
+                            a.name, b.name, a.ofm, b.ifm
+                        )));
+                    }
+                }
+                Op::Fc => {
+                    let flat = a.out_elements();
+                    if flat != b.cin {
+                        return Err(Error::graph(format!(
+                            "{} -> {}: flatten mismatch {} vs {}",
+                            a.name, b.name, flat, b.cin
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn node(&self, name: &str) -> Result<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| n.name == name)
+            .ok_or_else(|| Error::graph(format!("no node '{name}'")))
+    }
+
+    /// MAC stages only (the ones folding/sparsity apply to).
+    pub fn mac_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.op.has_weights())
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.nodes.iter().map(|n| n.weights()).sum()
+    }
+
+    pub fn total_macs_per_frame(&self) -> usize {
+        self.nodes.iter().map(|n| n.macs_per_frame()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::lenet5;
+    use super::*;
+
+    #[test]
+    fn lenet_totals_match_paper_arithmetic() {
+        // DESIGN.md §7: 44,190 weights, 281,640 MACs/frame.
+        let g = lenet5();
+        g.validate().unwrap();
+        assert_eq!(g.total_weights(), 44_190);
+        assert_eq!(g.total_macs_per_frame(), 281_640);
+    }
+
+    #[test]
+    fn per_layer_weights() {
+        let g = lenet5();
+        assert_eq!(g.node("conv1").unwrap().weights(), 150);
+        assert_eq!(g.node("conv2").unwrap().weights(), 2_400);
+        assert_eq!(g.node("fc1").unwrap().weights(), 30_720);
+        assert_eq!(g.node("fc2").unwrap().weights(), 10_080);
+        assert_eq!(g.node("fc3").unwrap().weights(), 840);
+    }
+
+    #[test]
+    fn fold_axes() {
+        let g = lenet5();
+        let c1 = g.node("conv1").unwrap();
+        assert_eq!(c1.fold_in(), 25);
+        assert_eq!(c1.fold_out(), 6);
+        assert_eq!(c1.out_pixels(), 576);
+        let f1 = g.node("fc1").unwrap();
+        assert_eq!(f1.fold_in(), 256);
+        assert_eq!(f1.out_pixels(), 1);
+    }
+
+    #[test]
+    fn validation_catches_breaks() {
+        let mut g = lenet5();
+        g.nodes[0].cout = 7; // conv1 now emits 7ch, pool expects 6
+        assert!(g.validate().is_err());
+
+        let mut g = lenet5();
+        g.nodes[0].ofm = 23; // VALID shape broken
+        assert!(g.validate().is_err());
+
+        let mut g = lenet5();
+        g.nodes.clear();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flatten_edge_checked() {
+        let mut g = lenet5();
+        // fc1 expects 4*4*16 = 256 inputs.
+        {
+            let f1 = g.nodes.iter_mut().find(|n| n.name == "fc1").unwrap();
+            f1.cin = 200;
+        }
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn op_roundtrip() {
+        for op in [Op::Conv, Op::Fc, Op::MaxPool] {
+            assert_eq!(Op::parse(op.as_str()).unwrap(), op);
+        }
+        assert!(Op::parse("softmax").is_err());
+    }
+}

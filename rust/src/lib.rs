@@ -1,0 +1,47 @@
+//! # LogicSparse — engine-free unstructured sparsity for quantised dataflow
+//! accelerators (reproduction).
+//!
+//! This crate is the Layer-3 coordinator of the three-layer stack described
+//! in `DESIGN.md`:
+//!
+//! * [`graph`] — ONNX-like layer graph of the QNN (imported from the python
+//!   compile path or built natively);
+//! * [`folding`] — FINN-style PE/SIMD folding algebra;
+//! * [`cost`] — analytic latency / LUT / BRAM / DSP / f_max models of the
+//!   dataflow accelerator (the XCU50 substitute — see DESIGN.md §2);
+//! * [`sparsity`] — masks, magnitude pruning statistics, N:M baseline,
+//!   compression accounting;
+//! * [`dse`] — **the paper's contribution**: heuristic folding search with
+//!   secondary relaxation + iterative bottleneck elimination with sparse /
+//!   factor unfolding under resource constraints (Fig. 1);
+//! * [`sim`] — cycle-level streaming-dataflow simulator that *measures*
+//!   latency/throughput of a configured accelerator (Table I's measured
+//!   columns);
+//! * [`runtime`] — xla/PJRT wrapper that loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them on the request path;
+//! * [`coordinator`] — the serving loop: request queue, dynamic batcher,
+//!   worker pool, latency/throughput accounting;
+//! * [`weights`] — LSTW tensor store shared with the python exporter;
+//! * [`util`] — offline substrates (JSON, RNG, property testing, CLI,
+//!   tables, micro-bench harness) — crates.io is not reachable in this
+//!   environment, so these are first-party.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! step that invokes the compile path.
+
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod device;
+pub mod dse;
+pub mod experiments;
+pub mod folding;
+pub mod graph;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod util;
+pub mod weights;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,345 @@
+//! `logicsparse` — CLI for the LogicSparse reproduction.
+//!
+//! Subcommands mirror the Fig. 1 workflow plus deployment:
+//!
+//! ```text
+//! logicsparse dse      run the DSE, write artifacts/folding_config.json
+//! logicsparse table1   regenerate Table I (estimates + simulator)
+//! logicsparse fig2     regenerate Fig. 2 per-layer series
+//! logicsparse sim      simulate one strategy under a traffic model
+//! logicsparse serve    serve the AOT artifacts through the coordinator
+//! logicsparse pareto   sweep budgets -> Pareto frontier ablation
+//! ```
+
+use logicsparse::config::PruneProfile;
+use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::dse::{self, DseOptions, Strategy};
+use logicsparse::experiments::{fig2, headline, table1, Accuracies};
+use logicsparse::graph::builder::lenet5;
+use logicsparse::util::cli::{self, Opt};
+use logicsparse::util::error::Result;
+use logicsparse::util::lstw::Store;
+use logicsparse::{device, graph, runtime, sim};
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+const GLOBAL_USAGE: &str = "logicsparse <dse|table1|fig2|sim|serve|pareto> [options]
+Run `logicsparse <cmd> --help` for per-command options.";
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{GLOBAL_USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "dse" => cmd_dse(rest),
+        "table1" => cmd_table1(rest),
+        "fig2" => cmd_fig2(rest),
+        "sim" => cmd_sim(rest),
+        "serve" => cmd_serve(rest),
+        "pareto" => cmd_pareto(rest),
+        "--help" | "-h" | "help" => {
+            println!("{GLOBAL_USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{GLOBAL_USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn common_opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "device", takes_value: true, default: Some("xcu50"), help: "target device (xcu50|zcu104|tiny)" },
+        Opt { name: "artifacts", takes_value: true, default: Some("artifacts"), help: "artifacts directory" },
+        Opt { name: "help", takes_value: false, default: None, help: "show usage" },
+    ]
+}
+
+/// Load graph + prune profile from artifacts when present, otherwise fall
+/// back to the native LeNet-5 builder and a uniform reference profile.
+fn load_inputs(artifacts: &str) -> Result<(graph::Graph, PruneProfile)> {
+    let gpath = std::path::Path::new(artifacts).join("graph.json");
+    let g = if gpath.exists() {
+        graph::import::load(&gpath)?
+    } else {
+        eprintln!("note: {} missing, using built-in LeNet-5 graph", gpath.display());
+        lenet5()
+    };
+    let ppath = std::path::Path::new(artifacts).join("prune_profile.json");
+    let profile = if ppath.exists() {
+        PruneProfile::load(&ppath)?
+    } else {
+        eprintln!("note: {} missing, using uniform 0.8 pruning profile", ppath.display());
+        PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95)
+    };
+    Ok((g, profile))
+}
+
+fn cmd_dse(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "strategy", takes_value: true, default: Some("proposed"), help: "strategy to emit" },
+        Opt { name: "target-fps", takes_value: true, default: None, help: "auto-fold throughput target" },
+        Opt { name: "budget-fraction", takes_value: true, default: None, help: "fraction of device LUTs usable" },
+        Opt { name: "min-accuracy", takes_value: true, default: None, help: "pruning-reference accuracy floor" },
+        Opt { name: "verbose", takes_value: false, default: None, help: "print the full DSE trace" },
+        Opt { name: "out", takes_value: true, default: None, help: "output path (default <artifacts>/folding_config.json)" },
+    ]);
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("dse", "run the LogicSparse design-space exploration", &opts));
+        return Ok(());
+    }
+    let dev = device::by_name(a.req("device")?)?;
+    let artifacts = a.req("artifacts")?;
+    let (g, profile) = load_inputs(artifacts)?;
+    let strategy = Strategy::parse(a.req("strategy")?)?;
+    let mut dopts = DseOptions::default();
+    if let Some(t) = a.get_f64("target-fps")? {
+        dopts.auto_fold_target_fps = t;
+    }
+    if let Some(b) = a.get_f64("budget-fraction")? {
+        dopts.budget_fraction = b;
+    }
+    if let Some(m) = a.get_f64("min-accuracy")? {
+        dopts.min_reference_accuracy = m;
+    }
+
+    let result = dse::run(strategy, &g, &dev, &profile, &dopts)?;
+    if a.flag("verbose") {
+        println!("{}", result.report.render());
+    } else if let Some(sum) = &result.report.final_summary {
+        println!("{sum}");
+    }
+    for (name, f) in &result.folding.layers {
+        println!(
+            "  {name:<8} {:<16} PE={:<4} SIMD={:<4} s={:.2}",
+            f.style.as_str(),
+            f.pe,
+            f.simd,
+            f.sparsity
+        );
+    }
+    let out = a
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("{artifacts}/folding_config.json"));
+    result.to_file(&dev).save(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "frames", takes_value: true, default: Some("200"), help: "simulated frames per row" });
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("table1", "regenerate Table I", &opts));
+        return Ok(());
+    }
+    let dev = device::by_name(a.req("device")?)?;
+    let artifacts = a.req("artifacts")?;
+    let (g, profile) = load_inputs(artifacts)?;
+    let acc = Accuracies::load(artifacts)?;
+    let frames = a.get_usize("frames")?.unwrap_or(200) as u64;
+
+    let rows = table1::measure(&g, &dev, &profile, &acc, frames)?;
+    println!("{}", table1::render(&rows));
+    for v in table1::shape_checks(&rows) {
+        println!("{v}");
+    }
+    let h = headline::measure(&rows, artifacts)?;
+    println!();
+    println!("{}", headline::render(&h));
+    Ok(())
+}
+
+fn cmd_fig2(argv: &[String]) -> Result<()> {
+    let opts = common_opts();
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("fig2", "regenerate Fig. 2 per-layer series", &opts));
+        return Ok(());
+    }
+    let dev = device::by_name(a.req("device")?)?;
+    let (g, profile) = load_inputs(a.req("artifacts")?)?;
+    let series = fig2::measure(&g, &dev, &profile)?;
+    println!("{}", fig2::render(&series));
+    for v in fig2::shape_checks(&series) {
+        println!("{v}");
+    }
+    Ok(())
+}
+
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "strategy", takes_value: true, default: Some("proposed"), help: "strategy to simulate" },
+        Opt { name: "frames", takes_value: true, default: Some("500"), help: "frames" },
+        Opt { name: "traffic", takes_value: true, default: Some("saturated"), help: "saturated|poisson:<fps>|periodic:<cycles>" },
+        Opt { name: "fifo-depth", takes_value: true, default: Some("8"), help: "inter-stage FIFO depth" },
+    ]);
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("sim", "cycle-level simulation of one strategy", &opts));
+        return Ok(());
+    }
+    let dev = device::by_name(a.req("device")?)?;
+    let (g, profile) = load_inputs(a.req("artifacts")?)?;
+    let strategy = Strategy::parse(a.req("strategy")?)?;
+    let frames = a.get_usize("frames")?.unwrap_or(500) as u64;
+    let depth = a.get_usize("fifo-depth")?.unwrap_or(8);
+
+    let r = dse::run(strategy, &g, &dev, &profile, &DseOptions::default())?;
+    let mut pipe = sim::build(&g, &r.folding, &dev, depth)?;
+    let traffic = a.req("traffic")?;
+    let wl = if traffic == "saturated" {
+        sim::Workload::Saturated { frames }
+    } else if let Some(fps) = traffic.strip_prefix("poisson:") {
+        sim::Workload::Poisson {
+            frames,
+            rate_fps: fps.parse().map_err(|_| {
+                logicsparse::Error::config(format!("bad poisson rate '{fps}'"))
+            })?,
+            seed: 7,
+        }
+    } else if let Some(cyc) = traffic.strip_prefix("periodic:") {
+        sim::Workload::Periodic {
+            frames,
+            interval_cycles: cyc.parse().map_err(|_| {
+                logicsparse::Error::config(format!("bad period '{cyc}'"))
+            })?,
+        }
+    } else {
+        return Err(logicsparse::Error::config(format!("unknown traffic '{traffic}'")));
+    };
+    let rep = pipe.try_run(&wl)?;
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.extend([
+        Opt { name: "tag", takes_value: true, default: Some("proposed"), help: "artifact tag to serve" },
+        Opt { name: "requests", takes_value: true, default: Some("2048"), help: "requests to replay from the test set" },
+        Opt { name: "max-batch", takes_value: true, default: Some("32"), help: "batcher max batch" },
+        Opt { name: "max-wait-us", takes_value: true, default: Some("2000"), help: "batcher deadline (us)" },
+        Opt { name: "engines", takes_value: true, default: Some("1"), help: "engine replicas" },
+    ]);
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("serve", "serve AOT artifacts and replay the test set", &opts));
+        return Ok(());
+    }
+    let artifacts = a.req("artifacts")?;
+    let tag = a.req("tag")?;
+    let n_req = a.get_usize("requests")?.unwrap_or(2048);
+
+    // Load the exported test set.
+    let ts = Store::read_file(std::path::Path::new(artifacts).join("testset.lstw"))?;
+    let images = ts.req("images")?;
+    let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+    let px = runtime::IMG * runtime::IMG;
+    let n_avail = labels.len();
+    let imgs = images.data.as_f32()?;
+
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy {
+            max_batch: a.get_usize("max-batch")?.unwrap_or(32),
+            max_wait: Duration::from_micros(a.get_usize("max-wait-us")?.unwrap_or(2000) as u64),
+        },
+        engines: a.get_usize("engines")?.unwrap_or(1),
+        artifacts_dir: artifacts.to_string(),
+        tag: tag.to_string(),
+    })?;
+    println!("serving tag '{tag}' from {artifacts} ({n_avail} test images)");
+
+    let mut correct = 0usize;
+    let mut pending = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        let j = i % n_avail;
+        let img = imgs[j * px..(j + 1) * px].to_vec();
+        pending.push((server.submit(img)?, labels[j]));
+        // Keep a bounded in-flight window, like a real client pool.
+        if pending.len() >= 256 {
+            for (rx, label) in pending.drain(..) {
+                let resp = rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
+                if resp.class() == label as usize {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    for (rx, label) in pending.drain(..) {
+        let resp = rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
+        if resp.class() == label as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    println!("{}", snap.render());
+    println!(
+        "accuracy {:.2}% over {} requests | wall {:.2}s | {:.0} req/s",
+        100.0 * correct as f64 / n_req as f64,
+        n_req,
+        wall,
+        n_req as f64 / wall
+    );
+    Ok(())
+}
+
+fn cmd_pareto(argv: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "points", takes_value: true, default: Some("8"), help: "budget sweep points" });
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("pareto", "budget sweep -> Pareto frontier", &opts));
+        return Ok(());
+    }
+    let dev = device::by_name(a.req("device")?)?;
+    let (g, profile) = load_inputs(a.req("artifacts")?)?;
+    let points = a.get_usize("points")?.unwrap_or(8);
+
+    let mut all = Vec::new();
+    for i in 0..points {
+        let frac = 0.02 + 0.98 * (i as f64 / (points.max(2) - 1) as f64);
+        for (st, with_sparsity) in [(Strategy::Proposed, true), (Strategy::AutoFold, false)] {
+            let mut dopts = DseOptions { budget_fraction: frac, ..Default::default() };
+            if !with_sparsity {
+                dopts.auto_fold_target_fps = 1e9; // push to the budget
+            }
+            if let Ok(r) = dse::run(st, &g, &dev, &profile, &dopts) {
+                all.push(logicsparse::dse::pareto::Point {
+                    label: format!("{}@{:.0}%", st.as_str(), frac * 100.0),
+                    luts: r.cost.total_luts,
+                    throughput_fps: r.cost.throughput_fps,
+                });
+            }
+        }
+    }
+    let front = logicsparse::dse::pareto::frontier(&all);
+    println!("budget sweep ({} evaluated, {} on frontier):", all.len(), front.len());
+    for p in &front {
+        println!("  {:<24} {:>9} LUTs  {:>12.0} FPS", p.label, p.luts, p.throughput_fps);
+    }
+    let hv = logicsparse::dse::pareto::hypervolume(&front, dev.lut_budget(), 0.0);
+    println!("frontier hypervolume: {hv:.3e}");
+    Ok(())
+}

@@ -1,0 +1,184 @@
+//! Quantisation helpers, rust side (substrate S10).
+//!
+//! The python compile path performs QAT; here we provide the matching
+//! integer-grid arithmetic for (a) verifying exported weights actually lie
+//! on the W4 grid, (b) packing int codes for size accounting, and (c) the
+//! compression headline. Kept numerically identical to
+//! `python/compile/quant.py` (symmetric per-channel, qmax = 2^(b-1) - 1).
+
+use crate::util::error::{Error, Result};
+
+/// Symmetric quantisation spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QSpec {
+    pub bits: usize,
+}
+
+impl QSpec {
+    pub fn new(bits: usize) -> Result<Self> {
+        if !(2..=8).contains(&bits) {
+            return Err(Error::config(format!("weight bits {bits} out of [2,8]")));
+        }
+        Ok(QSpec { bits })
+    }
+
+    /// Largest positive level.
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Scale for a channel with max-abs `amax`.
+    pub fn scale(&self, amax: f32) -> f32 {
+        amax.max(1e-8) / self.qmax() as f32
+    }
+
+    /// Quantise to integer codes with the given scale.
+    pub fn encode(&self, w: &[f32], scale: f32) -> Vec<i8> {
+        let qmax = self.qmax();
+        w.iter()
+            .map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax) as i8)
+            .collect()
+    }
+
+    pub fn decode(&self, codes: &[i8], scale: f32) -> Vec<f32> {
+        codes.iter().map(|&c| c as f32 * scale).collect()
+    }
+
+    /// Does every value lie on the quantisation grid for `scale`
+    /// (within float tolerance)? Exported "baked" weights must.
+    pub fn on_grid(&self, w: &[f32], scale: f32, tol: f32) -> bool {
+        let qmax = self.qmax() as f32;
+        w.iter().all(|&x| {
+            let q = x / scale;
+            q.abs() <= qmax + 0.5 && (q - q.round()).abs() <= tol
+        })
+    }
+}
+
+/// Per-output-channel quantisation of a [fold_in, cout] matrix: returns
+/// (codes, per-channel scales). Matches python's per_channel=True path.
+pub fn quantize_per_channel(
+    w: &[f32],
+    fold_in: usize,
+    cout: usize,
+    spec: QSpec,
+) -> Result<(Vec<i8>, Vec<f32>)> {
+    if w.len() != fold_in * cout {
+        return Err(Error::config(format!(
+            "weight len {} != {fold_in}x{cout}",
+            w.len()
+        )));
+    }
+    let mut scales = vec![0.0f32; cout];
+    for c in 0..cout {
+        let amax = (0..fold_in)
+            .map(|r| w[r * cout + c].abs())
+            .fold(0.0f32, f32::max);
+        scales[c] = spec.scale(amax);
+    }
+    let qmax = spec.qmax();
+    let mut codes = vec![0i8; w.len()];
+    for r in 0..fold_in {
+        for c in 0..cout {
+            let i = r * cout + c;
+            codes[i] = ((w[i] / scales[c]).round() as i32).clamp(-qmax, qmax) as i8;
+        }
+    }
+    Ok((codes, scales))
+}
+
+/// Mean-squared error introduced by quantisation (diagnostics).
+pub fn quant_mse(w: &[f32], codes: &[i8], fold_in: usize, cout: usize, scales: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for r in 0..fold_in {
+        for c in 0..cout {
+            let i = r * cout + c;
+            let d = (w[i] - codes[i] as f32 * scales[c]) as f64;
+            acc += d * d;
+        }
+    }
+    acc / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(QSpec::new(4).unwrap().qmax(), 7);
+        assert_eq!(QSpec::new(8).unwrap().qmax(), 127);
+        assert!(QSpec::new(1).is_err());
+        assert!(QSpec::new(16).is_err());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_on_grid() {
+        let spec = QSpec::new(4).unwrap();
+        let scale = 0.25;
+        let w: Vec<f32> = (-7..=7).map(|i| i as f32 * scale).collect();
+        let codes = spec.encode(&w, scale);
+        let back = spec.decode(&codes, scale);
+        assert_eq!(w, back);
+        assert!(spec.on_grid(&back, scale, 1e-6));
+    }
+
+    #[test]
+    fn off_grid_detected() {
+        let spec = QSpec::new(4).unwrap();
+        assert!(!spec.on_grid(&[0.26], 0.25, 1e-3));
+        assert!(spec.on_grid(&[0.25], 0.25, 1e-3));
+    }
+
+    #[test]
+    fn per_channel_scales_independent() {
+        let spec = QSpec::new(4).unwrap();
+        // col 0 max 7.0, col 1 max 0.7
+        let w = vec![7.0, 0.7, -3.5, -0.35];
+        let (codes, scales) = quantize_per_channel(&w, 2, 2, spec).unwrap();
+        assert!((scales[0] - 1.0).abs() < 1e-6);
+        assert!((scales[1] - 0.1).abs() < 1e-6);
+        assert_eq!(codes, vec![7, 7, -4, -4]);
+    }
+
+    #[test]
+    fn prop_quant_error_bounded_by_half_scale() {
+        check("|w - dq| <= scale/2 within range", 150, |g| {
+            let spec = QSpec::new(*g.choose(&[3usize, 4, 6])).unwrap();
+            let fold_in = g.usize(1, 40);
+            let cout = g.usize(1, 8);
+            let mut rng = Pcg32::seeded(g.case);
+            let w: Vec<f32> = (0..fold_in * cout).map(|_| rng.normal() as f32).collect();
+            let (codes, scales) = quantize_per_channel(&w, fold_in, cout, spec).unwrap();
+            for r in 0..fold_in {
+                for c in 0..cout {
+                    let i = r * cout + c;
+                    let dq = codes[i] as f32 * scales[c];
+                    assert!(
+                        (w[i] - dq).abs() <= scales[c] * 0.5 + 1e-6,
+                        "w {} dq {} scale {}",
+                        w[i],
+                        dq,
+                        scales[c]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let mut rng = Pcg32::seeded(5);
+        let w: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2usize, 4, 6, 8] {
+            let spec = QSpec::new(bits).unwrap();
+            let (codes, scales) = quantize_per_channel(&w, 500, 4, spec).unwrap();
+            let mse = quant_mse(&w, &codes, 500, 4, &scales);
+            assert!(mse < prev, "bits {bits}: {mse} !< {prev}");
+            prev = mse;
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Artifact discovery: map `artifacts/lenet_<tag>_b<batch>.hlo.txt` files
+//! to (tag, batch) variants without touching their contents (compilation
+//! happens lazily in [`super::ModelRuntime::load`]).
+
+use crate::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One discovered artifact file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub tag: String,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Parse `lenet_<tag>_b<batch>.hlo.txt`; tags may contain underscores.
+pub fn parse_name(name: &str) -> Option<(String, usize)> {
+    let rest = name.strip_prefix("lenet_")?.strip_suffix(".hlo.txt")?;
+    let (tag, b) = rest.rsplit_once("_b")?;
+    let batch: usize = b.parse().ok()?;
+    if tag.is_empty() || batch == 0 {
+        return None;
+    }
+    Some((tag.to_string(), batch))
+}
+
+/// All batch variants of `tag` in `dir`, sorted by batch.
+pub fn discover_variants(dir: &Path, tag: &str) -> Result<Vec<Variant>> {
+    if !dir.exists() {
+        return Err(Error::Xla(format!("artifact dir {} does not exist", dir.display())));
+    }
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some((t, batch)) = parse_name(&name) {
+            if t == tag {
+                out.push(Variant { tag: t, batch, path: entry.path() });
+            }
+        }
+    }
+    out.sort_by_key(|v| v.batch);
+    Ok(out)
+}
+
+/// All tags present in `dir`.
+pub fn discover_tags(dir: &Path) -> Result<Vec<String>> {
+    let mut tags: Vec<String> = Vec::new();
+    if !dir.exists() {
+        return Ok(tags);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        if let Some((t, _)) = parse_name(&name.to_string_lossy()) {
+            if !tags.contains(&t) {
+                tags.push(t);
+            }
+        }
+    }
+    tags.sort();
+    Ok(tags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(parse_name("lenet_dense_b8.hlo.txt"), Some(("dense".into(), 8)));
+        assert_eq!(
+            parse_name("lenet_unfold_pruned_b32.hlo.txt"),
+            Some(("unfold_pruned".into(), 32))
+        );
+        assert_eq!(parse_name("lenet_dense_b0.hlo.txt"), None);
+        assert_eq!(parse_name("other_dense_b8.hlo.txt"), None);
+        assert_eq!(parse_name("lenet_dense_b8.hlo"), None);
+        assert_eq!(parse_name("lenet__b8.hlo.txt"), None);
+    }
+
+    #[test]
+    fn discovery_sorted() {
+        let dir = std::env::temp_dir().join(format!("lstw_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for b in [32, 1, 8] {
+            std::fs::write(dir.join(format!("lenet_x_b{b}.hlo.txt")), "hlo").unwrap();
+        }
+        std::fs::write(dir.join("lenet_y_b4.hlo.txt"), "hlo").unwrap();
+        std::fs::write(dir.join("readme.md"), "not an artifact").unwrap();
+
+        let vs = discover_variants(&dir, "x").unwrap();
+        assert_eq!(vs.iter().map(|v| v.batch).collect::<Vec<_>>(), vec![1, 8, 32]);
+        let tags = discover_tags(&dir).unwrap();
+        assert_eq!(tags, vec!["x", "y"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(discover_variants(Path::new("/no/such/dir"), "x").is_err());
+    }
+}

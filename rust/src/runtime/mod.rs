@@ -1,0 +1,181 @@
+//! PJRT runtime (substrate S11): load AOT artifacts, execute on the
+//! request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO **text**
+//! is the interchange (jax ≥ 0.5 serialized protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! One [`Executable`] per (model variant, batch size); [`ModelRuntime`]
+//! owns the set exported by `make artifacts` and picks the best batch
+//! variant for each dynamic batch (smallest variant ≥ n, padding the
+//! remainder — the classic serving trick the batcher exploits).
+
+pub mod artifact;
+
+use crate::util::error::{Error, Result};
+use std::path::Path;
+
+pub use artifact::{discover_variants, Variant};
+
+/// Image geometry of the LeNet artifacts (NHWC).
+pub const IMG: usize = 28;
+pub const NUM_CLASSES: usize = 10;
+
+/// A compiled HLO executable with a fixed batch size.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub path: String,
+}
+
+impl Executable {
+    /// Run one batch: `x` is [batch, 28, 28, 1] flattened, f32.
+    /// Returns logits [batch, 10] flattened.
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.batch * IMG * IMG;
+        if x.len() != expect {
+            return Err(Error::Xla(format!(
+                "input length {} != batch {} * {}",
+                x.len(),
+                self.batch,
+                IMG * IMG
+            )));
+        }
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, IMG as i64, IMG as i64, 1])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let logits = out.to_vec::<f32>()?;
+        if logits.len() != self.batch * NUM_CLASSES {
+            return Err(Error::Xla(format!(
+                "output length {} != batch {} * {NUM_CLASSES}",
+                logits.len(),
+                self.batch
+            )));
+        }
+        Ok(logits)
+    }
+}
+
+/// The serving runtime: a PJRT client plus compiled batch variants of one
+/// model tag (e.g. "proposed").
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    /// Sorted by batch ascending.
+    pub executables: Vec<Executable>,
+    pub tag: String,
+}
+
+impl ModelRuntime {
+    /// Compile every `lenet_<tag>_b*.hlo.txt` under `dir`.
+    pub fn load(dir: impl AsRef<Path>, tag: &str) -> Result<Self> {
+        let variants = artifact::discover_variants(dir.as_ref(), tag)?;
+        if variants.is_empty() {
+            return Err(Error::Xla(format!(
+                "no artifacts for tag '{tag}' in {} — run `make artifacts`",
+                dir.as_ref().display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = Vec::with_capacity(variants.len());
+        for v in variants {
+            let proto = xla::HloModuleProto::from_text_file(
+                v.path.to_str().ok_or_else(|| Error::Xla("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.push(Executable {
+                exe,
+                batch: v.batch,
+                path: v.path.display().to_string(),
+            });
+        }
+        executables.sort_by_key(|e| e.batch);
+        Ok(ModelRuntime { client, executables, tag: tag.to_string() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.executables.iter().map(|e| e.batch).collect()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.executables.last().map(|e| e.batch).unwrap_or(0)
+    }
+
+    /// Smallest variant whose batch ≥ n (or the largest variant).
+    pub fn pick(&self, n: usize) -> &Executable {
+        self.executables
+            .iter()
+            .find(|e| e.batch >= n)
+            .unwrap_or_else(|| self.executables.last().expect("non-empty"))
+    }
+
+    /// Run `n ≤ pick(n).batch` images, padding the tail; returns n*10 logits.
+    pub fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let px = IMG * IMG;
+        if x.len() != n * px {
+            return Err(Error::Xla(format!("expected {n}*{px} inputs, got {}", x.len())));
+        }
+        let exe = self.pick(n);
+        if n > exe.batch {
+            // Larger than the largest variant: split into chunks.
+            let mut out = Vec::with_capacity(n * NUM_CLASSES);
+            for chunk in x.chunks(exe.batch * px) {
+                let m = chunk.len() / px;
+                out.extend(self.infer_padded(chunk, m)?);
+            }
+            return Ok(out);
+        }
+        let mut padded = x.to_vec();
+        padded.resize(exe.batch * px, 0.0);
+        let mut logits = exe.infer(&padded)?;
+        logits.truncate(n * NUM_CLASSES);
+        Ok(logits)
+    }
+}
+
+/// argmax over each row of `logits` ([n, NUM_CLASSES] flattened).
+pub fn argmax_classes(logits: &[f32]) -> Vec<usize> {
+    logits
+        .chunks(NUM_CLASSES)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows() {
+        let mut logits = vec![0.0f32; 20];
+        logits[3] = 5.0; // row 0 -> 3
+        logits[10 + 7] = 2.0; // row 1 -> 7
+        assert_eq!(argmax_classes(&logits), vec![3, 7]);
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let err = match ModelRuntime::load("/nonexistent-dir", "proposed") {
+            Err(e) => e,
+            Ok(_) => panic!("load from missing dir must fail"),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts") || msg.contains("nonexistent"), "{msg}");
+    }
+}

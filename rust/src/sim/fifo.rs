@@ -1,0 +1,113 @@
+//! Bounded token FIFO with occupancy tracking — the inter-stage stream
+//! buffer of the dataflow pipeline (FINN's StreamingFIFO).
+
+/// A bounded FIFO counting tokens (token payloads are implicit: the
+//  simulator tracks timing, not values).
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    pub capacity: usize,
+    occupancy: usize,
+    /// High-water mark, for FIFO-sizing reports.
+    max_occupancy: usize,
+    /// Total tokens that passed through.
+    total: u64,
+}
+
+impl Fifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "FIFO capacity must be >= 1");
+        Fifo { capacity, occupancy: 0, max_occupancy: 0, total: 0 }
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.occupancy
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.occupancy == self.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupancy == 0
+    }
+
+    /// Push `n` tokens; returns false (and pushes nothing) if they don't fit.
+    pub fn push(&mut self, n: usize) -> bool {
+        if n > self.free() {
+            return false;
+        }
+        self.occupancy += n;
+        self.max_occupancy = self.max_occupancy.max(self.occupancy);
+        self.total += n as u64;
+        true
+    }
+
+    /// Pop `n` tokens; returns false (and pops nothing) if not available.
+    pub fn pop(&mut self, n: usize) -> bool {
+        if n > self.occupancy {
+            return false;
+        }
+        self.occupancy -= n;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn push_pop_bounds() {
+        let mut f = Fifo::new(4);
+        assert!(f.push(3));
+        assert!(!f.push(2));
+        assert!(f.push(1));
+        assert!(f.is_full());
+        assert!(f.pop(2));
+        assert!(!f.pop(3));
+        assert_eq!(f.occupancy(), 2);
+        assert_eq!(f.max_occupancy(), 4);
+        assert_eq!(f.total_tokens(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        Fifo::new(0);
+    }
+
+    #[test]
+    fn prop_occupancy_invariant() {
+        check("0 <= occupancy <= capacity always", 200, |g| {
+            let cap = g.usize(1, 32);
+            let mut f = Fifo::new(cap);
+            let mut model = 0usize; // reference occupancy
+            for _ in 0..g.usize(1, 100) {
+                let n = g.usize(0, 8);
+                if g.bool(0.5) {
+                    if f.push(n) {
+                        model += n;
+                    }
+                } else if f.pop(n) {
+                    model -= n;
+                }
+                assert_eq!(f.occupancy(), model);
+                assert!(f.occupancy() <= cap);
+                assert!(f.max_occupancy() <= cap);
+            }
+        });
+    }
+}

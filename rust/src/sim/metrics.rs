@@ -1,0 +1,183 @@
+//! Measured simulation results: latency distribution, throughput, stage
+//! utilisation and FIFO high-water marks — the numbers the Table-I bench
+//! reports and the coordinator's capacity planner consumes.
+
+use super::fifo::Fifo;
+use super::stage::StageState;
+
+/// Per-stage utilisation snapshot.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub name: String,
+    pub emitted_tokens: u64,
+    pub busy_cycles: u64,
+    pub utilization: f64,
+}
+
+/// Full report of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub frames: u64,
+    /// Arrival cycle of each frame.
+    pub arrivals: Vec<u64>,
+    /// Completion cycle of each frame (monotone).
+    pub completions: Vec<u64>,
+    /// Cycles from t=0 to the first frame out (the paper's latency).
+    pub first_frame_latency_cycles: u64,
+    /// Steady-state cycles/frame measured over the back half of the run.
+    pub steady_cycles_per_frame: f64,
+    pub f_mhz: f64,
+    pub throughput_fps: f64,
+    pub latency_s: f64,
+    pub stages: Vec<StageStats>,
+    pub fifo_max_occupancy: Vec<usize>,
+    pub end_cycle: u64,
+}
+
+impl SimReport {
+    pub fn build(
+        arrivals: &[u64],
+        completions: &[u64],
+        stages: &[StageState],
+        fifos: &[Fifo],
+        f_mhz: f64,
+        end_cycle: u64,
+    ) -> Self {
+        let frames = completions.len() as u64;
+        let first = completions.first().copied().unwrap_or(0);
+        // Steady-state rate: completions over the back half (skips fill).
+        let steady = if frames >= 4 {
+            let half = completions.len() / 2;
+            let span = completions[completions.len() - 1] - completions[half];
+            let n = (completions.len() - 1 - half) as f64;
+            if n > 0.0 {
+                span as f64 / n
+            } else {
+                first as f64
+            }
+        } else {
+            first.max(1) as f64
+        };
+        let cycle_s = 1.0 / (f_mhz * 1e6);
+        SimReport {
+            frames,
+            arrivals: arrivals.to_vec(),
+            completions: completions.to_vec(),
+            first_frame_latency_cycles: first,
+            steady_cycles_per_frame: steady,
+            f_mhz,
+            throughput_fps: 1.0 / (steady.max(1.0) * cycle_s),
+            latency_s: first as f64 * cycle_s,
+            stages: stages
+                .iter()
+                .map(|s| StageStats {
+                    name: s.spec.name.clone(),
+                    emitted_tokens: s.emitted,
+                    busy_cycles: s.busy_cycles,
+                    utilization: s.busy_cycles as f64 / end_cycle.max(1) as f64,
+                })
+                .collect(),
+            fifo_max_occupancy: fifos.iter().map(|f| f.max_occupancy()).collect(),
+            end_cycle,
+        }
+    }
+
+    /// Per-frame latency (completion - arrival) in cycles.
+    pub fn per_frame_latency_cycles(&self) -> Vec<u64> {
+        self.completions
+            .iter()
+            .zip(&self.arrivals)
+            .map(|(c, a)| c.saturating_sub(*a))
+            .collect()
+    }
+
+    /// Latency percentile in seconds (q in [0,1]).
+    pub fn latency_pct_s(&self, q: f64) -> f64 {
+        let mut lats = self.per_frame_latency_cycles();
+        lats.sort_unstable();
+        if lats.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lats.len() - 1) as f64 * q).round() as usize;
+        lats[idx] as f64 / (self.f_mhz * 1e6)
+    }
+
+    /// The busiest stage (the measured bottleneck).
+    pub fn bottleneck_stage(&self) -> &StageStats {
+        self.stages
+            .iter()
+            .max_by(|a, b| a.utilization.total_cmp(&b.utilization))
+            .expect("non-empty pipeline")
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "sim: {} frames @ {:.1} MHz | latency {:.2} us (p50 {:.2}, p99 {:.2}) | \
+             steady {:.1} cyc/frame -> {:.0} FPS\n",
+            self.frames,
+            self.f_mhz,
+            self.latency_s * 1e6,
+            self.latency_pct_s(0.5) * 1e6,
+            self.latency_pct_s(0.99) * 1e6,
+            self.steady_cycles_per_frame,
+            self.throughput_fps,
+        );
+        for st in &self.stages {
+            s.push_str(&format!(
+                "  {:<12} util {:>5.1}%  tokens {}\n",
+                st.name,
+                st.utilization * 100.0,
+                st.emitted_tokens
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::stage::{Kind, StageSpec};
+
+    fn fake_report() -> SimReport {
+        let spec = StageSpec {
+            name: "x".into(),
+            kind: Kind::Fc,
+            tokens_per_frame: 1,
+            in_tokens_per_frame: 1,
+            ii_cycles_per_frame: 10,
+            fill_cycles: 5,
+        };
+        let mut st = StageState::new(spec);
+        st.emitted = 10;
+        st.busy_cycles = 50;
+        SimReport::build(
+            &[0, 0, 0, 0, 0, 0, 0, 0],
+            &[100, 110, 120, 130, 140, 150, 160, 170],
+            &[st],
+            &[Fifo::new(2)],
+            100.0,
+            170,
+        )
+    }
+
+    #[test]
+    fn steady_rate_from_back_half() {
+        let r = fake_report();
+        assert!((r.steady_cycles_per_frame - 10.0).abs() < 1e-9);
+        // 100 MHz, 10 cyc/frame -> 10M FPS
+        assert!((r.throughput_fps - 1e7).abs() / 1e7 < 1e-9);
+        assert_eq!(r.first_frame_latency_cycles, 100);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = fake_report();
+        assert!(r.latency_pct_s(0.1) <= r.latency_pct_s(0.9));
+    }
+
+    #[test]
+    fn render_mentions_stage() {
+        assert!(fake_report().render().contains("util"));
+    }
+}

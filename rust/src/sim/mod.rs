@@ -1,0 +1,121 @@
+//! Cycle-level streaming-dataflow simulator (substrate S9).
+//!
+//! This is the "measured" column of Table I: where the paper runs the
+//! generated bitstream on the XCU50, we run the configured accelerator in
+//! a discrete-event simulation. Stages (one per graph node, plus source
+//! and sink) exchange *tokens* through bounded FIFOs with backpressure;
+//! one token = one output-pixel bundle (conv/pool) or one frame vector
+//! (fc). Each stage's token rate comes from the same folding algebra the
+//! cost model uses (`cycles_per_token = II / tokens_per_frame`), and its
+//! first-token fill from `cost::latency::fill_cycles`, so the simulator
+//! agrees with the analytic model to first order but additionally captures
+//! FIFO sizing, pipeline overlap, arrival burstiness and backpressure.
+//!
+//! Frame latency and steady-state throughput are measured, not derived:
+//! the integration tests cross-check them against `cost::evaluate` and the
+//! Table-I bench feeds them into the reported rows.
+
+pub mod fifo;
+pub mod metrics;
+pub mod pipeline;
+pub mod stage;
+
+pub use metrics::SimReport;
+pub use pipeline::{Pipeline, Workload};
+
+use crate::cost;
+use crate::device::Device;
+use crate::folding::FoldingConfig;
+use crate::graph::Graph;
+use crate::util::error::Result;
+
+/// Build a pipeline for `g` under `cfg` on `dev`.
+///
+/// `fifo_depth` is the inter-stage buffer capacity in tokens (FINN inserts
+/// stream FIFOs between layers; 2 is the minimum for rate decoupling).
+pub fn build(g: &Graph, cfg: &FoldingConfig, dev: &Device, fifo_depth: usize) -> Result<Pipeline> {
+    cfg.check(g)?;
+    let mc = cost::evaluate(g, cfg, dev)?;
+
+    let mut stages = Vec::with_capacity(g.nodes.len());
+    // Token granularity chains stage to stage: a stage's input tokens per
+    // frame are its producer's output tokens (the source feeds ifm² pixel
+    // tokens to the first stage).
+    let first = &g.nodes[0];
+    let mut in_tokens = (first.ifm * first.ifm) as u64;
+    for node in &g.nodes {
+        let lc = mc.layer(&node.name).expect("cost covers all nodes");
+        let spec = stage::StageSpec::from_node(node, lc.ii_cycles, lc.fill_cycles, in_tokens);
+        in_tokens = spec.tokens_per_frame;
+        stages.push(spec);
+    }
+
+    // Size the input DMA so the link never throttles the design: enough
+    // tokens/cycle that the source's frame time stays at or below the
+    // accelerator's steady-state II (FINN sizes its input DMA the same
+    // way; the link is reported, not searched, by the DSE).
+    let in_tokens = (first.ifm * first.ifm) as u64;
+    let link = in_tokens.div_ceil(mc.max_ii.max(1)).max(1);
+    Ok(Pipeline::with_link(stages, fifo_depth, mc.f_mhz, link))
+}
+
+/// Convenience: simulate `frames` back-to-back frames (saturated input)
+/// and return the measured report.
+pub fn simulate_saturated(
+    g: &Graph,
+    cfg: &FoldingConfig,
+    dev: &Device,
+    frames: u64,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    let mut p = build(g, cfg, dev, fifo_depth)?;
+    Ok(p.run(&Workload::Saturated { frames }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::XCU50;
+    use crate::folding::FoldingConfig;
+    use crate::graph::builder::lenet5;
+
+    #[test]
+    fn saturated_throughput_matches_analytic_bottleneck() {
+        let g = lenet5();
+        for cfg in [FoldingConfig::unrolled(&g), FoldingConfig::minimal(&g)] {
+            let mc = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+            let rep = simulate_saturated(&g, &cfg, &XCU50, 50, 4).unwrap();
+            let analytic = mc.throughput_fps;
+            let ratio = rep.throughput_fps / analytic;
+            assert!(
+                (0.85..1.10).contains(&ratio),
+                "sim {} vs analytic {} (ratio {ratio})",
+                rep.throughput_fps,
+                analytic
+            );
+        }
+    }
+
+    #[test]
+    fn latency_at_least_fill_sum() {
+        let g = lenet5();
+        let cfg = FoldingConfig::unrolled(&g);
+        let mc = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+        let rep = simulate_saturated(&g, &cfg, &XCU50, 10, 4).unwrap();
+        let min_cycles: u64 = mc.layers.iter().map(|l| l.fill_cycles).sum();
+        assert!(
+            rep.first_frame_latency_cycles >= min_cycles,
+            "{} < {min_cycles}",
+            rep.first_frame_latency_cycles
+        );
+    }
+
+    #[test]
+    fn deeper_fifos_never_hurt() {
+        let g = lenet5();
+        let cfg = FoldingConfig::minimal(&g);
+        let shallow = simulate_saturated(&g, &cfg, &XCU50, 30, 2).unwrap();
+        let deep = simulate_saturated(&g, &cfg, &XCU50, 30, 64).unwrap();
+        assert!(deep.throughput_fps >= shallow.throughput_fps * 0.999);
+    }
+}

@@ -1,0 +1,435 @@
+//! Discrete-event engine: source → stage₀ → … → stageₙ₋₁ → sink over
+//! bounded FIFOs, with an event heap keyed by cycle time.
+//!
+//! Wake protocol: an actor that pushes wakes its consumer; an actor that
+//! pops wakes its producer; compute-bound actors schedule their own timed
+//! wake. Duplicate wakes are harmless (actors are idempotent); deadlock
+//! (empty heap before the sink finishes) is an error surfaced to the
+//! caller — it indicates an impossible FIFO/rate configuration.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+use super::fifo::Fifo;
+use super::metrics::SimReport;
+use super::stage::{Kind, StageSpec, StageState};
+
+/// Input traffic shape.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Back-to-back frames (throughput measurement — Table I).
+    Saturated { frames: u64 },
+    /// Fixed inter-arrival interval in cycles.
+    Periodic { frames: u64, interval_cycles: u64 },
+    /// Poisson arrivals at `rate_fps` given the pipeline clock.
+    Poisson { frames: u64, rate_fps: f64, seed: u64 },
+}
+
+impl Workload {
+    pub fn frames(&self) -> u64 {
+        match self {
+            Workload::Saturated { frames }
+            | Workload::Periodic { frames, .. }
+            | Workload::Poisson { frames, .. } => *frames,
+        }
+    }
+
+    /// Arrival times in cycles.
+    pub fn arrivals(&self, f_mhz: f64) -> Vec<u64> {
+        match *self {
+            Workload::Saturated { frames } => vec![0; frames as usize],
+            Workload::Periodic { frames, interval_cycles } => {
+                (0..frames).map(|f| f * interval_cycles).collect()
+            }
+            Workload::Poisson { frames, rate_fps, seed } => {
+                let mut rng = Pcg32::seeded(seed);
+                let cycles_per_frame = f_mhz * 1e6 / rate_fps;
+                let mut t = 0.0;
+                (0..frames)
+                    .map(|_| {
+                        t += rng.exp(1.0) * cycles_per_frame;
+                        t as u64
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Result of one actor activation.
+struct Activation {
+    /// Timed self-wake (compute not ready yet).
+    wake_at: Option<u64>,
+    /// Pushed ≥1 token downstream.
+    pushed: bool,
+    /// Popped ≥1 token upstream.
+    popped: bool,
+}
+
+/// The assembled pipeline.
+pub struct Pipeline {
+    stages: Vec<StageState>,
+    /// fifos[i] feeds stages[i]; fifos[n] feeds the sink.
+    fifos: Vec<Fifo>,
+    source: StageState,
+    f_mhz: f64,
+}
+
+const SOURCE: usize = usize::MAX;
+const SINK: usize = usize::MAX - 1;
+
+impl Pipeline {
+    /// `specs` are the graph stages in stream order (source added here).
+    ///
+    /// `link_tokens_per_cycle` is the input DMA width: FINN designs size
+    /// the input interface so the accelerator, not the link, is the
+    /// bottleneck; `sim::build` computes the width from the design's II.
+    pub fn new(specs: Vec<StageSpec>, fifo_depth: usize, f_mhz: f64) -> Self {
+        Self::with_link(specs, fifo_depth, f_mhz, 1)
+    }
+
+    pub fn with_link(
+        specs: Vec<StageSpec>,
+        fifo_depth: usize,
+        f_mhz: f64,
+        link_tokens_per_cycle: u64,
+    ) -> Self {
+        assert!(!specs.is_empty());
+        assert!(link_tokens_per_cycle >= 1);
+        let in_tokens = specs[0].in_tokens_per_frame;
+        let source_spec = StageSpec {
+            name: "__source".into(),
+            kind: Kind::Source,
+            tokens_per_frame: in_tokens,
+            in_tokens_per_frame: 0,
+            ii_cycles_per_frame: in_tokens.div_ceil(link_tokens_per_cycle).max(1),
+            fill_cycles: 0,
+        };
+        let fifos = (0..=specs.len()).map(|_| Fifo::new(fifo_depth)).collect();
+        Pipeline {
+            stages: specs.into_iter().map(StageState::new).collect(),
+            fifos,
+            source: StageState::new(source_spec),
+            f_mhz,
+        }
+    }
+
+    pub fn f_mhz(&self) -> f64 {
+        self.f_mhz
+    }
+
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.spec.name.as_str()).collect()
+    }
+
+    /// Run the workload to completion (panics on deadlock — use `try_run`
+    /// for fallible callers).
+    pub fn run(&mut self, wl: &Workload) -> SimReport {
+        self.try_run(wl).expect("simulation deadlock")
+    }
+
+    pub fn try_run(&mut self, wl: &Workload) -> Result<SimReport> {
+        let frames = wl.frames();
+        if frames == 0 {
+            return Err(Error::sim("zero-frame workload"));
+        }
+        let arrivals = wl.arrivals(self.f_mhz);
+        let n = self.stages.len();
+
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        heap.push(Reverse((arrivals[0], SOURCE)));
+        // Timed self-wake dedup: a compute-bound actor re-woken by its
+        // neighbours would otherwise re-arm the same future wake many
+        // times over, growing the heap into a standing wave of duplicates
+        // (thousands of events per simulated cycle). One pending timed
+        // wake per actor is enough. Index n = SOURCE.
+        let mut timed: Vec<u64> = vec![u64::MAX; n + 1];
+        let slot = |actor: usize| if actor == SOURCE { n } else { actor };
+
+        let mut completions: Vec<u64> = Vec::with_capacity(frames as usize);
+        let mut sink_tokens_in_frame: u64 = 0;
+        let last_tpf = self.stages[n - 1].spec.tokens_per_frame;
+        let mut guard: u64 = 0;
+        const GUARD_MAX: u64 = 500_000_000;
+
+        while let Some(Reverse((now, actor))) = heap.pop() {
+            guard += 1;
+            if guard > GUARD_MAX {
+                let mut diag = format!(
+                    "event budget exceeded (livelock?): now={now} actor={actor} \
+                     completions={} source(frame={},tok={})",
+                    completions.len(),
+                    self.source.frame,
+                    self.source.token
+                );
+                for (i, st) in self.stages.iter().enumerate() {
+                    diag.push_str(&format!(
+                        " | s{i} {} f={} t={} c={} occ={}",
+                        st.spec.name, st.frame, st.token, st.consumed,
+                        self.fifos[i].occupancy()
+                    ));
+                }
+                return Err(Error::sim(diag));
+            }
+            match actor {
+                SOURCE => {
+                    if timed[slot(SOURCE)] <= now {
+                        timed[slot(SOURCE)] = u64::MAX;
+                    }
+                    let act = self.advance_source(now, &arrivals, frames);
+                    if let Some(t) = act.wake_at {
+                        if t < timed[slot(SOURCE)] {
+                            timed[slot(SOURCE)] = t;
+                            heap.push(Reverse((t, SOURCE)));
+                        }
+                    }
+                    if act.pushed {
+                        heap.push(Reverse((now, 0)));
+                    }
+                }
+                SINK => {
+                    let avail = self.fifos[n].occupancy();
+                    if avail > 0 {
+                        self.fifos[n].pop(avail);
+                        heap.push(Reverse((now, n - 1)));
+                        sink_tokens_in_frame += avail as u64;
+                        while sink_tokens_in_frame >= last_tpf {
+                            sink_tokens_in_frame -= last_tpf;
+                            completions.push(now);
+                        }
+                    }
+                }
+                i => {
+                    if timed[i] <= now {
+                        timed[i] = u64::MAX;
+                    }
+                    let act = self.advance_stage(i, now, frames);
+                    if let Some(t) = act.wake_at {
+                        if t < timed[i] {
+                            timed[i] = t;
+                            heap.push(Reverse((t, i)));
+                        }
+                    }
+                    if act.pushed {
+                        let consumer = if i + 1 < n { i + 1 } else { SINK };
+                        heap.push(Reverse((now, consumer)));
+                    }
+                    if act.popped {
+                        let producer = if i == 0 { SOURCE } else { i - 1 };
+                        heap.push(Reverse((now, producer)));
+                    }
+                }
+            }
+            if completions.len() as u64 >= frames {
+                let end = *completions.last().unwrap();
+                return Ok(SimReport::build(
+                    &arrivals,
+                    &completions,
+                    &self.stages,
+                    &self.fifos,
+                    self.f_mhz,
+                    end,
+                ));
+            }
+        }
+        Err(Error::sim(format!(
+            "deadlock: {} of {frames} frames completed",
+            completions.len()
+        )))
+    }
+
+    /// Source actor: streams input tokens at 1/cycle subject to arrivals
+    /// and FIFO space.
+    fn advance_source(&mut self, now: u64, arrivals: &[u64], frames: u64) -> Activation {
+        let mut act = Activation { wake_at: None, pushed: false, popped: false };
+        loop {
+            let st = &mut self.source;
+            if st.done(frames) {
+                break;
+            }
+            let arrival = arrivals[st.frame as usize];
+            if !st.frame_base_set {
+                let base = now.max(arrival).max(st.prev_frame_end);
+                if base > now {
+                    act.wake_at = Some(base);
+                    break;
+                }
+                st.frame_base = base;
+                st.frame_base_set = true;
+            }
+            let emit_t = st.frame_base + st.spec.emit_offset(st.token);
+            if emit_t > now {
+                act.wake_at = Some(emit_t);
+                break;
+            }
+            if self.fifos[0].is_full() {
+                break; // stage 0's pop wakes us
+            }
+            self.fifos[0].push(1);
+            act.pushed = true;
+            let st = &mut self.source;
+            st.emitted += 1;
+            st.busy_cycles += 1;
+            st.token += 1;
+            if st.token == st.spec.tokens_per_frame {
+                st.complete_frame();
+            }
+        }
+        act
+    }
+
+    /// Graph-stage actor.
+    fn advance_stage(&mut self, i: usize, now: u64, frames: u64) -> Activation {
+        let mut act = Activation { wake_at: None, pushed: false, popped: false };
+        loop {
+            let (needed, cap) = {
+                let st = &self.stages[i];
+                if st.done(frames) {
+                    break;
+                }
+                (st.needed_total(), st.prefetch_cap())
+            };
+            // Consume inputs, prefetching up to one frame ahead (the line
+            // buffer fills with frame f+1 while frame f drains). Starved
+            // -> upstream push wakes us.
+            {
+                let room = cap.saturating_sub(self.stages[i].consumed) as usize;
+                let got = room.min(self.fifos[i].occupancy());
+                if got > 0 {
+                    self.fifos[i].pop(got);
+                    self.stages[i].consumed += got as u64;
+                    act.popped = true;
+                }
+                // Record when this frame's and the next frame's first
+                // windows became available (frame_base must not charge a
+                // frame for its predecessor's emission tail).
+                let st = &mut self.stages[i];
+                let itf = st.spec.in_tokens_per_frame;
+                let first = st.spec.in_needed(0);
+                if st.input_ready_at.is_none() && st.consumed >= st.frame * itf + first {
+                    st.input_ready_at = Some(now);
+                }
+                if st.next_input_ready_at.is_none()
+                    && st.consumed >= (st.frame + 1) * itf + first
+                {
+                    st.next_input_ready_at = Some(now);
+                }
+            }
+            if self.stages[i].consumed < needed {
+                break; // starved
+            }
+            // Inputs ready; pin the frame base at the first token.
+            {
+                let st = &mut self.stages[i];
+                if !st.frame_base_set {
+                    let ready = st.input_ready_at.unwrap_or(now);
+                    st.frame_base = ready.max(st.prev_frame_end);
+                    st.frame_base_set = true;
+                }
+                let emit_t = st.frame_base + st.spec.emit_offset(st.token);
+                if emit_t > now {
+                    act.wake_at = Some(emit_t);
+                    break;
+                }
+            }
+            // Emit if downstream has space (full -> downstream pop wakes us).
+            if self.fifos[i + 1].is_full() {
+                break;
+            }
+            self.fifos[i + 1].push(1);
+            act.pushed = true;
+            let st = &mut self.stages[i];
+            st.emitted += 1;
+            st.busy_cycles += st.cycles_per_token().ceil() as u64;
+            st.token += 1;
+            if st.token == st.spec.tokens_per_frame {
+                st.complete_frame();
+            }
+        }
+        act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::graph::Op;
+
+    fn lenet_specs(ii_scale: u64) -> Vec<StageSpec> {
+        let g = lenet5();
+        let mut in_tokens = (28 * 28) as u64;
+        let mut specs = Vec::new();
+        for node in &g.nodes {
+            let tokens = match node.op {
+                Op::Fc => 1,
+                _ => node.out_pixels() as u64,
+            };
+            // Simple timing: II = tokens * scale, fill = 10.
+            let spec = StageSpec::from_node(node, tokens * ii_scale, 10, in_tokens);
+            in_tokens = tokens;
+            specs.push(spec);
+        }
+        specs
+    }
+
+    #[test]
+    fn completes_all_frames() {
+        let mut p = Pipeline::new(lenet_specs(2), 8, 200.0);
+        let rep = p.run(&Workload::Saturated { frames: 20 });
+        assert_eq!(rep.frames, 20);
+        assert!(rep.first_frame_latency_cycles > 0);
+        assert!(rep.throughput_fps > 0.0);
+    }
+
+    #[test]
+    fn completions_monotone_and_after_arrivals() {
+        let mut p = Pipeline::new(lenet_specs(1), 8, 200.0);
+        let wl = Workload::Periodic { frames: 15, interval_cycles: 2000 };
+        let rep = p.try_run(&wl).unwrap();
+        assert!(rep.completions.windows(2).all(|w| w[0] <= w[1]));
+        let arr = wl.arrivals(200.0);
+        for (c, a) in rep.completions.iter().zip(&arr) {
+            assert!(c > a, "completion {c} before arrival {a}");
+        }
+    }
+
+    #[test]
+    fn slow_arrivals_mean_idle_pipeline() {
+        // With huge inter-arrival gaps latency per frame is constant and
+        // throughput equals the arrival rate, not the pipeline capacity.
+        let mut p = Pipeline::new(lenet_specs(1), 8, 200.0);
+        let wl = Workload::Periodic { frames: 10, interval_cycles: 1_000_000 };
+        let rep = p.try_run(&wl).unwrap();
+        let lat: Vec<u64> = rep.per_frame_latency_cycles();
+        let spread = lat.iter().max().unwrap() - lat.iter().min().unwrap();
+        assert!(spread <= 2, "latency spread {spread} on an idle pipeline");
+    }
+
+    #[test]
+    fn poisson_arrivals_complete() {
+        let mut p = Pipeline::new(lenet_specs(1), 16, 200.0);
+        let rep = p
+            .try_run(&Workload::Poisson { frames: 25, rate_fps: 50_000.0, seed: 9 })
+            .unwrap();
+        assert_eq!(rep.frames, 25);
+    }
+
+    #[test]
+    fn zero_frames_rejected() {
+        let mut p = Pipeline::new(lenet_specs(1), 8, 200.0);
+        assert!(p.try_run(&Workload::Saturated { frames: 0 }).is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut p = Pipeline::new(lenet_specs(3), 4, 200.0);
+            p.run(&Workload::Saturated { frames: 12 }).completions
+        };
+        assert_eq!(run(), run());
+    }
+}

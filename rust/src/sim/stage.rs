@@ -1,0 +1,249 @@
+//! Stage actor: the timing state machine of one dataflow layer.
+//!
+//! A stage emits `tokens_per_frame` output tokens per frame. Token `j` of
+//! frame `f` becomes ready at
+//!
+//! ```text
+//! emit(f, j) = frame_base(f) + fill + floor(j · II / TPF)
+//! frame_base(f) = max(inputs-ready time, frame_base(f-1) + II)
+//! ```
+//!
+//! and additionally cannot leave before its *input coupling* is satisfied:
+//! a conv output pixel needs the window rows beneath it, a pool output its
+//! k×k tile, an fc output the whole input frame. This is what produces
+//! realistic pipeline overlap (downstream layers start long before
+//! upstream frames finish) and what the fill/II analytic model can't see:
+//! stalls when FIFOs run dry or fill up.
+
+use crate::graph::{Node, Op};
+
+/// Input-coupling shape of a stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kind {
+    /// VALID conv: k, ifm (input tokens = ifm²).
+    Conv { k: u64, ifm: u64, ofm: u64 },
+    /// Pool with stride = window = k.
+    Pool { k: u64, ifm: u64, ofm: u64 },
+    /// Fully connected: needs the whole input frame.
+    Fc,
+    /// Source: no input.
+    Source,
+}
+
+/// Static stage description (built by `sim::build`).
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub kind: Kind,
+    pub tokens_per_frame: u64,
+    pub in_tokens_per_frame: u64,
+    pub ii_cycles_per_frame: u64,
+    pub fill_cycles: u64,
+}
+
+impl StageSpec {
+    pub fn from_node(node: &Node, ii: u64, fill: u64, in_tokens: u64) -> Self {
+        let kind = match node.op {
+            Op::Conv => Kind::Conv {
+                k: node.k as u64,
+                ifm: node.ifm as u64,
+                ofm: node.ofm as u64,
+            },
+            Op::MaxPool => Kind::Pool {
+                k: node.k as u64,
+                ifm: node.ifm as u64,
+                ofm: node.ofm as u64,
+            },
+            Op::Fc => Kind::Fc,
+        };
+        let tokens = match node.op {
+            Op::Conv | Op::MaxPool => node.out_pixels() as u64,
+            Op::Fc => 1,
+        };
+        StageSpec {
+            name: node.name.clone(),
+            kind,
+            tokens_per_frame: tokens,
+            in_tokens_per_frame: in_tokens,
+            ii_cycles_per_frame: ii.max(1),
+            fill_cycles: fill,
+        }
+    }
+
+    /// Cumulative input tokens needed before output token `j` may leave.
+    pub fn in_needed(&self, j: u64) -> u64 {
+        let total = self.in_tokens_per_frame;
+        match self.kind {
+            Kind::Source => 0,
+            Kind::Fc => total,
+            Kind::Conv { k, ifm, ofm } => {
+                let r = j / ofm;
+                let c = j % ofm;
+                ((r + k - 1) * ifm + c + k).min(total)
+            }
+            Kind::Pool { k, ifm, ofm } => {
+                let r = j / ofm;
+                let c = j % ofm;
+                ((r * k + k - 1) * ifm + c * k + k).min(total)
+            }
+        }
+    }
+
+    /// Compute-ready offset of token `j` within a frame.
+    pub fn emit_offset(&self, j: u64) -> u64 {
+        self.fill_cycles + j * self.ii_cycles_per_frame / self.tokens_per_frame
+    }
+}
+
+/// Mutable run state of one stage.
+#[derive(Debug, Clone)]
+pub struct StageState {
+    pub spec: StageSpec,
+    /// Current output frame.
+    pub frame: u64,
+    /// Next output token within the frame.
+    pub token: u64,
+    /// Input tokens consumed, cumulative across frames: the stage's line
+    /// buffer keeps filling with frame f+1's rows while frame f drains
+    /// (real SWUs overlap fills across frames; without this the fill
+    /// serialises with emission and the pipeline loses ~20% steady rate).
+    pub consumed: u64,
+    /// Compute base time of the current frame (set at first token).
+    pub frame_base: u64,
+    pub frame_base_set: bool,
+    /// Time the current frame's first-token inputs became available
+    /// (recorded at pop time so a stage still draining frame f doesn't
+    /// charge frame f+1 for its own emission tail).
+    pub input_ready_at: Option<u64>,
+    /// Same, tracked ahead for frame f+1 while f still drains (prefetch
+    /// crosses the next frame's first window long before f completes).
+    pub next_input_ready_at: Option<u64>,
+    /// frame_base(f-1) + II.
+    pub prev_frame_end: u64,
+    /// Total tokens emitted (across frames).
+    pub emitted: u64,
+    /// Busy-cycle accumulator for utilisation reporting.
+    pub busy_cycles: u64,
+}
+
+impl StageState {
+    pub fn new(spec: StageSpec) -> Self {
+        StageState {
+            spec,
+            frame: 0,
+            token: 0,
+            consumed: 0,
+            frame_base: 0,
+            frame_base_set: false,
+            input_ready_at: None,
+            next_input_ready_at: None,
+            prev_frame_end: 0,
+            emitted: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Has this stage emitted every token of `frames` frames?
+    pub fn done(&self, frames: u64) -> bool {
+        self.frame >= frames
+    }
+
+    /// Advance the frame counters after emitting the last token.
+    /// `consumed` is cumulative and deliberately NOT reset.
+    pub fn complete_frame(&mut self) {
+        self.prev_frame_end = self.frame_base + self.spec.ii_cycles_per_frame;
+        self.frame += 1;
+        self.token = 0;
+        self.frame_base_set = false;
+        self.input_ready_at = self.next_input_ready_at.take();
+    }
+
+    /// Cumulative input tokens required before output token `token` of the
+    /// current frame may leave.
+    pub fn needed_total(&self) -> u64 {
+        self.frame * self.spec.in_tokens_per_frame + self.spec.in_needed(self.token)
+    }
+
+    /// Prefetch ceiling: the line buffer may run one full frame ahead.
+    pub fn prefetch_cap(&self) -> u64 {
+        (self.frame + 2) * self.spec.in_tokens_per_frame
+    }
+
+    /// Average cycles of work represented by one emitted token.
+    pub fn cycles_per_token(&self) -> f64 {
+        self.spec.ii_cycles_per_frame as f64 / self.spec.tokens_per_frame as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+
+    fn spec(name: &str) -> StageSpec {
+        let g = lenet5();
+        let node = g.node(name).unwrap();
+        let in_tokens = match node.op {
+            Op::Fc => 1,
+            _ => (node.ifm * node.ifm) as u64,
+        };
+        StageSpec::from_node(node, 576, 118, in_tokens)
+    }
+
+    #[test]
+    fn conv_in_coupling_monotone_and_capped() {
+        let s = spec("conv1"); // k=5, ifm=28, ofm=24, in 784
+        assert_eq!(s.in_needed(0), 4 * 28 + 5); // first window
+        let mut prev = 0;
+        for j in 0..s.tokens_per_frame {
+            let need = s.in_needed(j);
+            assert!(need >= prev);
+            assert!(need <= 784);
+            prev = need;
+        }
+        assert_eq!(s.in_needed(s.tokens_per_frame - 1), 784);
+    }
+
+    #[test]
+    fn pool_needs_full_tile() {
+        let g = lenet5();
+        let node = g.node("conv1_pool").unwrap(); // k=2, ifm=24, ofm=12
+        let s = StageSpec::from_node(node, 144, 49, 576);
+        // token 0 = tile rows 0..2, cols 0..2 -> (1)*24 + 2 = 26
+        assert_eq!(s.in_needed(0), 26);
+        assert_eq!(s.in_needed(143), 576);
+    }
+
+    #[test]
+    fn fc_needs_everything() {
+        let g = lenet5();
+        let node = g.node("fc1").unwrap();
+        let s = StageSpec::from_node(node, 240, 240, 16);
+        assert_eq!(s.tokens_per_frame, 1);
+        assert_eq!(s.in_needed(0), 16);
+    }
+
+    #[test]
+    fn emit_offsets_span_ii() {
+        let s = spec("conv1");
+        assert_eq!(s.emit_offset(0), 118);
+        let last = s.emit_offset(s.tokens_per_frame - 1);
+        assert!(last < 118 + 576);
+        assert!(last >= 118 + 570);
+    }
+
+    #[test]
+    fn frame_lifecycle() {
+        let s = spec("conv1");
+        let mut st = StageState::new(s);
+        st.frame_base = 10;
+        st.frame_base_set = true;
+        st.complete_frame();
+        assert_eq!(st.frame, 1);
+        assert_eq!(st.prev_frame_end, 10 + 576);
+        assert!(!st.frame_base_set);
+        assert!(!st.done(2));
+        st.complete_frame();
+        assert!(st.done(2));
+    }
+}

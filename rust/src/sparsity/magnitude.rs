@@ -1,0 +1,167 @@
+//! Magnitude pruning, rust side: global threshold across layers plus
+//! per-layer top-k — mirrors `python/compile/prune.py` so the DSE can run
+//! what-if sparsity sweeps on exported weights without a python round-trip
+//! (python remains the authority for training-time masks).
+
+use super::Mask;
+use crate::util::error::{Error, Result};
+
+/// Weights of one layer, flat.
+pub struct LayerWeights<'a> {
+    pub name: &'a str,
+    pub w: &'a [f32],
+}
+
+/// Global magnitude pruning: one |w| threshold so that `sparsity` of all
+/// weights fall below it; per-layer floor keeps at least `layer_floor` of
+/// each layer (avoids disconnecting small layers — same rule as python).
+pub fn global_masks(
+    layers: &[LayerWeights<'_>],
+    sparsity: f64,
+    layer_floor: f64,
+) -> Result<Vec<(String, Mask)>> {
+    if !(0.0..1.0).contains(&sparsity) {
+        return Err(Error::lstw(format!("sparsity {sparsity} out of [0,1)")));
+    }
+    let mut all: Vec<f32> = layers.iter().flat_map(|l| l.w.iter().map(|v| v.abs())).collect();
+    if all.is_empty() {
+        return Err(Error::lstw("no weights"));
+    }
+    let k = ((all.len() as f64) * sparsity).floor() as usize;
+    let thr = if k == 0 {
+        -1.0
+    } else {
+        // Threshold at the k-th smallest magnitude (index k-1): dropping
+        // everything <= it removes exactly the k smallest entries.
+        let idx = (k - 1).min(all.len() - 1);
+        let (_, &mut t, _) = all.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        t
+    };
+
+    let mut out = Vec::with_capacity(layers.len());
+    for l in layers {
+        let mut keep: Vec<bool> = l.w.iter().map(|v| v.abs() > thr).collect();
+        let kept = keep.iter().filter(|&&b| b).count();
+        let floor_n = ((l.w.len() as f64) * layer_floor).ceil() as usize;
+        if kept < floor_n.max(1) {
+            // keep the top floor_n by magnitude instead
+            let mut idx: Vec<usize> = (0..l.w.len()).collect();
+            idx.sort_by(|&a, &b| l.w[b].abs().partial_cmp(&l.w[a].abs()).unwrap());
+            keep = vec![false; l.w.len()];
+            for &i in idx.iter().take(floor_n.max(1)) {
+                keep[i] = true;
+            }
+        }
+        out.push((l.name.to_string(), Mask { keep }));
+    }
+    Ok(out)
+}
+
+/// Per-layer pruning at exact target sparsities (DSE-chosen layers).
+pub fn layer_mask(w: &[f32], sparsity: f64) -> Result<Mask> {
+    if !(0.0..1.0).contains(&sparsity) {
+        return Err(Error::lstw(format!("sparsity {sparsity} out of [0,1)")));
+    }
+    let n = w.len();
+    let keep_n = (((n as f64) * (1.0 - sparsity)).round() as usize).max(1);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    let mut keep = vec![false; n];
+    for &i in idx.iter().take(keep_n) {
+        keep[i] = true;
+    }
+    Ok(Mask { keep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg32;
+
+    fn randw(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn global_hits_target() {
+        let a = randw(4000, 1);
+        let b = randw(6000, 2);
+        let layers = vec![
+            LayerWeights { name: "a", w: &a },
+            LayerWeights { name: "b", w: &b },
+        ];
+        let masks = global_masks(&layers, 0.8, 0.0).unwrap();
+        let nnz: usize = masks.iter().map(|(_, m)| m.nnz()).sum();
+        let global = 1.0 - nnz as f64 / 10_000.0;
+        assert!((global - 0.8).abs() < 0.02, "global {global}");
+    }
+
+    #[test]
+    fn global_keeps_largest() {
+        let w = vec![0.01, 10.0, 0.02, 9.0, 0.03];
+        let layers = vec![LayerWeights { name: "x", w: &w }];
+        let masks = global_masks(&layers, 0.6, 0.0).unwrap();
+        let m = &masks[0].1;
+        assert!(m.keep[1] && m.keep[3]);
+        assert!(!m.keep[0] && !m.keep[2]);
+    }
+
+    #[test]
+    fn floor_protects_small_layers() {
+        // Tiny layer with small magnitudes would be wiped by the global thr.
+        let small = vec![0.001f32; 100];
+        let big = randw(10_000, 3);
+        let layers = vec![
+            LayerWeights { name: "small", w: &small },
+            LayerWeights { name: "big", w: &big },
+        ];
+        let masks = global_masks(&layers, 0.9, 0.05).unwrap();
+        let small_mask = &masks[0].1;
+        assert!(small_mask.nnz() >= 5, "floor violated: {}", small_mask.nnz());
+    }
+
+    #[test]
+    fn layer_mask_exact() {
+        let w = randw(1000, 4);
+        let m = layer_mask(&w, 0.75).unwrap();
+        assert_eq!(m.nnz(), 250);
+        // Kept entries dominate dropped entries in magnitude.
+        let min_kept = w
+            .iter()
+            .zip(&m.keep)
+            .filter(|(_, &k)| k)
+            .map(|(v, _)| v.abs())
+            .fold(f32::INFINITY, f32::min);
+        let max_dropped = w
+            .iter()
+            .zip(&m.keep)
+            .filter(|(_, &k)| !k)
+            .map(|(v, _)| v.abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped);
+    }
+
+    #[test]
+    fn prop_layer_mask_monotone_in_sparsity() {
+        check("higher sparsity keeps a subset", 100, |g| {
+            let n = g.usize(10, 400);
+            let w = randw(n, g.case + 100);
+            let s1 = g.f64(0.0, 0.5);
+            let s2 = g.f64(s1 + 0.01, 0.95);
+            let m1 = layer_mask(&w, s1).unwrap();
+            let m2 = layer_mask(&w, s2).unwrap();
+            assert!(m2.nnz() <= m1.nnz());
+        });
+    }
+
+    #[test]
+    fn rejects_bad_sparsity() {
+        let w = vec![1.0f32; 4];
+        assert!(layer_mask(&w, 1.0).is_err());
+        assert!(layer_mask(&w, -0.1).is_err());
+        let layers = vec![LayerWeights { name: "x", w: &w }];
+        assert!(global_masks(&layers, 1.5, 0.0).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Sparsity substrate (S7): masks, magnitude thresholds, per-layer
+//! statistics, N:M structured baseline and engine-free compression
+//! accounting.
+//!
+//! The python compile path performs the *training-time* pruning; this
+//! module gives the DSE and the benches the same primitives natively so
+//! they can (a) analyse exported masks, (b) run what-if sweeps without a
+//! python round-trip, and (c) compute the paper's compression headline.
+
+pub mod magnitude;
+pub mod nm;
+
+use crate::util::error::{Error, Result};
+
+/// A binary mask over one layer's weights (flat, C-order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    pub keep: Vec<bool>,
+}
+
+impl Mask {
+    pub fn dense(n: usize) -> Self {
+        Mask { keep: vec![true; n] }
+    }
+
+    pub fn from_f32(vals: &[f32]) -> Self {
+        Mask { keep: vals.iter().map(|&v| v != 0.0).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keep.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keep.is_empty()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.keep.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / self.len() as f64
+    }
+
+    /// Apply to a weight vector (panics on length mismatch guarded by Err).
+    pub fn apply(&self, w: &mut [f32]) -> Result<()> {
+        if w.len() != self.keep.len() {
+            return Err(Error::lstw(format!(
+                "mask len {} vs weights len {}",
+                self.keep.len(),
+                w.len()
+            )));
+        }
+        for (x, &k) in w.iter_mut().zip(&self.keep) {
+            if !k {
+                *x = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Count of all-zero SIMD blocks along the input axis — what the
+    /// engine-free kernel (and unrolled hardware) can elide entirely.
+    /// Layout: weights are [fold_in, cout] row-major; a block is `block`
+    /// consecutive input rows.
+    pub fn zero_blocks(&self, fold_in: usize, cout: usize, block: usize) -> Result<(usize, usize)> {
+        if fold_in * cout != self.len() {
+            return Err(Error::lstw(format!(
+                "mask len {} != fold_in {fold_in} * cout {cout}",
+                self.len()
+            )));
+        }
+        let n_blocks = fold_in.div_ceil(block);
+        let mut zero = 0;
+        for b in 0..n_blocks {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(fold_in);
+            let any_live = (lo..hi).any(|r| (0..cout).any(|c| self.keep[r * cout + c]));
+            if !any_live {
+                zero += 1;
+            }
+        }
+        Ok((zero, n_blocks))
+    }
+}
+
+/// Per-layer sparsity statistics for a whole model.
+#[derive(Debug, Clone, Default)]
+pub struct ModelSparsity {
+    /// (layer name, weights, nnz)
+    pub layers: Vec<(String, usize, usize)>,
+}
+
+impl ModelSparsity {
+    pub fn push(&mut self, name: impl Into<String>, weights: usize, nnz: usize) {
+        self.layers.push((name.into(), weights, nnz));
+    }
+
+    pub fn layer_sparsity(&self, name: &str) -> Option<f64> {
+        self.layers
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, w, nnz)| 1.0 - *nnz as f64 / (*w).max(1) as f64)
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|(_, w, _)| w).sum()
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.layers.iter().map(|(_, _, n)| n).sum()
+    }
+
+    pub fn global_sparsity(&self) -> f64 {
+        1.0 - self.total_nnz() as f64 / self.total_weights().max(1) as f64
+    }
+}
+
+/// Engine-free compression ratio (paper headline: 51.6×).
+///
+/// Dense fp32 bits over surviving-weight bits at `weight_bits`; there is
+/// **no index-storage term** because weight positions are baked into logic
+/// — this is exactly the paper's "no sparse engine" accounting, and it is
+/// what makes unstructured sparsity free at run time in this flow.
+pub fn compression_ratio(total_weights: usize, nnz: usize, weight_bits: usize) -> f64 {
+    let dense_bits = total_weights as f64 * 32.0;
+    let sparse_bits = (nnz as f64 * weight_bits as f64).max(1.0);
+    dense_bits / sparse_bits
+}
+
+/// CSR-style compression for comparison: sparse engines must store one
+/// index per surviving weight (here `idx_bits`), which erodes the ratio —
+/// the quantitative argument for engine-free mapping at low bit-widths.
+pub fn compression_ratio_csr(
+    total_weights: usize,
+    nnz: usize,
+    weight_bits: usize,
+    idx_bits: usize,
+) -> f64 {
+    let dense_bits = total_weights as f64 * 32.0;
+    let sparse_bits = (nnz as f64 * (weight_bits + idx_bits) as f64).max(1.0);
+    dense_bits / sparse_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mask_basics() {
+        let m = Mask::from_f32(&[1.0, 0.0, 2.0, 0.0]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.sparsity(), 0.5);
+        let mut w = vec![5.0, 5.0, 5.0, 5.0];
+        m.apply(&mut w).unwrap();
+        assert_eq!(w, vec![5.0, 0.0, 5.0, 0.0]);
+        assert!(m.apply(&mut vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn zero_block_detection() {
+        // fold_in=4, cout=2, block=2: rows 2..4 all zero -> 1 of 2 blocks.
+        let keep = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let m = Mask::from_f32(&keep);
+        let (zero, total) = m.zero_blocks(4, 2, 2).unwrap();
+        assert_eq!((zero, total), (1, 2));
+        assert!(m.zero_blocks(3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn zero_block_tail_handling() {
+        // fold_in=5 with block=2 -> 3 blocks, last has one row.
+        let m = Mask::from_f32(&[0.0, 0.0, 1.0, 0.0, 0.0]);
+        let (zero, total) = m.zero_blocks(5, 1, 2).unwrap();
+        assert_eq!(total, 3);
+        assert_eq!(zero, 2); // rows {0,1} zero, row {4} zero, rows {2,3} live
+    }
+
+    #[test]
+    fn headline_compression_arithmetic() {
+        // 32->4 bits with 15.5% kept ~= 51.6x (DESIGN.md §7).
+        let total = 44_190;
+        let nnz = (total as f64 * 0.155).round() as usize;
+        let r = compression_ratio(total, nnz, 4);
+        assert!((r - 51.6).abs() < 0.5, "got {r}");
+    }
+
+    #[test]
+    fn csr_is_worse_than_engine_free() {
+        check("CSR ratio strictly below engine-free", 100, |g| {
+            let total = g.usize(100, 100_000);
+            let nnz = g.usize(1, total);
+            let wb = g.usize(2, 8);
+            let free = compression_ratio(total, nnz, wb);
+            let csr = compression_ratio_csr(total, nnz, wb, 16);
+            assert!(csr < free);
+        });
+    }
+
+    #[test]
+    fn prop_sparsity_in_unit_interval() {
+        check("mask sparsity in [0,1]", 200, |g| {
+            let n = g.usize(1, 500);
+            let mut rng = Pcg32::seeded(g.case);
+            let vals: Vec<f32> = (0..n).map(|_| if rng.bool(0.3) { 1.0 } else { 0.0 }).collect();
+            let m = Mask::from_f32(&vals);
+            let s = m.sparsity();
+            assert!((0.0..=1.0).contains(&s));
+            assert_eq!(m.nnz() + vals.iter().filter(|&&v| v == 0.0).count(), n);
+        });
+    }
+
+    #[test]
+    fn model_sparsity_aggregation() {
+        let mut ms = ModelSparsity::default();
+        ms.push("a", 100, 25);
+        ms.push("b", 300, 150);
+        assert_eq!(ms.total_weights(), 400);
+        assert_eq!(ms.total_nnz(), 175);
+        assert!((ms.global_sparsity() - (1.0 - 175.0 / 400.0)).abs() < 1e-12);
+        assert_eq!(ms.layer_sparsity("a"), Some(0.75));
+        assert_eq!(ms.layer_sparsity("zzz"), None);
+    }
+}

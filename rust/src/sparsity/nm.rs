@@ -1,0 +1,102 @@
+//! N:M structured sparsity baseline.
+//!
+//! The paper's introduction positions N:M (e.g. NVIDIA 2:4, Vitis-AI) as
+//! the hardware-friendly compromise that unstructured pruning should beat.
+//! This implements N:M mask generation so the ablation benches can compare
+//! achievable sparsity and resource savings against the unstructured
+//! engine-free flow on the same weights.
+
+use super::Mask;
+use crate::util::error::{Error, Result};
+
+/// Keep the `n` largest of every `m` consecutive weights along the input
+/// axis. `w` is [fold_in, cout] row-major; groups run down the input axis
+/// within one output column (the layout hardware N:M units use).
+pub fn nm_mask(w: &[f32], fold_in: usize, cout: usize, n: usize, m: usize) -> Result<Mask> {
+    if n == 0 || m == 0 || n > m {
+        return Err(Error::lstw(format!("bad N:M = {n}:{m}")));
+    }
+    if fold_in * cout != w.len() {
+        return Err(Error::lstw(format!(
+            "w len {} != fold_in {fold_in} * cout {cout}",
+            w.len()
+        )));
+    }
+    let mut keep = vec![false; w.len()];
+    for c in 0..cout {
+        let mut r = 0;
+        while r < fold_in {
+            let hi = (r + m).min(fold_in);
+            // indices of this group in flat layout
+            let mut idx: Vec<usize> = (r..hi).map(|row| row * cout + c).collect();
+            idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+            let keep_n = n.min(idx.len());
+            for &i in idx.iter().take(keep_n) {
+                keep[i] = true;
+            }
+            r = hi;
+        }
+    }
+    Ok(Mask { keep })
+}
+
+/// The sparsity an N:M scheme achieves (exact for full groups).
+pub fn nm_sparsity(n: usize, m: usize) -> f64 {
+    1.0 - n as f64 / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn two_of_four() {
+        // fold_in=4, cout=1: one group of 4, keep the 2 largest.
+        let w = vec![0.1, 3.0, 0.2, 2.0];
+        let m = nm_mask(&w, 4, 1, 2, 4).unwrap();
+        assert_eq!(m.keep, vec![false, true, false, true]);
+        assert_eq!(m.sparsity(), nm_sparsity(2, 4));
+    }
+
+    #[test]
+    fn per_column_grouping() {
+        // fold_in=2, cout=2; column 0 = [5, 0.1], column 1 = [0.1, 5]
+        let w = vec![5.0, 0.1, 0.1, 5.0];
+        let m = nm_mask(&w, 2, 2, 1, 2).unwrap();
+        assert_eq!(m.keep, vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn tail_group_keeps_min() {
+        // fold_in=5, m=4: tail group has 1 element, kept.
+        let w = vec![1.0, 2.0, 3.0, 4.0, 0.001];
+        let m = nm_mask(&w, 5, 1, 2, 4).unwrap();
+        assert!(m.keep[4]);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn prop_nm_rate_exact_for_divisible() {
+        check("N:M keeps exactly n/m when m | fold_in", 100, |g| {
+            let m_ = *g.choose(&[2usize, 4, 8]);
+            let n_ = g.usize(1, m_);
+            let groups = g.usize(1, 20);
+            let cout = g.usize(1, 8);
+            let fold_in = groups * m_;
+            let mut rng = Pcg32::seeded(g.case + 7);
+            let w: Vec<f32> = (0..fold_in * cout).map(|_| rng.normal() as f32).collect();
+            let mask = nm_mask(&w, fold_in, cout, n_, m_).unwrap();
+            assert_eq!(mask.nnz(), groups * n_ * cout);
+        });
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let w = vec![1.0f32; 8];
+        assert!(nm_mask(&w, 4, 2, 0, 4).is_err());
+        assert!(nm_mask(&w, 4, 2, 5, 4).is_err());
+        assert!(nm_mask(&w, 3, 2, 2, 4).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! The `cargo bench` targets (`benches/*.rs`, `harness = false`) use this:
+//! warmup, calibrated iteration counts, median/p10/p90 over samples, and a
+//! one-line report compatible with the EXPERIMENTS.md §Perf tables.
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Stats {
+    fn pct(&self, q: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.pct(0.5)
+    }
+
+    pub fn p10(&self) -> f64 {
+        self.pct(0.1)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.pct(0.9)
+    }
+
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p10 {}, p90 {}, {} samples x {} iters)",
+            self.name,
+            fmt_dur(self.median()),
+            fmt_dur(self.p10()),
+            fmt_dur(self.p90()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bencher {
+    pub warmup_s: f64,
+    pub sample_s: f64,
+    pub n_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_s: 0.3, sample_s: 0.1, n_samples: 12 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_s: 0.05, sample_s: 0.02, n_samples: 5 }
+    }
+
+    /// Run `f` repeatedly; `f` should perform ONE unit of work. A
+    /// `black_box`-style sink prevents the optimiser deleting the work:
+    /// return something cheap from `f` and it is consumed here.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup + calibration: how many iters fit in sample_s?
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s {
+            std::hint::black_box(f());
+            iters += 1;
+        }
+        let per_iter = self.warmup_s / iters.max(1) as f64;
+        let iters_per_sample = ((self.sample_s / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.n_samples);
+        for _ in 0..self.n_samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let stats = Stats { name: name.to_string(), iters_per_sample, samples };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let b = Bencher { warmup_s: 0.01, sample_s: 0.005, n_samples: 4 };
+        let stats = b.run("sum-1k", || (0..1000u64).sum::<u64>());
+        assert!(stats.median() > 0.0);
+        assert!(stats.median() < 0.01, "1k sum should be far below 10ms");
+        assert_eq!(stats.samples.len(), 4);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = Stats {
+            name: "x".into(),
+            iters_per_sample: 1,
+            samples: vec![3.0, 1.0, 2.0, 5.0, 4.0],
+        };
+        assert!(s.p10() <= s.median() && s.median() <= s.p90());
+        assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(2.5), "2.500s");
+        assert_eq!(fmt_dur(0.0025), "2.500ms");
+        assert_eq!(fmt_dur(2.5e-6), "2.500us");
+        assert_eq!(fmt_dur(2.5e-8), "25.0ns");
+    }
+}

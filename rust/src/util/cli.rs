@@ -1,0 +1,171 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and a generated usage string. Subcommand dispatch lives in `main.rs`.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::config(format!("missing required option --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse `argv` (without the program/subcommand prefix) against `opts`.
+pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for o in opts {
+        if let Some(d) = o.default {
+            args.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (name, inline) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| Error::config(format!("unknown option --{name}")))?;
+            if spec.takes_value {
+                let val = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
+                    }
+                };
+                args.values.insert(name.to_string(), val);
+            } else {
+                if inline.is_some() {
+                    return Err(Error::config(format!("--{name} takes no value")));
+                }
+                args.flags.push(name.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, opts: &[Opt]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in opts {
+        let mut left = format!("  --{}", o.name);
+        if o.takes_value {
+            left.push_str(" <v>");
+        }
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{left:<28}{}{def}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Vec<Opt> {
+        vec![
+            Opt { name: "device", takes_value: true, default: Some("xcu50"), help: "device" },
+            Opt { name: "steps", takes_value: true, default: None, help: "steps" },
+            Opt { name: "verbose", takes_value: false, default: None, help: "log more" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&sv(&["--steps", "5"]), &opts()).unwrap();
+        assert_eq!(a.get("device"), Some("xcu50"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(5));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&sv(&["--device=sim", "--verbose", "pos1"]), &opts()).unwrap();
+        assert_eq!(a.get("device"), Some("sim"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--nope"]), &opts()).is_err());
+        assert!(parse(&sv(&["--steps"]), &opts()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &opts()).is_err());
+        let a = parse(&sv(&["--steps", "abc"]), &opts()).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("dse", "run the design-space exploration", &opts());
+        assert!(u.contains("--device"));
+        assert!(u.contains("[default: xcu50]"));
+    }
+}

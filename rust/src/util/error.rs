@@ -1,0 +1,108 @@
+//! Crate-wide error type.
+//!
+//! One enum instead of `anyhow` on the hot path: the coordinator matches on
+//! error classes (e.g. `QueueClosed` vs `Artifact`) to decide whether to
+//! retry, shed load, or abort.
+
+use std::fmt;
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error classes the library produces.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failures (artifact files, exports).
+    Io(std::io::Error),
+    /// JSON syntax or schema violations (graph.json, configs).
+    Json { msg: String, offset: usize },
+    /// LSTW tensor-store format violations.
+    Lstw(String),
+    /// Graph construction / validation failures.
+    Graph(String),
+    /// Illegal folding configuration (PE/SIMD divisibility, bounds).
+    Folding(String),
+    /// DSE could not satisfy the resource constraint.
+    Dse(String),
+    /// Simulator invariant violation (deadlock, FIFO misuse).
+    Sim(String),
+    /// PJRT / XLA runtime failures.
+    Xla(String),
+    /// Serving-path failures (queue closed, batcher shutdown).
+    QueueClosed,
+    /// Config file / CLI argument problems.
+    Config(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json { msg, offset } => write!(f, "json at byte {offset}: {msg}"),
+            Error::Lstw(m) => write!(f, "lstw: {m}"),
+            Error::Graph(m) => write!(f, "graph: {m}"),
+            Error::Folding(m) => write!(f, "folding: {m}"),
+            Error::Dse(m) => write!(f, "dse: {m}"),
+            Error::Sim(m) => write!(f, "sim: {m}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::QueueClosed => write!(f, "request queue closed"),
+            Error::Config(m) => write!(f, "config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Convenience constructors used across the crate.
+impl Error {
+    pub fn graph(msg: impl Into<String>) -> Self {
+        Error::Graph(msg.into())
+    }
+    pub fn folding(msg: impl Into<String>) -> Self {
+        Error::Folding(msg.into())
+    }
+    pub fn dse(msg: impl Into<String>) -> Self {
+        Error::Dse(msg.into())
+    }
+    pub fn sim(msg: impl Into<String>) -> Self {
+        Error::Sim(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn lstw(msg: impl Into<String>) -> Self {
+        Error::Lstw(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_class() {
+        let e = Error::dse("no legal move");
+        assert_eq!(e.to_string(), "dse: no legal move");
+        let e = Error::Json { msg: "bad token".into(), offset: 17 };
+        assert!(e.to_string().contains("byte 17"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,350 @@
+//! LSTW ("LogicSparse Tensor Weights") binary tensor store — the
+//! python↔rust interchange for weights, masks and the serving test set.
+//!
+//! Mirrors `python/compile/export.py` byte for byte; both sides have
+//! round-trip tests and the integration suite reads a python-written file.
+//! Layout (little-endian):
+//! ```text
+//! magic   8B  "LSTW0001"
+//! u32     n_tensors
+//! per tensor:
+//!   u16 name_len, name utf-8
+//!   u8  dtype (0=f32, 1=i32, 2=i8, 3=u8)
+//!   u8  ndim
+//!   u32 dims[ndim]
+//!   u64 payload_bytes
+//!   raw payload (C order)
+//! ```
+
+use crate::util::error::{Error, Result};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+use std::io::{Read, Write};
+
+pub const MAGIC: &[u8; 8] = b"LSTW0001";
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    I8 = 2,
+    U8 = 3,
+}
+
+impl DType {
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            3 => DType::U8,
+            _ => return Err(Error::lstw(format!("unknown dtype code {c}"))),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// Tensor payload, kept in its native representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::I8(_) => DType::I8,
+            Data::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I8(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32, converting integer types (mask files are u8).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Data::F32(v) => v.clone(),
+            Data::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            Data::I8(v) => v.iter().map(|&x| x as f32).collect(),
+            Data::U8(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::lstw("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error::lstw("tensor is not i32")),
+        }
+    }
+}
+
+/// A named tensor with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        Tensor { name: name.into(), shape, data: Data::F32(data) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.elements() != self.data.len() {
+            return Err(Error::lstw(format!(
+                "tensor '{}': shape {:?} implies {} elements but payload has {}",
+                self.name,
+                self.shape,
+                self.elements(),
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of tensors (a whole LSTW file).
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .ok_or_else(|| Error::lstw(format!("tensor '{name}' not found")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn read_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let bytes = std::fs::read(&path)?;
+        Self::read(&mut &bytes[..]).map_err(|e| {
+            Error::lstw(format!("{}: {e}", path.as_ref().display()))
+        })
+    }
+
+    pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut buf = Vec::new();
+        self.write(&mut buf)?;
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::lstw("bad magic"));
+        }
+        let n = r.read_u32::<LittleEndian>()?;
+        let mut tensors = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let name_len = r.read_u16::<LittleEndian>()? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).map_err(|_| Error::lstw("bad name utf-8"))?;
+            let dt = DType::from_code(r.read_u8()?)?;
+            let ndim = r.read_u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.read_u32::<LittleEndian>()? as usize);
+            }
+            let nbytes = r.read_u64::<LittleEndian>()? as usize;
+            let n_el: usize = shape.iter().product();
+            if nbytes != n_el * dt.size() {
+                return Err(Error::lstw(format!(
+                    "tensor '{name}': payload {nbytes}B != {} elements * {}B",
+                    n_el,
+                    dt.size()
+                )));
+            }
+            let mut raw = vec![0u8; nbytes];
+            r.read_exact(&mut raw)?;
+            let data = match dt {
+                DType::F32 => Data::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                DType::I32 => Data::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                DType::I8 => Data::I8(raw.iter().map(|&b| b as i8).collect()),
+                DType::U8 => Data::U8(raw),
+            };
+            tensors.push(Tensor { name, shape, data });
+        }
+        Ok(Store { tensors })
+    }
+
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_u32::<LittleEndian>(self.tensors.len() as u32)?;
+        for t in &self.tensors {
+            t.validate()?;
+            let name = t.name.as_bytes();
+            if name.len() > u16::MAX as usize {
+                return Err(Error::lstw("tensor name too long"));
+            }
+            w.write_u16::<LittleEndian>(name.len() as u16)?;
+            w.write_all(name)?;
+            w.write_u8(t.data.dtype() as u8)?;
+            w.write_u8(t.shape.len() as u8)?;
+            for &d in &t.shape {
+                w.write_u32::<LittleEndian>(d as u32)?;
+            }
+            let nbytes = t.data.len() * t.data.dtype().size();
+            w.write_u64::<LittleEndian>(nbytes as u64)?;
+            match &t.data {
+                Data::F32(v) => {
+                    for &x in v {
+                        w.write_f32::<LittleEndian>(x)?;
+                    }
+                }
+                Data::I32(v) => {
+                    for &x in v {
+                        w.write_i32::<LittleEndian>(x)?;
+                    }
+                }
+                Data::I8(v) => {
+                    for &x in v {
+                        w.write_i8(x)?;
+                    }
+                }
+                Data::U8(v) => w.write_all(v)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Store {
+        let mut s = Store::new();
+        s.push(Tensor::f32("conv1.w", vec![5, 5, 1, 6], (0..150).map(|i| i as f32).collect()));
+        s.push(Tensor {
+            name: "labels".into(),
+            shape: vec![4],
+            data: Data::I32(vec![1, -2, 3, 7]),
+        });
+        s.push(Tensor {
+            name: "mask".into(),
+            shape: vec![2, 3],
+            data: Data::U8(vec![1, 0, 1, 1, 0, 0]),
+        });
+        s.push(Tensor {
+            name: "codes".into(),
+            shape: vec![3],
+            data: Data::I8(vec![-7, 0, 7]),
+        });
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample();
+        let mut buf = Vec::new();
+        s.write(&mut buf).unwrap();
+        let s2 = Store::read(&mut &buf[..]).unwrap();
+        assert_eq!(s.tensors, s2.tensors);
+    }
+
+    #[test]
+    fn lookup_and_convert() {
+        let s = sample();
+        assert_eq!(s.req("mask").unwrap().data.to_f32(), vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+        assert!(s.req("nope").is_err());
+        assert_eq!(s.get("conv1.w").unwrap().elements(), 150);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = Vec::new();
+        sample().write(&mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(Store::read(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_payload_mismatch() {
+        let t = Tensor::f32("bad", vec![2, 2], vec![1.0; 3]);
+        let mut s = Store::new();
+        s.push(t);
+        let mut buf = Vec::new();
+        assert!(s.write(&mut buf).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut buf = Vec::new();
+        sample().write(&mut buf).unwrap();
+        let cut = &buf[..buf.len() - 5];
+        assert!(Store::read(&mut &cut[..]).is_err());
+    }
+
+    #[test]
+    fn empty_store() {
+        let s = Store::new();
+        let mut buf = Vec::new();
+        s.write(&mut buf).unwrap();
+        assert!(Store::read(&mut &buf[..]).unwrap().tensors.is_empty());
+    }
+}

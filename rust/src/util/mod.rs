@@ -1,0 +1,13 @@
+//! First-party substrates: everything a normal project would pull from
+//! crates.io but this offline environment cannot (serde, rand, proptest,
+//! criterion, clap). Each submodule is small, tested, and used by the rest
+//! of the crate — see DESIGN.md §5 (S1–S3, S16–S17).
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod lstw;
+pub mod propcheck;
+pub mod rng;
+pub mod table;

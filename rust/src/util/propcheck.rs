@@ -1,0 +1,173 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Provides the 20% of proptest this crate needs: seeded generators built
+//! on [`crate::util::rng::Pcg32`], a `check` driver that runs N cases, and
+//! greedy input shrinking for failing cases. Used by the folding, sparsity,
+//! simulator and coordinator invariant tests (DESIGN.md §5 S3).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this sandbox)
+//! use logicsparse::util::propcheck::check;
+//! check("add commutes", 200, |g| {
+//!     let a = g.usize(0, 1000);
+//!     let b = g.usize(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Per-case generator handle. Records draws so failures can be replayed.
+pub struct Gen {
+    rng: Pcg32,
+    /// Scale factor in (0, 1]: shrinking re-runs with smaller scale to bias
+    /// generated sizes toward minimal counterexamples.
+    scale: f64,
+    pub case: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, scale: f64) -> Self {
+        Gen { rng: Pcg32::new(seed, case), scale, case }
+    }
+
+    fn scaled(&self, lo: usize, hi: usize) -> usize {
+        if hi <= lo + 1 {
+            return hi;
+        }
+        let span = (hi - lo) as f64 * self.scale;
+        lo + 1 + span.ceil() as usize
+    }
+
+    /// usize in `[lo, hi]` (inclusive), biased smaller while shrinking.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = self.scaled(lo, hi).min(hi + 1);
+        self.rng.range(lo, cap.max(lo + 1))
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + (self.rng.next_u64() % (hi - lo + 1))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// A vector of values from `f`, with length in `[min_len, max_len]`.
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(min_len, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range(0, xs.len());
+        &xs[i]
+    }
+
+    /// A divisor of `n` chosen uniformly among all divisors.
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.choose(&divs)
+    }
+
+    /// Raw RNG access for custom distributions.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, retry the same case seed
+/// at smaller scales (greedy shrink), then panic with the reproducer.
+///
+/// Set `LOGICSPARSE_PROP_SEED` to override the base seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let seed = std::env::var("LOGICSPARSE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1095_1c5e_u64);
+
+    for case in 0..cases {
+        let failed = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case, 1.0);
+            prop(&mut g);
+        })
+        .is_err();
+
+        if failed {
+            // Greedy shrink: same stream, smaller scales.
+            let mut min_scale = 1.0;
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let still_fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, case, scale);
+                    prop(&mut g);
+                })
+                .is_err();
+                if still_fails {
+                    min_scale = scale;
+                } else {
+                    break;
+                }
+            }
+            // Re-run the minimal failing case outside catch_unwind so the
+            // original assertion message reaches the test output.
+            eprintln!(
+                "propcheck '{name}': case {case} failed (seed {seed}, scale {min_scale}); replaying:"
+            );
+            let mut g = Gen::new(seed, case, min_scale);
+            prop(&mut g);
+            unreachable!("property failed under catch_unwind but passed on replay");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("reverse twice is identity", 100, |g| {
+            let xs = g.vec(0, 50, |g| g.usize(0, 100));
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn catches_invalid_property() {
+        check("all vecs shorter than 3", 200, |g| {
+            let xs = g.vec(0, 10, |g| g.usize(0, 1));
+            assert!(xs.len() < 3);
+        });
+    }
+
+    #[test]
+    fn divisor_of_divides() {
+        check("divisor_of returns divisors", 100, |g| {
+            let n = g.usize(1, 360);
+            let d = g.divisor_of(n);
+            assert_eq!(n % d, 0);
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Gen::new(9, 3, 1.0);
+        let mut b = Gen::new(9, 3, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.usize(0, 1000), b.usize(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! ASCII table rendering for experiment outputs (Table I, Fig. 2 series).
+//!
+//! The bench harness prints the same rows the paper reports; keeping the
+//! renderer in the library means examples, benches and the CLI all emit the
+//! same layout, and the integration tests can assert on structure.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set alignment for a column (default Right; first column often Left).
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let line = |out: &mut String, cells: &[String], aligns: &[Align]| {
+            out.push('|');
+            for i in 0..ncol {
+                let c = &cells[i];
+                match aligns[i] {
+                    Align::Left => out.push_str(&format!(" {:<w$} ", c, w = widths[i])),
+                    Align::Right => out.push_str(&format!(" {:>w$} ", c, w = widths[i])),
+                }
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        line(&mut out, &self.headers, &vec![Align::Left; ncol]);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row, &self.aligns);
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+/// Human formatting helpers shared by experiment printers.
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else if a >= 1.0 || a == 0.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+pub fn fmt_int(v: f64) -> String {
+    let n = v.round() as i64;
+    let s = n.abs().to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    if n < 0 {
+        format!("-{out}")
+    } else {
+        out
+    }
+}
+
+pub fn fmt_us(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Work", "LUTs"]).align(0, Align::Left);
+        t.row(vec!["Proposed".into(), "23,465".into()]);
+        t.row(vec!["Unfold".into(), "433,249".into()]);
+        let r = t.render();
+        assert!(r.contains("| Proposed |"));
+        assert!(r.contains("|  23,465 |"));
+        let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged table:\n{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn int_grouping() {
+        assert_eq!(fmt_int(433249.0), "433,249");
+        assert_eq!(fmt_int(1000.0), "1,000");
+        assert_eq!(fmt_int(-1234567.0), "-1,234,567");
+        assert_eq!(fmt_int(12.0), "12");
+    }
+
+    #[test]
+    fn si_units() {
+        assert_eq!(fmt_si(265_429.0), "265.4k");
+        assert_eq!(fmt_si(2_650_000.0), "2.65M");
+        assert_eq!(fmt_si(0.0123), "0.0123");
+    }
+
+    #[test]
+    fn microseconds() {
+        assert_eq!(fmt_us(18.13e-6), "18.13");
+    }
+}

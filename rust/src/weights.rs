@@ -1,0 +1,181 @@
+//! Model weight store (substrate: bridges LSTW files to the DSE/sim).
+//!
+//! Loads `params_*.lstw` written by the python exporter: per-layer weight
+//! tensors (`<layer>.w`), biases (`<layer>.b`) and masks (`<layer>.mask`),
+//! exposing them in the [fold_in, cout] layout every rust-side consumer
+//! (sparsity stats, quant checks, DSE) expects.
+
+use crate::graph::Graph;
+use crate::sparsity::{Mask, ModelSparsity};
+use crate::util::error::{Error, Result};
+use crate::util::lstw::Store;
+
+/// One MAC layer's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub name: String,
+    /// Weights, flattened to [fold_in, cout] row-major.
+    pub w: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub mask: Mask,
+    pub fold_in: usize,
+    pub cout: usize,
+}
+
+impl LayerParams {
+    pub fn nnz(&self) -> usize {
+        self.mask.nnz()
+    }
+
+    /// Masked weights (pruned entries zeroed).
+    pub fn masked_w(&self) -> Vec<f32> {
+        let mut w = self.w.clone();
+        self.mask.apply(&mut w).expect("mask length checked at load");
+        w
+    }
+}
+
+/// All MAC layers of a model, stream-ordered.
+#[derive(Debug, Clone, Default)]
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+}
+
+impl ModelParams {
+    pub fn get(&self, name: &str) -> Option<&LayerParams> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Load from an LSTW store, validating shapes against the graph.
+    ///
+    /// Python stores conv weights as [KH,KW,Cin,Cout] and fc as [IN,OUT];
+    /// both flatten to [fold_in, cout] row-major, which is exactly the
+    /// layout the engine-free packer uses (kh, kw, c patch order — see
+    /// `kernels/ref.py::im2col`).
+    pub fn load(store: &Store, g: &Graph) -> Result<Self> {
+        let mut layers = Vec::new();
+        for node in g.mac_nodes() {
+            let name = &node.name;
+            let wt = store.req(&format!("{name}.w"))?;
+            let n_el: usize = wt.shape.iter().product();
+            if n_el != node.weights() {
+                return Err(Error::lstw(format!(
+                    "{name}.w has {n_el} elements, graph expects {}",
+                    node.weights()
+                )));
+            }
+            let w = wt.data.to_f32();
+            let bias = store.req(&format!("{name}.b"))?.data.to_f32();
+            if bias.len() != node.cout {
+                return Err(Error::lstw(format!(
+                    "{name}.b has {} elements, graph expects {}",
+                    bias.len(),
+                    node.cout
+                )));
+            }
+            let mask = match store.get(&format!("{name}.mask")) {
+                Some(t) => {
+                    let m = Mask::from_f32(&t.data.to_f32());
+                    if m.len() != w.len() {
+                        return Err(Error::lstw(format!("{name}.mask length mismatch")));
+                    }
+                    m
+                }
+                None => Mask::dense(w.len()),
+            };
+            layers.push(LayerParams {
+                name: name.clone(),
+                w,
+                bias,
+                mask,
+                fold_in: node.fold_in(),
+                cout: node.cout,
+            });
+        }
+        Ok(ModelParams { layers })
+    }
+
+    /// Per-layer + global sparsity statistics.
+    pub fn sparsity(&self) -> ModelSparsity {
+        let mut ms = ModelSparsity::default();
+        for l in &self.layers {
+            ms.push(l.name.clone(), l.mask.len(), l.nnz());
+        }
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::util::lstw::{Data, Store, Tensor};
+    use crate::util::rng::Pcg32;
+
+    fn fake_store(g: &Graph, with_masks: bool) -> Store {
+        let mut store = Store::new();
+        let mut rng = Pcg32::seeded(1);
+        for node in g.mac_nodes() {
+            let n = node.weights();
+            store.push(Tensor::f32(
+                format!("{}.w", node.name),
+                vec![node.fold_in(), node.cout],
+                (0..n).map(|_| rng.normal() as f32).collect(),
+            ));
+            store.push(Tensor::f32(
+                format!("{}.b", node.name),
+                vec![node.cout],
+                vec![0.0; node.cout],
+            ));
+            if with_masks {
+                store.push(Tensor {
+                    name: format!("{}.mask", node.name),
+                    shape: vec![node.fold_in(), node.cout],
+                    data: Data::U8((0..n).map(|i| (i % 4 != 0) as u8).collect()),
+                });
+            }
+        }
+        store
+    }
+
+    #[test]
+    fn load_with_masks() {
+        let g = lenet5();
+        let mp = ModelParams::load(&fake_store(&g, true), &g).unwrap();
+        assert_eq!(mp.layers.len(), 5);
+        let fc1 = mp.get("fc1").unwrap();
+        assert_eq!(fc1.w.len(), 30_720);
+        // 3 of 4 kept
+        let s = mp.sparsity();
+        assert!((s.global_sparsity() - 0.25).abs() < 0.01);
+        // masked_w zeros the pruned entries
+        let mw = fc1.masked_w();
+        assert!(mw.iter().zip(&fc1.mask.keep).all(|(&v, &k)| k || v == 0.0));
+    }
+
+    #[test]
+    fn missing_masks_default_dense() {
+        let g = lenet5();
+        let mp = ModelParams::load(&fake_store(&g, false), &g).unwrap();
+        assert_eq!(mp.sparsity().global_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let g = lenet5();
+        let mut store = fake_store(&g, false);
+        // Corrupt conv1.w element count.
+        let idx = store.tensors.iter().position(|t| t.name == "conv1.w").unwrap();
+        store.tensors[idx] = Tensor::f32("conv1.w", vec![10], vec![0.0; 10]);
+        let err = ModelParams::load(&store, &g).unwrap_err();
+        assert!(err.to_string().contains("conv1.w"), "{err}");
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let g = lenet5();
+        let mut store = fake_store(&g, false);
+        store.tensors.retain(|t| t.name != "fc3.b");
+        assert!(ModelParams::load(&store, &g).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration tests over the real AOT artifacts (skipped with a notice
+//! when `make artifacts` has not been run — CI without python still
+//! passes the rest of the suite).
+
+use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::experiments::Accuracies;
+use logicsparse::graph::{builder::lenet5, import};
+use logicsparse::quant::QSpec;
+use logicsparse::runtime::{argmax_classes, ModelRuntime, IMG, NUM_CLASSES};
+use logicsparse::util::lstw::Store;
+use logicsparse::weights::ModelParams;
+use std::path::Path;
+use std::time::Duration;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/graph.json").exists()
+        && Path::new("artifacts/lenet_proposed_b1.hlo.txt").exists()
+        && Path::new("artifacts/testset.lstw").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn exported_graph_matches_native_builder() {
+    require_artifacts!();
+    let exported = import::load("artifacts/graph.json").unwrap();
+    let native = lenet5();
+    assert_eq!(exported, native, "python and rust LeNet-5 diverged");
+}
+
+#[test]
+fn exported_weights_shapes_and_masks() {
+    require_artifacts!();
+    let g = import::load("artifacts/graph.json").unwrap();
+    let store = Store::read_file("artifacts/params_proposed.lstw").unwrap();
+    let mp = ModelParams::load(&store, &g).unwrap();
+    let st = mp.sparsity();
+    // The proposed model must actually be sparse (DSE targets > 0).
+    assert!(
+        st.global_sparsity() > 0.3,
+        "global sparsity {} suspiciously low",
+        st.global_sparsity()
+    );
+    // Zero blocks exist on the heavily pruned fc layers (engine-free wins).
+    let fc1 = mp.get("fc1").unwrap();
+    let (zero, total) = fc1.mask.zero_blocks(fc1.fold_in, fc1.cout, 16).unwrap();
+    assert!(total > 0);
+    // Masked weights really are masked.
+    for l in &mp.layers {
+        let mw = l.masked_w();
+        for (v, k) in mw.iter().zip(&l.mask.keep) {
+            if !k {
+                assert_eq!(*v, 0.0);
+            }
+        }
+    }
+    let _ = zero;
+}
+
+#[test]
+fn quant_grid_check_on_trained_weights() {
+    require_artifacts!();
+    // Trained weights are raw fp32 (QAT quantises at use time); verify the
+    // per-channel quantiser reproduces W4 codes within half-step error.
+    let g = import::load("artifacts/graph.json").unwrap();
+    let store = Store::read_file("artifacts/params_stage1.lstw").unwrap();
+    let mp = ModelParams::load(&store, &g).unwrap();
+    let spec = QSpec::new(g.weight_bits).unwrap();
+    for l in &mp.layers {
+        let (codes, scales) =
+            logicsparse::quant::quantize_per_channel(&l.w, l.fold_in, l.cout, spec).unwrap();
+        let mse = logicsparse::quant::quant_mse(&l.w, &codes, l.fold_in, l.cout, &scales);
+        let max_scale = scales.iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+        assert!(
+            mse <= (max_scale * 0.5).powi(2) + 1e-9,
+            "{}: quant mse {mse} too high",
+            l.name
+        );
+    }
+}
+
+#[test]
+fn runtime_matches_labels_and_batch_variants_agree() {
+    require_artifacts!();
+    let rt = ModelRuntime::load("artifacts", "proposed").unwrap();
+    assert_eq!(rt.batch_sizes(), vec![1, 8, 32]);
+
+    let ts = Store::read_file("artifacts/testset.lstw").unwrap();
+    let images = ts.req("images").unwrap().data.as_f32().unwrap().to_vec();
+    let labels = ts.req("labels").unwrap().data.as_i32().unwrap().to_vec();
+    let px = IMG * IMG;
+    let n = 64.min(labels.len());
+
+    // Accuracy through the PJRT path.
+    let logits = rt.infer_padded(&images[..n * px], n).unwrap();
+    let classes = argmax_classes(&logits);
+    let correct = classes
+        .iter()
+        .zip(&labels[..n])
+        .filter(|(c, l)| **c == **l as usize)
+        .count();
+    assert!(
+        correct as f64 / n as f64 > 0.9,
+        "served accuracy {}/{n} too low",
+        correct
+    );
+
+    // Batch variants must agree numerically (same baked weights).
+    let l1 = rt.pick(1).infer(&images[..px]).unwrap();
+    let mut padded8 = images[..px].to_vec();
+    padded8.resize(8 * px, 0.0);
+    let l8 = rt.pick(8).infer(&padded8).unwrap();
+    for k in 0..NUM_CLASSES {
+        assert!(
+            (l1[k] - l8[k]).abs() < 1e-3,
+            "b1 vs b8 logit {k}: {} vs {}",
+            l1[k],
+            l8[k]
+        );
+    }
+}
+
+#[test]
+fn coordinator_serves_with_full_accuracy() {
+    require_artifacts!();
+    let ts = Store::read_file("artifacts/testset.lstw").unwrap();
+    let images = ts.req("images").unwrap().data.as_f32().unwrap().to_vec();
+    let labels = ts.req("labels").unwrap().data.as_i32().unwrap().to_vec();
+    let px = IMG * IMG;
+    let n = 96.min(labels.len());
+
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        engines: 1,
+        artifacts_dir: "artifacts".into(),
+        tag: "proposed".into(),
+    })
+    .unwrap();
+
+    let mut rxs = Vec::new();
+    for j in 0..n {
+        rxs.push((server.submit(images[j * px..(j + 1) * px].to_vec()).unwrap(), labels[j]));
+    }
+    let mut correct = 0;
+    for (rx, label) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.len(), NUM_CLASSES);
+        assert!(resp.latency_s > 0.0);
+        correct += (resp.class() == label as usize) as usize;
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.errors, 0);
+    assert!(correct as f64 / n as f64 > 0.9, "served {correct}/{n}");
+
+    // Served accuracy must match python's export-time measurement.
+    let acc = Accuracies::load("artifacts").unwrap();
+    if let Some(pa) = acc.proposed {
+        let served = correct as f64 / n as f64;
+        assert!(
+            (served - pa).abs() < 0.08,
+            "served {served} vs python {pa} diverged"
+        );
+    }
+}
+
+#[test]
+fn unfold_pruned_artifacts_also_serve() {
+    require_artifacts!();
+    let rt = ModelRuntime::load("artifacts", "unfold_pruned").unwrap();
+    let ts = Store::read_file("artifacts/testset.lstw").unwrap();
+    let images = ts.req("images").unwrap().data.as_f32().unwrap().to_vec();
+    let labels = ts.req("labels").unwrap().data.as_i32().unwrap().to_vec();
+    let px = IMG * IMG;
+    let n = 32.min(labels.len());
+    let logits = rt.infer_padded(&images[..n * px], n).unwrap();
+    let correct = argmax_classes(&logits)
+        .iter()
+        .zip(&labels[..n])
+        .filter(|(c, l)| **c == **l as usize)
+        .count();
+    assert!(correct as f64 / n as f64 > 0.8, "unfold_pruned {correct}/{n}");
+}

@@ -1,0 +1,164 @@
+//! Cross-module integration tests that need no artifacts: graph ↔ folding
+//! ↔ cost ↔ DSE ↔ simulator consistency on several topologies/devices.
+
+use logicsparse::config::PruneProfile;
+use logicsparse::cost;
+use logicsparse::device::{TINY, XCU50, ZCU104};
+use logicsparse::dse::{self, DseOptions, Strategy};
+use logicsparse::folding::FoldingConfig;
+use logicsparse::graph::builder::{convnet, lenet5, mlp};
+use logicsparse::sim::{self, Workload};
+use logicsparse::util::propcheck::check;
+
+#[test]
+fn sim_matches_cost_model_for_every_strategy() {
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+    for st in Strategy::ALL {
+        let r = dse::run(st, &g, &XCU50, &profile, &DseOptions::default()).unwrap();
+        let frames = if st == Strategy::FullyFolded { 12 } else { 60 };
+        let rep = sim::simulate_saturated(&g, &r.folding, &XCU50, frames, 8).unwrap();
+        let ratio = rep.throughput_fps / r.cost.throughput_fps;
+        assert!(
+            (0.85..1.1).contains(&ratio),
+            "{}: sim {} vs est {} (ratio {ratio})",
+            st.as_str(),
+            rep.throughput_fps,
+            r.cost.throughput_fps
+        );
+        // Simulated latency must be at least the analytic fill and within
+        // a small factor of the analytic first-frame estimate.
+        assert!(
+            rep.latency_s >= r.cost.latency_s * 0.3,
+            "{}: sim latency {} vs est {}",
+            st.as_str(),
+            rep.latency_s,
+            r.cost.latency_s
+        );
+    }
+}
+
+#[test]
+fn dse_works_on_other_devices() {
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.8], 0.9);
+    for dev in [ZCU104, TINY] {
+        let opts = DseOptions { auto_fold_target_fps: 10_000.0, ..Default::default() };
+        let r = dse::run(Strategy::Proposed, &g, &dev, &profile, &opts).unwrap();
+        assert!(
+            r.cost.total_luts <= dev.lut_budget(),
+            "{}: {} LUTs over budget",
+            dev.name,
+            r.cost.total_luts
+        );
+        r.folding.check(&g).unwrap();
+    }
+}
+
+#[test]
+fn dse_works_on_other_topologies() {
+    let profile_of = |g: &logicsparse::graph::Graph| PruneProfile::uniform(g, &[0.6, 0.8], 0.9);
+    for g in [mlp(256, 128, 10), convnet(2, 8, 32, 10)] {
+        g.validate().unwrap();
+        let p = profile_of(&g);
+        let opts = DseOptions { auto_fold_target_fps: 5_000.0, ..Default::default() };
+        let r = dse::run(Strategy::Proposed, &g, &XCU50, &p, &opts).unwrap();
+        let rep = sim::simulate_saturated(&g, &r.folding, &XCU50, 30, 8).unwrap();
+        assert!(rep.throughput_fps > 0.0);
+    }
+}
+
+#[test]
+fn proposed_dominates_auto_fold_everywhere() {
+    // The Pareto claim at the integration level: proposed is never worse
+    // in throughput than its own auto-fold baseline under equal budgets.
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+    for frac in [0.05, 0.3, 1.0] {
+        let opts = DseOptions { budget_fraction: frac, ..Default::default() };
+        let auto = dse::run(Strategy::AutoFold, &g, &XCU50, &profile, &opts).unwrap();
+        let prop = dse::run(Strategy::Proposed, &g, &XCU50, &profile, &opts).unwrap();
+        assert!(
+            prop.cost.throughput_fps >= auto.cost.throughput_fps * 0.999,
+            "budget {frac}: proposed {} < auto {}",
+            prop.cost.throughput_fps,
+            auto.cost.throughput_fps
+        );
+    }
+}
+
+#[test]
+fn simulator_backpressure_invariants() {
+    // Property: for random legal foldings, the simulation completes, is
+    // deterministic, and FIFO occupancy never exceeds capacity.
+    let g = lenet5();
+    check("random foldings simulate cleanly", 25, |gen| {
+        let mut cfg = FoldingConfig::minimal(&g);
+        for (name, f) in cfg.layers.iter_mut() {
+            let node = g.node(name).unwrap();
+            f.pe = gen.divisor_of(node.fold_out());
+            f.simd = gen.divisor_of(node.fold_in());
+        }
+        let depth = gen.usize(2, 32);
+        let mut p = sim::build(&g, &cfg, &XCU50, depth).unwrap();
+        let rep = p.try_run(&Workload::Saturated { frames: 8 }).unwrap();
+        assert_eq!(rep.frames, 8);
+        for &occ in &rep.fifo_max_occupancy {
+            assert!(occ <= depth);
+        }
+        assert!(rep.completions.windows(2).all(|w| w[0] <= w[1]));
+    });
+}
+
+#[test]
+fn poisson_underload_latency_is_flat() {
+    // Under light Poisson traffic every frame should see near-constant
+    // latency (no queueing) — a serving-path sanity check on the sim.
+    let g = lenet5();
+    let cfg = FoldingConfig::unrolled(&g);
+    let est = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+    let light_rate = est.throughput_fps * 0.05;
+    let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
+    let rep = p
+        .try_run(&Workload::Poisson { frames: 40, rate_fps: light_rate, seed: 3 })
+        .unwrap();
+    let p50 = rep.latency_pct_s(0.5);
+    let p99 = rep.latency_pct_s(0.99);
+    assert!(
+        p99 < p50 * 2.0 + 1e-6,
+        "latency should be flat under light load: p50 {p50} p99 {p99}"
+    );
+}
+
+#[test]
+fn saturated_throughput_beats_poisson_overload_latency() {
+    // Overload: Poisson above capacity must show queueing growth.
+    let g = lenet5();
+    let cfg = FoldingConfig::unrolled(&g);
+    let est = cost::evaluate(&g, &cfg, &XCU50).unwrap();
+    let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
+    let over = p
+        .try_run(&Workload::Poisson { frames: 60, rate_fps: est.throughput_fps * 3.0, seed: 5 })
+        .unwrap();
+    let lats = over.per_frame_latency_cycles();
+    // Later frames wait longer than early ones under overload.
+    let early: u64 = lats[..10].iter().sum();
+    let late: u64 = lats[lats.len() - 10..].iter().sum();
+    assert!(late > early, "overload should grow queueing delay");
+}
+
+#[test]
+fn fig2_and_table1_agree_on_ordering() {
+    let g = lenet5();
+    let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+    let acc = logicsparse::experiments::Accuracies::default();
+    let rows =
+        logicsparse::experiments::table1::measure(&g, &XCU50, &profile, &acc, 40).unwrap();
+    let series = logicsparse::experiments::fig2::measure(&g, &XCU50, &profile).unwrap();
+    // The strategy with the lowest per-layer bottleneck latency in Fig. 2
+    // must be among the highest-throughput rows in Table I.
+    let unfold_row = rows.iter().find(|r| r.strategy == Strategy::Unfold).unwrap();
+    let auto_row = rows.iter().find(|r| r.strategy == Strategy::AutoFold).unwrap();
+    assert!(unfold_row.throughput_fps > auto_row.throughput_fps);
+    let _ = series; // shape-checked in unit tests
+}
