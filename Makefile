@@ -1,0 +1,44 @@
+# LogicSparse reproduction — tooling entry points.
+#
+# `make verify` is the tier-1 gate from ROADMAP.md; CI runs exactly it.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: verify build test fmt fmt-check clippy bench artifacts clean
+
+## Tier-1 gate: release build + full test suite.
+verify:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all
+
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## Serving + simulator benches (engine-free parts run without artifacts).
+bench:
+	$(CARGO) bench --bench serve_perf
+	$(CARGO) bench --bench sim_perf
+
+## Build the AOT artifacts (needs the python/JAX environment):
+## stage 1 trains + exports, the rust DSE emits folding_config.json,
+## stage 2 re-prunes and exports the proposed sparse variants.
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --stage 1 --out ../../artifacts
+	$(CARGO) run --release -- dse --artifacts artifacts
+	cd python/compile && $(PYTHON) aot.py --stage 2 --out ../../artifacts
+
+clean:
+	$(CARGO) clean

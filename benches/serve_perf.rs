@@ -1,17 +1,107 @@
 //! `cargo bench --bench serve_perf` — end-to-end serving performance of
-//! the coordinator over the AOT artifacts: requests/second and batch
-//! execute time per batch size and policy. Skips (with a notice) when
-//! `make artifacts` has not been run.
+//! the sharded execution plane.
+//!
+//! Part 1 runs **engine-free** (synthetic backend, no artifacts): an
+//! open-loop load generator replays shared-traffic-model schedules against
+//! the coordinator —
+//!   * saturated traffic at 1 vs 4 engines (the engine-scaling claim:
+//!     4-engine throughput must be >= 2x the 1-engine figure, with zero
+//!     dropped responses across graceful shutdown);
+//!   * Poisson traffic below capacity (latency percentiles + shed counts
+//!     under the *same arrival process* the cycle simulator uses).
+//!
+//! Part 2 measures the PJRT artifact path (raw executables + coordinator)
+//! and skips with a notice when `make artifacts` has not been run.
 
-use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
-use logicsparse::runtime::{ModelRuntime, IMG};
+use logicsparse::coordinator::{
+    loadgen, BatchPolicy, Server, ServerOptions, ShedMode,
+};
+use logicsparse::runtime::{ModelRuntime, SyntheticRuntime, IMG};
+use logicsparse::traffic::Traffic;
 use logicsparse::util::bench::Bencher;
 use logicsparse::util::lstw::Store;
 use std::time::Duration;
 
-fn main() {
+/// Deterministic synthetic image for arrival `i` (class = i % 10 under
+/// the synthetic backend's stripe rule).
+fn synth_image(i: u64) -> Vec<f32> {
+    SyntheticRuntime::stripe_image(i as usize)
+}
+
+fn synthetic_scaling() {
+    println!("== sharded plane, synthetic backend (engine-free) ==");
+    let per_image = Duration::from_micros(150);
+    let requests = 4000u64;
+    let mut rps_by_engines = Vec::new();
+
+    for engines in [1usize, 4] {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines,
+            admission_capacity: 512,
+            queue_depth: 16,
+            ..ServerOptions::synthetic(per_image)
+        })
+        .unwrap();
+        let traffic = Traffic::saturated(requests);
+        let rep = loadgen::run_open_loop(&server, &traffic, synth_image, ShedMode::Retry);
+        let snap = server.shutdown();
+        println!("engines={engines}: {}", rep.render());
+        println!("engines={engines}: {}", snap.render());
+        assert_eq!(rep.lost, 0, "responses dropped across graceful shutdown");
+        assert_eq!(rep.errors, 0, "synthetic backend must not fail");
+        assert_eq!(
+            rep.completed, requests,
+            "saturated Retry run must complete every request"
+        );
+        assert_eq!(snap.completed, snap.submitted, "server lost admitted requests");
+        rps_by_engines.push((engines, rep.achieved_rps));
+    }
+
+    let (_, rps1) = rps_by_engines[0];
+    let (_, rps4) = rps_by_engines[1];
+    println!(
+        "engine scaling: 1 -> {:.0} req/s, 4 -> {:.0} req/s ({:.2}x)",
+        rps1,
+        rps4,
+        rps4 / rps1
+    );
+    assert!(
+        rps4 >= 2.0 * rps1,
+        "engine scaling regressed: 4 engines at {rps4:.0} req/s < 2x {rps1:.0} req/s"
+    );
+}
+
+fn synthetic_poisson() {
+    // Open-loop Poisson at ~60% of one engine's capacity: the same
+    // arrival process `sim` uses for its serving-shaped workloads.
+    let per_image = Duration::from_micros(150);
+    let capacity_rps = 1.0 / per_image.as_secs_f64(); // ~6.6k img/s
+    let rate = 0.6 * capacity_rps;
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        engines: 1,
+        admission_capacity: 256,
+        queue_depth: 16,
+        ..ServerOptions::synthetic(per_image)
+    })
+    .unwrap();
+    let traffic = Traffic::poisson(2000, rate, 42);
+    let rep = loadgen::run_open_loop(&server, &traffic, synth_image, ShedMode::Drop);
+    let snap = server.shutdown();
+    println!("poisson open-loop @{rate:.0} req/s: {}", rep.render());
+    assert_eq!(rep.lost, 0, "responses dropped across graceful shutdown");
+    assert_eq!(
+        rep.completed + rep.errors,
+        rep.accepted,
+        "accepted requests unaccounted for"
+    );
+    let _ = snap;
+}
+
+fn artifact_scenarios() {
     if !std::path::Path::new("artifacts/lenet_proposed_b1.hlo.txt").exists() {
-        println!("serve_perf: artifacts missing — run `make artifacts` first (skipping)");
+        println!("serve_perf: artifacts missing — run `make artifacts` first (skipping PJRT part)");
         return;
     }
     let ts = Store::read_file("artifacts/testset.lstw").unwrap();
@@ -20,7 +110,13 @@ fn main() {
     let b = Bencher { warmup_s: 1.0, sample_s: 0.5, n_samples: 6 };
 
     // Raw PJRT executable rates per batch variant (no coordinator).
-    let rt = ModelRuntime::load("artifacts", "proposed").unwrap();
+    let rt = match ModelRuntime::load("artifacts", "proposed") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("serve_perf: PJRT unavailable ({e}) — skipping artifact part");
+            return;
+        }
+    };
     for batch in rt.batch_sizes() {
         let x = images[..batch * px].to_vec();
         let stats = b.run(&format!("pjrt/proposed/b{batch}"), || {
@@ -32,7 +128,8 @@ fn main() {
         );
     }
 
-    // Coordinator end-to-end under a closed-loop client.
+    // Coordinator end-to-end under the shared traffic model (open-loop
+    // bursty arrivals — directly comparable with `sim` burst workloads).
     for (name, policy) in [
         ("low-latency", BatchPolicy::low_latency()),
         ("high-throughput", BatchPolicy::high_throughput()),
@@ -40,33 +137,29 @@ fn main() {
         let server = Server::start(ServerOptions {
             policy,
             engines: 1,
-            artifacts_dir: "artifacts".into(),
-            tag: "proposed".into(),
+            ..ServerOptions::artifacts("artifacts", "proposed")
         })
         .unwrap();
-        let n = 256usize;
-        let t0 = std::time::Instant::now();
-        let mut pending = Vec::with_capacity(64);
-        for j in 0..n {
-            pending.push(server.submit(images[(j % 512) * px..(j % 512 + 1) * px].to_vec()).unwrap());
-            if pending.len() == 64 {
-                for rx in pending.drain(..) {
-                    rx.recv().unwrap();
-                }
-            }
-        }
-        for rx in pending.drain(..) {
-            rx.recv().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let snap = server.shutdown();
-        println!(
-            "coordinator/{name}: {:.0} req/s | mean batch {:.1} | p50 {:.1}ms p99 {:.1}ms",
-            n as f64 / wall,
-            snap.mean_batch_size,
-            snap.p50_latency_s * 1e3,
-            snap.p99_latency_s * 1e3
+        let traffic = Traffic::bursty(512, 32, 2e-3, 7);
+        let n_avail = images.len() / px;
+        let rep = loadgen::run_open_loop(
+            &server,
+            &traffic,
+            |i| {
+                let j = (i as usize) % n_avail;
+                images[j * px..(j + 1) * px].to_vec()
+            },
+            ShedMode::Retry,
         );
-        let _ = Duration::ZERO;
+        let snap = server.shutdown();
+        println!("coordinator/{name}: {}", rep.render());
+        println!("coordinator/{name}: {}", snap.render());
+        assert_eq!(rep.lost, 0);
     }
+}
+
+fn main() {
+    synthetic_scaling();
+    synthetic_poisson();
+    artifact_scenarios();
 }

@@ -52,4 +52,12 @@ fn main() {
         p.run(&Workload::Poisson { frames: 100, rate_fps: 100_000.0, seed: 1 })
             .frames
     });
+
+    // Bursty traffic (the shared traffic model's Burst shape — the same
+    // process the serving load generator replays in wall-clock time).
+    b.run("sim/lenet/burst/100-frames", || {
+        let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
+        p.run(&Workload::Burst { frames: 100, burst: 16, gap_cycles: 20_000, seed: 1 })
+            .frames
+    });
 }

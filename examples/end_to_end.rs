@@ -59,8 +59,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let server = Server::start(ServerOptions {
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
         engines: 1,
-        artifacts_dir: "artifacts".into(),
-        tag: "proposed".into(),
+        ..ServerOptions::artifacts("artifacts", "proposed")
     })?;
     let t0 = std::time::Instant::now();
     let mut correct = 0usize;

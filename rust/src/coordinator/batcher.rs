@@ -5,14 +5,21 @@
 //! `max_wait` (latency). The policy is deliberately simple and fully
 //! deterministic given arrival times, so the batching ablation bench can
 //! sweep `max_batch`/`max_wait` and attribute effects cleanly.
+//!
+//! Formed batches are handed to the sharded execution plane
+//! ([`ExecutionPlane::dispatch`]) — per-engine rings with work stealing —
+//! instead of a single shared channel.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::shard::ExecutionPlane;
 use super::{Batch, Request};
+use crate::coordinator::queue::AdmissionGate;
 use crate::coordinator::stats::ServerStats;
+use crate::runtime::NUM_CLASSES;
 
 /// Batch formation policy.
 #[derive(Debug, Clone)]
@@ -43,13 +50,18 @@ impl BatchPolicy {
     }
 }
 
-/// Batcher loop: drain `rx`, form batches, send to `tx`.
+/// Batcher loop: drain `rx`, form batches, dispatch to the plane.
 ///
-/// Exits when the submit channel closes (all `Server` senders dropped) or
-/// shutdown is flagged and the queue is drained.
+/// Exits when the submit channel closes (the `Server` drops its sender at
+/// shutdown — *before* joining this thread, so this path is the
+/// deterministic one) or when the shutdown flag is set and the queue is
+/// drained. Every request received is either dispatched or — if the plane
+/// is already fully closed, which ordinary shutdown makes impossible —
+/// explicitly failed; none are silently dropped.
 pub(crate) fn run(
     rx: mpsc::Receiver<Request>,
-    tx: mpsc::Sender<Batch>,
+    plane: Arc<ExecutionPlane>,
+    gate: Arc<AdmissionGate>,
     policy: BatchPolicy,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
@@ -65,7 +77,15 @@ pub(crate) fn run(
             let batch = Batch { requests: std::mem::take(pending) };
             stats.on_dispatch(batch.requests.len());
             *oldest = None;
-            tx.send(batch).is_ok()
+            match plane.dispatch(batch) {
+                Ok(()) => true,
+                Err(batch) => {
+                    // Plane fully closed under us: fail the requests
+                    // loudly rather than dropping their response channels.
+                    fail_batch(batch, &stats, &gate);
+                    false
+                }
+            }
         };
 
     loop {
@@ -118,10 +138,29 @@ pub(crate) fn run(
     }
 }
 
+/// Complete every request of an undispatchable batch with NaN logits (the
+/// same client-visible shape as an engine failure) and release admission.
+///
+/// Failures count only toward `errors` — `completed` and the latency
+/// percentiles mean *successfully served* throughout the stats, matching
+/// `LoadReport`'s convention.
+pub(crate) fn fail_batch(batch: Batch, stats: &ServerStats, gate: &AdmissionGate) {
+    for req in batch.requests {
+        stats.on_error();
+        let latency_s = req.enqueued.elapsed().as_secs_f64();
+        let _ = req.resp.send(super::Response {
+            id: req.id,
+            logits: vec![f32::NAN; NUM_CLASSES],
+            latency_s,
+        });
+        gate.exit();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use crate::util::ring::PopError;
 
     fn req(id: u64) -> (Request, mpsc::Receiver<super::super::Response>) {
         let (tx, rx) = mpsc::channel();
@@ -131,24 +170,40 @@ mod tests {
         )
     }
 
-    fn harness(policy: BatchPolicy) -> (
-        mpsc::Sender<Request>,
-        mpsc::Receiver<Batch>,
-        Arc<AtomicBool>,
-        std::thread::JoinHandle<()>,
-    ) {
-        let (in_tx, in_rx) = mpsc::channel();
-        let (out_tx, out_rx) = mpsc::channel();
+    struct Harness {
+        tx: mpsc::Sender<Request>,
+        plane: Arc<ExecutionPlane>,
+        gate: Arc<AdmissionGate>,
+        shutdown: Arc<AtomicBool>,
+        handle: std::thread::JoinHandle<()>,
+    }
+
+    fn harness(policy: BatchPolicy) -> Harness {
+        let (tx, in_rx) = mpsc::channel();
+        // One-engine plane: the test inspects ring 0 directly.
+        let (plane, _mailboxes) = ExecutionPlane::new(1, 64);
+        let gate = Arc::new(AdmissionGate::new(1024));
         let stats = Arc::new(ServerStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let sd = Arc::clone(&shutdown);
-        let h = std::thread::spawn(move || run(in_rx, out_tx, policy, stats, sd));
-        (in_tx, out_rx, shutdown, h)
+        let p = Arc::clone(&plane);
+        let g = Arc::clone(&gate);
+        let handle =
+            std::thread::spawn(move || run(in_rx, p, g, policy, stats, sd));
+        Harness { tx, plane, gate, shutdown, handle }
+    }
+
+    fn recv_batch(plane: &ExecutionPlane, timeout: Duration) -> Batch {
+        match plane.queue(0).pop_timeout(timeout) {
+            Ok(b) => b,
+            Err(PopError::Empty) => panic!("no batch within {timeout:?}"),
+            Err(PopError::Closed) => panic!("ring closed unexpectedly"),
+        }
     }
 
     #[test]
     fn size_triggered_dispatch() {
-        let (tx, out, sd, h) = harness(BatchPolicy {
+        let h = harness(BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_secs(10),
         });
@@ -156,43 +211,62 @@ mod tests {
         for i in 0..4 {
             let (r, rx) = req(i);
             keep.push(rx);
-            tx.send(r).unwrap();
+            h.tx.send(r).unwrap();
         }
-        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        let batch = recv_batch(&h.plane, Duration::from_secs(2));
         assert_eq!(batch.requests.len(), 4);
-        sd.store(true, Ordering::SeqCst);
-        drop(tx);
-        h.join().unwrap();
+        h.shutdown.store(true, Ordering::SeqCst);
+        drop(h.tx);
+        h.handle.join().unwrap();
     }
 
     #[test]
     fn deadline_triggered_dispatch() {
-        let (tx, out, sd, h) = harness(BatchPolicy {
+        let h = harness(BatchPolicy {
             max_batch: 1000,
             max_wait: Duration::from_millis(5),
         });
         let (r, _rx) = req(0);
-        tx.send(r).unwrap();
+        h.tx.send(r).unwrap();
         let t0 = Instant::now();
-        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        let batch = recv_batch(&h.plane, Duration::from_secs(2));
         assert_eq!(batch.requests.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4));
-        sd.store(true, Ordering::SeqCst);
-        drop(tx);
-        h.join().unwrap();
+        h.shutdown.store(true, Ordering::SeqCst);
+        drop(h.tx);
+        h.handle.join().unwrap();
     }
 
     #[test]
     fn drains_on_disconnect() {
-        let (tx, out, _sd, h) = harness(BatchPolicy {
+        let h = harness(BatchPolicy {
             max_batch: 1000,
             max_wait: Duration::from_secs(10),
         });
         let (r, _rx) = req(0);
-        tx.send(r).unwrap();
-        drop(tx); // disconnect before any trigger
-        let batch = out.recv_timeout(Duration::from_secs(2)).unwrap();
+        h.tx.send(r).unwrap();
+        drop(h.tx); // disconnect before any trigger
+        let batch = recv_batch(&h.plane, Duration::from_secs(2));
         assert_eq!(batch.requests.len(), 1);
-        h.join().unwrap();
+        h.handle.join().unwrap();
+    }
+
+    #[test]
+    fn closed_plane_fails_requests_instead_of_dropping() {
+        let h = harness(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        h.plane.close();
+        let (r, rx) = req(0);
+        // Mirror the production flow: the request entered the gate at
+        // submit time, so fail_batch's gate.exit() has an enter to match.
+        h.gate.try_enter();
+        h.tx.send(r).unwrap();
+        // The batcher must answer (NaN logits), not drop the channel.
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.logits[0].is_nan());
+        drop(h.tx);
+        h.handle.join().unwrap();
     }
 }

@@ -1,0 +1,221 @@
+//! Open-loop load generator driven by the shared [`crate::traffic`]
+//! model — the serving-side twin of the simulator's arrival processes, so
+//! simulated ("Table-I measured") and served throughput are produced under
+//! *identical* traffic.
+//!
+//! Open-loop means arrivals are scheduled by the traffic model, not by
+//! response completion: the generator replays the schedule against the
+//! wall clock and submits regardless of how the server is keeping up.
+//! Under overload the admission gate sheds ([`ShedMode`] decides whether a
+//! shed arrival is dropped — honest open-loop — or retried until admitted,
+//! which is the right shape for saturated capacity measurements).
+//! Responses are collected on a separate thread so waiting never distorts
+//! the arrival process.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::{Response, Server};
+use crate::traffic::Traffic;
+use crate::util::error::Error;
+
+/// What to do when admission control sheds an arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedMode {
+    /// Count it and move on (open-loop honesty: latency percentiles stay
+    /// meaningful under overload).
+    Drop,
+    /// Retry until admitted (saturated-throughput measurements: every
+    /// arrival eventually executes).
+    Retry,
+}
+
+/// Outcome of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Arrivals the traffic model generated.
+    pub offered: u64,
+    /// Arrivals admitted by the server.
+    pub accepted: u64,
+    /// Arrivals shed by admission control (Drop mode only).
+    pub shed: u64,
+    /// Accepted requests that completed successfully.
+    pub completed: u64,
+    /// Accepted requests answered with an engine error.
+    pub errors: u64,
+    /// Accepted requests whose response channel died unanswered — must be
+    /// zero if the serving plane keeps its no-loss guarantee.
+    pub lost: u64,
+    /// Wall time from first submission to last response.
+    pub wall_s: f64,
+    /// Completed requests per second of wall time.
+    pub achieved_rps: f64,
+    /// Per-request latencies (seconds) of successful completions, sorted
+    /// ascending (`run_open_loop` sorts once so percentile queries are
+    /// O(1)).
+    pub latencies_s: Vec<f64>,
+}
+
+impl LoadReport {
+    /// Latency percentile over successful completions (0.0 ..= 1.0).
+    pub fn latency_pct_s(&self, q: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.latencies_s.len() - 1) as f64 * q).round() as usize;
+        self.latencies_s[idx]
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "offered {} | accepted {} (shed {}) | completed {} ({} errors, {} lost) \
+             | {:.2}s wall | {:.0} req/s | p50 {:.2}ms p99 {:.2}ms",
+            self.offered,
+            self.accepted,
+            self.shed,
+            self.completed,
+            self.errors,
+            self.lost,
+            self.wall_s,
+            self.achieved_rps,
+            self.latency_pct_s(0.5) * 1e3,
+            self.latency_pct_s(0.99) * 1e3,
+        )
+    }
+}
+
+/// Replay `traffic` against `server`, drawing the image for arrival `i`
+/// from `image_of`. Blocks until every accepted request has been answered
+/// (or its channel died), so the report is complete.
+pub fn run_open_loop(
+    server: &Server,
+    traffic: &Traffic,
+    image_of: impl Fn(u64) -> Vec<f32>,
+    shed_mode: ShedMode,
+) -> LoadReport {
+    let schedule = traffic.schedule();
+    let mut offered = 0u64;
+    let mut accepted = 0u64;
+    let mut shed = 0u64;
+
+    let (pending_tx, pending_rx) = mpsc::channel::<mpsc::Receiver<Response>>();
+    let (t0, collected) = std::thread::scope(|s| {
+        let collector = s.spawn(move || {
+            let mut completed = 0u64;
+            let mut errors = 0u64;
+            let mut lost = 0u64;
+            let mut latencies_s = Vec::new();
+            while let Ok(rx) = pending_rx.recv() {
+                match rx.recv() {
+                    Ok(resp) => {
+                        if resp.is_error() {
+                            errors += 1;
+                        } else {
+                            completed += 1;
+                            latencies_s.push(resp.latency_s);
+                        }
+                    }
+                    Err(_) => lost += 1,
+                }
+            }
+            (completed, errors, lost, latencies_s)
+        });
+
+        let t0 = Instant::now();
+        'arrivals: for (i, &at) in schedule.iter().enumerate() {
+            // Sleep up to (not past) the arrival offset; finish with a
+            // short spin so bursts stay sharp.
+            loop {
+                let now = t0.elapsed().as_secs_f64();
+                if now >= at {
+                    break;
+                }
+                let dt = at - now;
+                if dt > 500e-6 {
+                    std::thread::sleep(Duration::from_secs_f64(dt - 200e-6));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            offered += 1;
+            loop {
+                match server.submit(image_of(i as u64)) {
+                    Ok(rx) => {
+                        accepted += 1;
+                        if pending_tx.send(rx).is_err() {
+                            break 'arrivals; // collector died (panic)
+                        }
+                        break;
+                    }
+                    Err(Error::Overloaded) => match shed_mode {
+                        ShedMode::Drop => {
+                            shed += 1;
+                            break;
+                        }
+                        ShedMode::Retry => std::thread::yield_now(),
+                    },
+                    Err(_) => break 'arrivals, // server shutting down
+                }
+            }
+        }
+        drop(pending_tx);
+        (t0, collector.join().expect("collector panicked"))
+    });
+
+    let (completed, errors, lost, mut latencies_s) = collected;
+    latencies_s.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let wall_s = t0.elapsed().as_secs_f64();
+    LoadReport {
+        offered,
+        accepted,
+        shed,
+        completed,
+        errors,
+        lost,
+        wall_s,
+        achieved_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        latencies_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_percentiles_and_render() {
+        let rep = LoadReport {
+            offered: 10,
+            accepted: 9,
+            shed: 1,
+            completed: 8,
+            errors: 1,
+            lost: 0,
+            wall_s: 2.0,
+            achieved_rps: 4.0,
+            latencies_s: vec![0.001, 0.002, 0.003, 0.004],
+        };
+        assert!(rep.latency_pct_s(0.0) <= rep.latency_pct_s(0.5));
+        assert!(rep.latency_pct_s(0.5) <= rep.latency_pct_s(1.0));
+        assert_eq!(rep.latency_pct_s(1.0), 0.004);
+        let s = rep.render();
+        assert!(s.contains("offered 10"));
+        assert!(s.contains("shed 1"));
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let rep = LoadReport {
+            offered: 0,
+            accepted: 0,
+            shed: 0,
+            completed: 0,
+            errors: 0,
+            lost: 0,
+            wall_s: 0.0,
+            achieved_rps: 0.0,
+            latencies_s: Vec::new(),
+        };
+        assert_eq!(rep.latency_pct_s(0.99), 0.0);
+    }
+}

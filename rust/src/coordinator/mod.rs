@@ -1,30 +1,42 @@
 //! Serving coordinator (L3 request path — substrate S12).
 //!
 //! The deployment vehicle for the generated accelerator: clients submit
-//! single images; a **dynamic batcher** groups them (size- or
-//! deadline-triggered, vLLM-router style); **engine threads** execute
-//! batches on the PJRT runtime and complete per-request futures. The PJRT
-//! client is `Rc`-based (not `Send`), so each engine thread owns a full
-//! `ModelRuntime` replica — the same shape as one process per accelerator
-//! card.
+//! single images through a **bounded admission gate** (overload is shed at
+//! submit time with [`Error::Overloaded`], never queued); a **dynamic
+//! batcher** groups admitted requests (size- or deadline-triggered,
+//! vLLM-router style); the **sharded execution plane** places each batch
+//! on one engine's private work ring, and engine threads — each owning a
+//! full `ModelRuntime` replica, since the PJRT client is `Rc`-based and
+//! not `Send` — execute batches, stealing from neighbours when idle.
+//!
+//! Shutdown is deterministic and lossless: the submit channel is closed
+//! first (so the batcher's disconnect path flushes every pending
+//! request), the batcher is joined, the rings are closed, and engines
+//! drain them to empty before exiting. Every admitted request receives a
+//! response.
 //!
 //! Python is never on this path: the engines consume only
-//! `artifacts/*.hlo.txt`.
+//! `artifacts/*.hlo.txt` (or run the synthetic backend, which needs no
+//! artifacts at all).
 
 pub mod batcher;
+pub mod loadgen;
 pub mod queue;
+pub(crate) mod shard;
 pub mod stats;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::runtime::{ModelRuntime, IMG, NUM_CLASSES};
+use crate::runtime::{InferenceBackend, ModelRuntime, SyntheticRuntime, IMG, NUM_CLASSES};
 use crate::util::error::{Error, Result};
 
 pub use batcher::BatchPolicy;
+pub use loadgen::{LoadReport, ShedMode};
+pub use queue::{Admission, AdmissionGate};
 pub use stats::{ServerStats, StatsSnapshot};
 
 /// One inference request.
@@ -49,6 +61,11 @@ impl Response {
     pub fn class(&self) -> usize {
         crate::runtime::argmax_classes(&self.logits)[0]
     }
+
+    /// True when the engine failed this request (NaN logits).
+    pub fn is_error(&self) -> bool {
+        self.logits.first().map(|l| l.is_nan()).unwrap_or(true)
+    }
 }
 
 /// A batch formed by the batcher.
@@ -56,14 +73,29 @@ pub(crate) struct Batch {
     pub requests: Vec<Request>,
 }
 
+/// Which backend each engine replica runs. The spec is `Send + Clone`;
+/// the backend itself is constructed inside its engine thread.
+#[derive(Debug, Clone)]
+pub enum EngineBackend {
+    /// PJRT over AOT artifacts (`lenet_<tag>_b*.hlo.txt` under `dir`).
+    Artifacts { dir: String, tag: String },
+    /// Deterministic synthetic compute with a fixed per-image cost —
+    /// engine-free serving (tests, benches, capacity planning).
+    Synthetic { per_image: Duration },
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     pub policy: BatchPolicy,
-    /// Engine replicas (each compiles its own runtime).
+    /// Engine replicas (each builds its own backend).
     pub engines: usize,
-    pub artifacts_dir: String,
-    pub tag: String,
+    pub backend: EngineBackend,
+    /// Admission bound: requests admitted but not yet completed. Beyond
+    /// it `submit` fast-rejects with [`Error::Overloaded`].
+    pub admission_capacity: usize,
+    /// Per-engine work-ring depth, in batches.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerOptions {
@@ -71,15 +103,41 @@ impl Default for ServerOptions {
         ServerOptions {
             policy: BatchPolicy::default(),
             engines: 1,
-            artifacts_dir: "artifacts".into(),
-            tag: "proposed".into(),
+            backend: EngineBackend::Artifacts {
+                dir: "artifacts".into(),
+                tag: "proposed".into(),
+            },
+            admission_capacity: 1024,
+            queue_depth: 16,
         }
     }
 }
 
-/// A running server: batcher thread + engine threads.
+impl ServerOptions {
+    /// Artifact-backed serving (the production shape).
+    pub fn artifacts(dir: impl Into<String>, tag: impl Into<String>) -> Self {
+        ServerOptions {
+            backend: EngineBackend::Artifacts { dir: dir.into(), tag: tag.into() },
+            ..Default::default()
+        }
+    }
+
+    /// Engine-free serving with the synthetic backend.
+    pub fn synthetic(per_image: Duration) -> Self {
+        ServerOptions {
+            backend: EngineBackend::Synthetic { per_image },
+            ..Default::default()
+        }
+    }
+}
+
+/// A running server: admission gate + batcher thread + sharded engines.
 pub struct Server {
-    submit_tx: mpsc::Sender<Request>,
+    /// `Some` while accepting; taken (dropped) first at shutdown so the
+    /// batcher's channel-closed exit path actually fires.
+    submit_tx: Option<mpsc::Sender<Request>>,
+    gate: Arc<AdmissionGate>,
+    plane: Arc<shard::ExecutionPlane>,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
     batcher: Option<JoinHandle<()>>,
@@ -88,41 +146,59 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the server; fails fast if artifacts are missing (each engine
-    /// verifies its runtime before the server is returned).
+    /// Start the server; fails fast if the backend cannot be built (each
+    /// engine verifies its backend before the server is returned).
     pub fn start(opts: ServerOptions) -> Result<Self> {
         if opts.engines == 0 {
             return Err(Error::config("engines must be >= 1"));
         }
+        if opts.admission_capacity == 0 {
+            return Err(Error::config("admission_capacity must be >= 1"));
+        }
+        if opts.queue_depth == 0 {
+            return Err(Error::config("queue_depth must be >= 1"));
+        }
         let stats = Arc::new(ServerStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
 
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+        let (plane, mailboxes) = shard::ExecutionPlane::new(opts.engines, opts.queue_depth);
 
-        // Engines: verify runtimes load before spawning loops.
+        // Engines: verify backends build before declaring the server up.
         let mut engines = Vec::with_capacity(opts.engines);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for eid in 0..opts.engines {
-            let rx = Arc::clone(&batch_rx);
+        for mailbox in mailboxes {
+            let plane = Arc::clone(&plane);
             let st = Arc::clone(&stats);
-            let sd = Arc::clone(&shutdown);
-            let dir = opts.artifacts_dir.clone();
-            let tag = opts.tag.clone();
+            let g = Arc::clone(&gate);
+            let spec = opts.backend.clone();
             let ready = ready_tx.clone();
             engines.push(std::thread::spawn(move || {
-                let rt = match ModelRuntime::load(&dir, &tag) {
-                    Ok(rt) => {
-                        let _ = ready.send(Ok(()));
-                        rt
+                let backend: Box<dyn InferenceBackend> = match &spec {
+                    EngineBackend::Artifacts { dir, tag } => {
+                        match ModelRuntime::load(dir, tag) {
+                            Ok(rt) => {
+                                let _ = ready.send(Ok(()));
+                                Box::new(rt)
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        }
                     }
-                    Err(e) => {
-                        let _ = ready.send(Err(e));
-                        return;
+                    EngineBackend::Synthetic { per_image } => {
+                        let _ = ready.send(Ok(()));
+                        Box::new(SyntheticRuntime::new(*per_image))
                     }
                 };
-                engine_loop(eid, rt, rx, st, sd);
+                shard::worker_loop(&plane, &mailbox, |batch, stolen| {
+                    if stolen {
+                        st.on_steal();
+                    }
+                    execute_batch(backend.as_ref(), batch, &st, &g);
+                });
             }));
         }
         drop(ready_tx);
@@ -130,10 +206,19 @@ impl Server {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
+                    // Unblock any engines that did come up, then bail.
                     shutdown.store(true, Ordering::SeqCst);
+                    plane.close();
                     return Err(e);
                 }
-                Err(_) => return Err(Error::QueueClosed),
+                Err(_) => {
+                    // An engine died before reporting readiness (panic in
+                    // backend construction). Close the plane so engines
+                    // that did come up drain out instead of leaking.
+                    shutdown.store(true, Ordering::SeqCst);
+                    plane.close();
+                    return Err(Error::QueueClosed);
+                }
             }
         }
 
@@ -141,12 +226,16 @@ impl Server {
         let policy = opts.policy.clone();
         let st = Arc::clone(&stats);
         let sd = Arc::clone(&shutdown);
+        let p = Arc::clone(&plane);
+        let g = Arc::clone(&gate);
         let batcher = std::thread::spawn(move || {
-            batcher::run(submit_rx, batch_tx, policy, st, sd);
+            batcher::run(submit_rx, p, g, policy, st, sd);
         });
 
         Ok(Server {
-            submit_tx,
+            submit_tx: Some(submit_tx),
+            gate,
+            plane,
             stats,
             shutdown,
             batcher: Some(batcher),
@@ -156,6 +245,9 @@ impl Server {
     }
 
     /// Submit one image; returns the response channel.
+    ///
+    /// Fast paths out: [`Error::Overloaded`] when the admission bound is
+    /// hit (nothing queued), [`Error::QueueClosed`] once shutdown began.
     pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         if image.len() != IMG * IMG {
             return Err(Error::config(format!(
@@ -164,16 +256,23 @@ impl Server {
                 image.len()
             )));
         }
-        let (tx, rx) = mpsc::channel();
+        let tx = self.submit_tx.as_ref().ok_or(Error::QueueClosed)?;
+        if self.gate.try_enter() == Admission::Shed {
+            return Err(Error::Overloaded);
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: Instant::now(),
-            resp: tx,
+            resp: resp_tx,
         };
         self.stats.on_submit();
-        self.submit_tx.send(req).map_err(|_| Error::QueueClosed)?;
-        Ok(rx)
+        if tx.send(req).is_err() {
+            self.gate.exit();
+            return Err(Error::QueueClosed);
+        }
+        Ok(resp_rx)
     }
 
     /// Submit and wait (convenience for examples/tests).
@@ -183,22 +282,40 @@ impl Server {
     }
 
     pub fn stats(&self) -> StatsSnapshot {
-        self.stats.snapshot()
+        let mut snap = self.stats.snapshot();
+        snap.shed = self.gate.shed_total();
+        snap
     }
 
-    /// Graceful shutdown: stop accepting, drain, join.
+    /// In-flight requests currently admitted (queued or executing).
+    pub fn in_flight(&self) -> usize {
+        self.gate.depth()
+    }
+
+    /// Graceful shutdown: stop accepting, drain deterministically, join.
     pub fn shutdown(mut self) -> StatsSnapshot {
         self.shutdown_impl();
-        self.stats.snapshot()
+        let mut snap = self.stats.snapshot();
+        snap.shed = self.gate.shed_total();
+        snap
     }
 
     fn shutdown_impl(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Close the submit channel by dropping a cloned sender set: the
-        // batcher exits when the channel is closed AND the flag is set.
+        // Order matters, and each step is deterministic:
+        // 1. Drop the submit sender. The batcher's disconnect arm flushes
+        //    every pending request and returns. (The seed joined the
+        //    batcher while the sender was still alive, so the documented
+        //    "channel closed" exit could never fire and in-flight
+        //    requests could be dropped.)
+        drop(self.submit_tx.take());
+        // 2. Join the batcher: after this, everything ever submitted sits
+        //    in the work rings.
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
+        // 3. Close the rings: engines drain them to empty, then exit.
+        self.plane.close();
         if let Some(es) = self.engines.take() {
             for e in es {
                 let _ = e.join();
@@ -213,45 +330,14 @@ impl Drop for Server {
     }
 }
 
-/// Engine loop: execute batches until shutdown + drained.
-fn engine_loop(
-    _eid: usize,
-    rt: ModelRuntime,
-    rx: Arc<std::sync::Mutex<mpsc::Receiver<Batch>>>,
-    stats: Arc<ServerStats>,
-    shutdown: Arc<AtomicBool>,
+/// Execute one batch on `backend` and complete its requests. Admission is
+/// released per request, after its response is sent.
+fn execute_batch(
+    backend: &dyn InferenceBackend,
+    batch: Batch,
+    stats: &ServerStats,
+    gate: &AdmissionGate,
 ) {
-    loop {
-        let batch = {
-            let guard = rx.lock().expect("batch queue poisoned");
-            match guard.recv_timeout(std::time::Duration::from_millis(20)) {
-                Ok(b) => Some(b),
-                Err(mpsc::RecvTimeoutError::Timeout) => None,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        };
-        let Some(batch) = batch else {
-            if shutdown.load(Ordering::SeqCst) {
-                // One last non-blocking drain attempt, then exit.
-                let drained = {
-                    let guard = rx.lock().expect("batch queue poisoned");
-                    guard.try_recv().ok()
-                };
-                match drained {
-                    Some(b) => {
-                        execute_batch(&rt, b, &stats);
-                        continue;
-                    }
-                    None => break,
-                }
-            }
-            continue;
-        };
-        execute_batch(&rt, batch, &stats);
-    }
-}
-
-fn execute_batch(rt: &ModelRuntime, batch: Batch, stats: &ServerStats) {
     let n = batch.requests.len();
     if n == 0 {
         return;
@@ -262,7 +348,18 @@ fn execute_batch(rt: &ModelRuntime, batch: Batch, stats: &ServerStats) {
         x.extend_from_slice(&r.image);
     }
     let t0 = Instant::now();
-    match rt.infer_padded(&x, n) {
+    // Contain backend panics (e.g. an FFI fault inside PJRT): a panic must
+    // fail this batch like any engine error, not kill the worker thread —
+    // a dead worker would let its ring fill and wedge the dispatcher's
+    // full-ring backoff forever, hanging shutdown. (The old mpsc design
+    // self-healed via receiver disconnect; rings need the worker alive.)
+    let inferred = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        backend.infer_padded(&x, n)
+    }))
+    .unwrap_or_else(|_| {
+        Err(Error::Xla("engine panicked during batch execution".into()))
+    });
+    match inferred {
         Ok(logits) => {
             let exec_s = t0.elapsed().as_secs_f64();
             stats.on_batch(n, exec_s);
@@ -275,19 +372,16 @@ fn execute_batch(rt: &ModelRuntime, batch: Batch, stats: &ServerStats) {
                     latency_s,
                 };
                 let _ = req.resp.send(resp); // client may have gone away
+                gate.exit();
             }
         }
         Err(e) => {
-            stats.on_error();
-            log::error!("batch of {n} failed: {e}");
-            // Complete with empty logits so clients unblock.
-            for req in batch.requests {
-                let _ = req.resp.send(Response {
-                    id: req.id,
-                    logits: vec![f32::NAN; NUM_CLASSES],
-                    latency_s: req.enqueued.elapsed().as_secs_f64(),
-                });
-            }
+            eprintln!("engine [{}]: batch of {n} failed: {e}", backend.label());
+            // Completes every request with NaN logits (clients unblock and
+            // can distinguish failure via `Response::is_error`) and
+            // releases admission — same protocol as an undispatchable
+            // batch.
+            batcher::fail_batch(batch, stats, gate);
         }
     }
 }

@@ -4,6 +4,13 @@
 //! and shed early under overload rather than letting queue latency grow
 //! without bound. [`AdmissionGate`] is that bound: a cheap atomic
 //! depth counter consulted at submit time (no lock on the hot path).
+//!
+//! Wiring: `Server::submit` calls [`AdmissionGate::try_enter`] and maps
+//! [`Admission::Shed`] to `Error::Overloaded` (a fast reject — nothing is
+//! queued); the engine releases the slot via [`AdmissionGate::exit`] after
+//! the response is sent. The gate therefore bounds *total in-flight work*
+//! (submit queue + work rings + executing), which is also what guarantees
+//! the sharded dispatcher's full-ring backoff always clears.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 

@@ -16,6 +16,8 @@ pub struct ServerStats {
     dispatched_requests: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
+    /// Batches an idle engine stole from a neighbour's work ring.
+    steals: AtomicU64,
     exec_time_us: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -31,6 +33,7 @@ impl ServerStats {
             dispatched_requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
             exec_time_us: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
@@ -62,6 +65,10 @@ impl ServerStats {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn on_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> StatsSnapshot {
         let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
         lat.sort_unstable();
@@ -79,6 +86,10 @@ impl ServerStats {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
             errors: self.errors.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            // Admission-level sheds live on the gate, not here; the
+            // Server overlays the real figure in `Server::stats()`.
+            shed: 0,
             batches,
             mean_batch_size: if batches > 0 {
                 self.dispatched_requests.load(Ordering::Relaxed) as f64 / batches as f64
@@ -107,6 +118,11 @@ pub struct StatsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
+    /// Batches executed by an engine other than the one they were
+    /// dispatched to (work stealing).
+    pub steals: u64,
+    /// Requests fast-rejected by admission control (never queued).
+    pub shed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub throughput_rps: f64,
@@ -121,11 +137,13 @@ pub struct StatsSnapshot {
 impl StatsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "served {}/{} ({} errors) in {:.2}s | {:.0} req/s | \
+            "served {}/{} ({} errors, {} shed, {} steals) in {:.2}s | {:.0} req/s | \
              batches {} (mean {:.1}) | latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
             self.completed,
             self.submitted,
             self.errors,
+            self.shed,
+            self.steals,
             self.elapsed_s,
             self.throughput_rps,
             self.batches,

@@ -17,6 +17,9 @@
 //! * [`sim`] — cycle-level streaming-dataflow simulator that *measures*
 //!   latency/throughput of a configured accelerator (Table I's measured
 //!   columns);
+//! * [`traffic`] — shared arrival-process model (saturated / periodic /
+//!   Poisson / burst / replay) driving both the simulator and the serving
+//!   load generator, so simulated and served throughput are comparable;
 //! * [`runtime`] — xla/PJRT wrapper that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them on the request path;
 //! * [`coordinator`] — the serving loop: request queue, dynamic batcher,
@@ -41,6 +44,7 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod sparsity;
+pub mod traffic;
 pub mod util;
 pub mod weights;
 

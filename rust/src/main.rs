@@ -12,7 +12,7 @@
 //! ```
 
 use logicsparse::config::PruneProfile;
-use logicsparse::coordinator::{BatchPolicy, Server, ServerOptions};
+use logicsparse::coordinator::{BatchPolicy, EngineBackend, Server, ServerOptions};
 use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
 use logicsparse::graph::builder::lenet5;
@@ -190,7 +190,7 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     opts.extend([
         Opt { name: "strategy", takes_value: true, default: Some("proposed"), help: "strategy to simulate" },
         Opt { name: "frames", takes_value: true, default: Some("500"), help: "frames" },
-        Opt { name: "traffic", takes_value: true, default: Some("saturated"), help: "saturated|poisson:<fps>|periodic:<cycles>" },
+        Opt { name: "traffic", takes_value: true, default: Some("saturated"), help: "saturated|poisson:<fps>|periodic:<cycles>|burst:<size>:<gap_cycles>" },
         Opt { name: "fifo-depth", takes_value: true, default: Some("8"), help: "inter-stage FIFO depth" },
     ]);
     let a = cli::parse(argv, &opts)?;
@@ -206,27 +206,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
 
     let r = dse::run(strategy, &g, &dev, &profile, &DseOptions::default())?;
     let mut pipe = sim::build(&g, &r.folding, &dev, depth)?;
-    let traffic = a.req("traffic")?;
-    let wl = if traffic == "saturated" {
-        sim::Workload::Saturated { frames }
-    } else if let Some(fps) = traffic.strip_prefix("poisson:") {
-        sim::Workload::Poisson {
-            frames,
-            rate_fps: fps.parse().map_err(|_| {
-                logicsparse::Error::config(format!("bad poisson rate '{fps}'"))
-            })?,
-            seed: 7,
-        }
-    } else if let Some(cyc) = traffic.strip_prefix("periodic:") {
-        sim::Workload::Periodic {
-            frames,
-            interval_cycles: cyc.parse().map_err(|_| {
-                logicsparse::Error::config(format!("bad period '{cyc}'"))
-            })?,
-        }
-    } else {
-        return Err(logicsparse::Error::config(format!("unknown traffic '{traffic}'")));
-    };
+    // The spec grammar lives in the shared traffic module — the same
+    // shapes the serving load generator replays.
+    let wl = sim::Workload::parse(a.req("traffic")?, frames)?;
     let rep = pipe.try_run(&wl)?;
     println!("{}", rep.render());
     Ok(())
@@ -240,6 +222,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "max-batch", takes_value: true, default: Some("32"), help: "batcher max batch" },
         Opt { name: "max-wait-us", takes_value: true, default: Some("2000"), help: "batcher deadline (us)" },
         Opt { name: "engines", takes_value: true, default: Some("1"), help: "engine replicas" },
+        Opt { name: "admission", takes_value: true, default: Some("1024"), help: "in-flight admission bound (overload sheds)" },
+        Opt { name: "queue-depth", takes_value: true, default: Some("16"), help: "per-engine work-ring depth (batches)" },
+        Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
     ]);
     let a = cli::parse(argv, &opts)?;
     if a.flag("help") {
@@ -249,14 +234,31 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let artifacts = a.req("artifacts")?;
     let tag = a.req("tag")?;
     let n_req = a.get_usize("requests")?.unwrap_or(2048);
-
-    // Load the exported test set.
-    let ts = Store::read_file(std::path::Path::new(artifacts).join("testset.lstw"))?;
-    let images = ts.req("images")?;
-    let labels = ts.req("labels")?.data.as_i32()?.to_vec();
     let px = runtime::IMG * runtime::IMG;
+
+    // Backend + request stream: the exported test set through PJRT, or —
+    // with --synthetic-us — generated images through the synthetic engine
+    // (serving-plane exercise without artifacts).
+    let (backend, imgs, labels) = match a.get_usize("synthetic-us")? {
+        Some(us) => {
+            let (imgs, labels) = runtime::SyntheticRuntime::dataset(512);
+            let backend = EngineBackend::Synthetic {
+                per_image: Duration::from_micros(us as u64),
+            };
+            (backend, imgs, labels)
+        }
+        None => {
+            let ts = Store::read_file(std::path::Path::new(artifacts).join("testset.lstw"))?;
+            let imgs = ts.req("images")?.data.as_f32()?.to_vec();
+            let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+            let backend = EngineBackend::Artifacts {
+                dir: artifacts.to_string(),
+                tag: tag.to_string(),
+            };
+            (backend, imgs, labels)
+        }
+    };
     let n_avail = labels.len();
-    let imgs = images.data.as_f32()?;
 
     let server = Server::start(ServerOptions {
         policy: BatchPolicy {
@@ -264,8 +266,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             max_wait: Duration::from_micros(a.get_usize("max-wait-us")?.unwrap_or(2000) as u64),
         },
         engines: a.get_usize("engines")?.unwrap_or(1),
-        artifacts_dir: artifacts.to_string(),
-        tag: tag.to_string(),
+        backend,
+        admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
+        queue_depth: a.get_usize("queue-depth")?.unwrap_or(16),
     })?;
     println!("serving tag '{tag}' from {artifacts} ({n_avail} test images)");
 
@@ -274,8 +277,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     for i in 0..n_req {
         let j = i % n_avail;
-        let img = imgs[j * px..(j + 1) * px].to_vec();
-        pending.push((server.submit(img)?, labels[j]));
+        // Closed-loop client: when admission sheds, back off and retry.
+        let rx = loop {
+            match server.submit(imgs[j * px..(j + 1) * px].to_vec()) {
+                Ok(rx) => break rx,
+                Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
+                Err(e) => return Err(e),
+            }
+        };
+        pending.push((rx, labels[j]));
         // Keep a bounded in-flight window, like a real client pool.
         if pending.len() >= 256 {
             for (rx, label) in pending.drain(..) {

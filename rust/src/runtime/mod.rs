@@ -143,6 +143,115 @@ impl ModelRuntime {
     }
 }
 
+/// Engine-side inference abstraction: the sharded execution plane drives
+/// any backend that can execute one padded batch. [`ModelRuntime`] (PJRT
+/// over AOT artifacts) is the production backend; [`SyntheticRuntime`] is
+/// a deterministic stand-in with a configurable per-image cost, so the
+/// serving plane — queues, stealing, admission, shutdown — can be
+/// exercised and benchmarked *engine-free* (no artifacts, no XLA).
+///
+/// Backends are constructed inside their engine thread (the PJRT client is
+/// `Rc`-based and not `Send`), so the trait itself needs no `Send` bound.
+pub trait InferenceBackend {
+    /// Run `n` images (`x.len() == n * IMG * IMG`); return `n *
+    /// NUM_CLASSES` logits.
+    fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>>;
+
+    /// Human-readable backend label for logs and reports.
+    fn label(&self) -> String;
+}
+
+impl InferenceBackend for ModelRuntime {
+    fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        ModelRuntime::infer_padded(self, x, n)
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt/{}", self.tag)
+    }
+}
+
+/// Deterministic synthetic backend: burns `per_image` of wall time per
+/// image (sleep, so replicas scale on any core count) and classifies by a
+/// fixed stripe-sum rule — the logit for class `c` is the sum of pixels
+/// whose index ≡ c (mod `NUM_CLASSES`). Same image in, same class out,
+/// which lets serving tests assert end-to-end correctness without weights.
+pub struct SyntheticRuntime {
+    pub per_image: std::time::Duration,
+}
+
+impl SyntheticRuntime {
+    pub fn new(per_image: std::time::Duration) -> Self {
+        SyntheticRuntime { per_image }
+    }
+
+    /// The class this backend will assign to `image` (for test oracles).
+    pub fn expected_class(image: &[f32]) -> usize {
+        let mut logits = vec![0.0f32; NUM_CLASSES];
+        for (j, &v) in image.iter().enumerate() {
+            logits[j % NUM_CLASSES] += v;
+        }
+        argmax_classes(&logits)[0]
+    }
+
+    /// A deterministic test image this backend classifies as
+    /// `class % NUM_CLASSES`: ones on exactly that stripe. The single
+    /// source for synthetic request streams (tests, benches, CLI), so
+    /// generators can never drift from the classifier rule above.
+    pub fn stripe_image(class: usize) -> Vec<f32> {
+        let px = IMG * IMG;
+        let mut img = vec![0.0f32; px];
+        let mut j = class % NUM_CLASSES;
+        while j < px {
+            img[j] = 1.0;
+            j += NUM_CLASSES;
+        }
+        img
+    }
+
+    /// A deterministic synthetic test set: `n` stripe images (flattened,
+    /// testset.lstw layout) with their expected labels — the engine-free
+    /// stand-in for the exported test set, shared by the CLI and examples.
+    pub fn dataset(n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut images = Vec::with_capacity(n * IMG * IMG);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let img = Self::stripe_image(i);
+            labels.push(Self::expected_class(&img) as i32);
+            images.extend_from_slice(&img);
+        }
+        (images, labels)
+    }
+}
+
+impl InferenceBackend for SyntheticRuntime {
+    fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let px = IMG * IMG;
+        if x.len() != n * px {
+            return Err(Error::Xla(format!(
+                "synthetic backend: expected {n}*{px} inputs, got {}",
+                x.len()
+            )));
+        }
+        if !self.per_image.is_zero() {
+            std::thread::sleep(self.per_image * n as u32);
+        }
+        let mut out = vec![0.0f32; n * NUM_CLASSES];
+        for i in 0..n {
+            let row = &x[i * px..(i + 1) * px];
+            let logits = &mut out[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+            for (j, &v) in row.iter().enumerate() {
+                logits[j % NUM_CLASSES] += v;
+            }
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        format!("synthetic/{}us", self.per_image.as_micros())
+    }
+}
+
 /// argmax over each row of `logits` ([n, NUM_CLASSES] flattened).
 pub fn argmax_classes(logits: &[f32]) -> Vec<usize> {
     logits
@@ -160,6 +269,33 @@ pub fn argmax_classes(logits: &[f32]) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_backend_is_deterministic_and_shaped() {
+        let be = SyntheticRuntime::new(std::time::Duration::ZERO);
+        let px = IMG * IMG;
+        let mut x = vec![0.0f32; 2 * px];
+        // Image 0 biased toward class 3, image 1 toward class 7.
+        for j in (3..px).step_by(NUM_CLASSES) {
+            x[j] = 1.0;
+        }
+        for j in (7..px).step_by(NUM_CLASSES) {
+            x[px + j] = 1.0;
+        }
+        let logits = InferenceBackend::infer_padded(&be, &x, 2).unwrap();
+        assert_eq!(logits.len(), 2 * NUM_CLASSES);
+        assert_eq!(argmax_classes(&logits), vec![3, 7]);
+        assert_eq!(SyntheticRuntime::expected_class(&x[..px]), 3);
+        assert_eq!(SyntheticRuntime::expected_class(&x[px..]), 7);
+        // Generator and classifier agree for every class.
+        for c in 0..NUM_CLASSES {
+            let img = SyntheticRuntime::stripe_image(c);
+            assert_eq!(img.len(), px);
+            assert_eq!(SyntheticRuntime::expected_class(&img), c);
+        }
+        // Length mismatch is rejected.
+        assert!(InferenceBackend::infer_padded(&be, &x, 3).is_err());
+    }
 
     #[test]
     fn argmax_rows() {

@@ -21,7 +21,11 @@ pub mod pipeline;
 pub mod stage;
 
 pub use metrics::SimReport;
-pub use pipeline::{Pipeline, Workload};
+pub use pipeline::Pipeline;
+// `Workload` moved to the shared `traffic` module (one arrival-process
+// implementation for simulator and server); the historical `sim::Workload`
+// path keeps working through this re-export.
+pub use crate::traffic::Workload;
 
 use crate::cost;
 use crate::device::Device;

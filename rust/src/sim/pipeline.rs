@@ -11,53 +11,15 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::util::error::{Error, Result};
-use crate::util::rng::Pcg32;
 
 use super::fifo::Fifo;
 use super::metrics::SimReport;
 use super::stage::{Kind, StageSpec, StageState};
 
-/// Input traffic shape.
-#[derive(Debug, Clone)]
-pub enum Workload {
-    /// Back-to-back frames (throughput measurement — Table I).
-    Saturated { frames: u64 },
-    /// Fixed inter-arrival interval in cycles.
-    Periodic { frames: u64, interval_cycles: u64 },
-    /// Poisson arrivals at `rate_fps` given the pipeline clock.
-    Poisson { frames: u64, rate_fps: f64, seed: u64 },
-}
-
-impl Workload {
-    pub fn frames(&self) -> u64 {
-        match self {
-            Workload::Saturated { frames }
-            | Workload::Periodic { frames, .. }
-            | Workload::Poisson { frames, .. } => *frames,
-        }
-    }
-
-    /// Arrival times in cycles.
-    pub fn arrivals(&self, f_mhz: f64) -> Vec<u64> {
-        match *self {
-            Workload::Saturated { frames } => vec![0; frames as usize],
-            Workload::Periodic { frames, interval_cycles } => {
-                (0..frames).map(|f| f * interval_cycles).collect()
-            }
-            Workload::Poisson { frames, rate_fps, seed } => {
-                let mut rng = Pcg32::seeded(seed);
-                let cycles_per_frame = f_mhz * 1e6 / rate_fps;
-                let mut t = 0.0;
-                (0..frames)
-                    .map(|_| {
-                        t += rng.exp(1.0) * cycles_per_frame;
-                        t as u64
-                    })
-                    .collect()
-            }
-        }
-    }
-}
+// The workload model lives in the shared `traffic` module now (the serving
+// load generator samples the same arrival processes); re-exported here so
+// `sim::pipeline::Workload` keeps resolving.
+pub use crate::traffic::Workload;
 
 /// Result of one actor activation.
 struct Activation {
@@ -416,6 +378,30 @@ mod tests {
             .try_run(&Workload::Poisson { frames: 25, rate_fps: 50_000.0, seed: 9 })
             .unwrap();
         assert_eq!(rep.frames, 25);
+    }
+
+    #[test]
+    fn burst_arrivals_complete() {
+        // Burst shape from the shared traffic model drives the simulator
+        // exactly like the classic shapes.
+        let mut p = Pipeline::new(lenet_specs(1), 16, 200.0);
+        let rep = p
+            .try_run(&Workload::Burst { frames: 24, burst: 6, gap_cycles: 50_000, seed: 4 })
+            .unwrap();
+        assert_eq!(rep.frames, 24);
+        assert!(rep.completions.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn replay_trace_drives_sim() {
+        let mut p = Pipeline::new(lenet_specs(1), 16, 200.0);
+        let trace: Vec<u64> = (0..10).map(|k| k * 40_000).collect();
+        let rep = p.try_run(&Workload::Replay { arrival_cycles: trace.clone() }).unwrap();
+        assert_eq!(rep.frames, 10);
+        let arr = Workload::Replay { arrival_cycles: trace }.arrivals(200.0);
+        for (c, a) in rep.completions.iter().zip(&arr) {
+            assert!(c > a);
+        }
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Unified traffic model: one source of truth for arrival processes,
+//! consumed by **both** the cycle-level simulator (`sim`) and the serving
+//! load generator (`coordinator::loadgen`). Before this module existed the
+//! simulator's `Workload` and the server's ad-hoc client loops were
+//! separate worlds, so Table-I-style *measured* claims and served-traffic
+//! claims could never be compared under the same arrivals.
+//!
+//! Two layers:
+//!
+//! * [`Traffic`] — the shared model. Shapes are parameterised in
+//!   **seconds** ([`Shape`]); [`Traffic::schedule`] yields monotone arrival
+//!   offsets that the load generator replays against the wall clock and
+//!   the simulator converts to cycles via its pipeline clock
+//!   ([`Traffic::to_cycles`]).
+//! * [`Workload`] — the simulator-facing cycle-domain wrapper (previously
+//!   defined in `sim::pipeline`, extracted here). Its variants keep their
+//!   historical cycle/fps parameters; arrival generation delegates to
+//!   [`Traffic`], so both consumers sample the identical process.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Arrival-process shape, parameterised in seconds.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    /// Every event available at t=0: back-to-back input, the saturated
+    /// throughput measurement (Table I).
+    Saturated,
+    /// Fixed inter-arrival interval.
+    Periodic { interval_s: f64 },
+    /// Memoryless arrivals at `rate_eps` events per second.
+    Poisson { rate_eps: f64, seed: u64 },
+    /// Bursts of `size` back-to-back events separated by exponentially
+    /// distributed gaps with mean `gap_s` (bursty open-loop clients).
+    Burst { size: u64, gap_s: f64, seed: u64 },
+    /// Replay a recorded trace of absolute offsets in seconds (sorted
+    /// internally; the event count is the trace length).
+    Replay { times_s: Vec<f64> },
+}
+
+/// A finite arrival process: `events` arrivals drawn from `shape`.
+#[derive(Debug, Clone)]
+pub struct Traffic {
+    pub events: u64,
+    pub shape: Shape,
+}
+
+impl Traffic {
+    pub fn saturated(events: u64) -> Traffic {
+        Traffic { events, shape: Shape::Saturated }
+    }
+
+    pub fn periodic(events: u64, interval_s: f64) -> Traffic {
+        Traffic { events, shape: Shape::Periodic { interval_s } }
+    }
+
+    pub fn poisson(events: u64, rate_eps: f64, seed: u64) -> Traffic {
+        Traffic { events, shape: Shape::Poisson { rate_eps, seed } }
+    }
+
+    pub fn bursty(events: u64, size: u64, gap_s: f64, seed: u64) -> Traffic {
+        Traffic { events, shape: Shape::Burst { size, gap_s, seed } }
+    }
+
+    pub fn replay(times_s: Vec<f64>) -> Traffic {
+        Traffic { events: times_s.len() as u64, shape: Shape::Replay { times_s } }
+    }
+
+    /// Number of arrivals this model will generate.
+    pub fn events(&self) -> u64 {
+        match &self.shape {
+            Shape::Replay { times_s } => self.events.min(times_s.len() as u64),
+            _ => self.events,
+        }
+    }
+
+    /// Monotone non-decreasing arrival offsets in seconds, starting at or
+    /// after 0. Deterministic given the shape (seeds included).
+    pub fn schedule(&self) -> Vec<f64> {
+        let n = self.events();
+        match &self.shape {
+            Shape::Saturated => vec![0.0; n as usize],
+            Shape::Periodic { interval_s } => {
+                (0..n).map(|k| k as f64 * interval_s).collect()
+            }
+            Shape::Poisson { rate_eps, seed } => {
+                assert!(*rate_eps > 0.0, "poisson rate must be > 0");
+                let mut rng = Pcg32::seeded(*seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(*rate_eps);
+                        t
+                    })
+                    .collect()
+            }
+            Shape::Burst { size, gap_s, seed } => {
+                assert!(*size >= 1, "burst size must be >= 1");
+                let mut rng = Pcg32::seeded(*seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|k| {
+                        if k > 0 && k % size == 0 {
+                            t += if *gap_s > 0.0 { rng.exp(1.0 / gap_s) } else { 0.0 };
+                        }
+                        t
+                    })
+                    .collect()
+            }
+            Shape::Replay { times_s } => {
+                let mut ts: Vec<f64> = times_s[..n as usize].to_vec();
+                ts.sort_by(|a, b| a.partial_cmp(b).expect("NaN in replay trace"));
+                ts
+            }
+        }
+    }
+
+    /// The schedule in cycles of a clock running at `f_mhz` MHz — what the
+    /// cycle simulator feeds its source actor.
+    pub fn to_cycles(&self, f_mhz: f64) -> Vec<u64> {
+        let hz = f_mhz * 1e6;
+        self.schedule().iter().map(|&t| (t * hz).round().max(0.0) as u64).collect()
+    }
+}
+
+/// Cycle-domain workload for the simulator. Extracted from `sim::pipeline`
+/// and re-exported there; arrival generation is shared with the serving
+/// load generator through [`Traffic`].
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Back-to-back frames (throughput measurement — Table I).
+    Saturated { frames: u64 },
+    /// Fixed inter-arrival interval in cycles.
+    Periodic { frames: u64, interval_cycles: u64 },
+    /// Poisson arrivals at `rate_fps` given the pipeline clock.
+    Poisson { frames: u64, rate_fps: f64, seed: u64 },
+    /// Bursts of `burst` back-to-back frames, mean `gap_cycles` apart.
+    Burst { frames: u64, burst: u64, gap_cycles: u64, seed: u64 },
+    /// Replay a recorded arrival trace (cycles, sorted internally).
+    Replay { arrival_cycles: Vec<u64> },
+}
+
+impl Workload {
+    pub fn frames(&self) -> u64 {
+        match self {
+            Workload::Saturated { frames }
+            | Workload::Periodic { frames, .. }
+            | Workload::Poisson { frames, .. }
+            | Workload::Burst { frames, .. } => *frames,
+            Workload::Replay { arrival_cycles } => arrival_cycles.len() as u64,
+        }
+    }
+
+    /// The equivalent time-domain [`Traffic`] under a clock of `f_mhz`.
+    pub fn traffic(&self, f_mhz: f64) -> Traffic {
+        let hz = f_mhz * 1e6;
+        match self {
+            Workload::Saturated { frames } => Traffic::saturated(*frames),
+            Workload::Periodic { frames, interval_cycles } => {
+                Traffic::periodic(*frames, *interval_cycles as f64 / hz)
+            }
+            Workload::Poisson { frames, rate_fps, seed } => {
+                Traffic::poisson(*frames, *rate_fps, *seed)
+            }
+            Workload::Burst { frames, burst, gap_cycles, seed } => {
+                Traffic::bursty(*frames, *burst, *gap_cycles as f64 / hz, *seed)
+            }
+            Workload::Replay { arrival_cycles } => {
+                Traffic::replay(arrival_cycles.iter().map(|&c| c as f64 / hz).collect())
+            }
+        }
+    }
+
+    /// Arrival times in cycles (what `sim::Pipeline` consumes).
+    pub fn arrivals(&self, f_mhz: f64) -> Vec<u64> {
+        self.traffic(f_mhz).to_cycles(f_mhz)
+    }
+
+    /// Parse a CLI traffic spec:
+    /// `saturated` | `poisson:<fps>` | `periodic:<cycles>` |
+    /// `burst:<size>:<gap_cycles>`.
+    pub fn parse(spec: &str, frames: u64) -> Result<Workload> {
+        if spec == "saturated" {
+            return Ok(Workload::Saturated { frames });
+        }
+        if let Some(fps) = spec.strip_prefix("poisson:") {
+            let rate_fps: f64 = fps
+                .parse()
+                .map_err(|_| Error::config(format!("bad poisson rate '{fps}'")))?;
+            if !(rate_fps > 0.0) || !rate_fps.is_finite() {
+                return Err(Error::config(format!(
+                    "poisson rate must be a positive finite fps, got '{fps}'"
+                )));
+            }
+            return Ok(Workload::Poisson { frames, rate_fps, seed: 7 });
+        }
+        if let Some(cyc) = spec.strip_prefix("periodic:") {
+            let interval_cycles = cyc
+                .parse()
+                .map_err(|_| Error::config(format!("bad period '{cyc}'")))?;
+            return Ok(Workload::Periodic { frames, interval_cycles });
+        }
+        if let Some(rest) = spec.strip_prefix("burst:") {
+            let (size, gap) = rest
+                .split_once(':')
+                .ok_or_else(|| Error::config(format!("burst spec '{rest}' wants <size>:<gap_cycles>")))?;
+            let burst: u64 = size
+                .parse()
+                .map_err(|_| Error::config(format!("bad burst size '{size}'")))?;
+            if burst == 0 {
+                return Err(Error::config("burst size must be >= 1"));
+            }
+            let gap_cycles = gap
+                .parse()
+                .map_err(|_| Error::config(format!("bad burst gap '{gap}'")))?;
+            return Ok(Workload::Burst { frames, burst, gap_cycles, seed: 7 });
+        }
+        Err(Error::config(format!(
+            "unknown traffic '{spec}' (saturated|poisson:<fps>|periodic:<cycles>|burst:<size>:<gap_cycles>)"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturated_is_all_zero() {
+        let t = Traffic::saturated(5);
+        assert_eq!(t.schedule(), vec![0.0; 5]);
+        assert_eq!(t.to_cycles(200.0), vec![0; 5]);
+    }
+
+    #[test]
+    fn periodic_cycles_roundtrip_exactly() {
+        // Workload::Periodic{interval_cycles} -> seconds -> cycles must
+        // land back on exact multiples of the interval.
+        let wl = Workload::Periodic { frames: 100, interval_cycles: 2357 };
+        let arr = wl.arrivals(212.5);
+        assert_eq!(arr.len(), 100);
+        for (k, &a) in arr.iter().enumerate() {
+            assert_eq!(a, k as u64 * 2357, "frame {k}");
+        }
+    }
+
+    #[test]
+    fn poisson_is_monotone_deterministic_and_rate_accurate() {
+        let t = Traffic::poisson(4000, 1000.0, 11);
+        let s1 = t.schedule();
+        let s2 = t.schedule();
+        assert_eq!(s1, s2, "same seed must replay identically");
+        assert!(s1.windows(2).all(|w| w[0] <= w[1]));
+        // Mean inter-arrival ~ 1/rate.
+        let mean = s1.last().unwrap() / s1.len() as f64;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn poisson_seeds_differ() {
+        let a = Traffic::poisson(50, 1000.0, 1).schedule();
+        let b = Traffic::poisson(50, 1000.0, 2).schedule();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn burst_groups_share_arrival_time() {
+        let t = Traffic::bursty(12, 4, 0.01, 3);
+        let s = t.schedule();
+        assert_eq!(s.len(), 12);
+        for chunk in s.chunks(4) {
+            assert!(chunk.iter().all(|&x| x == chunk[0]), "burst not aligned");
+        }
+        // Gaps strictly positive between bursts.
+        assert!(s[4] > s[3] && s[8] > s[7]);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn replay_sorts_and_bounds_events() {
+        let t = Traffic::replay(vec![0.3, 0.1, 0.2]);
+        assert_eq!(t.events(), 3);
+        assert_eq!(t.schedule(), vec![0.1, 0.2, 0.3]);
+        let wl = Workload::Replay { arrival_cycles: vec![300, 100, 200] };
+        assert_eq!(wl.frames(), 3);
+        assert_eq!(wl.arrivals(200.0), vec![100, 200, 300]);
+    }
+
+    #[test]
+    fn workload_and_traffic_sample_identical_processes() {
+        // The cycle-domain wrapper and the time-domain model must produce
+        // the same Poisson process (same seed, same rate) up to the cycle
+        // rounding — the whole point of the shared module.
+        let f_mhz = 200.0;
+        let wl = Workload::Poisson { frames: 64, rate_fps: 50_000.0, seed: 9 };
+        let direct = Traffic::poisson(64, 50_000.0, 9).to_cycles(f_mhz);
+        assert_eq!(wl.arrivals(f_mhz), direct);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(matches!(
+            Workload::parse("saturated", 10),
+            Ok(Workload::Saturated { frames: 10 })
+        ));
+        assert!(matches!(
+            Workload::parse("poisson:5000", 10),
+            Ok(Workload::Poisson { frames: 10, .. })
+        ));
+        assert!(matches!(
+            Workload::parse("periodic:2000", 10),
+            Ok(Workload::Periodic { frames: 10, interval_cycles: 2000 })
+        ));
+        assert!(matches!(
+            Workload::parse("burst:8:1000", 10),
+            Ok(Workload::Burst { frames: 10, burst: 8, gap_cycles: 1000, .. })
+        ));
+        assert!(Workload::parse("nope", 10).is_err());
+        assert!(Workload::parse("burst:8", 10).is_err());
+        // Value validation: syntactically fine specs with values that
+        // would panic downstream must fail here instead.
+        assert!(Workload::parse("poisson:0", 10).is_err());
+        assert!(Workload::parse("poisson:-5", 10).is_err());
+        assert!(Workload::parse("poisson:nan", 10).is_err());
+        assert!(Workload::parse("burst:0:1000", 10).is_err());
+    }
+}

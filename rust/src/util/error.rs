@@ -30,6 +30,9 @@ pub enum Error {
     Xla(String),
     /// Serving-path failures (queue closed, batcher shutdown).
     QueueClosed,
+    /// Admission control shed the request: the in-flight bound is hit.
+    /// A fast reject at submit time — retry later or drop (never queued).
+    Overloaded,
     /// Config file / CLI argument problems.
     Config(String),
 }
@@ -46,6 +49,7 @@ impl fmt::Display for Error {
             Error::Sim(m) => write!(f, "sim: {m}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
             Error::QueueClosed => write!(f, "request queue closed"),
+            Error::Overloaded => write!(f, "overloaded: admission queue full, request shed"),
             Error::Config(m) => write!(f, "config: {m}"),
         }
     }

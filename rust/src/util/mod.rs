@@ -9,5 +9,6 @@ pub mod error;
 pub mod json;
 pub mod lstw;
 pub mod propcheck;
+pub mod ring;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,424 @@
+//! Bounded MPMC ring queue + thread parker (substrate S18) — the
+//! first-party building blocks of the sharded execution plane
+//! (`coordinator::shard`); crossbeam is unavailable offline.
+//!
+//! [`RingQueue`] is a fixed-capacity multi-producer/multi-consumer queue
+//! over pre-allocated ring storage. Every operation is a short critical
+//! section (one lock, no allocation after construction); blocking is
+//! layered on top with [`Parker`], so a work-stealing consumer can probe
+//! many queues cheaply and only sleep once *all* of them came up empty.
+//! Close semantics are drain-friendly: after [`RingQueue::close`] pushes
+//! fail immediately, but pops keep draining and report [`PopError::Closed`]
+//! only once the queue is also empty — exactly the contract deterministic
+//! shutdown needs (no token may be lost between "stop producing" and
+//! "workers exited").
+//!
+//! [`Parker`] has crossbeam-style single-token semantics: `unpark` deposits
+//! a token; `park*` consumes it or blocks. A token deposited while the
+//! owner is running makes the *next* park return immediately, which closes
+//! the classic "checked empty → producer pushed + unparked → consumer
+//! parks forever" race.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused. The value is handed back so callers can retry
+/// or redirect it without a clone.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity.
+    Full(T),
+    /// Queue closed for producers.
+    Closed(T),
+}
+
+/// Why a pop returned nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopError {
+    /// Nothing queued right now (more may arrive).
+    Empty,
+    /// Closed **and** fully drained — no item will ever arrive.
+    Closed,
+}
+
+struct RingState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue with drain-friendly close.
+pub struct RingQueue<T> {
+    state: Mutex<RingState<T>>,
+    /// Signalled on push and on close (for blocked `pop_timeout` callers).
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> RingQueue<T> {
+    /// A queue holding at most `capacity` items (>= 1); storage is
+    /// allocated once, here.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "ring capacity must be >= 1");
+        RingQueue {
+            state: Mutex::new(RingState {
+                buf: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("ring poisoned").buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().expect("ring poisoned").closed
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().expect("ring poisoned");
+        if st.closed {
+            return Err(PushError::Closed(v));
+        }
+        if st.buf.len() >= self.capacity {
+            return Err(PushError::Full(v));
+        }
+        st.buf.push_back(v);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking pop. `Err(Closed)` means closed and drained.
+    pub fn try_pop(&self) -> Result<T, PopError> {
+        let mut st = self.state.lock().expect("ring poisoned");
+        match st.buf.pop_front() {
+            Some(v) => Ok(v),
+            None if st.closed => Err(PopError::Closed),
+            None => Err(PopError::Empty),
+        }
+    }
+
+    /// Pop, blocking up to `timeout` for an item. `Err(Empty)` on timeout,
+    /// `Err(Closed)` once closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("ring poisoned");
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                return Ok(v);
+            }
+            if st.closed {
+                return Err(PopError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PopError::Empty);
+            }
+            let (guard, _timed_out) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .expect("ring poisoned");
+            st = guard;
+        }
+    }
+
+    /// Stop producers: subsequent pushes fail, pops drain the remainder.
+    /// Idempotent; wakes every blocked popper.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("ring poisoned");
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+    }
+}
+
+struct ParkState {
+    token: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Owner half of a one-token parker; hand out [`Unparker`]s to wakers.
+pub struct Parker {
+    inner: Arc<ParkState>,
+}
+
+/// Waker half; cheap to clone and `Send`.
+#[derive(Clone)]
+pub struct Unparker {
+    inner: Arc<ParkState>,
+}
+
+impl Default for Parker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Parker {
+    pub fn new() -> Parker {
+        Parker {
+            inner: Arc::new(ParkState { token: Mutex::new(false), cv: Condvar::new() }),
+        }
+    }
+
+    pub fn unparker(&self) -> Unparker {
+        Unparker { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Block until a token is available, then consume it.
+    pub fn park(&self) {
+        let mut token = self.inner.token.lock().expect("parker poisoned");
+        while !*token {
+            token = self.inner.cv.wait(token).expect("parker poisoned");
+        }
+        *token = false;
+    }
+
+    /// Like [`Parker::park`] but gives up after `timeout`. Returns `true`
+    /// if a token was consumed, `false` on timeout.
+    pub fn park_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut token = self.inner.token.lock().expect("parker poisoned");
+        while !*token {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _timed_out) = self
+                .inner
+                .cv
+                .wait_timeout(token, deadline - now)
+                .expect("parker poisoned");
+            token = guard;
+        }
+        *token = false;
+        true
+    }
+}
+
+impl Unparker {
+    /// Deposit the token (idempotent) and wake the parked owner if any.
+    pub fn unpark(&self) {
+        let mut token = self.inner.token.lock().expect("parker poisoned");
+        *token = true;
+        drop(token);
+        self.inner.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn bounded_capacity_rejects_at_cap() {
+        let q = RingQueue::new(2);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Ok(()));
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Ok(1));
+        assert_eq!(q.try_push(3), Ok(()));
+        assert_eq!(q.try_pop(), Ok(2));
+        assert_eq!(q.try_pop(), Ok(3));
+        assert_eq!(q.try_pop(), Err(PopError::Empty));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = RingQueue::new(4);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        q.close();
+        assert_eq!(q.try_push("c"), Err(PushError::Closed("c")));
+        // Items queued before close are still delivered, in order.
+        assert_eq!(q.try_pop(), Ok("a"));
+        assert_eq!(q.try_pop(), Ok("b"));
+        assert_eq!(q.try_pop(), Err(PopError::Closed));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Err(PopError::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_times_out_then_receives() {
+        let q = Arc::new(RingQueue::new(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(PopError::Empty));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.try_push(99u64).unwrap();
+        });
+        assert_eq!(q.pop_timeout(Duration::from_secs(2)), Ok(99));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = Arc::new(RingQueue::<u8>::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(PopError::Closed));
+    }
+
+    #[test]
+    fn parker_token_prevents_lost_wakeup() {
+        let p = Parker::new();
+        // Token deposited before park: the next park returns immediately.
+        p.unparker().unpark();
+        p.unparker().unpark(); // idempotent — still one token
+        assert!(p.park_timeout(Duration::from_millis(1)));
+        // Token consumed: the next park times out.
+        assert!(!p.park_timeout(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn parker_wakes_across_threads() {
+        let p = Parker::new();
+        let u = p.unparker();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            u.unpark();
+        });
+        assert!(p.park_timeout(Duration::from_secs(2)));
+        h.join().unwrap();
+    }
+
+    /// Multi-threaded property: with P producers each pushing a tagged
+    /// sequence and C consumers draining, no token is lost or duplicated,
+    /// and within each consumer's pop stream every producer's sequence is
+    /// strictly increasing (per-producer FIFO — the strongest order an
+    /// MPMC queue promises; the global interleaving across consumers is
+    /// unordered by design).
+    #[test]
+    fn propcheck_no_loss_no_dup_per_producer_fifo() {
+        check("ring MPMC invariants", 12, |g| {
+            let producers = g.usize(1, 4);
+            let consumers = g.usize(1, 4);
+            let per_producer = g.usize(1, 120);
+            let capacity = g.usize(1, 16);
+            let total = producers * per_producer;
+
+            let q = RingQueue::new(capacity);
+            let popped = AtomicUsize::new(0);
+
+            // One pop stream per consumer, returned through the scope.
+            let streams: Vec<Vec<(usize, usize)>> = std::thread::scope(|s| {
+                for pid in 0..producers {
+                    let q = &q;
+                    s.spawn(move || {
+                        for seq in 0..per_producer {
+                            let mut item = (pid, seq);
+                            loop {
+                                match q.try_push(item) {
+                                    Ok(()) => break,
+                                    Err(PushError::Full(v)) => {
+                                        item = v;
+                                        std::thread::yield_now();
+                                    }
+                                    Err(PushError::Closed(_)) => {
+                                        panic!("queue closed mid-produce")
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+                let handles: Vec<_> = (0..consumers)
+                    .map(|_| {
+                        let q = &q;
+                        let popped = &popped;
+                        s.spawn(move || {
+                            let mut local = Vec::new();
+                            loop {
+                                if popped.load(Ordering::SeqCst) >= total {
+                                    break;
+                                }
+                                match q.try_pop() {
+                                    Ok(item) => {
+                                        popped.fetch_add(1, Ordering::SeqCst);
+                                        local.push(item);
+                                    }
+                                    Err(PopError::Empty) => std::thread::yield_now(),
+                                    Err(PopError::Closed) => break,
+                                }
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            // No loss, no duplication: exact multiset across all streams.
+            let mut by_pid: Vec<Vec<usize>> = vec![Vec::new(); producers];
+            for stream in &streams {
+                // Per-producer FIFO within each consumer's stream.
+                let mut last = vec![None::<usize>; producers];
+                for &(pid, seq) in stream {
+                    if let Some(prev) = last[pid] {
+                        assert!(seq > prev, "producer {pid}: {seq} after {prev}");
+                    }
+                    last[pid] = Some(seq);
+                    by_pid[pid].push(seq);
+                }
+            }
+            for (pid, seqs) in by_pid.iter_mut().enumerate() {
+                seqs.sort_unstable();
+                assert_eq!(
+                    *seqs,
+                    (0..per_producer).collect::<Vec<_>>(),
+                    "producer {pid}: lost or duplicated tokens"
+                );
+            }
+        });
+    }
+
+    /// Under contention the occupancy bound must hold at every instant the
+    /// lock is released; sampling `len()` from a racing thread can never
+    /// observe more than `capacity`.
+    #[test]
+    fn propcheck_occupancy_never_exceeds_capacity() {
+        check("ring occupancy bound", 8, |g| {
+            let capacity = g.usize(1, 8);
+            let q = RingQueue::new(capacity);
+            let done = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                let done = &done;
+                for _ in 0..2 {
+                    let q = &q;
+                    s.spawn(move || {
+                        for i in 0..500u32 {
+                            let _ = q.try_push(i);
+                            if i % 3 == 0 {
+                                let _ = q.try_pop();
+                            }
+                        }
+                        done.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                let q = &q;
+                s.spawn(move || {
+                    while done.load(Ordering::SeqCst) < 2 {
+                        assert!(q.len() <= capacity, "occupancy over capacity");
+                    }
+                });
+            });
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Offline stand-in for the `byteorder` crate (crates.io is unreachable in
+//! the build environment). API-compatible with the subset `util::lstw`
+//! uses: `ReadBytesExt` / `WriteBytesExt` parameterised by `LittleEndian`.
+//!
+//! `BigEndian` is provided for completeness; the LSTW format is LE-only.
+
+use std::io::{self, Read, Write};
+
+/// Byte-order marker trait: converts between integers and byte arrays.
+pub trait ByteOrder {
+    fn read_u16(buf: [u8; 2]) -> u16;
+    fn read_u32(buf: [u8; 4]) -> u32;
+    fn read_u64(buf: [u8; 8]) -> u64;
+    fn write_u16(v: u16) -> [u8; 2];
+    fn write_u32(v: u32) -> [u8; 4];
+    fn write_u64(v: u64) -> [u8; 8];
+}
+
+/// Little-endian byte order (the LSTW interchange order).
+pub enum LittleEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: [u8; 2]) -> u16 {
+        u16::from_le_bytes(buf)
+    }
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_le_bytes(buf)
+    }
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_le_bytes(buf)
+    }
+    fn write_u16(v: u16) -> [u8; 2] {
+        v.to_le_bytes()
+    }
+    fn write_u32(v: u32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+    fn write_u64(v: u64) -> [u8; 8] {
+        v.to_le_bytes()
+    }
+}
+
+/// Big-endian byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for BigEndian {
+    fn read_u16(buf: [u8; 2]) -> u16 {
+        u16::from_be_bytes(buf)
+    }
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_be_bytes(buf)
+    }
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_be_bytes(buf)
+    }
+    fn write_u16(v: u16) -> [u8; 2] {
+        v.to_be_bytes()
+    }
+    fn write_u32(v: u32) -> [u8; 4] {
+        v.to_be_bytes()
+    }
+    fn write_u64(v: u64) -> [u8; 8] {
+        v.to_be_bytes()
+    }
+}
+
+/// `Read` extension: typed little/big-endian reads.
+pub trait ReadBytesExt: Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn read_i8(&mut self) -> io::Result<i8> {
+        Ok(self.read_u8()? as i8)
+    }
+
+    fn read_u16<B: ByteOrder>(&mut self) -> io::Result<u16> {
+        let mut b = [0u8; 2];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u16(b))
+    }
+
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u32(b))
+    }
+
+    fn read_u64<B: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u64(b))
+    }
+
+    fn read_i32<B: ByteOrder>(&mut self) -> io::Result<i32> {
+        Ok(self.read_u32::<B>()? as i32)
+    }
+
+    fn read_f32<B: ByteOrder>(&mut self) -> io::Result<f32> {
+        Ok(f32::from_bits(self.read_u32::<B>()?))
+    }
+}
+
+impl<R: Read + ?Sized> ReadBytesExt for R {}
+
+/// `Write` extension: typed little/big-endian writes.
+pub trait WriteBytesExt: Write {
+    fn write_u8(&mut self, v: u8) -> io::Result<()> {
+        self.write_all(&[v])
+    }
+
+    fn write_i8(&mut self, v: i8) -> io::Result<()> {
+        self.write_all(&[v as u8])
+    }
+
+    fn write_u16<B: ByteOrder>(&mut self, v: u16) -> io::Result<()> {
+        self.write_all(&B::write_u16(v))
+    }
+
+    fn write_u32<B: ByteOrder>(&mut self, v: u32) -> io::Result<()> {
+        self.write_all(&B::write_u32(v))
+    }
+
+    fn write_u64<B: ByteOrder>(&mut self, v: u64) -> io::Result<()> {
+        self.write_all(&B::write_u64(v))
+    }
+
+    fn write_i32<B: ByteOrder>(&mut self, v: i32) -> io::Result<()> {
+        self.write_u32::<B>(v as u32)
+    }
+
+    fn write_f32<B: ByteOrder>(&mut self, v: f32) -> io::Result<()> {
+        self.write_u32::<B>(v.to_bits())
+    }
+}
+
+impl<W: Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_le() {
+        let mut buf = Vec::new();
+        buf.write_u16::<LittleEndian>(0xBEEF).unwrap();
+        buf.write_u32::<LittleEndian>(0xDEAD_BEEF).unwrap();
+        buf.write_u64::<LittleEndian>(0x0123_4567_89AB_CDEF).unwrap();
+        buf.write_f32::<LittleEndian>(-1.5).unwrap();
+        buf.write_i32::<LittleEndian>(-42).unwrap();
+        buf.write_u8(7).unwrap();
+        buf.write_i8(-7).unwrap();
+
+        let mut r = &buf[..];
+        assert_eq!(r.read_u16::<LittleEndian>().unwrap(), 0xBEEF);
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.read_u64::<LittleEndian>().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.read_f32::<LittleEndian>().unwrap(), -1.5);
+        assert_eq!(r.read_i32::<LittleEndian>().unwrap(), -42);
+        assert_eq!(r.read_u8().unwrap(), 7);
+        assert_eq!(r.read_i8().unwrap(), -7);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn le_byte_layout_matches_spec() {
+        let mut buf = Vec::new();
+        buf.write_u32::<LittleEndian>(1).unwrap();
+        assert_eq!(buf, vec![1, 0, 0, 0]);
+        let mut be = Vec::new();
+        be.write_u32::<BigEndian>(1).unwrap();
+        assert_eq!(be, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn short_reads_error() {
+        let mut r: &[u8] = &[1, 2];
+        assert!(r.read_u32::<LittleEndian>().is_err());
+    }
+}

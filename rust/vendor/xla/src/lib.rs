@@ -1,0 +1,187 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings over
+//! xla_extension). crates.io and libxla are unreachable in the build
+//! environment, so this crate provides the exact type surface
+//! `runtime::ModelRuntime` consumes — HLO-text loading and literal
+//! plumbing work, but creating a PJRT client fails with an actionable
+//! error. Everything downstream of the serving coordinator that does not
+//! need real XLA (the sharded execution plane, the synthetic backend, the
+//! cycle simulator) runs unaffected; artifact-backed paths skip or report
+//! the stub error.
+//!
+//! Swapping the real crate back in is a one-line change in the root
+//! Cargo.toml (`xla = "..."` instead of the path dependency).
+
+use std::fmt;
+
+/// XLA error (stub): a message string.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT unavailable: built against the offline xla stub \
+(rust/vendor/xla). Artifact-backed serving needs the real `xla` crate + \
+libxla; use the synthetic engine backend or the cycle simulator instead.";
+
+mod private {
+    /// Element types the stub can hold (only f32 is exercised here).
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+}
+
+/// Native element type marker for [`Literal::to_vec`].
+pub trait NativeType: private::Sealed + Sized {
+    fn from_f32(v: f32) -> Self;
+}
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// A host-side tensor literal (stub: f32 payload + dims).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reshape without changing the payload.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} ({} elements) does not fit payload of {}",
+                dims,
+                n,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result (stub literals are never tuples; identity).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// Copy out the payload as the requested native type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: retains the text).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. Parsing is not attempted — the stub only
+    /// verifies the file is readable so missing-artifact errors still
+    /// surface at the right layer.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("{path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation (stub wrapper over the proto).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// Device-side buffer handle (stub: host literal).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable (stub: uninstantiable — compiling requires a
+/// client, and client construction fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Matches the real signature shape used by the runtime:
+    /// `execute::<Literal>(&[lit])?[0][0].to_literal_sync()?`.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// PJRT client (stub: construction always fails with [`STUB_MSG`]).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_fails_actionably() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub client must not construct"),
+        };
+        assert!(err.to_string().contains("stub"));
+    }
+}

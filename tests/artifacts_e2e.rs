@@ -139,8 +139,7 @@ fn coordinator_serves_with_full_accuracy() {
     let server = Server::start(ServerOptions {
         policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
         engines: 1,
-        artifacts_dir: "artifacts".into(),
-        tag: "proposed".into(),
+        ..ServerOptions::artifacts("artifacts", "proposed")
     })
     .unwrap();
 

@@ -1,0 +1,231 @@
+//! Engine-free serving-plane integration tests (synthetic backend): the
+//! sharded execution plane, admission control, open-loop load generation
+//! and graceful shutdown are exercised without artifacts or XLA.
+
+use logicsparse::coordinator::{
+    loadgen, BatchPolicy, Server, ServerOptions, ShedMode,
+};
+use logicsparse::runtime::SyntheticRuntime;
+use logicsparse::traffic::Traffic;
+use logicsparse::Error;
+use std::time::{Duration, Instant};
+
+/// Deterministic image whose synthetic class is `i % 10`.
+fn image(i: u64) -> Vec<f32> {
+    SyntheticRuntime::stripe_image(i as usize)
+}
+
+fn synth_server(engines: usize, per_image: Duration, admission: usize) -> Server {
+    Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(300) },
+        engines,
+        admission_capacity: admission,
+        queue_depth: 8,
+        ..ServerOptions::synthetic(per_image)
+    })
+    .unwrap()
+}
+
+#[test]
+fn shutdown_in_flight_loses_no_requests() {
+    // Submit a pile of work, then shut down while most of it is still in
+    // flight: every admitted request must still receive a real response.
+    // (The seed had a bug here: shutdown joined the batcher while the
+    // submit sender was alive, so the drain path never fired and
+    // in-flight requests could be dropped.)
+    let server = synth_server(2, Duration::from_micros(200), 4096);
+    let n = 300u64;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(server.submit(image(i)).unwrap());
+    }
+    // Immediately begin graceful shutdown — the queue is mostly unserved.
+    let snap = server.shutdown();
+
+    let mut answered = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("request {i} dropped in shutdown"));
+        assert!(!resp.is_error(), "request {i} failed");
+        assert_eq!(resp.class(), (i % 10), "request {i} misclassified");
+        answered += 1;
+    }
+    assert_eq!(answered, n);
+    assert_eq!(snap.submitted, n);
+    assert_eq!(snap.completed, n, "server lost admitted requests");
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn responses_are_correct_per_request() {
+    let server = synth_server(2, Duration::ZERO, 1024);
+    for i in 0..40u64 {
+        let resp = server.infer_blocking(image(i)).unwrap();
+        assert_eq!(resp.class(), (i % 10) as usize);
+        assert!(resp.latency_s >= 0.0);
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 40);
+    assert_eq!(snap.shed, 0);
+}
+
+#[test]
+fn overload_sheds_fast_and_admitted_requests_all_complete() {
+    // Slow engine + tiny admission bound: a burst must shed quickly (no
+    // unbounded queueing) while everything admitted still completes.
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) },
+        engines: 1,
+        admission_capacity: 8,
+        queue_depth: 4,
+        ..ServerOptions::synthetic(Duration::from_millis(2))
+    })
+    .unwrap();
+
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    for i in 0..64u64 {
+        match server.submit(image(i)) {
+            Ok(rx) => accepted.push(rx),
+            Err(Error::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let submit_wall = t0.elapsed();
+    assert!(shed > 0, "64 fast submits over an 8-deep gate must shed");
+    // Shedding is a fast reject: submitting 64 requests must not take
+    // anywhere near the ~100ms the admitted work needs to execute.
+    assert!(
+        submit_wall < Duration::from_millis(50),
+        "submit path blocked for {submit_wall:?}"
+    );
+
+    for rx in accepted {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.is_error());
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.shed, shed, "gate and client disagree on shed count");
+    assert_eq!(snap.completed, snap.submitted);
+}
+
+#[test]
+fn bad_image_is_rejected_without_admission_leak() {
+    let server = synth_server(1, Duration::ZERO, 4);
+    for _ in 0..16 {
+        assert!(server.submit(vec![0.0; 3]).is_err());
+    }
+    // The gate must not have leaked: full capacity still available.
+    for i in 0..4u64 {
+        server.submit(image(i)).unwrap();
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 4);
+}
+
+#[test]
+fn open_loop_poisson_accounting_is_consistent() {
+    let server = synth_server(2, Duration::from_micros(100), 256);
+    let traffic = Traffic::poisson(400, 4000.0, 17);
+    let rep = loadgen::run_open_loop(&server, &traffic, image, ShedMode::Drop);
+    let snap = server.shutdown();
+
+    assert_eq!(rep.offered, 400);
+    assert_eq!(rep.accepted + rep.shed, rep.offered);
+    assert_eq!(rep.completed + rep.errors, rep.accepted, "requests unaccounted");
+    assert_eq!(rep.lost, 0, "responses dropped");
+    assert_eq!(rep.errors, 0);
+    assert_eq!(snap.completed, rep.completed);
+    assert_eq!(snap.shed, rep.shed);
+    assert_eq!(rep.latencies_s.len() as u64, rep.completed);
+    assert!(rep.latency_pct_s(0.5) <= rep.latency_pct_s(0.99));
+    assert!(rep.wall_s > 0.0 && rep.achieved_rps > 0.0);
+}
+
+#[test]
+fn engine_scaling_under_saturated_traffic() {
+    // Sleep-based synthetic cost scales with replicas on any core count;
+    // 4 engines must beat 1 engine clearly (the bench asserts the full
+    // >= 2x claim; this test keeps a conservative floor so CI stays
+    // stable on loaded machines).
+    let run = |engines: usize| -> f64 {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300) },
+            engines,
+            admission_capacity: 256,
+            queue_depth: 16,
+            ..ServerOptions::synthetic(Duration::from_micros(100))
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(800),
+            image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        assert_eq!(rep.lost, 0);
+        assert_eq!(rep.completed, 800);
+        assert_eq!(snap.completed, snap.submitted);
+        rep.achieved_rps
+    };
+    let rps1 = run(1);
+    let rps4 = run(4);
+    assert!(
+        rps4 > rps1 * 1.5,
+        "4 engines ({rps4:.0} req/s) should clearly beat 1 ({rps1:.0} req/s)"
+    );
+}
+
+#[test]
+fn steals_rebalance_skewed_load() {
+    // Many engines + deep saturation: the two-choice dispatcher plus
+    // stealing keeps all rings busy; at least the counters must be sane
+    // and total completions exact.
+    let server = synth_server(4, Duration::from_micros(100), 1024);
+    let rep = loadgen::run_open_loop(
+        &server,
+        &Traffic::saturated(600),
+        image,
+        ShedMode::Retry,
+    );
+    let snap = server.shutdown();
+    assert_eq!(rep.completed, 600);
+    assert_eq!(snap.completed, 600);
+    // Steals are opportunistic, so only sanity-bound them.
+    assert!(snap.steals <= snap.batches);
+}
+
+#[test]
+fn shared_traffic_model_drives_sim_and_server_identically() {
+    // The acceptance point of the unified traffic model: the *same*
+    // Traffic schedule replayed by the server is the one the simulator
+    // integrates over (cycle-rounded), so offered load is comparable.
+    let traffic = Traffic::poisson(100, 5000.0, 23);
+    let schedule = traffic.schedule();
+    let cycles = traffic.to_cycles(200.0);
+    assert_eq!(schedule.len(), cycles.len());
+    for (s, c) in schedule.iter().zip(&cycles) {
+        assert_eq!(*c, (s * 200e6).round() as u64);
+    }
+
+    // And the serving side accepts exactly that schedule.
+    let server = synth_server(1, Duration::ZERO, 1024);
+    let rep = loadgen::run_open_loop(&server, &traffic, image, ShedMode::Retry);
+    assert_eq!(rep.offered, 100);
+    assert_eq!(rep.completed, 100);
+    let _ = server.shutdown();
+}
+
+#[test]
+fn synthetic_oracle_matches_served_classes() {
+    let server = synth_server(1, Duration::ZERO, 64);
+    for i in 0..10u64 {
+        let img = image(i);
+        let expect = SyntheticRuntime::expected_class(&img);
+        assert_eq!(server.infer_blocking(img).unwrap().class(), expect);
+    }
+    let _ = server.shutdown();
+}
