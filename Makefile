@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test fmt fmt-check clippy bench artifacts clean
+.PHONY: verify build test fmt fmt-check clippy bench bench-smoke artifacts clean
 
 ## Tier-1 gate: release build + full test suite.
 verify:
@@ -28,9 +28,16 @@ clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 ## Serving + simulator benches (engine-free parts run without artifacts).
+## Each bench also writes its numbers to BENCH_<name>.json so the perf
+## trajectory is machine-trackable across PRs.
 bench:
 	$(CARGO) bench --bench serve_perf
 	$(CARGO) bench --bench sim_perf
+
+## Fast CI smoke: small request counts, timing-ratio assertions off
+## (zero-loss and accounting assertions stay on).
+bench-smoke:
+	BENCH_SMOKE=1 $(CARGO) bench --bench serve_perf
 
 ## Build the AOT artifacts (needs the python/JAX environment):
 ## stage 1 trains + exports, the rust DSE emits folding_config.json,
@@ -42,3 +49,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
+	rm -f BENCH_*.json

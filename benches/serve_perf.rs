@@ -10,16 +10,34 @@
 //!   * Poisson traffic below capacity (latency percentiles + shed counts
 //!     under the *same arrival process* the cycle simulator uses).
 //!
-//! Part 2 measures the PJRT artifact path (raw executables + coordinator)
-//! and skips with a notice when `make artifacts` has not been run.
+//! Part 2 serves **baked native kernels** (`kernel::CompiledModel`): real
+//! LeNet-5-shaped integer inference with no engine at all. It compiles a
+//! dense and a >=70%-sparse model from the same weights and asserts the
+//! paper's point in wall-clock terms: the nnz-only schedule must beat the
+//! dense loop by >= 1.2x through the full serving plane, and the compiled
+//! model's compression accounting must match `experiments::headline`.
+//!
+//! Part 3 measures the PJRT artifact path and skips with a notice when
+//! `make artifacts` has not been run.
+//!
+//! Every scenario's numbers are also written to `BENCH_serve.json`
+//! (machine-readable perf trajectory across PRs). Set `BENCH_SMOKE=1` for
+//! a fast CI smoke run: small request counts, and the timing-ratio
+//! assertions (noisy on shared runners) are skipped while the
+//! zero-loss/accounting assertions stay on.
 
 use logicsparse::coordinator::{
-    loadgen, BatchPolicy, Server, ServerOptions, ShedMode,
+    loadgen, BatchPolicy, LoadReport, Server, ServerOptions, ShedMode,
 };
+use logicsparse::experiments::headline;
+use logicsparse::graph::builder::lenet5;
+use logicsparse::kernel::{CompiledModel, KernelSpec};
 use logicsparse::runtime::{ModelRuntime, SyntheticRuntime, IMG};
 use logicsparse::traffic::Traffic;
-use logicsparse::util::bench::Bencher;
+use logicsparse::util::bench::{Bencher, BenchLog};
 use logicsparse::util::lstw::Store;
+use logicsparse::weights::ModelParams;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Deterministic synthetic image for arrival `i` (class = i % 10 under
@@ -28,10 +46,23 @@ fn synth_image(i: u64) -> Vec<f32> {
     SyntheticRuntime::stripe_image(i as usize)
 }
 
-fn synthetic_scaling() {
+fn record(log: &mut BenchLog, scenario: &str, rep: &LoadReport) {
+    log.push(
+        scenario,
+        &[
+            ("rps", rep.achieved_rps),
+            ("p50_ms", rep.latency_pct_s(0.5) * 1e3),
+            ("p99_ms", rep.latency_pct_s(0.99) * 1e3),
+            ("shed", rep.shed as f64),
+            ("completed", rep.completed as f64),
+        ],
+    );
+}
+
+fn synthetic_scaling(log: &mut BenchLog, smoke: bool) {
     println!("== sharded plane, synthetic backend (engine-free) ==");
     let per_image = Duration::from_micros(150);
-    let requests = 4000u64;
+    let requests: u64 = if smoke { 200 } else { 4000 };
     let mut rps_by_engines = Vec::new();
 
     for engines in [1usize, 4] {
@@ -55,6 +86,7 @@ fn synthetic_scaling() {
             "saturated Retry run must complete every request"
         );
         assert_eq!(snap.completed, snap.submitted, "server lost admitted requests");
+        record(log, &format!("synthetic_saturated_{engines}_engines"), &rep);
         rps_by_engines.push((engines, rep.achieved_rps));
     }
 
@@ -66,18 +98,22 @@ fn synthetic_scaling() {
         rps4,
         rps4 / rps1
     );
-    assert!(
-        rps4 >= 2.0 * rps1,
-        "engine scaling regressed: 4 engines at {rps4:.0} req/s < 2x {rps1:.0} req/s"
-    );
+    log.push("engine_scaling", &[("speedup_4_over_1", rps4 / rps1)]);
+    if !smoke {
+        assert!(
+            rps4 >= 2.0 * rps1,
+            "engine scaling regressed: 4 engines at {rps4:.0} req/s < 2x {rps1:.0} req/s"
+        );
+    }
 }
 
-fn synthetic_poisson() {
+fn synthetic_poisson(log: &mut BenchLog, smoke: bool) {
     // Open-loop Poisson at ~60% of one engine's capacity: the same
     // arrival process `sim` uses for its serving-shaped workloads.
     let per_image = Duration::from_micros(150);
     let capacity_rps = 1.0 / per_image.as_secs_f64(); // ~6.6k img/s
     let rate = 0.6 * capacity_rps;
+    let requests: u64 = if smoke { 200 } else { 2000 };
     let server = Server::start(ServerOptions {
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
         engines: 1,
@@ -86,7 +122,7 @@ fn synthetic_poisson() {
         ..ServerOptions::synthetic(per_image)
     })
     .unwrap();
-    let traffic = Traffic::poisson(2000, rate, 42);
+    let traffic = Traffic::poisson(requests, rate, 42);
     let rep = loadgen::run_open_loop(&server, &traffic, synth_image, ShedMode::Drop);
     let snap = server.shutdown();
     println!("poisson open-loop @{rate:.0} req/s: {}", rep.render());
@@ -96,10 +132,97 @@ fn synthetic_poisson() {
         rep.accepted,
         "accepted requests unaccounted for"
     );
+    record(log, "synthetic_poisson_open_loop", &rep);
     let _ = snap;
 }
 
-fn artifact_scenarios() {
+/// The tentpole scenario: baked sparse kernels vs the dense native
+/// baseline, both served end-to-end through the sharded plane.
+fn native_kernels(log: &mut BenchLog, smoke: bool) {
+    println!("== baked native kernels: sparse vs dense (engine-free) ==");
+    let g = lenet5();
+    let dense_params = ModelParams::synthetic(&g, 11);
+    let mut sparse_params = dense_params.clone();
+    sparse_params.prune_global(0.75, 0.05).unwrap();
+    let spec = KernelSpec::default();
+    let dense = Arc::new(CompiledModel::compile_dense(&g, &dense_params, &spec).unwrap());
+    let sparse = Arc::new(CompiledModel::compile_sparse(&g, &sparse_params, &spec).unwrap());
+
+    let sparsity = sparse.sparsity().global_sparsity();
+    assert!(sparsity >= 0.70, "scenario requires >= 70% sparsity, got {sparsity}");
+
+    // Compression accounting must match experiments::headline exactly
+    // (acceptance bound: 1%) — both sides run the same formula over the
+    // same ModelSparsity, so any drift is a real regression.
+    let (free, csr) = headline::compression_from_sparsity(&sparse.sparsity(), spec.weights.bits);
+    let own = sparse.compression();
+    assert!(
+        ((own - free) / free).abs() < 0.01,
+        "kernel compression {own} drifted from headline accounting {free}"
+    );
+    println!(
+        "compression: engine-free {own:.1}x (CSR-engine equivalent {csr:.1}x), \
+         {} -> {} scheduled MACs/frame, {} B packed",
+        dense.scheduled_macs_per_frame(),
+        sparse.scheduled_macs_per_frame(),
+        sparse.runtime_bytes(),
+    );
+
+    let requests: u64 = if smoke { 120 } else { 1500 };
+    let mut rps = Vec::new();
+    for (name, model) in [("dense", &dense), ("sparse", &sparse)] {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines: 2,
+            admission_capacity: 512,
+            queue_depth: 16,
+            ..ServerOptions::native(Arc::clone(model))
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(requests),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        println!("native/{name}: {}", rep.render());
+        assert_eq!(rep.lost, 0, "native/{name}: responses dropped in shutdown");
+        assert_eq!(rep.errors, 0, "native/{name}: kernel execution failed");
+        assert_eq!(rep.completed, requests, "native/{name}: incomplete run");
+        assert_eq!(
+            snap.completed, snap.submitted,
+            "native/{name}: admitted requests lost"
+        );
+        record(log, &format!("native_{name}"), &rep);
+        rps.push(rep.achieved_rps);
+    }
+
+    let speedup = rps[1] / rps[0];
+    println!(
+        "baked sparse vs dense native: {speedup:.2}x at {:.1}% unstructured sparsity",
+        sparsity * 100.0
+    );
+    log.push(
+        "native_sparse_vs_dense",
+        &[
+            ("speedup", speedup),
+            ("sparsity", sparsity),
+            ("compression_engine_free_x", own),
+            ("compression_csr_x", csr),
+        ],
+    );
+    if !smoke {
+        assert!(
+            speedup >= 1.2,
+            "baked sparse backend must beat dense native by >= 1.2x at \
+             {:.0}% sparsity; measured {speedup:.2}x",
+            sparsity * 100.0
+        );
+    }
+}
+
+fn artifact_scenarios(log: &mut BenchLog) {
     if !std::path::Path::new("artifacts/lenet_proposed_b1.hlo.txt").exists() {
         println!("serve_perf: artifacts missing — run `make artifacts` first (skipping PJRT part)");
         return;
@@ -125,6 +248,10 @@ fn artifact_scenarios() {
         println!(
             "    -> {:.0} img/s through the executable",
             batch as f64 / stats.median()
+        );
+        log.push(
+            &format!("pjrt_raw_b{batch}"),
+            &[("img_per_s", batch as f64 / stats.median())],
         );
     }
 
@@ -155,11 +282,23 @@ fn artifact_scenarios() {
         println!("coordinator/{name}: {}", rep.render());
         println!("coordinator/{name}: {}", snap.render());
         assert_eq!(rep.lost, 0);
+        record(log, &format!("pjrt_coordinator_{name}"), &rep);
     }
 }
 
 fn main() {
-    synthetic_scaling();
-    synthetic_poisson();
-    artifact_scenarios();
+    // Value-sensitive: BENCH_SMOKE=0 / empty / "false" mean a full run.
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    if smoke {
+        println!("serve_perf: BENCH_SMOKE set — small runs, timing assertions off");
+    }
+    let mut log = BenchLog::new("serve_perf");
+    synthetic_scaling(&mut log, smoke);
+    synthetic_poisson(&mut log, smoke);
+    native_kernels(&mut log, smoke);
+    artifact_scenarios(&mut log);
+    log.write("BENCH_serve.json").unwrap();
+    println!("wrote BENCH_serve.json");
 }

@@ -3,17 +3,25 @@
 //! the DES across folding regimes and FIFO depths.
 //!
 //! §Perf target: the whole Table-I measurement must be interactive
-//! (< 10 s); this bench tracks the underlying rates.
+//! (< 10 s); this bench tracks the underlying rates and writes them to
+//! `BENCH_sim.json` so the trajectory is machine-trackable across PRs.
 
 use logicsparse::device::XCU50;
 use logicsparse::folding::FoldingConfig;
 use logicsparse::graph::builder::{convnet, lenet5};
 use logicsparse::sim::{self, Workload};
-use logicsparse::util::bench::Bencher;
+use logicsparse::util::bench::{BenchLog, Bencher};
 
 fn main() {
     let g = lenet5();
     let b = Bencher::default();
+    let mut log = BenchLog::new("sim_perf");
+    let push = |log: &mut BenchLog, scenario: &str, frames: f64, median_s: f64| {
+        log.push(
+            scenario,
+            &[("frames_per_s", frames / median_s), ("median_s", median_s)],
+        );
+    };
 
     for (label, cfg) in [
         ("minimal-fold", FoldingConfig::minimal(&g)),
@@ -23,41 +31,46 @@ fn main() {
             let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
             p.run(&Workload::Saturated { frames: 50 }).frames
         });
-        println!(
-            "    -> {:.0} simulated frames/s",
-            50.0 / stats.median()
-        );
+        println!("    -> {:.0} simulated frames/s", 50.0 / stats.median());
+        push(&mut log, &format!("lenet_{label}"), 50.0, stats.median());
     }
 
     for depth in [2usize, 8, 64] {
         let cfg = FoldingConfig::unrolled(&g);
-        b.run(&format!("sim/lenet/fifo-depth-{depth}/50-frames"), || {
+        let stats = b.run(&format!("sim/lenet/fifo-depth-{depth}/50-frames"), || {
             let mut p = sim::build(&g, &cfg, &XCU50, depth).unwrap();
             p.run(&Workload::Saturated { frames: 50 }).frames
         });
+        push(&mut log, &format!("lenet_fifo_depth_{depth}"), 50.0, stats.median());
     }
 
     // Bigger topology: scaling check.
     let big = convnet(3, 8, 32, 10);
     let cfg = FoldingConfig::unrolled(&big);
-    b.run("sim/convnet3/unrolled/20-frames", || {
+    let stats = b.run("sim/convnet3/unrolled/20-frames", || {
         let mut p = sim::build(&big, &cfg, &XCU50, 8).unwrap();
         p.run(&Workload::Saturated { frames: 20 }).frames
     });
+    push(&mut log, "convnet3_unrolled", 20.0, stats.median());
 
     // Poisson traffic (serving-shaped workload).
     let cfg = FoldingConfig::unrolled(&g);
-    b.run("sim/lenet/poisson/100-frames", || {
+    let stats = b.run("sim/lenet/poisson/100-frames", || {
         let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
         p.run(&Workload::Poisson { frames: 100, rate_fps: 100_000.0, seed: 1 })
             .frames
     });
+    push(&mut log, "lenet_poisson", 100.0, stats.median());
 
     // Bursty traffic (the shared traffic model's Burst shape — the same
     // process the serving load generator replays in wall-clock time).
-    b.run("sim/lenet/burst/100-frames", || {
+    let stats = b.run("sim/lenet/burst/100-frames", || {
         let mut p = sim::build(&g, &cfg, &XCU50, 8).unwrap();
         p.run(&Workload::Burst { frames: 100, burst: 16, gap_cycles: 20_000, seed: 1 })
             .frames
     });
+    push(&mut log, "lenet_burst", 100.0, stats.median());
+
+    log.write("BENCH_sim.json").unwrap();
+    println!("wrote BENCH_sim.json");
 }

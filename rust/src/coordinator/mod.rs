@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::kernel::{CompiledModel, NativeSparseBackend};
 use crate::runtime::{InferenceBackend, ModelRuntime, SyntheticRuntime, IMG, NUM_CLASSES};
 use crate::util::error::{Error, Result};
 
@@ -82,6 +83,10 @@ pub enum EngineBackend {
     /// Deterministic synthetic compute with a fixed per-image cost —
     /// engine-free serving (tests, benches, capacity planning).
     Synthetic { per_image: Duration },
+    /// Baked native kernels (`kernel::CompiledModel`): real engine-free
+    /// inference — nnz-only MAC schedules, no PJRT, no artifacts. The
+    /// compiled model is immutable, so replicas share one `Arc`.
+    Native { model: Arc<CompiledModel> },
 }
 
 /// Server configuration.
@@ -126,6 +131,14 @@ impl ServerOptions {
     pub fn synthetic(per_image: Duration) -> Self {
         ServerOptions {
             backend: EngineBackend::Synthetic { per_image },
+            ..Default::default()
+        }
+    }
+
+    /// Engine-free serving with baked native kernels.
+    pub fn native(model: Arc<CompiledModel>) -> Self {
+        ServerOptions {
+            backend: EngineBackend::Native { model },
             ..Default::default()
         }
     }
@@ -191,6 +204,18 @@ impl Server {
                     EngineBackend::Synthetic { per_image } => {
                         let _ = ready.send(Ok(()));
                         Box::new(SyntheticRuntime::new(*per_image))
+                    }
+                    EngineBackend::Native { model } => {
+                        match NativeSparseBackend::new(Arc::clone(model)) {
+                            Ok(b) => {
+                                let _ = ready.send(Ok(()));
+                                Box::new(b)
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        }
                     }
                 };
                 shard::worker_loop(&plane, &mailbox, |batch, stolen| {

@@ -18,6 +18,18 @@ pub struct Headline {
     pub lut_fraction: f64,
 }
 
+/// Engine-free + CSR-equivalent compression for one sparsity accounting —
+/// the single formula every producer uses: metrics.json written by the
+/// python exporter, `kernel::CompiledModel::compression`, and the bench
+/// reports all derive their headline number through here, so they cannot
+/// drift apart.
+pub fn compression_from_sparsity(ms: &ModelSparsity, weight_bits: usize) -> (f64, f64) {
+    (
+        compression_ratio(ms.total_weights(), ms.total_nnz(), weight_bits),
+        compression_ratio_csr(ms.total_weights(), ms.total_nnz(), weight_bits, 16),
+    )
+}
+
 /// Compression from real exported masks (metrics.json written by stage 2);
 /// `None` before artifacts exist.
 pub fn compression_from_metrics(artifacts: impl AsRef<Path>) -> Result<Option<(f64, f64)>> {
@@ -38,9 +50,7 @@ pub fn compression_from_metrics(artifacts: impl AsRef<Path>) -> Result<Option<(f
             ms.push(name.clone(), w, nnz);
         }
     }
-    let free = compression_ratio(ms.total_weights(), ms.total_nnz(), wb);
-    let csr = compression_ratio_csr(ms.total_weights(), ms.total_nnz(), wb, 16);
-    Ok(Some((free, csr)))
+    Ok(Some(compression_from_sparsity(&ms, wb)))
 }
 
 /// Assemble the headline from measured Table-I rows (+ optional metrics).
@@ -88,6 +98,15 @@ mod tests {
     use crate::device::XCU50;
     use crate::experiments::{table1, Accuracies};
     use crate::graph::builder::lenet5;
+
+    #[test]
+    fn shared_compression_formula_pins_headline() {
+        let mut ms = ModelSparsity::default();
+        ms.push("all", 44_190, (44_190f64 * 0.155).round() as usize);
+        let (free, csr) = compression_from_sparsity(&ms, 4);
+        assert!((free - 51.6).abs() < 0.5, "engine-free {free}");
+        assert!(csr < free, "CSR must pay the index tax");
+    }
 
     #[test]
     fn headline_without_artifacts() {

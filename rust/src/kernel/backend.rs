@@ -1,0 +1,88 @@
+//! [`NativeSparseBackend`]: baked kernels behind the serving plane's
+//! [`InferenceBackend`] seam — LeNet-shaped inference with **no engine**:
+//! no PJRT, no artifacts, no sleep stand-in; every MAC the sharded plane
+//! executes comes out of the compiled nnz-only schedules.
+
+use std::sync::Arc;
+
+use super::CompiledModel;
+use crate::runtime::{InferenceBackend, IMG, NUM_CLASSES};
+use crate::util::error::{Error, Result};
+
+/// Serving adapter for a [`CompiledModel`]. The model is immutable shared
+/// state, so engine replicas clone one `Arc` instead of re-compiling.
+pub struct NativeSparseBackend {
+    model: Arc<CompiledModel>,
+}
+
+impl NativeSparseBackend {
+    /// Wrap `model` for the request path; rejects models whose shape does
+    /// not match the serving contract (28x28 in, 10 logits out).
+    pub fn new(model: Arc<CompiledModel>) -> Result<Self> {
+        if model.input_pixels() != IMG * IMG {
+            return Err(Error::kernel(format!(
+                "model takes {} inputs, serving needs {}",
+                model.input_pixels(),
+                IMG * IMG
+            )));
+        }
+        if model.output_len() != NUM_CLASSES {
+            return Err(Error::kernel(format!(
+                "model emits {} logits, serving needs {NUM_CLASSES}",
+                model.output_len()
+            )));
+        }
+        Ok(NativeSparseBackend { model })
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+}
+
+impl InferenceBackend for NativeSparseBackend {
+    fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.model.infer_batch(x, n)
+    }
+
+    fn label(&self) -> String {
+        format!("native/{}", self.model.summary())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{convnet, lenet5};
+    use crate::kernel::KernelSpec;
+    use crate::runtime::SyntheticRuntime;
+    use crate::weights::ModelParams;
+
+    #[test]
+    fn backend_matches_direct_forward() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 21);
+        p.prune_global(0.75, 0.05).unwrap();
+        let model =
+            Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap());
+        let be = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        let a = SyntheticRuntime::stripe_image(2);
+        let b = SyntheticRuntime::stripe_image(7);
+        let x: Vec<f32> = [a.clone(), b.clone()].concat();
+        let logits = be.infer_padded(&x, 2).unwrap();
+        assert_eq!(logits.len(), 2 * NUM_CLASSES);
+        assert_eq!(&logits[..10], &model.forward(&a).unwrap()[..]);
+        assert_eq!(&logits[10..], &model.forward(&b).unwrap()[..]);
+        assert!(be.label().starts_with("native/"));
+        assert!(be.infer_padded(&x, 3).is_err());
+    }
+
+    #[test]
+    fn non_serving_shapes_are_rejected() {
+        let g = convnet(2, 8, 32, 10);
+        let p = ModelParams::synthetic(&g, 22);
+        let model =
+            Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
+        assert!(NativeSparseBackend::new(model).is_err());
+    }
+}

@@ -1,0 +1,844 @@
+//! Engine-free baked sparse kernels (substrate S20) — the software
+//! analogue of the paper's LUT baking.
+//!
+//! A compile pass takes a [`crate::graph::Graph`], exported parameters
+//! (weights + unstructured masks, [`crate::weights::ModelParams`]) and the
+//! W4 quantisation grid ([`crate::quant::QSpec`]), and emits a
+//! [`CompiledModel`]: per-layer baked kernels in which **pruned weights
+//! synthesise to nothing** — the nnz-only MAC schedule simply contains no
+//! entry for them, exactly as the hardware flow bakes surviving weights
+//! into logic and lets zeros vanish. There is no sparse engine at run
+//! time: no CSR walk, no bitmap decode, no gather unit — the schedule
+//! *is* the layer.
+//!
+//! Kernel variants mirror [`crate::folding::Style`]:
+//! * `Folded` / `UnrolledDense` → a dense MAC loop over every weight
+//!   (the dense-engine baseline the bench compares against);
+//! * `UnrolledSparse`          → a per-output-neuron nnz-only schedule;
+//! * `PartialSparse`           → a block schedule (SIMD-lane granularity):
+//!   all-zero blocks are elided, live blocks run dense.
+//!
+//! The datapath is integer end-to-end: activations are quantised codes
+//! (unsigned, ReLU clipped), MACs accumulate in `i32`, and each layer
+//! requantises with a per-output-channel multiplier — floats touch only
+//! the requant step, as on the accelerator. Weight codes and schedule
+//! indices are additionally bit-packed ([`pack`]) so size accounting is
+//! byte-exact; the packed stream round-trips to the execution tables.
+//!
+//! One `CompiledModel` is the single artifact every consumer shares: the
+//! serving plane executes it ([`NativeSparseBackend`] behind
+//! `coordinator::EngineBackend::Native`), the simulator and DSE read its
+//! [`FoldingConfig`], and the experiments read its [`ModelSparsity`] /
+//! compression accounting — instead of each path re-deriving layer shapes
+//! from the graph independently.
+
+pub mod backend;
+pub mod pack;
+
+use crate::folding::{FoldingConfig, LayerFold, Style};
+use crate::graph::{Graph, Op};
+use crate::quant::{quantize_per_channel, QSpec};
+use crate::sparsity::{compression_ratio, compression_ratio_csr, ModelSparsity};
+use crate::util::error::{Error, Result};
+use crate::weights::ModelParams;
+
+pub use backend::NativeSparseBackend;
+
+/// Quantisation operating point of a compiled model (default: the paper's
+/// W4A4 LeNet-5 point).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSpec {
+    pub weights: QSpec,
+    pub act_bits: usize,
+    /// Input activations are quantised on [0, input_ceil].
+    pub input_ceil: f32,
+    /// Hidden activations: ReLU clipped at this ceiling (ReLU6-style, the
+    /// same static-threshold rule as `python/compile/quant.py`).
+    pub act_ceil: f32,
+}
+
+impl Default for KernelSpec {
+    fn default() -> Self {
+        KernelSpec { weights: QSpec { bits: 4 }, act_bits: 4, input_ceil: 1.0, act_ceil: 6.0 }
+    }
+}
+
+impl KernelSpec {
+    pub fn act_qmax(&self) -> i32 {
+        (1 << self.act_bits) - 1
+    }
+
+    pub fn input_scale(&self) -> f32 {
+        self.input_ceil / self.act_qmax() as f32
+    }
+
+    pub fn act_scale(&self) -> f32 {
+        self.act_ceil / self.act_qmax() as f32
+    }
+
+    fn validate(&self) -> Result<()> {
+        QSpec::new(self.weights.bits)?;
+        if !(2..=8).contains(&self.act_bits) {
+            return Err(Error::kernel(format!("act bits {} out of [2,8]", self.act_bits)));
+        }
+        if self.input_ceil <= 0.0 || self.act_ceil <= 0.0 {
+            return Err(Error::kernel("activation ceilings must be positive"));
+        }
+        Ok(())
+    }
+}
+
+/// The baked MAC schedule of one layer.
+#[derive(Debug, Clone)]
+pub enum Kernel {
+    /// Dense loop: `codes` is [fold_in, cout] row-major; `rel[r]` is the
+    /// input-buffer offset of schedule row `r` relative to the patch base.
+    Dense { codes: Vec<i8>, rel: Vec<u32> },
+    /// nnz-only schedule grouped per output channel: entries
+    /// `ptr[c]..ptr[c+1]` belong to output channel `c`. For
+    /// `UnrolledSparse` every entry is a surviving weight; for
+    /// `PartialSparse` live blocks are stored whole (zeros included) and
+    /// all-zero blocks are elided.
+    Sparse {
+        ptr: Vec<u32>,
+        rel: Vec<u32>,
+        code: Vec<i8>,
+        /// Block granularity (1 = fully unrolled).
+        block: usize,
+        /// Live (stored) blocks across all channels.
+        live_blocks: usize,
+    },
+}
+
+impl Kernel {
+    /// Codes physically stored by this variant (zeros in live blocks
+    /// included for `PartialSparse`).
+    pub fn stored(&self) -> usize {
+        match self {
+            Kernel::Dense { codes, .. } => codes.len(),
+            Kernel::Sparse { code, .. } => code.len(),
+        }
+    }
+}
+
+/// One compiled MAC layer.
+#[derive(Debug, Clone)]
+pub struct MacStage {
+    pub name: String,
+    pub op: Op,
+    pub style: Style,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub ifm: usize,
+    pub ofm: usize,
+    pub fold_in: usize,
+    /// Dense weight count of the layer.
+    pub weights: usize,
+    /// Surviving (unpruned) weights.
+    pub nnz: usize,
+    /// Final layer emits f32 logits instead of requantised codes.
+    pub is_output: bool,
+    /// Per-output-channel requant multiplier / offset: hidden layers map
+    /// `acc -> round(acc*mul + add)` clamped to the activation grid; the
+    /// output layer maps straight to f32 logits.
+    mul: Vec<f32>,
+    add: Vec<f32>,
+    pub kernel: Kernel,
+    /// Bit-packed weight codes of the stored schedule (pack::pack_codes).
+    pub packed_codes: Vec<u8>,
+    /// Bit-packed schedule indices: one input offset per entry for fully
+    /// unrolled schedules, one base-row index per live block for block
+    /// schedules, empty for dense (positions implicit).
+    pub packed_rel: Vec<u8>,
+    /// Index width used by `packed_rel`.
+    pub idx_bits: usize,
+}
+
+impl MacStage {
+    pub fn out_pixels(&self) -> usize {
+        self.ofm * self.ofm
+    }
+
+    /// MACs per frame actually scheduled by this kernel variant.
+    pub fn scheduled_macs(&self) -> usize {
+        self.out_pixels() * self.kernel.stored()
+    }
+
+    /// Dense-equivalent MACs per frame.
+    pub fn dense_macs(&self) -> usize {
+        self.out_pixels() * self.weights
+    }
+
+    fn accumulate(&self, act: &[u8], base: usize, acc: &mut [i32]) {
+        match &self.kernel {
+            Kernel::Dense { codes, rel } => {
+                acc.fill(0);
+                for (r, &off) in rel.iter().enumerate() {
+                    let a = act[base + off as usize] as i32;
+                    let row = &codes[r * self.cout..(r + 1) * self.cout];
+                    for (c, &w) in row.iter().enumerate() {
+                        acc[c] += w as i32 * a;
+                    }
+                }
+            }
+            Kernel::Sparse { ptr, rel, code, .. } => {
+                for (c, slot) in acc.iter_mut().enumerate() {
+                    let mut s = 0i32;
+                    for j in ptr[c] as usize..ptr[c + 1] as usize {
+                        s += code[j] as i32 * act[base + rel[j] as usize] as i32;
+                    }
+                    *slot = s;
+                }
+            }
+        }
+    }
+
+    fn patch_base(&self, oh: usize, ow: usize) -> usize {
+        match self.op {
+            Op::Conv => (oh * self.ifm + ow) * self.cin,
+            _ => 0,
+        }
+    }
+
+    fn run_hidden(&self, act: &[u8], qmax: i32) -> Vec<u8> {
+        let mut out = vec![0u8; self.out_pixels() * self.cout];
+        let mut acc = vec![0i32; self.cout];
+        for oh in 0..self.ofm {
+            for ow in 0..self.ofm {
+                self.accumulate(act, self.patch_base(oh, ow), &mut acc);
+                let o = (oh * self.ofm + ow) * self.cout;
+                for c in 0..self.cout {
+                    let v = (acc[c] as f32 * self.mul[c] + self.add[c]).round() as i32;
+                    out[o + c] = v.clamp(0, qmax) as u8;
+                }
+            }
+        }
+        out
+    }
+
+    fn run_output(&self, act: &[u8]) -> Vec<f32> {
+        let mut out = vec![0f32; self.out_pixels() * self.cout];
+        let mut acc = vec![0i32; self.cout];
+        for oh in 0..self.ofm {
+            for ow in 0..self.ofm {
+                self.accumulate(act, self.patch_base(oh, ow), &mut acc);
+                let o = (oh * self.ofm + ow) * self.cout;
+                for c in 0..self.cout {
+                    out[o + c] = acc[c] as f32 * self.mul[c] + self.add[c];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A max-pool stage (code domain: max of unsigned codes is exact because
+/// requantisation is monotone).
+#[derive(Debug, Clone)]
+pub struct PoolStage {
+    pub name: String,
+    pub ch: usize,
+    pub k: usize,
+    pub ifm: usize,
+    pub ofm: usize,
+}
+
+impl PoolStage {
+    fn run(&self, act: &[u8]) -> Vec<u8> {
+        let mut out = vec![0u8; self.ofm * self.ofm * self.ch];
+        for oh in 0..self.ofm {
+            for ow in 0..self.ofm {
+                let o = (oh * self.ofm + ow) * self.ch;
+                for kh in 0..self.k {
+                    for kw in 0..self.k {
+                        let i = ((oh * self.k + kh) * self.ifm + ow * self.k + kw) * self.ch;
+                        for c in 0..self.ch {
+                            let v = act[i + c];
+                            if v > out[o + c] {
+                                out[o + c] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One stage of the compiled chain.
+#[derive(Debug, Clone)]
+pub enum Stage {
+    Mac(MacStage),
+    Pool(PoolStage),
+}
+
+/// A fully baked model: the one artifact serving, sim, DSE and the
+/// experiments all consume.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub model: String,
+    pub spec: KernelSpec,
+    /// The folding decisions the kernels were baked under (sim/DSE view).
+    pub folding: FoldingConfig,
+    stages: Vec<Stage>,
+    input_pixels: usize,
+    output_len: usize,
+}
+
+impl CompiledModel {
+    /// Compile `g` with `params` under the per-layer styles in `folding`
+    /// (`Folded`/`UnrolledDense` → dense kernel, `UnrolledSparse` →
+    /// nnz-only, `PartialSparse` → SIMD-block schedule). Masks in
+    /// `params` are authoritative for which weights survive.
+    pub fn compile(
+        g: &Graph,
+        params: &ModelParams,
+        spec: &KernelSpec,
+        folding: &FoldingConfig,
+    ) -> Result<CompiledModel> {
+        g.validate()?;
+        spec.validate()?;
+        folding.check(g)?;
+        let last = g
+            .nodes
+            .iter()
+            .rposition(|n| n.op.has_weights())
+            .ok_or_else(|| Error::kernel("graph has no MAC layer"))?;
+        if last != g.nodes.len() - 1 {
+            return Err(Error::kernel(format!(
+                "graph must end with a MAC layer (found trailing '{}')",
+                g.nodes[last + 1].name
+            )));
+        }
+
+        let mut stages = Vec::with_capacity(g.nodes.len());
+        let mut cur_scale = spec.input_scale();
+        for (i, node) in g.nodes.iter().enumerate() {
+            if !node.op.has_weights() {
+                stages.push(Stage::Pool(PoolStage {
+                    name: node.name.clone(),
+                    ch: node.cin,
+                    k: node.k,
+                    ifm: node.ifm,
+                    ofm: node.ofm,
+                }));
+                continue;
+            }
+            let lp = params
+                .get(&node.name)
+                .ok_or_else(|| Error::kernel(format!("no params for layer '{}'", node.name)))?;
+            let fold = folding
+                .get(&node.name)
+                .ok_or_else(|| Error::kernel(format!("no folding for layer '{}'", node.name)))?;
+            let fold_in = node.fold_in();
+            let cout = node.cout;
+            if lp.fold_in != fold_in || lp.cout != cout {
+                return Err(Error::kernel(format!(
+                    "'{}': params [{}x{}] vs graph [{fold_in}x{cout}]",
+                    node.name, lp.fold_in, lp.cout
+                )));
+            }
+            let masked = lp.masked_w();
+            let (codes, scales) = quantize_per_channel(&masked, fold_in, cout, spec.weights)?;
+
+            // Relative input offset of schedule row r from the patch base:
+            // weight layout is [fold_in, cout] with patch order (kh, kw, c)
+            // and activations are NHWC-flat, so conv offsets collapse to
+            // (kh*IFM + kw)*Cin + ci; fc is the identity.
+            let rel_of = |r: usize| -> u32 {
+                match node.op {
+                    Op::Conv => {
+                        let kh = r / (node.k * node.cin);
+                        let kw = (r / node.cin) % node.k;
+                        let ci = r % node.cin;
+                        ((kh * node.ifm + kw) * node.cin + ci) as u32
+                    }
+                    _ => r as u32,
+                }
+            };
+            let addr_space = match node.op {
+                Op::Conv => node.ifm * node.ifm * node.cin,
+                _ => fold_in,
+            };
+
+            let (kernel, block_bases) = match fold.style {
+                Style::Folded | Style::UnrolledDense => (
+                    Kernel::Dense {
+                        codes: codes.clone(),
+                        rel: (0..fold_in).map(rel_of).collect(),
+                    },
+                    Vec::new(),
+                ),
+                Style::UnrolledSparse => {
+                    build_sparse(&codes, &lp.mask.keep, fold_in, cout, 1, rel_of)
+                }
+                Style::PartialSparse => {
+                    build_sparse(&codes, &lp.mask.keep, fold_in, cout, fold.simd.max(1), rel_of)
+                }
+            };
+
+            let (packed_codes, packed_rel, idx_bits) = match &kernel {
+                Kernel::Dense { codes, .. } => {
+                    (pack::pack_codes(codes, spec.weights.bits), Vec::new(), 0)
+                }
+                Kernel::Sparse { rel, code, block, .. } => {
+                    // Fully unrolled: one input offset per surviving entry.
+                    // Block schedules: one base-row index per live block —
+                    // positions inside a live block are consecutive, so a
+                    // loader recomputes per-element offsets from the layer
+                    // geometry (the documented packed layout, §9).
+                    let (bytes, bits) = if *block > 1 {
+                        pack::pack_indices(&block_bases, fold_in)
+                    } else {
+                        pack::pack_indices(rel, addr_space)
+                    };
+                    (pack::pack_codes(code, spec.weights.bits), bytes, bits)
+                }
+            };
+
+            let is_output = i == last;
+            let in_scale = cur_scale;
+            let (mul, add): (Vec<f32>, Vec<f32>) = if is_output {
+                (
+                    scales.iter().map(|&s| s * in_scale).collect(),
+                    lp.bias.clone(),
+                )
+            } else {
+                let out_scale = spec.act_scale();
+                cur_scale = out_scale;
+                (
+                    scales.iter().map(|&s| s * in_scale / out_scale).collect(),
+                    lp.bias.iter().map(|&b| b / out_scale).collect(),
+                )
+            };
+
+            stages.push(Stage::Mac(MacStage {
+                name: node.name.clone(),
+                op: node.op,
+                style: fold.style,
+                cin: node.cin,
+                cout,
+                k: node.k,
+                ifm: node.ifm,
+                ofm: node.ofm,
+                fold_in,
+                weights: node.weights(),
+                nnz: lp.mask.nnz(),
+                is_output,
+                mul,
+                add,
+                kernel,
+                packed_codes,
+                packed_rel,
+                idx_bits,
+            }));
+        }
+
+        let first = &g.nodes[0];
+        Ok(CompiledModel {
+            model: g.model.clone(),
+            spec: *spec,
+            folding: folding.clone(),
+            stages,
+            input_pixels: first.ifm * first.ifm * first.cin,
+            output_len: g.nodes[last].out_elements(),
+        })
+    }
+
+    /// Dense full unroll of every MAC layer (the dense-engine baseline).
+    pub fn compile_dense(g: &Graph, params: &ModelParams, spec: &KernelSpec) -> Result<Self> {
+        Self::compile(g, params, spec, &FoldingConfig::unrolled(g))
+    }
+
+    /// Engine-free sparse unroll: per-layer sparsity annotations are taken
+    /// from the masks in `params` (the measured truth).
+    pub fn compile_sparse(g: &Graph, params: &ModelParams, spec: &KernelSpec) -> Result<Self> {
+        let mut cfg = FoldingConfig::default();
+        for n in g.mac_nodes() {
+            let lp = params
+                .get(&n.name)
+                .ok_or_else(|| Error::kernel(format!("no params for layer '{}'", n.name)))?;
+            let s = lp.mask.sparsity().min(0.999_999);
+            cfg.set(&n.name, LayerFold::unrolled_sparse(n, s));
+        }
+        Self::compile(g, params, spec, &cfg)
+    }
+
+    /// Flattened input length one frame must provide.
+    pub fn input_pixels(&self) -> usize {
+        self.input_pixels
+    }
+
+    /// Logits per frame.
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    pub fn mac_stages(&self) -> impl Iterator<Item = &MacStage> {
+        self.stages.iter().filter_map(|s| match s {
+            Stage::Mac(m) => Some(m),
+            Stage::Pool(_) => None,
+        })
+    }
+
+    /// Per-layer + global sparsity accounting — the same [`ModelSparsity`]
+    /// shape `experiments::headline` consumes.
+    pub fn sparsity(&self) -> ModelSparsity {
+        let mut ms = ModelSparsity::default();
+        for m in self.mac_stages() {
+            ms.push(m.name.clone(), m.weights, m.nnz);
+        }
+        ms
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.mac_stages().map(|m| m.weights).sum()
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.mac_stages().map(|m| m.nnz).sum()
+    }
+
+    /// Engine-free compression ratio (paper headline accounting: surviving
+    /// weights at `weight_bits`, **no index storage**).
+    pub fn compression(&self) -> f64 {
+        compression_ratio(self.total_weights(), self.total_nnz(), self.spec.weights.bits)
+    }
+
+    /// What a CSR-style sparse engine would achieve on the same masks.
+    pub fn compression_csr(&self, idx_bits: usize) -> f64 {
+        compression_ratio_csr(
+            self.total_weights(),
+            self.total_nnz(),
+            self.spec.weights.bits,
+            idx_bits,
+        )
+    }
+
+    /// MACs per frame the baked kernels actually schedule.
+    pub fn scheduled_macs_per_frame(&self) -> usize {
+        self.mac_stages().map(|m| m.scheduled_macs()).sum()
+    }
+
+    /// Dense-equivalent MACs per frame.
+    pub fn dense_macs_per_frame(&self) -> usize {
+        self.mac_stages().map(|m| m.dense_macs()).sum()
+    }
+
+    /// Bytes of the packed runtime image (codes + schedule indices).
+    pub fn runtime_bytes(&self) -> usize {
+        self.mac_stages()
+            .map(|m| m.packed_codes.len() + m.packed_rel.len())
+            .sum()
+    }
+
+    /// One-line description for logs and backend labels.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} w{}a{} {:.1}% sparse, {} MAC layers, {} B packed",
+            self.model,
+            self.spec.weights.bits,
+            self.spec.act_bits,
+            self.sparsity().global_sparsity() * 100.0,
+            self.mac_stages().count(),
+            self.runtime_bytes(),
+        )
+    }
+
+    /// Run one frame: `image` is the flattened NHWC input in
+    /// [0, input_ceil]; returns `output_len` f32 logits.
+    pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
+        if image.len() != self.input_pixels {
+            return Err(Error::kernel(format!(
+                "input length {} != {}",
+                image.len(),
+                self.input_pixels
+            )));
+        }
+        let qmax = self.spec.act_qmax();
+        let in_scale = self.spec.input_scale();
+        let mut act: Vec<u8> = image
+            .iter()
+            .map(|&x| ((x / in_scale).round() as i32).clamp(0, qmax) as u8)
+            .collect();
+        for stage in &self.stages {
+            match stage {
+                Stage::Pool(p) => act = p.run(&act),
+                Stage::Mac(m) => {
+                    if m.is_output {
+                        return Ok(m.run_output(&act));
+                    }
+                    act = m.run_hidden(&act, qmax);
+                }
+            }
+        }
+        Err(Error::kernel("graph has no output layer"))
+    }
+
+    /// Argmax class of one frame.
+    pub fn classify(&self, image: &[f32]) -> Result<usize> {
+        let logits = self.forward(image)?;
+        Ok(crate::runtime::argmax_classes(&logits)[0])
+    }
+
+    /// Run `n` frames packed into `x`; returns `n * output_len` logits.
+    pub fn infer_batch(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let px = self.input_pixels;
+        if x.len() != n * px {
+            return Err(Error::kernel(format!(
+                "batch input length {} != {n} * {px}",
+                x.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(n * self.output_len);
+        for i in 0..n {
+            out.extend(self.forward(&x[i * px..(i + 1) * px])?);
+        }
+        Ok(out)
+    }
+}
+
+/// Build the per-output-channel schedule: block = 1 keeps surviving
+/// entries only (fully unrolled); block > 1 stores whole live blocks
+/// (partial unroll at SIMD-lane granularity) and elides all-zero blocks.
+/// Also returns the base row of every live block (the per-block index
+/// stream the packed layout stores for block schedules).
+fn build_sparse(
+    codes: &[i8],
+    keep: &[bool],
+    fold_in: usize,
+    cout: usize,
+    block: usize,
+    rel_of: impl Fn(usize) -> u32,
+) -> (Kernel, Vec<u32>) {
+    let mut ptr = Vec::with_capacity(cout + 1);
+    let mut rel = Vec::new();
+    let mut code = Vec::new();
+    let mut bases = Vec::new();
+    let mut live_blocks = 0usize;
+    ptr.push(0u32);
+    for c in 0..cout {
+        let mut r = 0usize;
+        while r < fold_in {
+            let hi = (r + block).min(fold_in);
+            if (r..hi).any(|row| keep[row * cout + c]) {
+                live_blocks += 1;
+                bases.push(r as u32);
+                for row in r..hi {
+                    if block == 1 && !keep[row * cout + c] {
+                        continue;
+                    }
+                    rel.push(rel_of(row));
+                    code.push(codes[row * cout + c]);
+                }
+            }
+            r = hi;
+        }
+        ptr.push(code.len() as u32);
+    }
+    (Kernel::Sparse { ptr, rel, code, block, live_blocks }, bases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PruneProfile;
+    use crate::device::XCU50;
+    use crate::dse::{self, DseOptions, Strategy};
+    use crate::experiments::headline;
+    use crate::graph::builder::{lenet5, mlp};
+    use crate::runtime::SyntheticRuntime;
+
+    fn lenet_params(seed: u64, sparsity: Option<f64>) -> (Graph, ModelParams) {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, seed);
+        if let Some(s) = sparsity {
+            p.prune_global(s, 0.05).unwrap();
+        }
+        (g, p)
+    }
+
+    fn images(n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(SyntheticRuntime::stripe_image).collect()
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_dense_mask() {
+        // With a dense mask, the nnz-only schedule contains every weight;
+        // integer accumulation is order-independent, so logits must be
+        // bit-exact between variants.
+        let (g, p) = lenet_params(1, None);
+        let spec = KernelSpec::default();
+        let dense = CompiledModel::compile_dense(&g, &p, &spec).unwrap();
+        let sparse = CompiledModel::compile_sparse(&g, &p, &spec).unwrap();
+        assert_eq!(sparse.total_nnz(), sparse.total_weights());
+        for img in images(4) {
+            assert_eq!(dense.forward(&img).unwrap(), sparse.forward(&img).unwrap());
+        }
+    }
+
+    #[test]
+    fn sparse_schedule_equals_dense_on_masked_weights() {
+        // Pruned weights quantise to code 0 in the dense kernel, so the
+        // dense loop over masked codes and the nnz-only schedule compute
+        // the same integer sums — baked sparsity changes cost, not values.
+        let (g, p) = lenet_params(2, Some(0.8));
+        let spec = KernelSpec::default();
+        let dense = CompiledModel::compile_dense(&g, &p, &spec).unwrap();
+        let sparse = CompiledModel::compile_sparse(&g, &p, &spec).unwrap();
+        assert!(sparse.total_nnz() < sparse.total_weights());
+        for img in images(4) {
+            assert_eq!(dense.forward(&img).unwrap(), sparse.forward(&img).unwrap());
+        }
+    }
+
+    #[test]
+    fn partial_sparse_matches_unrolled_sparse() {
+        let (g, p) = lenet_params(3, Some(0.7));
+        let spec = KernelSpec::default();
+        let sparse = CompiledModel::compile_sparse(&g, &p, &spec).unwrap();
+        let mut cfg = FoldingConfig::default();
+        for n in g.mac_nodes() {
+            // Partial unroll at a SIMD granularity that divides fold_in.
+            let simd = if n.fold_in() % 5 == 0 { 5 } else { 2 };
+            cfg.set(
+                &n.name,
+                LayerFold { pe: 1, simd, style: Style::PartialSparse, sparsity: 0.5 },
+            );
+        }
+        let partial = CompiledModel::compile(&g, &p, &spec, &cfg).unwrap();
+        // Block schedules store zeros inside live blocks but never change
+        // the integer sums.
+        assert!(partial.scheduled_macs_per_frame() >= sparse.scheduled_macs_per_frame());
+        assert!(partial.scheduled_macs_per_frame() <= partial.dense_macs_per_frame());
+        for img in images(3) {
+            assert_eq!(partial.forward(&img).unwrap(), sparse.forward(&img).unwrap());
+        }
+        // The packed layout charges exactly one base-row index per live
+        // block (positions inside a block are implicit).
+        for mac in partial.mac_stages() {
+            let Kernel::Sparse { live_blocks, .. } = &mac.kernel else {
+                panic!("partial compile produced a dense kernel");
+            };
+            assert_eq!(mac.packed_rel.len(), (live_blocks * mac.idx_bits).div_ceil(8));
+            assert_eq!(mac.idx_bits, pack::index_bits(mac.fold_in));
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_shaped() {
+        let (g, p) = lenet_params(4, Some(0.75));
+        let m = CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap();
+        assert_eq!(m.input_pixels(), 28 * 28);
+        assert_eq!(m.output_len(), 10);
+        let img = SyntheticRuntime::stripe_image(3);
+        let a = m.forward(&img).unwrap();
+        let b = m.forward(&img).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Batch path concatenates per-frame logits.
+        let two: Vec<f32> = [img.clone(), img].concat();
+        let batch = m.infer_batch(&two, 2).unwrap();
+        assert_eq!(&batch[..10], &a[..]);
+        assert_eq!(&batch[10..], &a[..]);
+        assert!(m.forward(&[0.0; 3]).is_err());
+        assert!(m.infer_batch(&two, 3).is_err());
+    }
+
+    #[test]
+    fn sparsity_and_compression_match_headline_accounting() {
+        let (g, p) = lenet_params(5, Some(0.845));
+        let m = CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap();
+        let ms = m.sparsity();
+        assert_eq!(ms.total_weights(), 44_190);
+        assert_eq!(ms.total_nnz(), p.sparsity().total_nnz());
+        // The compiled model's self-reported compression must be the same
+        // number experiments::headline derives from the same accounting
+        // (acceptance criterion: within 1%; it is exact by construction).
+        let (free, csr) = headline::compression_from_sparsity(&ms, m.spec.weights.bits);
+        assert!((m.compression() - free).abs() / free < 1e-9);
+        assert!((m.compression_csr(16) - csr).abs() / csr < 1e-9);
+        assert!(m.compression() > m.compression_csr(16));
+    }
+
+    #[test]
+    fn nnz_macs_shrink_with_sparsity() {
+        let (g, dense_p) = lenet_params(6, None);
+        let (_, sparse_p) = lenet_params(6, Some(0.75));
+        let spec = KernelSpec::default();
+        let dense = CompiledModel::compile_dense(&g, &dense_p, &spec).unwrap();
+        let sparse = CompiledModel::compile_sparse(&g, &sparse_p, &spec).unwrap();
+        assert_eq!(dense.dense_macs_per_frame(), 281_640);
+        assert_eq!(dense.scheduled_macs_per_frame(), 281_640);
+        let ratio =
+            sparse.scheduled_macs_per_frame() as f64 / dense.scheduled_macs_per_frame() as f64;
+        assert!(ratio < 0.35, "75% pruning must cut scheduled MACs: {ratio}");
+    }
+
+    #[test]
+    fn packed_streams_roundtrip_to_schedules() {
+        let (g, p) = lenet_params(7, Some(0.6));
+        let m = CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap();
+        for mac in m.mac_stages() {
+            let Kernel::Sparse { rel, code, .. } = &mac.kernel else {
+                panic!("sparse compile produced a dense kernel");
+            };
+            assert_eq!(
+                &pack::unpack_codes(&mac.packed_codes, m.spec.weights.bits, code.len()),
+                code
+            );
+            assert_eq!(&pack::unpack_bits(&mac.packed_rel, mac.idx_bits, rel.len()), rel);
+            // W4 + minimal-width indices beat the unpacked tables.
+            assert!(mac.packed_codes.len() < code.len());
+        }
+        assert!(m.runtime_bytes() > 0);
+    }
+
+    #[test]
+    fn mlp_chain_compiles_and_runs() {
+        let g = mlp(64, 32, 10);
+        let mut p = ModelParams::synthetic(&g, 8);
+        p.prune_global(0.5, 0.1).unwrap();
+        let m = CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap();
+        assert_eq!(m.input_pixels(), 64);
+        let x: Vec<f32> = (0..64).map(|i| (i % 7) as f32 / 7.0).collect();
+        assert_eq!(m.forward(&x).unwrap().len(), 10);
+    }
+
+    #[test]
+    fn compiles_from_dse_folding() {
+        // The DSE's chosen styles drive kernel selection directly: one
+        // FoldingConfig is shared by cost model, simulator and kernels.
+        let g = lenet5();
+        let profile = PruneProfile::uniform(&g, &[0.5, 0.7, 0.8], 0.95);
+        let r = dse::run(Strategy::Proposed, &g, &XCU50, &profile, &DseOptions::default())
+            .unwrap();
+        let mut p = ModelParams::synthetic(&g, 9);
+        p.prune_global(0.7, 0.05).unwrap();
+        let m = CompiledModel::compile(&g, &p, &KernelSpec::default(), &r.folding).unwrap();
+        assert_eq!(m.folding, r.folding);
+        let img = SyntheticRuntime::stripe_image(1);
+        assert_eq!(m.forward(&img).unwrap().len(), 10);
+    }
+
+    #[test]
+    fn rejects_bad_specs_and_graphs() {
+        let (g, p) = lenet_params(10, None);
+        let spec = KernelSpec { act_bits: 1, ..KernelSpec::default() };
+        assert!(CompiledModel::compile_dense(&g, &p, &spec).is_err());
+        let spec = KernelSpec { act_ceil: 0.0, ..KernelSpec::default() };
+        assert!(CompiledModel::compile_dense(&g, &p, &spec).is_err());
+        // Params missing a layer.
+        let g2 = lenet5();
+        let mut p2 = ModelParams::synthetic(&g2, 11);
+        p2.layers.retain(|l| l.name != "fc2");
+        assert!(CompiledModel::compile_dense(&g2, &p2, &KernelSpec::default()).is_err());
+    }
+}

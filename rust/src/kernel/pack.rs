@@ -1,0 +1,164 @@
+//! Bit-packing substrate for baked kernels (S20a).
+//!
+//! The compile pass stores weight codes and input indices as dense
+//! little-endian bitstreams — the software analogue of the paper's packed
+//! on-chip layout, and the byte-exact source for size accounting (a W4
+//! code costs 4 bits, an index exactly `index_bits(extent)` bits, nothing
+//! more). Values are packed LSB-first; codes are two's-complement in
+//! `bits` bits.
+
+/// Bits needed to address `extent` distinct positions (>= 1).
+pub fn index_bits(extent: usize) -> usize {
+    if extent <= 2 {
+        1
+    } else {
+        (usize::BITS - (extent - 1).leading_zeros()) as usize
+    }
+}
+
+/// Pack `values` at `bits` bits each (1..=32), LSB-first. Values wider
+/// than `bits` are truncated to the low bits.
+pub fn pack_bits(values: &[u32], bits: usize) -> Vec<u8> {
+    assert!((1..=32).contains(&bits), "pack width {bits} out of [1,32]");
+    let total = values.len() * bits;
+    let mut buf = vec![0u8; total.div_ceil(8)];
+    let mut pos = 0usize;
+    for &raw in values {
+        let v = if bits == 32 { raw } else { raw & ((1u32 << bits) - 1) };
+        let mut written = 0usize;
+        while written < bits {
+            let byte = (pos + written) / 8;
+            let bit = (pos + written) % 8;
+            let take = (8 - bit).min(bits - written);
+            let chunk = ((v >> written) as u64 & ((1u64 << take) - 1)) as u8;
+            buf[byte] |= chunk << bit;
+            written += take;
+        }
+        pos += bits;
+    }
+    buf
+}
+
+/// Unpack `n` values of `bits` bits each from a [`pack_bits`] stream.
+pub fn unpack_bits(bytes: &[u8], bits: usize, n: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits), "pack width {bits} out of [1,32]");
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    for _ in 0..n {
+        let mut v = 0u32;
+        let mut read = 0usize;
+        while read < bits {
+            let byte = (pos + read) / 8;
+            let bit = (pos + read) % 8;
+            let take = (8 - bit).min(bits - read);
+            let chunk = (bytes[byte] >> bit) & (((1u16 << take) - 1) as u8);
+            v |= (chunk as u32) << read;
+            read += take;
+        }
+        out.push(v);
+        pos += bits;
+    }
+    out
+}
+
+/// Pack signed weight codes two's-complement at `bits` bits (2..=8).
+pub fn pack_codes(codes: &[i8], bits: usize) -> Vec<u8> {
+    assert!((2..=8).contains(&bits), "code width {bits} out of [2,8]");
+    let vals: Vec<u32> = codes.iter().map(|&c| c as i32 as u32).collect();
+    pack_bits(&vals, bits)
+}
+
+/// Unpack `n` signed codes from a [`pack_codes`] stream (sign-extending).
+pub fn unpack_codes(bytes: &[u8], bits: usize, n: usize) -> Vec<i8> {
+    assert!((2..=8).contains(&bits), "code width {bits} out of [2,8]");
+    unpack_bits(bytes, bits, n)
+        .into_iter()
+        .map(|v| {
+            let sign = 1u32 << (bits - 1);
+            if v & sign != 0 {
+                (v as i32 - (1i32 << bits)) as i8
+            } else {
+                v as i8
+            }
+        })
+        .collect()
+}
+
+/// Pack index values at `index_bits(extent)` bits; returns (bytes, bits).
+pub fn pack_indices(idx: &[u32], extent: usize) -> (Vec<u8>, usize) {
+    let bits = index_bits(extent);
+    (pack_bits(idx, bits), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn index_width_arithmetic() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(257), 9);
+        assert_eq!(index_bits(25), 5);
+    }
+
+    #[test]
+    fn nibble_roundtrip() {
+        let codes: Vec<i8> = (-7..=7).collect();
+        let packed = pack_codes(&codes, 4);
+        // 15 codes * 4 bits = 60 bits -> 8 bytes.
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_codes(&packed, 4, codes.len()), codes);
+    }
+
+    #[test]
+    fn unaligned_widths_roundtrip() {
+        let vals = vec![5u32, 0, 7, 2, 6, 1, 3];
+        for bits in [3usize, 5, 7, 11] {
+            let packed = pack_bits(&vals, bits);
+            assert_eq!(packed.len(), (vals.len() * bits).div_ceil(8));
+            assert_eq!(unpack_bits(&packed, bits, vals.len()), vals);
+        }
+    }
+
+    #[test]
+    fn indices_pack_at_minimal_width() {
+        let idx = vec![0u32, 24, 13, 7];
+        let (bytes, bits) = pack_indices(&idx, 25);
+        assert_eq!(bits, 5);
+        assert_eq!(unpack_bits(&bytes, bits, idx.len()), idx);
+    }
+
+    #[test]
+    fn prop_code_roundtrip_all_widths() {
+        check("pack/unpack codes identity", 150, |g| {
+            let bits = g.usize(2, 8);
+            let qmax = (1i32 << (bits - 1)) - 1;
+            let n = g.usize(0, 200);
+            let mut rng = Pcg32::seeded(g.case + 3);
+            let codes: Vec<i8> = (0..n)
+                .map(|_| (rng.below((2 * qmax + 1) as u32) as i32 - qmax) as i8)
+                .collect();
+            let packed = pack_codes(&codes, bits);
+            assert_eq!(packed.len(), (n * bits).div_ceil(8));
+            assert_eq!(unpack_codes(&packed, bits, n), codes);
+        });
+    }
+
+    #[test]
+    fn prop_bit_roundtrip() {
+        check("pack/unpack bits identity", 150, |g| {
+            let bits = g.usize(1, 32);
+            let n = g.usize(0, 120);
+            let mut rng = Pcg32::seeded(g.case + 11);
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let vals: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+            let packed = pack_bits(&vals, bits);
+            assert_eq!(unpack_bits(&packed, bits, n), vals);
+        });
+    }
+}

@@ -14,6 +14,10 @@
 //! * [`dse`] — **the paper's contribution**: heuristic folding search with
 //!   secondary relaxation + iterative bottleneck elimination with sparse /
 //!   factor unfolding under resource constraints (Fig. 1);
+//! * [`kernel`] — **engine-free baked sparse kernels**: a compile pass
+//!   turns Graph + masks + W4 codes into per-layer nnz-only MAC schedules
+//!   (the software analogue of LUT baking) served natively by the
+//!   coordinator — see DESIGN.md §9;
 //! * [`sim`] — cycle-level streaming-dataflow simulator that *measures*
 //!   latency/throughput of a configured accelerator (Table I's measured
 //!   columns);
@@ -40,6 +44,7 @@ pub mod dse;
 pub mod experiments;
 pub mod folding;
 pub mod graph;
+pub mod kernel;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

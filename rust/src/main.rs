@@ -16,10 +16,13 @@ use logicsparse::coordinator::{BatchPolicy, EngineBackend, Server, ServerOptions
 use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
 use logicsparse::graph::builder::lenet5;
+use logicsparse::kernel::{CompiledModel, KernelSpec};
 use logicsparse::util::cli::{self, Opt};
 use logicsparse::util::error::Result;
 use logicsparse::util::lstw::Store;
+use logicsparse::weights::ModelParams;
 use logicsparse::{device, graph, runtime, sim};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -225,6 +228,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "admission", takes_value: true, default: Some("1024"), help: "in-flight admission bound (overload sheds)" },
         Opt { name: "queue-depth", takes_value: true, default: Some("16"), help: "per-engine work-ring depth (batches)" },
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
+        Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
     ]);
     let a = cli::parse(argv, &opts)?;
     if a.flag("help") {
@@ -236,27 +240,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let n_req = a.get_usize("requests")?.unwrap_or(2048);
     let px = runtime::IMG * runtime::IMG;
 
-    // Backend + request stream: the exported test set through PJRT, or —
-    // with --synthetic-us — generated images through the synthetic engine
-    // (serving-plane exercise without artifacts).
-    let (backend, imgs, labels) = match a.get_usize("synthetic-us")? {
-        Some(us) => {
-            let (imgs, labels) = runtime::SyntheticRuntime::dataset(512);
-            let backend = EngineBackend::Synthetic {
-                per_image: Duration::from_micros(us as u64),
-            };
-            (backend, imgs, labels)
+    // Backend + request stream: the exported test set through PJRT; with
+    // --synthetic-us, generated images through the synthetic engine; with
+    // --native-sparsity, baked sparse kernels compiled on the spot (the
+    // labels come from the compiled model itself, so served classes are
+    // checked against a local forward pass of the same artifact).
+    let (backend, imgs, labels) = if let Some(s) = a.get_f64("native-sparsity")? {
+        let g = lenet5();
+        let mut params = match ModelParams::load_artifacts(artifacts, tag, &g) {
+            Ok(p) => p,
+            Err(_) => {
+                eprintln!("note: no params_{tag}.lstw — using synthetic weights");
+                ModelParams::synthetic(&g, 17)
+            }
+        };
+        params.prune_global(s, 0.05)?;
+        let model = Arc::new(CompiledModel::compile_sparse(&g, &params, &KernelSpec::default())?);
+        println!("native kernels: {}", model.summary());
+        let n = 256usize;
+        let (imgs, _) = runtime::SyntheticRuntime::dataset(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            labels.push(model.classify(&imgs[i * px..(i + 1) * px])? as i32);
         }
-        None => {
-            let ts = Store::read_file(std::path::Path::new(artifacts).join("testset.lstw"))?;
-            let imgs = ts.req("images")?.data.as_f32()?.to_vec();
-            let labels = ts.req("labels")?.data.as_i32()?.to_vec();
-            let backend = EngineBackend::Artifacts {
-                dir: artifacts.to_string(),
-                tag: tag.to_string(),
-            };
-            (backend, imgs, labels)
-        }
+        (EngineBackend::Native { model }, imgs, labels)
+    } else if let Some(us) = a.get_usize("synthetic-us")? {
+        let (imgs, labels) = runtime::SyntheticRuntime::dataset(512);
+        let backend = EngineBackend::Synthetic {
+            per_image: Duration::from_micros(us as u64),
+        };
+        (backend, imgs, labels)
+    } else {
+        let ts = Store::read_file(std::path::Path::new(artifacts).join("testset.lstw"))?;
+        let imgs = ts.req("images")?.data.as_f32()?.to_vec();
+        let labels = ts.req("labels")?.data.as_i32()?.to_vec();
+        let backend = EngineBackend::Artifacts {
+            dir: artifacts.to_string(),
+            tag: tag.to_string(),
+        };
+        (backend, imgs, labels)
     };
     let n_avail = labels.len();
 

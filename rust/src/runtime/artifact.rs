@@ -24,6 +24,14 @@ pub fn parse_name(name: &str) -> Option<(String, usize)> {
     Some((tag.to_string(), batch))
 }
 
+/// Path of the packed parameter store for `tag` — written by the python
+/// exporter (stage 1/2) or natively by `ModelParams::to_store`, and read
+/// back by `ModelParams::load_artifacts` / the kernel compile pass. One
+/// naming rule for every producer and consumer.
+pub fn params_path(dir: &Path, tag: &str) -> PathBuf {
+    dir.join(format!("params_{tag}.lstw"))
+}
+
 /// All batch variants of `tag` in `dir`, sorted by batch.
 pub fn discover_variants(dir: &Path, tag: &str) -> Result<Vec<Variant>> {
     if !dir.exists() {
@@ -94,6 +102,14 @@ mod tests {
         let tags = discover_tags(&dir).unwrap();
         assert_eq!(tags, vec!["x", "y"]);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn params_naming_matches_exporter() {
+        assert_eq!(
+            params_path(Path::new("artifacts"), "proposed"),
+            PathBuf::from("artifacts/params_proposed.lstw")
+        );
     }
 
     #[test]

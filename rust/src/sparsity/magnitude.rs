@@ -33,8 +33,11 @@ pub fn global_masks(
     } else {
         // Threshold at the k-th smallest magnitude (index k-1): dropping
         // everything <= it removes exactly the k smallest entries.
+        // total_cmp keeps the selection total when weights contain NaN
+        // (a NaN magnitude orders above every finite one, so it is
+        // treated as "large" and never lowers the threshold).
         let idx = (k - 1).min(all.len() - 1);
-        let (_, &mut t, _) = all.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        let (_, &mut t, _) = all.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
         t
     };
 
@@ -46,7 +49,7 @@ pub fn global_masks(
         if kept < floor_n.max(1) {
             // keep the top floor_n by magnitude instead
             let mut idx: Vec<usize> = (0..l.w.len()).collect();
-            idx.sort_by(|&a, &b| l.w[b].abs().partial_cmp(&l.w[a].abs()).unwrap());
+            idx.sort_by(|&a, &b| l.w[b].abs().total_cmp(&l.w[a].abs()));
             keep = vec![false; l.w.len()];
             for &i in idx.iter().take(floor_n.max(1)) {
                 keep[i] = true;
@@ -65,7 +68,7 @@ pub fn layer_mask(w: &[f32], sparsity: f64) -> Result<Mask> {
     let n = w.len();
     let keep_n = (((n as f64) * (1.0 - sparsity)).round() as usize).max(1);
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    idx.sort_by(|&a, &b| w[b].abs().total_cmp(&w[a].abs()));
     let mut keep = vec![false; n];
     for &i in idx.iter().take(keep_n) {
         keep[i] = true;
@@ -154,6 +157,39 @@ mod tests {
             let m2 = layer_mask(&w, s2).unwrap();
             assert!(m2.nnz() <= m1.nnz());
         });
+    }
+
+    #[test]
+    fn nan_weights_never_panic() {
+        // Regression: the sorts used partial_cmp().unwrap() and panicked
+        // the moment an exported tensor carried a NaN (e.g. a divergent
+        // training run). NaN magnitudes now have a total order (sorted as
+        // largest), so the masks stay well-formed instead of panicking.
+        let mut w = randw(200, 9);
+        w[17] = f32::NAN;
+        w[90] = f32::NAN;
+
+        let m = layer_mask(&w, 0.5).unwrap();
+        assert_eq!(m.len(), 200);
+        assert_eq!(m.nnz(), 100);
+        assert!(m.keep[17] && m.keep[90], "NaN sorts as large magnitude: kept");
+
+        let clean = randw(300, 10);
+        let layers = vec![
+            LayerWeights { name: "nan", w: &w },
+            LayerWeights { name: "clean", w: &clean },
+        ];
+        let masks = global_masks(&layers, 0.6, 0.05).unwrap();
+        assert_eq!(masks.len(), 2);
+        for (_, m) in &masks {
+            assert!(m.nnz() >= 1, "floor keeps every layer connected");
+        }
+        // All-NaN input is the worst case: still no panic.
+        let all_nan = vec![f32::NAN; 32];
+        let m = layer_mask(&all_nan, 0.75).unwrap();
+        assert_eq!(m.nnz(), 8);
+        let layers = vec![LayerWeights { name: "allnan", w: &all_nan }];
+        assert!(global_masks(&layers, 0.5, 0.1).is_ok());
     }
 
     #[test]

@@ -29,7 +29,9 @@ pub fn nm_mask(w: &[f32], fold_in: usize, cout: usize, n: usize, m: usize) -> Re
             let hi = (r + m).min(fold_in);
             // indices of this group in flat layout
             let mut idx: Vec<usize> = (r..hi).map(|row| row * cout + c).collect();
-            idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+            // NaN-total order: a NaN magnitude counts as largest, so it is
+            // kept rather than panicking (consistent with `magnitude`).
+            idx.sort_by(|&a, &b| w[b].abs().total_cmp(&w[a].abs()));
             let keep_n = n.min(idx.len());
             for &i in idx.iter().take(keep_n) {
                 keep[i] = true;

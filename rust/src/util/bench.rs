@@ -3,8 +3,64 @@
 //! The `cargo bench` targets (`benches/*.rs`, `harness = false`) use this:
 //! warmup, calibrated iteration counts, median/p10/p90 over samples, and a
 //! one-line report compatible with the EXPERIMENTS.md §Perf tables.
+//! [`BenchLog`] additionally writes the per-scenario numbers as JSON
+//! (`BENCH_<name>.json`) so the perf trajectory is machine-trackable
+//! across PRs instead of living only in scrollback.
 
+use crate::util::json::{self, Value};
 use std::time::Instant;
+
+/// Scenario name -> flat metric map, serialised by [`BenchLog::write`].
+type Metrics = Vec<(String, f64)>;
+
+/// Machine-readable results of one bench binary.
+#[derive(Debug, Clone)]
+pub struct BenchLog {
+    bench: String,
+    scenarios: Vec<(String, Metrics)>,
+}
+
+impl BenchLog {
+    pub fn new(bench: impl Into<String>) -> Self {
+        BenchLog { bench: bench.into(), scenarios: Vec::new() }
+    }
+
+    /// Record one scenario's metrics (insertion-ordered, overwrites an
+    /// existing scenario of the same name).
+    pub fn push(&mut self, scenario: &str, metrics: &[(&str, f64)]) {
+        let entry = metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        match self.scenarios.iter_mut().find(|(n, _)| n == scenario) {
+            Some((_, m)) => *m = entry,
+            None => self.scenarios.push((scenario.to_string(), entry)),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// Write `{"bench": ..., "results": {scenario: {metric: value}}}`.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> crate::util::error::Result<()> {
+        let results = Value::Obj(
+            self.scenarios
+                .iter()
+                .map(|(name, ms)| {
+                    (
+                        name.clone(),
+                        Value::Obj(
+                            ms.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        let doc = json::obj(vec![
+            ("bench", json::s(self.bench.clone())),
+            ("results", results),
+        ]);
+        json::write_file(path, &doc)
+    }
+}
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -132,6 +188,23 @@ mod tests {
         };
         assert!(s.p10() <= s.median() && s.median() <= s.p90());
         assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn bench_log_roundtrips_through_json() {
+        let mut log = BenchLog::new("unit");
+        log.push("scenario_a", &[("rps", 1234.5), ("p99_ms", 7.25)]);
+        log.push("scenario_b", &[("shed", 0.0)]);
+        log.push("scenario_a", &[("rps", 2000.0)]); // overwrite wins
+        let path = std::env::temp_dir().join(format!("bench_log_{}.json", std::process::id()));
+        log.write(&path).unwrap();
+        let v = json::parse_file(&path).unwrap();
+        assert_eq!(v.req_str("bench").unwrap(), "unit");
+        let results = v.req("results").unwrap();
+        assert_eq!(results.get("scenario_a").unwrap().req_f64("rps").unwrap(), 2000.0);
+        assert!(results.get("scenario_a").unwrap().get("p99_ms").is_none());
+        assert_eq!(results.get("scenario_b").unwrap().req_f64("shed").unwrap(), 0.0);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub enum Error {
     Sim(String),
     /// PJRT / XLA runtime failures.
     Xla(String),
+    /// Baked-kernel compile or execution failures.
+    Kernel(String),
     /// Serving-path failures (queue closed, batcher shutdown).
     QueueClosed,
     /// Admission control shed the request: the in-flight bound is hit.
@@ -48,6 +50,7 @@ impl fmt::Display for Error {
             Error::Dse(m) => write!(f, "dse: {m}"),
             Error::Sim(m) => write!(f, "sim: {m}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Kernel(m) => write!(f, "kernel: {m}"),
             Error::QueueClosed => write!(f, "request queue closed"),
             Error::Overloaded => write!(f, "overloaded: admission queue full, request shed"),
             Error::Config(m) => write!(f, "config: {m}"),
@@ -88,6 +91,9 @@ impl Error {
     }
     pub fn lstw(msg: impl Into<String>) -> Self {
         Error::Lstw(msg.into())
+    }
+    pub fn kernel(msg: impl Into<String>) -> Self {
+        Error::Kernel(msg.into())
     }
 }
 

@@ -6,9 +6,13 @@
 //! (sparsity stats, quant checks, DSE) expects.
 
 use crate::graph::Graph;
+use crate::runtime::artifact;
+use crate::sparsity::magnitude::{global_masks, LayerWeights};
 use crate::sparsity::{Mask, ModelSparsity};
 use crate::util::error::{Error, Result};
-use crate::util::lstw::Store;
+use crate::util::lstw::{Data, Store, Tensor};
+use crate::util::rng::Pcg32;
+use std::path::Path;
 
 /// One MAC layer's parameters.
 #[derive(Debug, Clone)]
@@ -95,6 +99,71 @@ impl ModelParams {
         Ok(ModelParams { layers })
     }
 
+    /// Load `params_<tag>.lstw` from an artifacts directory (the file the
+    /// python exporter writes and [`Self::to_store`] mirrors).
+    pub fn load_artifacts(dir: impl AsRef<Path>, tag: &str, g: &Graph) -> Result<Self> {
+        let store = Store::read_file(artifact::params_path(dir.as_ref(), tag))?;
+        Self::load(&store, g)
+    }
+
+    /// Deterministic synthetic parameters for `g`: unit-normal weights,
+    /// zero biases, dense masks. The engine-free stand-in for an exported
+    /// `params_<tag>.lstw` — the single generator tests, benches and the
+    /// CLI share, so kernel compiles never re-derive layer shapes ad hoc.
+    pub fn synthetic(g: &Graph, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let layers = g
+            .mac_nodes()
+            .map(|n| LayerParams {
+                name: n.name.clone(),
+                w: (0..n.weights()).map(|_| rng.normal() as f32).collect(),
+                bias: vec![0.0; n.cout],
+                mask: Mask::dense(n.weights()),
+                fold_in: n.fold_in(),
+                cout: n.cout,
+            })
+            .collect();
+        ModelParams { layers }
+    }
+
+    /// Re-mask every layer with one global magnitude threshold (same rule
+    /// as the python pruner; `layer_floor` keeps small layers connected).
+    pub fn prune_global(&mut self, sparsity: f64, layer_floor: f64) -> Result<()> {
+        let masks = {
+            let lws: Vec<LayerWeights<'_>> = self
+                .layers
+                .iter()
+                .map(|l| LayerWeights { name: &l.name, w: &l.w })
+                .collect();
+            global_masks(&lws, sparsity, layer_floor)?
+        };
+        for (l, (name, m)) in self.layers.iter_mut().zip(masks) {
+            debug_assert_eq!(l.name, name);
+            l.mask = m;
+        }
+        Ok(())
+    }
+
+    /// Export to an LSTW store (`<layer>.w/.b/.mask` — byte-compatible
+    /// with the python exporter, so [`Self::load`] round-trips).
+    pub fn to_store(&self) -> Store {
+        let mut store = Store::new();
+        for l in &self.layers {
+            store.push(Tensor::f32(
+                format!("{}.w", l.name),
+                vec![l.fold_in, l.cout],
+                l.w.clone(),
+            ));
+            store.push(Tensor::f32(format!("{}.b", l.name), vec![l.cout], l.bias.clone()));
+            store.push(Tensor {
+                name: format!("{}.mask", l.name),
+                shape: vec![l.fold_in, l.cout],
+                data: Data::U8(l.mask.keep.iter().map(|&k| k as u8).collect()),
+            });
+        }
+        store
+    }
+
     /// Per-layer + global sparsity statistics.
     pub fn sparsity(&self) -> ModelSparsity {
         let mut ms = ModelSparsity::default();
@@ -169,6 +238,40 @@ mod tests {
         store.tensors[idx] = Tensor::f32("conv1.w", vec![10], vec![0.0; 10]);
         let err = ModelParams::load(&store, &g).unwrap_err();
         assert!(err.to_string().contains("conv1.w"), "{err}");
+    }
+
+    #[test]
+    fn synthetic_prune_store_roundtrip() {
+        let g = lenet5();
+        let mut mp = ModelParams::synthetic(&g, 42);
+        assert_eq!(mp.sparsity().global_sparsity(), 0.0);
+        mp.prune_global(0.8, 0.05).unwrap();
+        let s = mp.sparsity().global_sparsity();
+        assert!((s - 0.8).abs() < 0.02, "global sparsity {s}");
+        // Export and reload through the LSTW interchange: identical.
+        let back = ModelParams::load(&mp.to_store(), &g).unwrap();
+        for (a, b) in mp.layers.iter().zip(&back.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.mask, b.mask);
+        }
+    }
+
+    #[test]
+    fn load_artifacts_reads_params_file() {
+        let g = lenet5();
+        let mut mp = ModelParams::synthetic(&g, 7);
+        mp.prune_global(0.5, 0.0).unwrap();
+        let dir = std::env::temp_dir().join(format!("lstw_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        mp.to_store()
+            .write_file(crate::runtime::artifact::params_path(&dir, "testtag"))
+            .unwrap();
+        let back = ModelParams::load_artifacts(&dir, "testtag", &g).unwrap();
+        assert_eq!(back.sparsity().total_nnz(), mp.sparsity().total_nnz());
+        assert!(ModelParams::load_artifacts(&dir, "absent", &g).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Quantisation parity + sparsity round-trip tests.
+//!
+//! The rust `quant::QSpec` must stay numerically identical to
+//! `python/compile/quant.py` (`quantize_weight_int` / `dequantize_weight`:
+//! symmetric per-output-channel scales, qmax = 2^(b-1) - 1). The golden
+//! vectors below were computed from the python definitions by hand;
+//! values are chosen away from .5 rounding boundaries so the jnp.round
+//! (half-to-even) vs f32::round (half-away-from-zero) difference cannot
+//! bite — on such inputs both paths agree exactly.
+
+use logicsparse::quant::{quantize_per_channel, QSpec};
+use logicsparse::sparsity::nm::{nm_mask, nm_sparsity};
+use logicsparse::sparsity::Mask;
+
+/// python: q, scale = quantize_weight_int(w, bits=4, per_channel=True)
+/// with w of shape [cout=2, fold_in=4] transposed into our
+/// [fold_in, cout] row-major layout.
+///
+/// col 0: [0.70, -0.23, 0.14, 0.06]  -> amax 0.70, scale 0.1
+/// col 1: [-1.40, 0.35, 0.63, -0.07] -> amax 1.40, scale 0.2
+#[test]
+fn golden_per_channel_codes_match_python() {
+    let spec = QSpec::new(4).unwrap();
+    let w = vec![
+        0.70f32, -1.40, //
+        -0.23, 0.35, //
+        0.14, 0.63, //
+        0.06, -0.07,
+    ];
+    let (codes, scales) = quantize_per_channel(&w, 4, 2, spec).unwrap();
+    assert!((scales[0] - 0.1).abs() < 1e-6, "scale[0] = {}", scales[0]);
+    assert!((scales[1] - 0.2).abs() < 1e-6, "scale[1] = {}", scales[1]);
+    // python: round(w / scale) clipped to [-7, 7].
+    assert_eq!(codes, vec![7, -7, -2, 2, 1, 3, 1, 0]);
+}
+
+/// python: dequantize_weight(q, scale) = q * scale, and every dequantised
+/// value must sit on the grid (`on_grid`) within float tolerance.
+#[test]
+fn golden_encode_decode_matches_python_dequant() {
+    let spec = QSpec::new(4).unwrap();
+    let scale = 0.2f32;
+    let w = vec![1.40f32, -1.40, 0.42, -0.65, 0.0, 0.27];
+    let codes = spec.encode(&w, scale);
+    assert_eq!(codes, vec![7, -7, 2, -3, 0, 1]);
+    let back = spec.decode(&codes, scale);
+    for (b, expect) in back.iter().zip([1.4f32, -1.4, 0.4, -0.6, 0.0, 0.2]) {
+        assert!((b - expect).abs() < 1e-6, "{b} vs {expect}");
+    }
+    assert!(spec.on_grid(&back, scale, 1e-5));
+    // Values clip, never wrap: |w| far beyond amax saturates at qmax.
+    assert_eq!(spec.encode(&[10.0, -10.0], scale), vec![7, -7]);
+}
+
+/// python guards fully-pruned channels with amax >= 1e-8 so the scale is
+/// never zero; rust must do the same (no NaN codes on a dead channel).
+#[test]
+fn dead_channel_scale_guard_matches_python() {
+    let spec = QSpec::new(4).unwrap();
+    // col 1 is entirely zero (fully pruned).
+    let w = vec![0.5f32, 0.0, -0.26, 0.0];
+    let (codes, scales) = quantize_per_channel(&w, 2, 2, spec).unwrap();
+    assert!(scales[1] > 0.0 && scales[1].is_finite());
+    // -0.26 / (0.5/7) = -3.64 -> -4.
+    assert_eq!(codes, vec![7, 0, -4, 0]);
+}
+
+/// W8 golden point (the other bit-width the python exporter emits for
+/// ablations): qmax = 127.
+#[test]
+fn golden_w8_codes() {
+    let spec = QSpec::new(8).unwrap();
+    assert_eq!(spec.qmax(), 127);
+    let w = vec![1.27f32, -0.64, 0.333];
+    let scale = spec.scale(1.27);
+    assert!((scale - 0.01).abs() < 1e-6);
+    assert_eq!(spec.encode(&w, scale), vec![127, -64, 33]);
+}
+
+/// N:M masks are idempotent: re-running the mask generator on already
+/// masked weights (distinct nonzero magnitudes) reproduces the mask
+/// exactly — surviving weights always dominate the zeros in their group.
+#[test]
+fn nm_mask_round_trip_is_stable() {
+    // fold_in = 8, cout = 3, distinct magnitudes everywhere.
+    let fold_in = 8;
+    let cout = 3;
+    let w: Vec<f32> = (0..fold_in * cout)
+        .map(|i| (i as f32 + 1.0) * if i % 2 == 0 { 0.013 } else { -0.029 })
+        .collect();
+    for (n, m) in [(2usize, 4usize), (1, 4), (2, 8)] {
+        let mask = nm_mask(&w, fold_in, cout, n, m).unwrap();
+        assert!((mask.sparsity() - nm_sparsity(n, m)).abs() < 1e-12);
+        let mut masked = w.clone();
+        mask.apply(&mut masked).unwrap();
+        let again = nm_mask(&masked, fold_in, cout, n, m).unwrap();
+        assert_eq!(mask, again, "{n}:{m} round trip diverged");
+    }
+}
+
+/// Mask f32 round-trip: from_f32(apply(w)) reproduces the mask whenever
+/// no surviving weight is exactly zero.
+#[test]
+fn mask_f32_round_trip() {
+    let vals = vec![0.4f32, 0.0, -1.25, 2.0, 0.0, -0.01];
+    let mask = Mask::from_f32(&vals);
+    assert_eq!(mask.nnz(), 4);
+    let mut w = vec![1.5f32; 6];
+    mask.apply(&mut w).unwrap();
+    assert_eq!(Mask::from_f32(&w), mask);
+}
+
+/// The quant error bound python's QAT relies on: |w - dq| <= scale/2 for
+/// in-range values — the STE round-trip guarantee.
+#[test]
+fn half_step_error_bound_holds() {
+    let spec = QSpec::new(4).unwrap();
+    let scale = 0.125f32;
+    let w: Vec<f32> = (-80..=80).map(|i| i as f32 * 0.01).collect();
+    let codes = spec.encode(&w, scale);
+    let back = spec.decode(&codes, scale);
+    for ((x, dq), &c) in w.iter().zip(&back).zip(&codes) {
+        if x.abs() <= spec.qmax() as f32 * scale {
+            assert!((x - dq).abs() <= scale / 2.0 + 1e-6, "w {x} dq {dq} code {c}");
+        }
+    }
+}

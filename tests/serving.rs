@@ -5,9 +5,13 @@
 use logicsparse::coordinator::{
     loadgen, BatchPolicy, Server, ServerOptions, ShedMode,
 };
+use logicsparse::graph::builder::lenet5;
+use logicsparse::kernel::{CompiledModel, KernelSpec};
 use logicsparse::runtime::SyntheticRuntime;
 use logicsparse::traffic::Traffic;
+use logicsparse::weights::ModelParams;
 use logicsparse::Error;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Deterministic image whose synthetic class is `i % 10`.
@@ -217,6 +221,82 @@ fn shared_traffic_model_drives_sim_and_server_identically() {
     assert_eq!(rep.offered, 100);
     assert_eq!(rep.completed, 100);
     let _ = server.shutdown();
+}
+
+#[test]
+fn native_baked_kernels_serve_end_to_end() {
+    // The tentpole acceptance path: a CompiledModel of baked sparse
+    // kernels behind the sharded plane. Every served class must equal a
+    // local forward pass of the same model (the oracle), nothing may be
+    // dropped across graceful shutdown, and the engines must report the
+    // native backend's integer datapath — no sleeps, no artifacts.
+    let g = lenet5();
+    let mut params = ModelParams::synthetic(&g, 33);
+    params.prune_global(0.75, 0.05).unwrap();
+    let model =
+        Arc::new(CompiledModel::compile_sparse(&g, &params, &KernelSpec::default()).unwrap());
+    assert!(model.sparsity().global_sparsity() >= 0.70);
+
+    let server = Server::start(ServerOptions {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(300) },
+        engines: 2,
+        admission_capacity: 1024,
+        queue_depth: 8,
+        ..ServerOptions::native(Arc::clone(&model))
+    })
+    .unwrap();
+
+    let n = 60u64;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let img = image(i);
+        let expect = model.classify(&img).unwrap();
+        rxs.push((server.submit(img).unwrap(), expect));
+    }
+    // Shut down with most of the work still queued: the drain guarantee
+    // must hold for the native backend exactly as for the others.
+    let snap = server.shutdown();
+    for (i, (rx, expect)) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("native request {i} dropped in shutdown"));
+        assert!(!resp.is_error(), "native request {i} failed");
+        assert_eq!(resp.class(), expect, "request {i} diverged from local forward");
+    }
+    assert_eq!(snap.submitted, n);
+    assert_eq!(snap.completed, n, "native backend lost admitted requests");
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.shed, 0);
+}
+
+#[test]
+fn native_dense_and_sparse_serve_identical_classes() {
+    // Pruned weights quantise to zero in the dense kernel, so serving the
+    // dense and nnz-only compilations of the *same masked params* must
+    // classify identically — baked sparsity changes cost, never answers.
+    let g = lenet5();
+    let mut params = ModelParams::synthetic(&g, 34);
+    params.prune_global(0.7, 0.05).unwrap();
+    let spec = KernelSpec::default();
+    let dense = Arc::new(CompiledModel::compile_dense(&g, &params, &spec).unwrap());
+    let sparse = Arc::new(CompiledModel::compile_sparse(&g, &params, &spec).unwrap());
+    let run = |model: Arc<CompiledModel>| -> Vec<usize> {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(300) },
+            engines: 1,
+            admission_capacity: 256,
+            queue_depth: 8,
+            ..ServerOptions::native(model)
+        })
+        .unwrap();
+        let classes: Vec<usize> = (0..20u64)
+            .map(|i| server.infer_blocking(image(i)).unwrap().class())
+            .collect();
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 20);
+        classes
+    };
+    assert_eq!(run(dense), run(sparse));
 }
 
 #[test]
