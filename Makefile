@@ -5,12 +5,18 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test fmt fmt-check clippy bench bench-smoke artifacts clean
+.PHONY: verify build test doc fmt fmt-check clippy bench bench-smoke artifacts clean
 
-## Tier-1 gate: release build + full test suite.
+## Tier-1 gate: release build + full test suite + doc gate.
 verify:
 	$(CARGO) build --release
 	$(CARGO) test -q
+	$(MAKE) doc
+
+## Doc gate: broken intra-doc links and missing public docs fail loudly
+## (the lib carries #![warn(missing_docs)]; -D promotes rustdoc warnings).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --quiet
 
 build:
 	$(CARGO) build --release

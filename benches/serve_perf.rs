@@ -17,23 +17,30 @@
 //! dense loop by >= 1.2x through the full serving plane, and the compiled
 //! model's compression accounting must match `experiments::headline`.
 //!
-//! Part 3 measures the PJRT artifact path and skips with a notice when
+//! Part 3 is the **multi-model fleet** acceptance: a 3-tag heterogeneous
+//! fleet (2 native + 1 synthetic) under a mixed Poisson arrival process
+//! must sustain >= 0.8x the aggregate throughput of three isolated
+//! single-model planes, with zero dropped responses (DESIGN.md §10).
+//!
+//! Part 4 measures the PJRT artifact path and skips with a notice when
 //! `make artifacts` has not been run.
 //!
 //! Every scenario's numbers are also written to `BENCH_serve.json`
-//! (machine-readable perf trajectory across PRs). Set `BENCH_SMOKE=1` for
+//! (machine-readable perf trajectory across PRs; each row carries a
+//! `model` field so fleet rows stay distinguishable). Set `BENCH_SMOKE=1` for
 //! a fast CI smoke run: small request counts, and the timing-ratio
 //! assertions (noisy on shared runners) are skipped while the
 //! zero-loss/accounting assertions stay on.
 
 use logicsparse::coordinator::{
-    loadgen, BatchPolicy, LoadReport, Server, ServerOptions, ShedMode,
+    loadgen, BatchPolicy, EngineBackend, Fleet, FleetOptions, LoadReport, ModelSpec,
+    Server, ServerOptions, ShedMode,
 };
 use logicsparse::experiments::headline;
 use logicsparse::graph::builder::lenet5;
 use logicsparse::kernel::{CompiledModel, KernelSpec};
 use logicsparse::runtime::{ModelRuntime, SyntheticRuntime, IMG};
-use logicsparse::traffic::Traffic;
+use logicsparse::traffic::{Mix, Traffic};
 use logicsparse::util::bench::{Bencher, BenchLog};
 use logicsparse::util::lstw::Store;
 use logicsparse::weights::ModelParams;
@@ -222,6 +229,138 @@ fn native_kernels(log: &mut BenchLog, smoke: bool) {
     }
 }
 
+/// Multi-model acceptance scenario: a 3-tag heterogeneous fleet (2 native
+/// + 1 synthetic) under a mixed Poisson arrival process must sustain
+/// >= 0.8x the aggregate throughput of three isolated single-model
+/// planes, with zero dropped responses — sharing one admission gate may
+/// cost shed headroom under overload, but must not cost throughput when
+/// every tag runs below capacity.
+fn fleet_heterogeneous(log: &mut BenchLog, smoke: bool) {
+    println!("== multi-model fleet: 2 native + 1 synthetic, mixed Poisson ==");
+    let g = lenet5();
+    let dense_params = ModelParams::synthetic(&g, 21);
+    let mut sparse_params = dense_params.clone();
+    sparse_params.prune_global(0.75, 0.05).unwrap();
+    let spec = KernelSpec::default();
+    let dense = Arc::new(CompiledModel::compile_dense(&g, &dense_params, &spec).unwrap());
+    let sparse = Arc::new(CompiledModel::compile_sparse(&g, &sparse_params, &spec).unwrap());
+
+    let dur_s = if smoke { 0.3 } else { 2.5 };
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) };
+    // (tag, backend, Poisson rate in req/s, seed). Rates sit well below
+    // each backend's capacity so the comparison measures coordination
+    // overhead, not saturation.
+    let members: Vec<(&str, EngineBackend, f64, u64)> = vec![
+        (
+            "lenet-dense",
+            EngineBackend::Native { model: Arc::clone(&dense) },
+            150.0,
+            31,
+        ),
+        (
+            "lenet-sparse",
+            EngineBackend::Native { model: Arc::clone(&sparse) },
+            250.0,
+            32,
+        ),
+        (
+            "synthetic",
+            EngineBackend::Synthetic { per_image: Duration::from_micros(150) },
+            600.0,
+            33,
+        ),
+    ];
+    let traffic_of =
+        |rate: f64, seed: u64| Traffic::poisson((rate * dur_s).round() as u64, rate, seed);
+
+    // Baseline: each model alone on its own single-model plane, replaying
+    // the identical per-tag traffic.
+    let mut isolated_sum = 0.0;
+    for (tag, backend, rate, seed) in &members {
+        let server = Server::start(ServerOptions {
+            policy: policy.clone(),
+            engines: 1,
+            admission_capacity: 512,
+            queue_depth: 16,
+            backend: backend.clone(),
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &traffic_of(*rate, *seed),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        println!("isolated/{tag}: {}", rep.render());
+        assert_eq!(rep.lost, 0, "isolated/{tag}: responses dropped");
+        assert_eq!(rep.errors, 0, "isolated/{tag}: engine failures");
+        assert_eq!(snap.completed, snap.submitted, "isolated/{tag}: requests lost");
+        isolated_sum += rep.achieved_rps;
+    }
+
+    // The fleet: the same three models behind one shared admission gate,
+    // fed the same three arrival processes merged into one schedule.
+    let fleet = Fleet::start(FleetOptions {
+        models: members
+            .iter()
+            .map(|(tag, backend, _, _)| {
+                ModelSpec::new(*tag, backend.clone()).policy(policy.clone())
+            })
+            .collect(),
+        admission_capacity: 512,
+    })
+    .unwrap();
+    let mut mix = Mix::new();
+    for (tag, _, rate, seed) in &members {
+        mix = mix.stream(*tag, traffic_of(*rate, *seed));
+    }
+    let rep = loadgen::run_open_loop_mix(&fleet, &mix, |_, i| synth_image(i), ShedMode::Retry)
+        .unwrap();
+    let snap = fleet.shutdown();
+    println!("{}", rep.render());
+    assert_eq!(rep.lost(), 0, "fleet: responses dropped across graceful shutdown");
+    assert_eq!(
+        rep.completed(),
+        mix.events(),
+        "fleet Retry run must complete every arrival"
+    );
+    assert_eq!(snap.completed(), snap.submitted(), "fleet: admitted requests lost");
+    for (tag, r) in &rep.per_tag {
+        assert_eq!(r.errors, 0, "fleet/{tag}: engine failures");
+        log.push_model(
+            &format!("fleet_{tag}"),
+            tag,
+            &[
+                ("rps", r.achieved_rps),
+                ("p50_ms", r.latency_pct_s(0.5) * 1e3),
+                ("p99_ms", r.latency_pct_s(0.99) * 1e3),
+                ("completed", r.completed as f64),
+            ],
+        );
+    }
+    let agg = rep.aggregate_rps();
+    let ratio = agg / isolated_sum;
+    println!(
+        "fleet aggregate {agg:.0} req/s vs isolated sum {isolated_sum:.0} req/s ({ratio:.2}x)"
+    );
+    log.push(
+        "fleet_vs_isolated",
+        &[
+            ("aggregate_rps", agg),
+            ("isolated_sum_rps", isolated_sum),
+            ("ratio", ratio),
+        ],
+    );
+    if !smoke {
+        assert!(
+            ratio >= 0.8,
+            "fleet aggregate {agg:.0} req/s fell below 0.8x the isolated sum \
+             {isolated_sum:.0} req/s"
+        );
+    }
+}
+
 fn artifact_scenarios(log: &mut BenchLog) {
     if !std::path::Path::new("artifacts/lenet_proposed_b1.hlo.txt").exists() {
         println!("serve_perf: artifacts missing — run `make artifacts` first (skipping PJRT part)");
@@ -298,6 +437,7 @@ fn main() {
     synthetic_scaling(&mut log, smoke);
     synthetic_poisson(&mut log, smoke);
     native_kernels(&mut log, smoke);
+    fleet_heterogeneous(&mut log, smoke);
     artifact_scenarios(&mut log);
     log.write("BENCH_serve.json").unwrap();
     println!("wrote BENCH_serve.json");

@@ -13,18 +13,24 @@ use crate::util::json::{self, Value};
 /// Serializable DSE outcome for one strategy.
 #[derive(Debug, Clone)]
 pub struct FoldingConfigFile {
+    /// Device name the DSE targeted.
     pub device: String,
+    /// Strategy name the folding was produced by.
     pub strategy: String,
     /// Estimated clock (MHz) at the chosen configuration.
     pub f_mhz: f64,
     /// Estimated totals, recorded for provenance.
     pub est_luts: u64,
+    /// Estimated throughput at the chosen configuration.
     pub est_throughput_fps: f64,
+    /// Estimated single-frame latency at the chosen configuration.
     pub est_latency_us: f64,
+    /// The per-layer folding decisions.
     pub folding: FoldingConfig,
 }
 
 impl FoldingConfigFile {
+    /// Serialise to the `folding_config.json` shape.
     pub fn to_json(&self) -> Value {
         let layers = self
             .folding
@@ -53,6 +59,7 @@ impl FoldingConfigFile {
         ])
     }
 
+    /// Parse the `folding_config.json` shape.
     pub fn from_json(v: &Value) -> Result<Self> {
         let layers_v = v
             .req("layers")?
@@ -79,10 +86,12 @@ impl FoldingConfigFile {
         })
     }
 
+    /// Write `folding_config.json` to `path`.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         json::write_file(path, &self.to_json())
     }
 
+    /// Read a `folding_config.json` from `path`.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         Self::from_json(&json::parse_file(path)?)
     }
@@ -97,19 +106,25 @@ impl FoldingConfigFile {
 /// per-global-sparsity rows of accuracy + per-layer achieved sparsity.
 #[derive(Debug, Clone)]
 pub struct PruneProfile {
+    /// One row per swept global-sparsity operating point.
     pub rows: Vec<PruneRow>,
+    /// The operating point the DSE treats as its accuracy reference.
     pub reference_global_sparsity: f64,
 }
 
+/// One operating point of the pruning reference sweep.
 #[derive(Debug, Clone)]
 pub struct PruneRow {
+    /// Achieved global sparsity of this row.
     pub global_sparsity: f64,
+    /// Test accuracy measured at this sparsity.
     pub accuracy: f64,
     /// (layer, achieved sparsity at this global threshold)
     pub layers: Vec<(String, f64)>,
 }
 
 impl PruneProfile {
+    /// Parse the `prune_profile.json` shape the python exporter writes.
     pub fn from_json(v: &Value) -> Result<Self> {
         let rows_v = v
             .req("rows")?
@@ -143,6 +158,7 @@ impl PruneProfile {
         })
     }
 
+    /// Read a `prune_profile.json` from `path`.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         Self::from_json(&json::parse_file(path)?)
     }

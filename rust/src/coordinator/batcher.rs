@@ -7,8 +7,10 @@
 //! sweep `max_batch`/`max_wait` and attribute effects cleanly.
 //!
 //! Formed batches are handed to the sharded execution plane
-//! ([`ExecutionPlane::dispatch`]) — per-engine rings with work stealing —
-//! instead of a single shared channel.
+//! (`ExecutionPlane::dispatch`) — per-engine rings with work stealing —
+//! instead of a single shared channel. Every serving plane (the
+//! single-model [`crate::coordinator::Server`] or each tag of a
+//! [`crate::coordinator::Fleet`]) runs its own batcher thread.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -41,10 +43,12 @@ impl Default for BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// Small batches, tight deadline: favour per-request latency.
     pub fn low_latency() -> Self {
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) }
     }
 
+    /// Large batches, relaxed deadline: favour aggregate throughput.
     pub fn high_throughput() -> Self {
         BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
     }

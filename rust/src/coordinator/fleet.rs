@@ -1,0 +1,405 @@
+//! Multi-model serving fleet: per-tag execution planes under one shared
+//! admission gate (DESIGN.md §10).
+//!
+//! The engine-free premise makes models cheap to replicate — a baked
+//! `CompiledModel` is immutable plain data behind an `Arc`, a synthetic
+//! backend is a constant, and even PJRT replicas are per-thread anyway —
+//! so one host should serve *many* models at once. A [`Fleet`] owns one
+//! full serving plane per model **tag** (its own batcher, work rings,
+//! engines, stats and shutdown path, with any [`EngineBackend`] mixed
+//! freely), while a single shared [`AdmissionGate`] bounds total in-flight
+//! work across the host: one overload budget governs everything, so a
+//! traffic spike on one model sheds load instead of starving the others'
+//! memory and queues.
+//!
+//! Routing is lock-free on the hot path: a tag resolves to a plane index
+//! with one scan of a small immutable `Vec<String>` (no map, no lock),
+//! and [`Fleet::handle`] resolves once up front so repeat submitters skip
+//! even that. Rejections are distinguishable: [`Error::Overloaded`] means
+//! the shared budget is spent (retry later), [`Error::UnknownModel`] means
+//! no plane serves the tag (retrying cannot help).
+//!
+//! Isolation: planes share *only* the admission gate. A wedged or slow
+//! model fills its own rings and its own batcher queue; other tags keep
+//! their full dispatch and drain paths (asserted in `tests/serving.rs`).
+//! Shutdown walks the planes with the same deterministic lossless drain
+//! the single-model [`Server`](super::Server) uses — every admitted
+//! request of every tag receives a response.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::queue::AdmissionGate;
+use super::{BatchPolicy, EngineBackend, Plane, Response, StatsSnapshot};
+use crate::util::error::{Error, Result};
+
+/// Configuration of one fleet member: a model tag plus the per-plane
+/// knobs a single-model [`super::ServerOptions`] would carry (everything
+/// except the admission bound, which the fleet shares).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Routing key clients submit against (must be unique in the fleet).
+    pub tag: String,
+    /// Backend every engine replica of this plane runs.
+    pub backend: EngineBackend,
+    /// Batch formation policy of this plane.
+    pub policy: BatchPolicy,
+    /// Engine replicas of this plane.
+    pub engines: usize,
+    /// Per-engine work-ring depth, in batches.
+    pub queue_depth: usize,
+}
+
+impl ModelSpec {
+    /// A spec with the single-model defaults (1 engine, default policy,
+    /// 16-deep rings); chain the builder methods to adjust.
+    pub fn new(tag: impl Into<String>, backend: EngineBackend) -> Self {
+        ModelSpec {
+            tag: tag.into(),
+            backend,
+            policy: BatchPolicy::default(),
+            engines: 1,
+            queue_depth: 16,
+        }
+    }
+
+    /// Set the engine replica count.
+    pub fn engines(mut self, engines: usize) -> Self {
+        self.engines = engines;
+        self
+    }
+
+    /// Set the batch formation policy.
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the per-engine work-ring depth.
+    pub fn queue_depth(mut self, queue_depth: usize) -> Self {
+        self.queue_depth = queue_depth;
+        self
+    }
+}
+
+/// Fleet configuration: the member planes plus the one shared admission
+/// budget that governs the whole host.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// One entry per model tag (tags must be unique).
+    pub models: Vec<ModelSpec>,
+    /// Shared admission bound across **all** planes: total requests
+    /// admitted but not yet completed, host-wide.
+    pub admission_capacity: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions { models: Vec::new(), admission_capacity: 1024 }
+    }
+}
+
+/// A running multi-model fleet: N per-tag planes behind one shared
+/// admission gate. See the [module docs](self) for the architecture.
+pub struct Fleet {
+    tags: Vec<String>,
+    planes: Vec<Plane>,
+    gate: Arc<AdmissionGate>,
+}
+
+impl Fleet {
+    /// Start every plane; fails fast if any backend cannot be built
+    /// (planes already started are drained and joined by `Drop`).
+    pub fn start(opts: FleetOptions) -> Result<Fleet> {
+        if opts.models.is_empty() {
+            return Err(Error::config("fleet needs at least one model"));
+        }
+        if opts.admission_capacity == 0 {
+            return Err(Error::config("admission_capacity must be >= 1"));
+        }
+        for (i, m) in opts.models.iter().enumerate() {
+            if opts.models[..i].iter().any(|p| p.tag == m.tag) {
+                return Err(Error::config(format!("duplicate model tag '{}'", m.tag)));
+            }
+        }
+        let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
+        let mut tags = Vec::with_capacity(opts.models.len());
+        let mut planes = Vec::with_capacity(opts.models.len());
+        for spec in opts.models {
+            let plane = Plane::start(
+                spec.policy,
+                spec.engines,
+                spec.backend,
+                spec.queue_depth,
+                Arc::clone(&gate),
+            )?;
+            tags.push(spec.tag);
+            planes.push(plane);
+        }
+        Ok(Fleet { tags, planes, gate })
+    }
+
+    /// The model tags this fleet serves, in plane order.
+    pub fn tags(&self) -> &[String] {
+        &self.tags
+    }
+
+    /// Resolve a tag to its plane index (the one-time routing step);
+    /// [`Error::UnknownModel`] if no plane serves the tag.
+    pub fn resolve(&self, tag: &str) -> Result<usize> {
+        self.tags
+            .iter()
+            .position(|t| t == tag)
+            .ok_or_else(|| Error::unknown_model(tag))
+    }
+
+    /// A pre-resolved submit handle for `tag`: repeat submitters pay the
+    /// tag scan once here and never again on the hot path.
+    pub fn handle(&self, tag: &str) -> Result<TagHandle<'_>> {
+        Ok(TagHandle { fleet: self, index: self.resolve(tag)? })
+    }
+
+    /// Submit one image to the plane serving `tag`.
+    ///
+    /// Fast paths out, all without queueing anything:
+    /// [`Error::UnknownModel`] when no plane serves the tag,
+    /// [`Error::Overloaded`] when the shared admission budget is spent,
+    /// [`Error::QueueClosed`] once shutdown began.
+    pub fn submit(&self, tag: &str, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.planes[self.resolve(tag)?].submit(image)
+    }
+
+    /// Submit to a plane by pre-resolved index (see [`Fleet::resolve`]);
+    /// an out-of-range index is a config error, not a panic.
+    pub fn submit_at(&self, index: usize, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.planes
+            .get(index)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "plane index {index} out of range for a {}-model fleet",
+                    self.planes.len()
+                ))
+            })?
+            .submit(image)
+    }
+
+    /// Submit to `tag` and wait (convenience for examples/tests).
+    pub fn infer_blocking(&self, tag: &str, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(tag, image)?;
+        rx.recv().map_err(|_| Error::QueueClosed)
+    }
+
+    /// In-flight requests currently admitted host-wide (queued or
+    /// executing, summed over every plane — the shared budget in use).
+    pub fn in_flight(&self) -> usize {
+        self.gate.depth()
+    }
+
+    /// The shared admission bound the fleet was started with.
+    pub fn admission_capacity(&self) -> usize {
+        self.gate.capacity()
+    }
+
+    /// Snapshot every plane's stats plus the shared-gate shed total.
+    pub fn stats(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            per_model: self
+                .tags
+                .iter()
+                .zip(&self.planes)
+                .map(|(t, p)| (t.clone(), p.snapshot()))
+                .collect(),
+            shed: self.gate.shed_total(),
+        }
+    }
+
+    /// Graceful shutdown: drain every plane deterministically (same
+    /// lossless protocol as [`super::Server::shutdown`], applied per
+    /// plane) and return the final roll-up.
+    pub fn shutdown(mut self) -> FleetSnapshot {
+        for plane in &mut self.planes {
+            plane.shutdown_impl();
+        }
+        self.stats()
+    }
+}
+
+/// A borrowed, pre-resolved submit target for one fleet tag — the
+/// routing scan already happened in [`Fleet::handle`], so every
+/// [`TagHandle::submit`] is a direct plane submit. Implements
+/// [`super::Submit`], so the open-loop load generator can drive a single
+/// fleet tag exactly like a standalone [`super::Server`].
+#[derive(Clone, Copy)]
+pub struct TagHandle<'a> {
+    fleet: &'a Fleet,
+    index: usize,
+}
+
+impl TagHandle<'_> {
+    /// The tag this handle routes to.
+    pub fn tag(&self) -> &str {
+        &self.fleet.tags[self.index]
+    }
+
+    /// The resolved plane index.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Submit one image to this tag's plane (see [`Fleet::submit`] for
+    /// the error contract, minus the impossible `UnknownModel`).
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.fleet.submit_at(self.index, image)
+    }
+}
+
+/// Roll-up of a fleet's statistics: one [`StatsSnapshot`] per tag plus
+/// the shared admission gate's shed total. Per-tag sheds (each plane's
+/// `shed` counter) and the gate total count the same events from two
+/// sides and must agree: `shed == sum(per-tag shed)`.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    /// `(tag, snapshot)` per plane, in plane order.
+    pub per_model: Vec<(String, StatsSnapshot)>,
+    /// Host-wide sheds counted by the shared admission gate.
+    pub shed: u64,
+}
+
+impl FleetSnapshot {
+    /// The snapshot of one tag, if present.
+    pub fn get(&self, tag: &str) -> Option<&StatsSnapshot> {
+        self.per_model.iter().find(|(t, _)| t == tag).map(|(_, s)| s)
+    }
+
+    /// Total requests admitted across all tags.
+    pub fn submitted(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.submitted).sum()
+    }
+
+    /// Total requests served successfully across all tags.
+    pub fn completed(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.completed).sum()
+    }
+
+    /// Total requests answered with an engine error across all tags.
+    pub fn errors(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.errors).sum()
+    }
+
+    /// Per-tag sheds summed — must equal [`FleetSnapshot::shed`].
+    pub fn shed_by_tag(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.shed).sum()
+    }
+
+    /// Fleet summary line plus one indented line per tag.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "fleet: {} models | served {}/{} ({} errors, {} shed)",
+            self.per_model.len(),
+            self.completed(),
+            self.submitted(),
+            self.errors(),
+            self.shed,
+        );
+        for (tag, snap) in &self.per_model {
+            s.push_str(&format!("\n  [{tag}] {}", snap.render()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SyntheticRuntime;
+    use std::time::Duration;
+
+    fn synthetic(us: u64) -> EngineBackend {
+        EngineBackend::Synthetic { per_image: Duration::from_micros(us) }
+    }
+
+    fn image(i: u64) -> Vec<f32> {
+        SyntheticRuntime::stripe_image(i as usize)
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(Fleet::start(FleetOptions::default()).is_err());
+        let dup = FleetOptions {
+            models: vec![
+                ModelSpec::new("a", synthetic(0)),
+                ModelSpec::new("a", synthetic(0)),
+            ],
+            admission_capacity: 16,
+        };
+        assert!(Fleet::start(dup).is_err());
+        let zero_cap = FleetOptions {
+            models: vec![ModelSpec::new("a", synthetic(0))],
+            admission_capacity: 0,
+        };
+        assert!(Fleet::start(zero_cap).is_err());
+    }
+
+    #[test]
+    fn routes_by_tag_and_rejects_unknown() {
+        let fleet = Fleet::start(FleetOptions {
+            models: vec![
+                ModelSpec::new("alpha", synthetic(0)),
+                ModelSpec::new("beta", synthetic(0)),
+            ],
+            admission_capacity: 64,
+        })
+        .unwrap();
+        assert_eq!(fleet.tags(), &["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(fleet.resolve("beta").unwrap(), 1);
+        assert!(matches!(fleet.resolve("gamma"), Err(Error::UnknownModel(_))));
+        assert!(matches!(
+            fleet.submit("gamma", image(0)),
+            Err(Error::UnknownModel(_))
+        ));
+        assert!(matches!(fleet.submit_at(7, image(0)), Err(Error::Config(_))));
+
+        let h = fleet.handle("beta").unwrap();
+        assert_eq!(h.tag(), "beta");
+        assert_eq!(h.index(), 1);
+        let resp = fleet.infer_blocking("alpha", image(3)).unwrap();
+        assert_eq!(resp.class(), 3);
+        let resp = h.submit(image(7)).unwrap().recv().unwrap();
+        assert_eq!(resp.class(), 7);
+
+        let snap = fleet.shutdown();
+        assert_eq!(snap.get("alpha").unwrap().completed, 1);
+        assert_eq!(snap.get("beta").unwrap().completed, 1);
+        assert_eq!(snap.completed(), 2);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.shed_by_tag(), 0);
+        assert!(snap.render().contains("[alpha]"));
+    }
+
+    #[test]
+    fn snapshot_rolls_up_per_tag_counters() {
+        let fleet = Fleet::start(FleetOptions {
+            models: vec![
+                ModelSpec::new("x", synthetic(0)),
+                ModelSpec::new("y", synthetic(0)),
+            ],
+            admission_capacity: 256,
+        })
+        .unwrap();
+        for i in 0..6u64 {
+            fleet.infer_blocking("x", image(i)).unwrap();
+        }
+        for i in 0..4u64 {
+            fleet.infer_blocking("y", image(i)).unwrap();
+        }
+        let snap = fleet.stats();
+        assert_eq!(snap.get("x").unwrap().completed, 6);
+        assert_eq!(snap.get("y").unwrap().completed, 4);
+        assert_eq!(snap.completed(), 10);
+        assert_eq!(snap.submitted(), 10);
+        assert_eq!(snap.errors(), 0);
+        assert_eq!(fleet.in_flight(), 0);
+        assert_eq!(fleet.admission_capacity(), 256);
+        let _ = fleet.shutdown();
+    }
+}

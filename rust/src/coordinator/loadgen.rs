@@ -11,13 +11,20 @@
 //! which is the right shape for saturated capacity measurements).
 //! Responses are collected on a separate thread so waiting never distorts
 //! the arrival process.
+//!
+//! The generator drives anything that implements [`Submit`]: a
+//! single-model [`Server`] or one tag of a [`Fleet`] (via
+//! [`TagHandle`]). [`run_open_loop_mix`] replays a heterogeneous
+//! [`Mix`] — one arrival process per model tag, merged into a single
+//! wall-clock schedule — against a whole fleet and reports per tag.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use super::fleet::{Fleet, TagHandle};
 use super::{Response, Server};
-use crate::traffic::Traffic;
-use crate::util::error::Error;
+use crate::traffic::{Mix, Traffic};
+use crate::util::error::{Error, Result};
 
 /// What to do when admission control sheds an arrival.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +35,28 @@ pub enum ShedMode {
     /// Retry until admitted (saturated-throughput measurements: every
     /// arrival eventually executes).
     Retry,
+}
+
+/// A submit target the open-loop generator can drive: the single-model
+/// [`Server`], or one tag of a [`Fleet`] through a pre-resolved
+/// [`TagHandle`].
+pub trait Submit {
+    /// Submit one image; same contract as [`Server::submit`]
+    /// ([`Error::Overloaded`] on shed, [`Error::QueueClosed`] once
+    /// shutdown began, nothing queued on either).
+    fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>>;
+}
+
+impl Submit for Server {
+    fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        Server::submit(self, image)
+    }
+}
+
+impl Submit for TagHandle<'_> {
+    fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        TagHandle::submit(self, image)
+    }
 }
 
 /// Outcome of one load-generation run.
@@ -66,6 +95,7 @@ impl LoadReport {
         self.latencies_s[idx]
     }
 
+    /// One-line human-readable summary of the run.
     pub fn render(&self) -> String {
         format!(
             "offered {} | accepted {} (shed {}) | completed {} ({} errors, {} lost) \
@@ -84,11 +114,97 @@ impl LoadReport {
     }
 }
 
+/// Per-tag outcome of one mixed-traffic fleet run
+/// ([`run_open_loop_mix`]). All tags share one wall clock, so the
+/// per-tag `achieved_rps` figures sum to the fleet aggregate.
+#[derive(Debug, Clone)]
+pub struct MixReport {
+    /// `(tag, report)` per mix stream, in mix order.
+    pub per_tag: Vec<(String, LoadReport)>,
+    /// Wall time of the whole mixed run (first submission to last
+    /// response, any tag).
+    pub wall_s: f64,
+}
+
+impl MixReport {
+    /// The report of one tag, if present in the mix.
+    pub fn get(&self, tag: &str) -> Option<&LoadReport> {
+        self.per_tag.iter().find(|(t, _)| t == tag).map(|(_, r)| r)
+    }
+
+    /// Total arrivals offered across all tags.
+    pub fn offered(&self) -> u64 {
+        self.per_tag.iter().map(|(_, r)| r.offered).sum()
+    }
+
+    /// Total successful completions across all tags.
+    pub fn completed(&self) -> u64 {
+        self.per_tag.iter().map(|(_, r)| r.completed).sum()
+    }
+
+    /// Total responses lost across all tags (must stay zero — the
+    /// serving plane's no-loss guarantee, per tag).
+    pub fn lost(&self) -> u64 {
+        self.per_tag.iter().map(|(_, r)| r.lost).sum()
+    }
+
+    /// Total arrivals shed across all tags (Drop mode only).
+    pub fn shed(&self) -> u64 {
+        self.per_tag.iter().map(|(_, r)| r.shed).sum()
+    }
+
+    /// Fleet-aggregate throughput: total completions over the shared
+    /// wall time.
+    pub fn aggregate_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate summary line plus one indented line per tag.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "mix: {} tags | offered {} | completed {} (lost {}, shed {}) | \
+             {:.2}s wall | {:.0} req/s aggregate",
+            self.per_tag.len(),
+            self.offered(),
+            self.completed(),
+            self.lost(),
+            self.shed(),
+            self.wall_s,
+            self.aggregate_rps(),
+        );
+        for (tag, rep) in &self.per_tag {
+            s.push_str(&format!("\n  [{tag}] {}", rep.render()));
+        }
+        s
+    }
+}
+
+/// Sleep up to (not past) offset `at` seconds after `t0`, finishing with
+/// a short spin so bursts stay sharp.
+fn wait_until(t0: Instant, at: f64) {
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= at {
+            break;
+        }
+        let dt = at - now;
+        if dt > 500e-6 {
+            std::thread::sleep(Duration::from_secs_f64(dt - 200e-6));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
 /// Replay `traffic` against `server`, drawing the image for arrival `i`
 /// from `image_of`. Blocks until every accepted request has been answered
 /// (or its channel died), so the report is complete.
 pub fn run_open_loop(
-    server: &Server,
+    server: &impl Submit,
     traffic: &Traffic,
     image_of: impl Fn(u64) -> Vec<f32>,
     shed_mode: ShedMode,
@@ -123,20 +239,7 @@ pub fn run_open_loop(
 
         let t0 = Instant::now();
         'arrivals: for (i, &at) in schedule.iter().enumerate() {
-            // Sleep up to (not past) the arrival offset; finish with a
-            // short spin so bursts stay sharp.
-            loop {
-                let now = t0.elapsed().as_secs_f64();
-                if now >= at {
-                    break;
-                }
-                let dt = at - now;
-                if dt > 500e-6 {
-                    std::thread::sleep(Duration::from_secs_f64(dt - 200e-6));
-                } else {
-                    std::hint::spin_loop();
-                }
-            }
+            wait_until(t0, at);
             offered += 1;
             loop {
                 match server.submit(image_of(i as u64)) {
@@ -178,9 +281,131 @@ pub fn run_open_loop(
     }
 }
 
+/// Replay a heterogeneous [`Mix`] — one arrival process per model tag,
+/// merged into a single wall-clock schedule — against `fleet`. Every tag
+/// in the mix is resolved to its plane **once** up front
+/// ([`Error::UnknownModel`] if any is missing); the hot loop then submits
+/// by plane index. `image_of(stream, i)` draws the image for arrival `i`
+/// of mix stream `stream` (mix order). Blocks until every accepted
+/// request has been answered, so the per-tag reports are complete.
+pub fn run_open_loop_mix(
+    fleet: &Fleet,
+    mix: &Mix,
+    image_of: impl Fn(usize, u64) -> Vec<f32>,
+    shed_mode: ShedMode,
+) -> Result<MixReport> {
+    let n_streams = mix.streams().len();
+    let mut plane_of = Vec::with_capacity(n_streams);
+    for (tag, _) in mix.streams() {
+        plane_of.push(fleet.resolve(tag)?);
+    }
+    let schedule = mix.schedule();
+    let mut offered = vec![0u64; n_streams];
+    let mut accepted = vec![0u64; n_streams];
+    let mut shed = vec![0u64; n_streams];
+    let mut seq = vec![0u64; n_streams];
+
+    let (pending_tx, pending_rx) =
+        mpsc::channel::<(usize, mpsc::Receiver<Response>)>();
+    let (t0, collected) = std::thread::scope(|s| {
+        let collector = s.spawn(move || {
+            let mut completed = vec![0u64; n_streams];
+            let mut errors = vec![0u64; n_streams];
+            let mut lost = vec![0u64; n_streams];
+            let mut latencies_s: Vec<Vec<f64>> = vec![Vec::new(); n_streams];
+            while let Ok((k, rx)) = pending_rx.recv() {
+                match rx.recv() {
+                    Ok(resp) => {
+                        if resp.is_error() {
+                            errors[k] += 1;
+                        } else {
+                            completed[k] += 1;
+                            latencies_s[k].push(resp.latency_s);
+                        }
+                    }
+                    Err(_) => lost[k] += 1,
+                }
+            }
+            (completed, errors, lost, latencies_s)
+        });
+
+        let t0 = Instant::now();
+        'arrivals: for a in &schedule {
+            wait_until(t0, a.at_s);
+            let k = a.stream;
+            offered[k] += 1;
+            let i = seq[k];
+            seq[k] += 1;
+            loop {
+                match fleet.submit_at(plane_of[k], image_of(k, i)) {
+                    Ok(rx) => {
+                        accepted[k] += 1;
+                        if pending_tx.send((k, rx)).is_err() {
+                            break 'arrivals; // collector died (panic)
+                        }
+                        break;
+                    }
+                    Err(Error::Overloaded) => match shed_mode {
+                        ShedMode::Drop => {
+                            shed[k] += 1;
+                            break;
+                        }
+                        ShedMode::Retry => std::thread::yield_now(),
+                    },
+                    Err(_) => break 'arrivals, // fleet shutting down
+                }
+            }
+        }
+        drop(pending_tx);
+        (t0, collector.join().expect("collector panicked"))
+    });
+
+    let (completed, errors, lost, lats) = collected;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut per_tag = Vec::with_capacity(n_streams);
+    for (k, ((tag, _), mut latencies_s)) in
+        mix.streams().iter().zip(lats).enumerate()
+    {
+        latencies_s.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        per_tag.push((
+            tag.clone(),
+            LoadReport {
+                offered: offered[k],
+                accepted: accepted[k],
+                shed: shed[k],
+                completed: completed[k],
+                errors: errors[k],
+                lost: lost[k],
+                wall_s,
+                achieved_rps: if wall_s > 0.0 {
+                    completed[k] as f64 / wall_s
+                } else {
+                    0.0
+                },
+                latencies_s,
+            },
+        ));
+    }
+    Ok(MixReport { per_tag, wall_s })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn report(completed: u64, shed: u64) -> LoadReport {
+        LoadReport {
+            offered: completed + shed,
+            accepted: completed,
+            shed,
+            completed,
+            errors: 0,
+            lost: 0,
+            wall_s: 2.0,
+            achieved_rps: completed as f64 / 2.0,
+            latencies_s: vec![0.001; completed as usize],
+        }
+    }
 
     #[test]
     fn report_percentiles_and_render() {
@@ -217,5 +442,26 @@ mod tests {
             latencies_s: Vec::new(),
         };
         assert_eq!(rep.latency_pct_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn mix_report_aggregates_across_tags() {
+        let mix = MixReport {
+            per_tag: vec![
+                ("a".to_string(), report(6, 2)),
+                ("b".to_string(), report(4, 0)),
+            ],
+            wall_s: 2.0,
+        };
+        assert_eq!(mix.offered(), 12);
+        assert_eq!(mix.completed(), 10);
+        assert_eq!(mix.shed(), 2);
+        assert_eq!(mix.lost(), 0);
+        assert!((mix.aggregate_rps() - 5.0).abs() < 1e-9);
+        assert_eq!(mix.get("b").unwrap().completed, 4);
+        assert!(mix.get("c").is_none());
+        let s = mix.render();
+        assert!(s.contains("mix: 2 tags"));
+        assert!(s.contains("[a]"));
     }
 }

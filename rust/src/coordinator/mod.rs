@@ -6,8 +6,18 @@
 //! batcher** groups admitted requests (size- or deadline-triggered,
 //! vLLM-router style); the **sharded execution plane** places each batch
 //! on one engine's private work ring, and engine threads — each owning a
-//! full `ModelRuntime` replica, since the PJRT client is `Rc`-based and
-//! not `Send` — execute batches, stealing from neighbours when idle.
+//! full backend replica — execute batches, stealing from neighbours when
+//! idle.
+//!
+//! Two deployment shapes share that per-model machinery (an internal
+//! `Plane`):
+//!
+//! * [`Server`] — one model behind its own admission gate (the original
+//!   single-model shape; its public API is unchanged);
+//! * [`Fleet`] — N per-model-tag planes behind **one shared admission
+//!   gate**, so a single overload budget governs the whole host while
+//!   each model keeps its own queues, stats and shutdown path
+//!   (DESIGN.md §10).
 //!
 //! Shutdown is deterministic and lossless: the submit channel is closed
 //! first (so the batcher's disconnect path flushes every pending
@@ -16,16 +26,17 @@
 //! response.
 //!
 //! Python is never on this path: the engines consume only
-//! `artifacts/*.hlo.txt` (or run the synthetic backend, which needs no
-//! artifacts at all).
+//! `artifacts/*.hlo.txt` (or run the synthetic / native backends, which
+//! need no artifacts at all).
 
 pub mod batcher;
+pub mod fleet;
 pub mod loadgen;
 pub mod queue;
 pub(crate) mod shard;
 pub mod stats;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,29 +47,36 @@ use crate::runtime::{InferenceBackend, ModelRuntime, SyntheticRuntime, IMG, NUM_
 use crate::util::error::{Error, Result};
 
 pub use batcher::BatchPolicy;
-pub use loadgen::{LoadReport, ShedMode};
+pub use fleet::{Fleet, FleetOptions, FleetSnapshot, ModelSpec, TagHandle};
+pub use loadgen::{LoadReport, MixReport, ShedMode, Submit};
 pub use queue::{Admission, AdmissionGate};
 pub use stats::{ServerStats, StatsSnapshot};
 
 /// One inference request.
 pub struct Request {
+    /// Monotone per-plane request id (diagnostics only).
     pub id: u64,
     /// 28*28 f32 image.
     pub image: Vec<f32>,
+    /// Submit-time instant the end-to-end latency is measured from.
     pub enqueued: Instant,
+    /// Channel the response is delivered on.
     pub resp: mpsc::Sender<Response>,
 }
 
 /// One inference response.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Id of the request this answers.
     pub id: u64,
+    /// Raw class logits (`NUM_CLASSES` floats; all-NaN marks a failure).
     pub logits: Vec<f32>,
     /// Queue + batch + execute time.
     pub latency_s: f64,
 }
 
 impl Response {
+    /// Argmax class of the logits.
     pub fn class(&self) -> usize {
         crate::runtime::argmax_classes(&self.logits)[0]
     }
@@ -79,22 +97,35 @@ pub(crate) struct Batch {
 #[derive(Debug, Clone)]
 pub enum EngineBackend {
     /// PJRT over AOT artifacts (`lenet_<tag>_b*.hlo.txt` under `dir`).
-    Artifacts { dir: String, tag: String },
+    Artifacts {
+        /// Artifacts directory.
+        dir: String,
+        /// Artifact tag (e.g. "proposed").
+        tag: String,
+    },
     /// Deterministic synthetic compute with a fixed per-image cost —
     /// engine-free serving (tests, benches, capacity planning).
-    Synthetic { per_image: Duration },
+    Synthetic {
+        /// Simulated wall-clock cost per image.
+        per_image: Duration,
+    },
     /// Baked native kernels (`kernel::CompiledModel`): real engine-free
     /// inference — nnz-only MAC schedules, no PJRT, no artifacts. The
     /// compiled model is immutable, so replicas share one `Arc`.
-    Native { model: Arc<CompiledModel> },
+    Native {
+        /// The compiled model every replica executes.
+        model: Arc<CompiledModel>,
+    },
 }
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
+    /// Batch formation policy (size / deadline triggers).
     pub policy: BatchPolicy,
     /// Engine replicas (each builds its own backend).
     pub engines: usize,
+    /// Backend every engine replica runs.
     pub backend: EngineBackend,
     /// Admission bound: requests admitted but not yet completed. Beyond
     /// it `submit` fast-rejects with [`Error::Overloaded`].
@@ -144,8 +175,12 @@ impl ServerOptions {
     }
 }
 
-/// A running server: admission gate + batcher thread + sharded engines.
-pub struct Server {
+/// One per-model serving plane: batcher thread + sharded engines, gated by
+/// an [`AdmissionGate`] it does **not** own — the single-model [`Server`]
+/// gives its plane a private gate, a [`Fleet`] shares one gate across all
+/// of its planes. Extracted from the old `Server` body so both shapes run
+/// the identical submit / dispatch / drain machinery.
+pub(crate) struct Plane {
     /// `Some` while accepting; taken (dropped) first at shutdown so the
     /// batcher's channel-closed exit path actually fires.
     submit_tx: Option<mpsc::Sender<Request>>,
@@ -155,39 +190,41 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     batcher: Option<JoinHandle<()>>,
     engines: Option<Vec<JoinHandle<()>>>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
 }
 
-impl Server {
-    /// Start the server; fails fast if the backend cannot be built (each
-    /// engine verifies its backend before the server is returned).
-    pub fn start(opts: ServerOptions) -> Result<Self> {
-        if opts.engines == 0 {
+impl Plane {
+    /// Start one plane; fails fast if the backend cannot be built (each
+    /// engine verifies its backend before the plane is returned).
+    pub(crate) fn start(
+        policy: BatchPolicy,
+        engines: usize,
+        backend: EngineBackend,
+        queue_depth: usize,
+        gate: Arc<AdmissionGate>,
+    ) -> Result<Plane> {
+        if engines == 0 {
             return Err(Error::config("engines must be >= 1"));
         }
-        if opts.admission_capacity == 0 {
-            return Err(Error::config("admission_capacity must be >= 1"));
-        }
-        if opts.queue_depth == 0 {
+        if queue_depth == 0 {
             return Err(Error::config("queue_depth must be >= 1"));
         }
         let stats = Arc::new(ServerStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
 
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
-        let (plane, mailboxes) = shard::ExecutionPlane::new(opts.engines, opts.queue_depth);
+        let (plane, mailboxes) = shard::ExecutionPlane::new(engines, queue_depth);
 
-        // Engines: verify backends build before declaring the server up.
-        let mut engines = Vec::with_capacity(opts.engines);
+        // Engines: verify backends build before declaring the plane up.
+        let mut engine_handles = Vec::with_capacity(engines);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for mailbox in mailboxes {
             let plane = Arc::clone(&plane);
             let st = Arc::clone(&stats);
             let g = Arc::clone(&gate);
-            let spec = opts.backend.clone();
+            let spec = backend.clone();
             let ready = ready_tx.clone();
-            engines.push(std::thread::spawn(move || {
+            engine_handles.push(std::thread::spawn(move || {
                 let backend: Box<dyn InferenceBackend> = match &spec {
                     EngineBackend::Artifacts { dir, tag } => {
                         match ModelRuntime::load(dir, tag) {
@@ -227,7 +264,7 @@ impl Server {
             }));
         }
         drop(ready_tx);
-        for _ in 0..opts.engines {
+        for _ in 0..engines {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
@@ -248,7 +285,6 @@ impl Server {
         }
 
         // Batcher thread.
-        let policy = opts.policy.clone();
         let st = Arc::clone(&stats);
         let sd = Arc::clone(&shutdown);
         let p = Arc::clone(&plane);
@@ -257,23 +293,24 @@ impl Server {
             batcher::run(submit_rx, p, g, policy, st, sd);
         });
 
-        Ok(Server {
+        Ok(Plane {
             submit_tx: Some(submit_tx),
             gate,
             plane,
             stats,
             shutdown,
             batcher: Some(batcher),
-            engines: Some(engines),
-            next_id: std::sync::atomic::AtomicU64::new(0),
+            engines: Some(engine_handles),
+            next_id: AtomicU64::new(0),
         })
     }
 
-    /// Submit one image; returns the response channel.
+    /// Submit one image to this plane; returns the response channel.
     ///
-    /// Fast paths out: [`Error::Overloaded`] when the admission bound is
-    /// hit (nothing queued), [`Error::QueueClosed`] once shutdown began.
-    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+    /// Fast paths out: [`Error::Overloaded`] when the (possibly shared)
+    /// admission bound is hit (nothing queued, and the shed is attributed
+    /// to this plane's stats), [`Error::QueueClosed`] once shutdown began.
+    pub(crate) fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         if image.len() != IMG * IMG {
             return Err(Error::config(format!(
                 "image must be {} floats, got {}",
@@ -283,6 +320,7 @@ impl Server {
         }
         let tx = self.submit_tx.as_ref().ok_or(Error::QueueClosed)?;
         if self.gate.try_enter() == Admission::Shed {
+            self.stats.on_shed();
             return Err(Error::Overloaded);
         }
         let (resp_tx, resp_rx) = mpsc::channel();
@@ -300,32 +338,12 @@ impl Server {
         Ok(resp_rx)
     }
 
-    /// Submit and wait (convenience for examples/tests).
-    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
-        let rx = self.submit(image)?;
-        rx.recv().map_err(|_| Error::QueueClosed)
+    pub(crate) fn snapshot(&self) -> StatsSnapshot {
+        self.stats.snapshot()
     }
 
-    pub fn stats(&self) -> StatsSnapshot {
-        let mut snap = self.stats.snapshot();
-        snap.shed = self.gate.shed_total();
-        snap
-    }
-
-    /// In-flight requests currently admitted (queued or executing).
-    pub fn in_flight(&self) -> usize {
-        self.gate.depth()
-    }
-
-    /// Graceful shutdown: stop accepting, drain deterministically, join.
-    pub fn shutdown(mut self) -> StatsSnapshot {
-        self.shutdown_impl();
-        let mut snap = self.stats.snapshot();
-        snap.shed = self.gate.shed_total();
-        snap
-    }
-
-    fn shutdown_impl(&mut self) {
+    /// Graceful, lossless drain: stop accepting, flush, join everything.
+    pub(crate) fn shutdown_impl(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // Order matters, and each step is deterministic:
         // 1. Drop the submit sender. The batcher's disconnect arm flushes
@@ -349,9 +367,65 @@ impl Server {
     }
 }
 
-impl Drop for Server {
+impl Drop for Plane {
     fn drop(&mut self) {
         self.shutdown_impl();
+    }
+}
+
+/// A running single-model server: admission gate + batcher thread +
+/// sharded engines. The multi-model shape is [`Fleet`].
+pub struct Server {
+    gate: Arc<AdmissionGate>,
+    plane: Plane,
+}
+
+impl Server {
+    /// Start the server; fails fast if the backend cannot be built (each
+    /// engine verifies its backend before the server is returned).
+    pub fn start(opts: ServerOptions) -> Result<Self> {
+        if opts.admission_capacity == 0 {
+            return Err(Error::config("admission_capacity must be >= 1"));
+        }
+        let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
+        let plane = Plane::start(
+            opts.policy,
+            opts.engines,
+            opts.backend,
+            opts.queue_depth,
+            Arc::clone(&gate),
+        )?;
+        Ok(Server { gate, plane })
+    }
+
+    /// Submit one image; returns the response channel.
+    ///
+    /// Fast paths out: [`Error::Overloaded`] when the admission bound is
+    /// hit (nothing queued), [`Error::QueueClosed`] once shutdown began.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.plane.submit(image)
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| Error::QueueClosed)
+    }
+
+    /// Snapshot the live serving statistics.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.plane.snapshot()
+    }
+
+    /// In-flight requests currently admitted (queued or executing).
+    pub fn in_flight(&self) -> usize {
+        self.gate.depth()
+    }
+
+    /// Graceful shutdown: stop accepting, drain deterministically, join.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.plane.shutdown_impl();
+        self.plane.snapshot()
     }
 }
 

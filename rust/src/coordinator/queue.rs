@@ -11,12 +11,19 @@
 //! the response is sent. The gate therefore bounds *total in-flight work*
 //! (submit queue + work rings + executing), which is also what guarantees
 //! the sharded dispatcher's full-ring backoff always clears.
+//!
+//! A gate is deliberately shareable: the single-model
+//! [`crate::coordinator::Server`] owns a private one, while a
+//! [`crate::coordinator::Fleet`] threads **one** gate through every
+//! per-tag plane so a single overload budget governs the whole host
+//! (DESIGN.md §10).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Admission decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
+    /// The request holds an in-flight slot until `exit` is called.
     Accepted,
     /// Queue at capacity — caller should retry later or drop.
     Shed,
@@ -30,6 +37,7 @@ pub struct AdmissionGate {
 }
 
 impl AdmissionGate {
+    /// A gate admitting at most `capacity` in-flight requests.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         AdmissionGate {
@@ -59,14 +67,17 @@ impl AdmissionGate {
         debug_assert!(prev > 0, "exit without enter");
     }
 
+    /// Requests currently admitted (queued or executing).
     pub fn depth(&self) -> usize {
         self.depth.load(Ordering::Acquire)
     }
 
+    /// Total requests shed since the gate was built.
     pub fn shed_total(&self) -> u64 {
         self.shed_total.load(Ordering::Relaxed)
     }
 
+    /// The admission bound this gate enforces.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -3,6 +3,15 @@
 //! Counters are atomics (hot path); latencies go into a bounded reservoir
 //! behind a mutex taken once per completed request — profiled as noise at
 //! LeNet batch rates (see EXPERIMENTS.md §Perf).
+//!
+//! One [`ServerStats`] instance belongs to one serving plane: the
+//! single-model [`crate::coordinator::Server`] owns exactly one, a
+//! [`crate::coordinator::Fleet`] owns one per model tag and rolls them up
+//! into a [`crate::coordinator::FleetSnapshot`]. Admission sheds are
+//! therefore counted twice on purpose: per plane here (`shed`, attributed
+//! to the tag whose submit was rejected) and fleet-wide on the shared
+//! [`crate::coordinator::AdmissionGate`]; the two views must sum to the
+//! same total (asserted in `tests/serving.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -18,6 +27,8 @@ pub struct ServerStats {
     errors: AtomicU64,
     /// Batches an idle engine stole from a neighbour's work ring.
     steals: AtomicU64,
+    /// Requests admission control rejected at this plane's submit path.
+    shed: AtomicU64,
     exec_time_us: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -25,6 +36,7 @@ pub struct ServerStats {
 const RESERVOIR: usize = 100_000;
 
 impl ServerStats {
+    /// Fresh counters; the wall-clock epoch for throughput starts now.
     pub fn new() -> Self {
         ServerStats {
             started: Instant::now(),
@@ -34,25 +46,30 @@ impl ServerStats {
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             exec_time_us: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
     }
 
+    /// Count one admitted submission.
     pub fn on_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one formed batch of `n` requests handed to the plane.
     pub fn on_dispatch(&self, n: usize) {
         self.dispatched_batches.fetch_add(1, Ordering::Relaxed);
         self.dispatched_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Account one executed batch's engine time.
     pub fn on_batch(&self, _n: usize, exec_s: f64) {
         self.exec_time_us
             .fetch_add((exec_s * 1e6) as u64, Ordering::Relaxed);
     }
 
+    /// Count one successfully served request and sample its latency.
     pub fn on_complete(&self, latency_s: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut res = self.latencies_us.lock().expect("stats poisoned");
@@ -61,14 +78,22 @@ impl ServerStats {
         }
     }
 
+    /// Count one request answered with an engine error.
     pub fn on_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one batch executed by a neighbour engine (work stealing).
     pub fn on_steal(&self) {
         self.steals.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one submission rejected by admission control at this plane.
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Materialise an immutable [`StatsSnapshot`] of the live counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
         lat.sort_unstable();
@@ -87,9 +112,7 @@ impl ServerStats {
             completed,
             errors: self.errors.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
-            // Admission-level sheds live on the gate, not here; the
-            // Server overlays the real figure in `Server::stats()`.
-            shed: 0,
+            shed: self.shed.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches > 0 {
                 self.dispatched_requests.load(Ordering::Relaxed) as f64 / batches as f64
@@ -115,26 +138,38 @@ impl Default for ServerStats {
 /// Immutable snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
+    /// Requests admitted past the gate and queued for batching.
     pub submitted: u64,
+    /// Requests answered successfully (errors excluded).
     pub completed: u64,
+    /// Requests answered with an engine failure (NaN logits).
     pub errors: u64,
     /// Batches executed by an engine other than the one they were
     /// dispatched to (work stealing).
     pub steals: u64,
-    /// Requests fast-rejected by admission control (never queued).
+    /// Requests fast-rejected by admission control (never queued),
+    /// attributed to this plane's submit path.
     pub shed: u64,
+    /// Batches formed and dispatched to the execution plane.
     pub batches: u64,
+    /// Dispatched requests per dispatched batch.
     pub mean_batch_size: f64,
+    /// Completed requests per second of elapsed wall time.
     pub throughput_rps: f64,
     /// Total engine execute time (batch-level, summed across engines).
     pub exec_time_s: f64,
+    /// Median request latency (queue + batch + execute), seconds.
     pub p50_latency_s: f64,
+    /// 95th-percentile request latency, seconds.
     pub p95_latency_s: f64,
+    /// 99th-percentile request latency, seconds.
     pub p99_latency_s: f64,
+    /// Wall time since the stats epoch (server start), seconds.
     pub elapsed_s: f64,
 }
 
 impl StatsSnapshot {
+    /// One-line human-readable summary of the snapshot.
     pub fn render(&self) -> String {
         format!(
             "served {}/{} ({} errors, {} shed, {} steals) in {:.2}s | {:.0} req/s | \
@@ -173,10 +208,13 @@ mod tests {
             s.on_complete(0.001 * (i + 1) as f64);
         }
         s.on_error();
+        s.on_shed();
+        s.on_shed();
         let snap = s.snapshot();
         assert_eq!(snap.submitted, 10);
         assert_eq!(snap.completed, 10);
         assert_eq!(snap.errors, 1);
+        assert_eq!(snap.shed, 2);
         assert_eq!(snap.batches, 2);
         assert!((snap.mean_batch_size - 5.0).abs() < 1e-9);
         assert!(snap.p50_latency_s > 0.0);

@@ -64,6 +64,7 @@ pub fn pool_ii_cycles(node: &Node) -> u64 {
     (node.ofm * node.ofm) as u64
 }
 
+/// Pooling fill: cycles until the first k-by-k window is resident.
 pub fn pool_fill_cycles(node: &Node) -> u64 {
     ((node.k - 1) * node.ifm + node.k) as u64
 }

@@ -25,11 +25,15 @@ pub const C_MUL_BAKED: f64 = 0.38;
 pub const C_ADD: f64 = 0.30;
 
 // ---- sliding window unit (conv only) ----
+/// SWU line-buffer LUTs per buffered bit.
 pub const C_SWU_PER_BIT: f64 = 0.9;
+/// SWU control overhead in LUTs, per conv layer.
 pub const C_SWU_FIXED: f64 = 180.0;
 
 // ---- pooling ----
+/// Pool compare/select LUTs per channel bit.
 pub const C_POOL_PER_CH_BIT: f64 = 1.1;
+/// Pool control overhead in LUTs, per pool layer.
 pub const C_POOL_FIXED: f64 = 60.0;
 
 /// Accumulator width for a MAC column with `fan_in` addends.

@@ -30,13 +30,17 @@ use crate::util::error::Result;
 /// Cost estimate for one dataflow stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerCost {
+    /// Layer name.
     pub name: String,
     /// Initiation interval: cycles between frames in steady state.
     pub ii_cycles: u64,
     /// First-frame fill latency contribution (cycles).
     pub fill_cycles: u64,
+    /// Estimated LUT usage.
     pub luts: u64,
+    /// Estimated 36kb BRAM blocks.
     pub bram36: u64,
+    /// Estimated DSP slices.
     pub dsps: u64,
     /// Combinational depth (levels of logic) — drives f_max.
     pub logic_depth: f64,
@@ -45,9 +49,13 @@ pub struct LayerCost {
 /// Whole-accelerator estimate under one folding configuration.
 #[derive(Debug, Clone)]
 pub struct ModelCost {
+    /// Per-stage estimates, in stream order.
     pub layers: Vec<LayerCost>,
+    /// Summed LUT estimate.
     pub total_luts: u64,
+    /// Summed BRAM estimate.
     pub total_bram: u64,
+    /// Summed DSP estimate.
     pub total_dsps: u64,
     /// Achievable clock after depth + congestion derating (MHz).
     pub f_mhz: f64,
@@ -60,6 +68,7 @@ pub struct ModelCost {
 }
 
 impl ModelCost {
+    /// The estimate of layer `name`, if present.
     pub fn layer(&self, name: &str) -> Option<&LayerCost> {
         self.layers.iter().find(|l| l.name == name)
     }
@@ -72,6 +81,7 @@ impl ModelCost {
             .expect("non-empty model")
     }
 
+    /// True when every resource total fits the device budget.
     pub fn fits(&self, dev: &Device) -> bool {
         self.total_luts <= dev.lut_budget()
             && self.total_bram <= dev.bram_budget()

@@ -8,6 +8,7 @@ use crate::util::error::{Error, Result};
 /// Static description of a target FPGA.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Device {
+    /// Canonical device name (CLI key).
     pub name: &'static str,
     /// Total 6-input LUTs.
     pub luts: u64,
@@ -31,10 +32,12 @@ impl Device {
         (self.luts as f64 * self.usable_fraction) as u64
     }
 
+    /// BRAM budget available to the generated accelerator.
     pub fn bram_budget(&self) -> u64 {
         (self.bram36 as f64 * self.usable_fraction) as u64
     }
 
+    /// DSP budget available to the generated accelerator.
     pub fn dsp_budget(&self) -> u64 {
         (self.dsps as f64 * self.usable_fraction) as u64
     }

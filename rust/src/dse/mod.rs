@@ -53,6 +53,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Every strategy, in Table-I order.
     pub const ALL: [Strategy; 6] = [
         Strategy::FullyFolded,
         Strategy::AutoFold,
@@ -62,6 +63,7 @@ impl Strategy {
         Strategy::Proposed,
     ];
 
+    /// Canonical CLI / config-file name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Strategy::FullyFolded => "fully_folded",
@@ -85,6 +87,7 @@ impl Strategy {
         }
     }
 
+    /// Parse a canonical strategy name.
     pub fn parse(s: &str) -> Result<Strategy> {
         Strategy::ALL
             .iter()
@@ -126,9 +129,13 @@ impl Default for DseOptions {
 /// Outcome of one DSE run.
 #[derive(Debug, Clone)]
 pub struct DseResult {
+    /// The strategy that was explored.
     pub strategy: Strategy,
+    /// The chosen per-layer folding.
     pub folding: FoldingConfig,
+    /// Cost-model estimate of the chosen configuration.
     pub cost: ModelCost,
+    /// Iteration log (the Fig. 1 trace).
     pub report: DseReport,
 }
 

@@ -7,8 +7,11 @@
 /// One evaluated design point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Point {
+    /// Human-readable label of the design point.
     pub label: String,
+    /// Estimated LUT usage.
     pub luts: u64,
+    /// Estimated throughput.
     pub throughput_fps: f64,
 }
 

@@ -27,6 +27,7 @@ pub enum Step {
 }
 
 impl Step {
+    /// One-line trace rendering of the decision.
     pub fn render(&self) -> String {
         match self {
             Step::FoldUp { layer, pe, simd, ii } => {
@@ -53,13 +54,18 @@ impl Step {
 /// The full trace of one DSE run.
 #[derive(Debug, Clone)]
 pub struct DseReport {
+    /// Strategy the trace belongs to.
     pub strategy: String,
+    /// Every recorded decision, in order.
     pub steps: Vec<Step>,
+    /// Bottleneck-elimination iterations executed.
     pub iterations: usize,
+    /// One-line cost summary, set by [`DseReport::finish`].
     pub final_summary: Option<String>,
 }
 
 impl DseReport {
+    /// An empty trace for `strategy`.
     pub fn new(strategy: &str) -> Self {
         DseReport {
             strategy: strategy.to_string(),
@@ -69,14 +75,17 @@ impl DseReport {
         }
     }
 
+    /// Record one decision.
     pub fn push(&mut self, step: Step) {
         self.steps.push(step);
     }
 
+    /// Count one bottleneck-elimination iteration.
     pub fn next_iteration(&mut self) {
         self.iterations += 1;
     }
 
+    /// Record the final cost summary line.
     pub fn finish(&mut self, cost: &ModelCost) {
         self.final_summary = Some(format!(
             "{}: {} LUTs, f={:.1} MHz, II={} cyc, {:.0} FPS, {:.2} us",
@@ -89,6 +98,7 @@ impl DseReport {
         ));
     }
 
+    /// Render the full trace, one line per decision.
     pub fn render(&self) -> String {
         let mut out = format!("DSE trace [{}] ({} iterations)\n", self.strategy, self.iterations);
         for s in &self.steps {

@@ -10,10 +10,15 @@
 /// One Table-I row as published.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PaperRow {
+    /// Work / strategy label as printed in the paper.
     pub work: &'static str,
+    /// Published test accuracy in percent.
     pub accuracy_pct: f64,
+    /// Published single-frame latency.
     pub latency_us: f64,
+    /// Published throughput.
     pub throughput_fps: f64,
+    /// Published LUT usage.
     pub luts: u64,
     /// Our measurement reproduces this row (vs cited external work).
     pub reproduced: bool,
@@ -79,6 +84,7 @@ pub const TABLE1_PAPER: [PaperRow; 7] = [
     },
 ];
 
+/// The published row for `work`, if Table I carries one.
 pub fn paper_row(work: &str) -> Option<&'static PaperRow> {
     TABLE1_PAPER.iter().find(|r| r.work == work)
 }

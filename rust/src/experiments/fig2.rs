@@ -17,6 +17,7 @@ use crate::util::table::{fmt_int, Align, Table};
 /// Per-layer series for one strategy.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// The strategy the series was measured for.
     pub strategy: Strategy,
     /// (layer, latency_us_per_frame, luts)
     pub layers: Vec<(String, f64, u64)>,

@@ -12,9 +12,13 @@ use crate::dse::Strategy;
 /// Measured headline numbers.
 #[derive(Debug, Clone)]
 pub struct Headline {
+    /// Engine-free compression ratio (None without sparsity masks).
     pub compression: Option<f64>,
+    /// What a CSR-style sparse engine would achieve on the same masks.
     pub compression_csr_equiv: Option<f64>,
+    /// Proposed-vs-Unfold throughput ratio.
     pub throughput_gain: f64,
+    /// Proposed-vs-Unfold LUT fraction.
     pub lut_fraction: f64,
 }
 
@@ -71,6 +75,7 @@ pub fn measure(rows: &[Row], artifacts: impl AsRef<Path>) -> Result<Headline> {
     })
 }
 
+/// Render the paper-vs-measured headline comparison block.
 pub fn render(h: &Headline) -> String {
     let mut s = String::from("Headline claims (paper -> measured):\n");
     s.push_str(&format!(

@@ -15,12 +15,17 @@ use std::path::Path;
 /// artifacts have been built; table rows fall back to "n/a" otherwise.
 #[derive(Debug, Clone, Default)]
 pub struct Accuracies {
+    /// Dense (unpruned) test accuracy.
     pub dense: Option<f64>,
+    /// Globally pruned reference accuracy.
     pub pruned_global: Option<f64>,
+    /// Proposed (re-sparse fine-tuned) accuracy.
     pub proposed: Option<f64>,
 }
 
 impl Accuracies {
+    /// Read accuracies from `metrics.json` (or the stage-1 subset);
+    /// missing files yield the all-`None` default.
     pub fn load(artifacts: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts.as_ref();
         let full = dir.join("metrics.json");
@@ -43,6 +48,7 @@ impl Accuracies {
         }
     }
 
+    /// Render one accuracy as percent, or "n/a".
     pub fn fmt(a: Option<f64>) -> String {
         match a {
             Some(v) => format!("{:.2}", v * 100.0),

@@ -16,11 +16,17 @@ use super::Accuracies;
 /// One measured Table-I row.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Strategy the row measures.
     pub strategy: Strategy,
+    /// Accuracy from the python metrics, when artifacts exist.
     pub accuracy_pct: Option<f64>,
+    /// Simulator-measured single-frame latency.
     pub latency_us: f64,
+    /// Simulator-measured saturated throughput.
     pub throughput_fps: f64,
+    /// Cost-model LUT estimate.
     pub luts: u64,
+    /// Cost-model clock estimate.
     pub f_mhz: f64,
 }
 

@@ -32,6 +32,7 @@ pub enum Style {
 }
 
 impl Style {
+    /// Canonical config-file name of the style.
     pub fn as_str(&self) -> &'static str {
         match self {
             Style::Folded => "folded",
@@ -41,6 +42,7 @@ impl Style {
         }
     }
 
+    /// Parse a canonical style name.
     pub fn parse(s: &str) -> Result<Style> {
         match s {
             "folded" => Ok(Style::Folded),
@@ -51,10 +53,12 @@ impl Style {
         }
     }
 
+    /// True for the sparse packing styles.
     pub fn is_sparse(&self) -> bool {
         matches!(self, Style::UnrolledSparse | Style::PartialSparse)
     }
 
+    /// True for the fully unrolled styles.
     pub fn is_unrolled(&self) -> bool {
         matches!(self, Style::UnrolledDense | Style::UnrolledSparse)
     }
@@ -63,8 +67,11 @@ impl Style {
 /// Folding decision for one MAC layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerFold {
+    /// Output (PE) lanes.
     pub pe: usize,
+    /// Input (SIMD) lanes.
     pub simd: usize,
+    /// Implementation style.
     pub style: Style,
     /// Fraction of weights pruned (0 for dense styles).
     pub sparsity: f64,
@@ -162,6 +169,7 @@ impl LayerFold {
 /// insertion-ordered (stream order).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct FoldingConfig {
+    /// `(layer, fold)` pairs in stream order.
     pub layers: Vec<(String, LayerFold)>,
 }
 
@@ -186,14 +194,17 @@ impl FoldingConfig {
         }
     }
 
+    /// The fold of layer `name`, if present.
     pub fn get(&self, name: &str) -> Option<&LayerFold> {
         self.layers.iter().find(|(n, _)| n == name).map(|(_, f)| f)
     }
 
+    /// Mutable access to the fold of layer `name`, if present.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut LayerFold> {
         self.layers.iter_mut().find(|(n, _)| n == name).map(|(_, f)| f)
     }
 
+    /// Insert or replace the fold of layer `name`.
     pub fn set(&mut self, name: &str, fold: LayerFold) {
         match self.get_mut(name) {
             Some(f) => *f = fold,

@@ -25,6 +25,7 @@ impl ChainBuilder {
         format!("{prefix}{}", self.counter)
     }
 
+    /// Append an auto-named VALID conv of `cout` channels, kernel `k`.
     pub fn conv(mut self, cout: usize, k: usize) -> Self {
         let name = self.next_name("conv");
         let ifm = self.dim;
@@ -36,6 +37,7 @@ impl ChainBuilder {
         self
     }
 
+    /// Append a named VALID conv of `cout` channels, kernel `k`.
     pub fn named_conv(mut self, name: &str, cout: usize, k: usize) -> Self {
         let ifm = self.dim;
         assert!(ifm >= k, "conv '{name}': input {ifm} smaller than kernel {k}");
@@ -54,6 +56,7 @@ impl ChainBuilder {
         self
     }
 
+    /// Append a named max-pool with window = stride = `k`.
     pub fn maxpool(mut self, name: &str, k: usize) -> Self {
         let ifm = self.dim;
         let ofm = ifm / k;
@@ -70,6 +73,8 @@ impl ChainBuilder {
         self
     }
 
+    /// Append a named fully connected layer of `out` features
+    /// (flattens the running stream shape).
     pub fn fc(mut self, name: &str, out: usize) -> Self {
         let cin = self.ch * self.dim * self.dim;
         self.nodes.push(Node {
@@ -86,6 +91,7 @@ impl ChainBuilder {
         self
     }
 
+    /// Finish the chain into a [`Graph`] with the given metadata.
     pub fn build(self, model: &str, input: Vec<usize>, wbits: usize, abits: usize) -> Graph {
         let out = self.ch * self.dim * self.dim;
         Graph {

@@ -23,6 +23,7 @@ pub enum Op {
 }
 
 impl Op {
+    /// Canonical `graph.json` name of the operator.
     pub fn as_str(&self) -> &'static str {
         match self {
             Op::Conv => "conv",
@@ -31,6 +32,7 @@ impl Op {
         }
     }
 
+    /// Parse a canonical operator name.
     pub fn parse(s: &str) -> Result<Op> {
         match s {
             "conv" => Ok(Op::Conv),
@@ -49,7 +51,9 @@ impl Op {
 /// One dataflow stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
+    /// Unique layer name.
     pub name: String,
+    /// Operator kind.
     pub op: Op,
     /// Input channels (fc: input features).
     pub cin: usize,
@@ -147,11 +151,17 @@ impl Node {
 /// A dataflow model: metadata + an ordered chain of stages.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
+    /// Model name (e.g. "lenet5").
     pub model: String,
+    /// Input tensor shape (NHWC, batch omitted).
     pub input: Vec<usize>,
+    /// Output tensor shape.
     pub output: Vec<usize>,
+    /// Weight quantisation width the model was trained at.
     pub weight_bits: usize,
+    /// Activation quantisation width the model was trained at.
     pub act_bits: usize,
+    /// The stage chain in stream order.
     pub nodes: Vec<Node>,
 }
 
@@ -195,6 +205,7 @@ impl Graph {
         Ok(())
     }
 
+    /// The node called `name`, or a graph error.
     pub fn node(&self, name: &str) -> Result<&Node> {
         self.nodes
             .iter()
@@ -207,10 +218,12 @@ impl Graph {
         self.nodes.iter().filter(|n| n.op.has_weights())
     }
 
+    /// Dense weight count across every stage.
     pub fn total_weights(&self) -> usize {
         self.nodes.iter().map(|n| n.weights()).sum()
     }
 
+    /// Dense MACs per frame across every stage.
     pub fn total_macs_per_frame(&self) -> usize {
         self.nodes.iter().map(|n| n.macs_per_frame()).sum()
     }

@@ -35,6 +35,7 @@ impl NativeSparseBackend {
         Ok(NativeSparseBackend { model })
     }
 
+    /// The compiled model this backend serves.
     pub fn model(&self) -> &CompiledModel {
         &self.model
     }

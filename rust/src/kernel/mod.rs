@@ -31,6 +31,30 @@
 //! [`FoldingConfig`], and the experiments read its [`ModelSparsity`] /
 //! compression accounting — instead of each path re-deriving layer shapes
 //! from the graph independently.
+//!
+//! Compiling and running a tiny synthetic model end to end:
+//!
+//! ```
+//! use logicsparse::graph::builder::mlp;
+//! use logicsparse::kernel::{CompiledModel, KernelSpec};
+//! use logicsparse::weights::ModelParams;
+//!
+//! // A small MLP (16 inputs, two 12-wide hidden fc layers, 10 logits)
+//! // with synthetic weights, pruned to 50%.
+//! let g = mlp(16, 12, 10);
+//! let mut params = ModelParams::synthetic(&g, 7);
+//! params.prune_global(0.5, 0.1).unwrap();
+//!
+//! // Bake the nnz-only schedules (masks are authoritative).
+//! let model = CompiledModel::compile_sparse(&g, &params, &KernelSpec::default()).unwrap();
+//! assert!(model.total_nnz() < model.total_weights());
+//!
+//! // Run one frame: integer datapath in, f32 logits out.
+//! let x = vec![0.5f32; model.input_pixels()];
+//! let logits = model.forward(&x).unwrap();
+//! assert_eq!(logits.len(), model.output_len());
+//! assert_eq!(model.output_len(), 10);
+//! ```
 
 pub mod backend;
 pub mod pack;
@@ -48,7 +72,9 @@ pub use backend::NativeSparseBackend;
 /// W4A4 LeNet-5 point).
 #[derive(Debug, Clone, Copy)]
 pub struct KernelSpec {
+    /// Weight quantisation grid (W4 by default).
     pub weights: QSpec,
+    /// Activation code width in bits (A4 by default).
     pub act_bits: usize,
     /// Input activations are quantised on [0, input_ceil].
     pub input_ceil: f32,
@@ -64,14 +90,17 @@ impl Default for KernelSpec {
 }
 
 impl KernelSpec {
+    /// Largest representable activation code (`2^act_bits - 1`).
     pub fn act_qmax(&self) -> i32 {
         (1 << self.act_bits) - 1
     }
 
+    /// Real-valued step of one input activation code.
     pub fn input_scale(&self) -> f32 {
         self.input_ceil / self.act_qmax() as f32
     }
 
+    /// Real-valued step of one hidden activation code.
     pub fn act_scale(&self) -> f32 {
         self.act_ceil / self.act_qmax() as f32
     }
@@ -124,14 +153,24 @@ impl Kernel {
 /// One compiled MAC layer.
 #[derive(Debug, Clone)]
 pub struct MacStage {
+    /// Layer name (matches the graph node).
     pub name: String,
+    /// Layer operator (conv / fc).
     pub op: Op,
+    /// Folding style the kernel was baked under.
     pub style: Style,
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Kernel extent (conv window edge; 1 for fc).
     pub k: usize,
+    /// Input feature-map edge length.
     pub ifm: usize,
+    /// Output feature-map edge length.
     pub ofm: usize,
+    /// Schedule rows per output pixel (`k*k*cin` for conv, the full
+    /// input length for fc).
     pub fold_in: usize,
     /// Dense weight count of the layer.
     pub weights: usize,
@@ -144,6 +183,7 @@ pub struct MacStage {
     /// output layer maps straight to f32 logits.
     mul: Vec<f32>,
     add: Vec<f32>,
+    /// The baked MAC schedule this stage executes.
     pub kernel: Kernel,
     /// Bit-packed weight codes of the stored schedule (pack::pack_codes).
     pub packed_codes: Vec<u8>,
@@ -156,6 +196,7 @@ pub struct MacStage {
 }
 
 impl MacStage {
+    /// Output pixels per frame (`ofm * ofm`).
     pub fn out_pixels(&self) -> usize {
         self.ofm * self.ofm
     }
@@ -237,10 +278,15 @@ impl MacStage {
 /// requantisation is monotone).
 #[derive(Debug, Clone)]
 pub struct PoolStage {
+    /// Layer name (matches the graph node).
     pub name: String,
+    /// Channels (pooling is per-channel).
     pub ch: usize,
+    /// Pool window edge length.
     pub k: usize,
+    /// Input feature-map edge length.
     pub ifm: usize,
+    /// Output feature-map edge length.
     pub ofm: usize,
 }
 
@@ -270,7 +316,9 @@ impl PoolStage {
 /// One stage of the compiled chain.
 #[derive(Debug, Clone)]
 pub enum Stage {
+    /// A baked MAC layer (conv / fc).
     Mac(MacStage),
+    /// A code-domain max-pool layer.
     Pool(PoolStage),
 }
 
@@ -278,7 +326,9 @@ pub enum Stage {
 /// experiments all consume.
 #[derive(Debug, Clone)]
 pub struct CompiledModel {
+    /// Model name (from the graph).
     pub model: String,
+    /// The quantisation operating point the kernels were baked at.
     pub spec: KernelSpec,
     /// The folding decisions the kernels were baked under (sim/DSE view).
     pub folding: FoldingConfig,
@@ -476,10 +526,12 @@ impl CompiledModel {
         self.output_len
     }
 
+    /// The compiled stage chain, in execution order.
     pub fn stages(&self) -> &[Stage] {
         &self.stages
     }
 
+    /// The MAC stages only (pool stages skipped).
     pub fn mac_stages(&self) -> impl Iterator<Item = &MacStage> {
         self.stages.iter().filter_map(|s| match s {
             Stage::Mac(m) => Some(m),
@@ -497,10 +549,12 @@ impl CompiledModel {
         ms
     }
 
+    /// Dense weight count across every MAC layer.
     pub fn total_weights(&self) -> usize {
         self.mac_stages().map(|m| m.weights).sum()
     }
 
+    /// Surviving (unpruned) weights across every MAC layer.
     pub fn total_nnz(&self) -> usize {
         self.mac_stages().map(|m| m.nnz).sum()
     }

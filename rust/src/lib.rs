@@ -26,8 +26,10 @@
 //!   load generator, so simulated and served throughput are comparable;
 //! * [`runtime`] — xla/PJRT wrapper that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them on the request path;
-//! * [`coordinator`] — the serving loop: request queue, dynamic batcher,
-//!   worker pool, latency/throughput accounting;
+//! * [`coordinator`] — the serving plane: admission gate, dynamic
+//!   batcher, sharded per-engine work rings with stealing, and the
+//!   multi-model [`coordinator::Fleet`] (per-tag planes under one shared
+//!   admission budget);
 //! * [`weights`] — LSTW tensor store shared with the python exporter;
 //! * [`util`] — offline substrates (JSON, RNG, property testing, CLI,
 //!   tables, micro-bench harness) — crates.io is not reachable in this
@@ -35,6 +37,8 @@
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! step that invokes the compile path.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

@@ -12,7 +12,9 @@
 //! ```
 
 use logicsparse::config::PruneProfile;
-use logicsparse::coordinator::{BatchPolicy, EngineBackend, Server, ServerOptions};
+use logicsparse::coordinator::{
+    BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Server, ServerOptions,
+};
 use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
 use logicsparse::graph::builder::lenet5;
@@ -229,11 +231,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "queue-depth", takes_value: true, default: Some("16"), help: "per-engine work-ring depth (batches)" },
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
         Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
+        Opt { name: "model", takes_value: true, default: None, help: "repeatable fleet member 'tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag]': serve a multi-model fleet behind one shared admission gate" },
     ]);
     let a = cli::parse(argv, &opts)?;
     if a.flag("help") {
         println!("{}", cli::usage("serve", "serve AOT artifacts and replay the test set", &opts));
         return Ok(());
+    }
+    if !a.get_all("model").is_empty() {
+        // Fleet mode: the single-model backend selectors would be
+        // silently ignored, so reject the combination loudly.
+        for conflicting in ["tag", "synthetic-us", "native-sparsity"] {
+            if !a.get_all(conflicting).is_empty() {
+                return Err(logicsparse::Error::config(format!(
+                    "--{conflicting} conflicts with --model; put the backend in the \
+                     model spec instead (tag=synthetic[:us]|native[:sparsity[:atag]]|\
+                     artifacts[:atag])"
+                )));
+            }
+        }
+        return cmd_serve_fleet(&a);
     }
     let artifacts = a.req("artifacts")?;
     let tag = a.req("tag")?;
@@ -246,16 +263,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // labels come from the compiled model itself, so served classes are
     // checked against a local forward pass of the same artifact).
     let (backend, imgs, labels) = if let Some(s) = a.get_f64("native-sparsity")? {
-        let g = lenet5();
-        let mut params = match ModelParams::load_artifacts(artifacts, tag, &g) {
-            Ok(p) => p,
-            Err(_) => {
-                eprintln!("note: no params_{tag}.lstw — using synthetic weights");
-                ModelParams::synthetic(&g, 17)
-            }
-        };
-        params.prune_global(s, 0.05)?;
-        let model = Arc::new(CompiledModel::compile_sparse(&g, &params, &KernelSpec::default())?);
+        let model = compile_native(artifacts, tag, s)?;
         println!("native kernels: {}", model.summary());
         let n = 256usize;
         let (imgs, _) = runtime::SyntheticRuntime::dataset(n);
@@ -330,6 +338,222 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!(
         "accuracy {:.2}% over {} requests | wall {:.2}s | {:.0} req/s",
         100.0 * correct as f64 / n_req as f64,
+        n_req,
+        wall,
+        n_req as f64 / wall
+    );
+    Ok(())
+}
+
+/// Compile a baked native model for serving: artifact-backed params when
+/// `params_<tag>.lstw` exists, synthetic weights otherwise, pruned to
+/// `sparsity` and compiled to nnz-only kernels.
+fn compile_native(artifacts: &str, tag: &str, sparsity: f64) -> Result<Arc<CompiledModel>> {
+    let g = lenet5();
+    let mut params = match ModelParams::load_artifacts(artifacts, tag, &g) {
+        Ok(p) => p,
+        Err(_) => {
+            eprintln!("note: no params_{tag}.lstw — using synthetic weights");
+            ModelParams::synthetic(&g, 17)
+        }
+    };
+    params.prune_global(sparsity, 0.05)?;
+    Ok(Arc::new(CompiledModel::compile_sparse(&g, &params, &KernelSpec::default())?))
+}
+
+/// How to check a fleet tag's served classes (None = no local oracle).
+enum Oracle {
+    /// Synthetic stripe-sum rule.
+    Stripe,
+    /// Local forward pass of the same compiled model.
+    Native(Arc<CompiledModel>),
+    /// PJRT artifacts: no engine-free oracle for synthetic inputs.
+    None,
+}
+
+/// Parse one `--model` spec: `tag=synthetic[:us]` |
+/// `tag=native[:sparsity[:atag]]` | `tag=artifacts[:atag]`.
+///
+/// `atag` names the artifact set on disk when it differs from the
+/// routing tag — e.g. `a=native:0.5:proposed` and `b=native:0.9:proposed`
+/// serve two sparsity variants of `params_proposed.lstw`.
+fn parse_model_spec(
+    spec: &str,
+    artifacts: &str,
+) -> Result<(String, EngineBackend, Oracle)> {
+    let bad = || {
+        logicsparse::Error::config(format!(
+            "--model wants tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag], \
+             got '{spec}'"
+        ))
+    };
+    let (tag, rest) = spec.split_once('=').ok_or_else(bad)?;
+    if tag.is_empty() || rest.is_empty() {
+        return Err(bad());
+    }
+    let (kind, param) = match rest.split_once(':') {
+        Some((k, p)) => (k, Some(p)),
+        None => (rest, None),
+    };
+    match kind {
+        "synthetic" => {
+            let us: u64 = match param {
+                Some(p) => p.parse().map_err(|_| bad())?,
+                None => 150,
+            };
+            let backend = EngineBackend::Synthetic { per_image: Duration::from_micros(us) };
+            Ok((tag.to_string(), backend, Oracle::Stripe))
+        }
+        "native" => {
+            let (sparsity, atag) = match param {
+                Some(p) => {
+                    let (s, atag) = match p.split_once(':') {
+                        Some((s, atag)) if !atag.is_empty() => (s, atag),
+                        Some(_) => return Err(bad()),
+                        None => (p, tag),
+                    };
+                    (s.parse().map_err(|_| bad())?, atag)
+                }
+                None => (0.75, tag),
+            };
+            let model = compile_native(artifacts, atag, sparsity)?;
+            println!("[{tag}] native kernels: {}", model.summary());
+            let backend = EngineBackend::Native { model: Arc::clone(&model) };
+            Ok((tag.to_string(), backend, Oracle::Native(model)))
+        }
+        "artifacts" => {
+            let atag = param.unwrap_or(tag);
+            let backend = EngineBackend::Artifacts {
+                dir: artifacts.to_string(),
+                tag: atag.to_string(),
+            };
+            Ok((tag.to_string(), backend, Oracle::None))
+        }
+        _ => Err(bad()),
+    }
+}
+
+/// `serve --model a=native:0.8 --model b=synthetic:100 ...`: start one
+/// plane per tag behind the shared admission gate, replay a closed-loop
+/// round-robin request stream across the tags, and print the fleet
+/// summary (per-tag stats roll-up plus accuracy where an oracle exists).
+fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
+    let artifacts = a.req("artifacts")?;
+    let n_req = a.get_usize("requests")?.unwrap_or(2048);
+    let policy = BatchPolicy {
+        max_batch: a.get_usize("max-batch")?.unwrap_or(32),
+        max_wait: Duration::from_micros(a.get_usize("max-wait-us")?.unwrap_or(2000) as u64),
+    };
+    let engines = a.get_usize("engines")?.unwrap_or(1);
+    let queue_depth = a.get_usize("queue-depth")?.unwrap_or(16);
+
+    let mut models = Vec::new();
+    let mut oracles = Vec::new();
+    for spec in a.get_all("model") {
+        let (tag, backend, oracle) = parse_model_spec(spec, artifacts)?;
+        models.push(
+            ModelSpec::new(tag, backend)
+                .policy(policy.clone())
+                .engines(engines)
+                .queue_depth(queue_depth),
+        );
+        oracles.push(oracle);
+    }
+    let fleet = Fleet::start(FleetOptions {
+        models,
+        admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
+    })?;
+    println!(
+        "fleet: {} models ({}) | shared admission {} | {} engines/plane",
+        fleet.tags().len(),
+        fleet.tags().join(", "),
+        fleet.admission_capacity(),
+        engines,
+    );
+
+    // One synthetic request set shared by every tag; per-tag expected
+    // classes wherever a local oracle exists.
+    let px = runtime::IMG * runtime::IMG;
+    let n_imgs = 256usize;
+    let (imgs, _) = runtime::SyntheticRuntime::dataset(n_imgs);
+    let mut expected: Vec<Option<Vec<usize>>> = Vec::with_capacity(oracles.len());
+    for oracle in &oracles {
+        expected.push(match oracle {
+            Oracle::Stripe => Some(
+                (0..n_imgs)
+                    .map(|j| {
+                        runtime::SyntheticRuntime::expected_class(&imgs[j * px..(j + 1) * px])
+                    })
+                    .collect(),
+            ),
+            Oracle::Native(m) => {
+                let mut v = Vec::with_capacity(n_imgs);
+                for j in 0..n_imgs {
+                    v.push(m.classify(&imgs[j * px..(j + 1) * px])?);
+                }
+                Some(v)
+            }
+            Oracle::None => None,
+        });
+    }
+
+    let n_tags = fleet.tags().len();
+    let mut correct = vec![0usize; n_tags];
+    let mut checked = vec![0usize; n_tags];
+    type Pending = Vec<(usize, std::sync::mpsc::Receiver<logicsparse::coordinator::Response>, usize)>;
+    let mut pending: Pending = Vec::new();
+    let drain = |pending: &mut Pending,
+                 correct: &mut [usize],
+                 checked: &mut [usize]|
+     -> Result<()> {
+        for (k, rx, j) in pending.drain(..) {
+            let resp = rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
+            if let Some(labels) = &expected[k] {
+                checked[k] += 1;
+                if resp.class() == labels[j] {
+                    correct[k] += 1;
+                }
+            }
+        }
+        Ok(())
+    };
+
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        // Round-robin across tags so every plane sees the stream.
+        let k = i % n_tags;
+        let j = i % n_imgs;
+        let rx = loop {
+            match fleet.submit_at(k, imgs[j * px..(j + 1) * px].to_vec()) {
+                Ok(rx) => break rx,
+                Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
+                Err(e) => return Err(e),
+            }
+        };
+        pending.push((k, rx, j));
+        // Keep a bounded in-flight window, like a real client pool.
+        if pending.len() >= 256 {
+            drain(&mut pending, &mut correct, &mut checked)?;
+        }
+    }
+    drain(&mut pending, &mut correct, &mut checked)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = fleet.shutdown();
+    println!("{}", snap.render());
+    for (k, tag) in snap.per_model.iter().map(|(t, _)| t).enumerate() {
+        if checked[k] > 0 {
+            println!(
+                "  [{tag}] accuracy {:.2}% over {} checked requests",
+                100.0 * correct[k] as f64 / checked[k] as f64,
+                checked[k],
+            );
+        } else {
+            println!("  [{tag}] accuracy n/a (no local oracle for this backend)");
+        }
+    }
+    println!(
+        "fleet total: {} requests | wall {:.2}s | {:.0} req/s aggregate",
         n_req,
         wall,
         n_req as f64 / wall

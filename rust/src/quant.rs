@@ -11,10 +11,12 @@ use crate::util::error::{Error, Result};
 /// Symmetric quantisation spec.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QSpec {
+    /// Code width in bits (2..=8; 4 is the paper's W4 point).
     pub bits: usize,
 }
 
 impl QSpec {
+    /// A spec of `bits` bits; rejects widths outside [2, 8].
     pub fn new(bits: usize) -> Result<Self> {
         if !(2..=8).contains(&bits) {
             return Err(Error::config(format!("weight bits {bits} out of [2,8]")));
@@ -40,6 +42,7 @@ impl QSpec {
             .collect()
     }
 
+    /// Dequantise integer codes back to floats with the given scale.
     pub fn decode(&self, codes: &[i8], scale: f32) -> Vec<f32> {
         codes.iter().map(|&c| c as f32 * scale).collect()
     }

@@ -8,8 +8,11 @@ use std::path::{Path, PathBuf};
 /// One discovered artifact file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Variant {
+    /// Model tag embedded in the file name.
     pub tag: String,
+    /// Batch size the variant was lowered for.
     pub batch: usize,
+    /// Path of the HLO text file.
     pub path: PathBuf,
 }
 

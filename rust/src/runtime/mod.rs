@@ -20,12 +20,15 @@ pub use artifact::{discover_variants, Variant};
 
 /// Image geometry of the LeNet artifacts (NHWC).
 pub const IMG: usize = 28;
+/// Logits per image (MNIST-shaped output).
 pub const NUM_CLASSES: usize = 10;
 
 /// A compiled HLO executable with a fixed batch size.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// The batch size this executable was lowered for.
     pub batch: usize,
+    /// Source HLO text file the executable was compiled from.
     pub path: String,
 }
 
@@ -65,6 +68,7 @@ pub struct ModelRuntime {
     client: xla::PjRtClient,
     /// Sorted by batch ascending.
     pub executables: Vec<Executable>,
+    /// The artifact tag the variants were loaded for.
     pub tag: String,
 }
 
@@ -96,14 +100,17 @@ impl ModelRuntime {
         Ok(ModelRuntime { client, executables, tag: tag.to_string() })
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Batch sizes of the loaded variants, ascending.
     pub fn batch_sizes(&self) -> Vec<usize> {
         self.executables.iter().map(|e| e.batch).collect()
     }
 
+    /// The largest loaded batch variant (0 when none).
     pub fn max_batch(&self) -> usize {
         self.executables.last().map(|e| e.batch).unwrap_or(0)
     }
@@ -177,10 +184,12 @@ impl InferenceBackend for ModelRuntime {
 /// whose index ≡ c (mod `NUM_CLASSES`). Same image in, same class out,
 /// which lets serving tests assert end-to-end correctness without weights.
 pub struct SyntheticRuntime {
+    /// Simulated wall-clock cost per image (sleep).
     pub per_image: std::time::Duration,
 }
 
 impl SyntheticRuntime {
+    /// A synthetic backend burning `per_image` of wall time per image.
     pub fn new(per_image: std::time::Duration) -> Self {
         SyntheticRuntime { per_image }
     }

@@ -5,6 +5,7 @@
 //  simulator tracks timing, not values).
 #[derive(Debug, Clone)]
 pub struct Fifo {
+    /// Maximum tokens the FIFO can hold.
     pub capacity: usize,
     occupancy: usize,
     /// High-water mark, for FIFO-sizing reports.
@@ -14,31 +15,38 @@ pub struct Fifo {
 }
 
 impl Fifo {
+    /// An empty FIFO of the given capacity (>= 1).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1, "FIFO capacity must be >= 1");
         Fifo { capacity, occupancy: 0, max_occupancy: 0, total: 0 }
     }
 
+    /// Tokens currently buffered.
     pub fn occupancy(&self) -> usize {
         self.occupancy
     }
 
+    /// High-water mark since construction.
     pub fn max_occupancy(&self) -> usize {
         self.max_occupancy
     }
 
+    /// Total tokens ever pushed.
     pub fn total_tokens(&self) -> u64 {
         self.total
     }
 
+    /// Free slots remaining.
     pub fn free(&self) -> usize {
         self.capacity - self.occupancy
     }
 
+    /// True when no slot is free.
     pub fn is_full(&self) -> bool {
         self.occupancy == self.capacity
     }
 
+    /// True when nothing is buffered.
     pub fn is_empty(&self) -> bool {
         self.occupancy == 0
     }

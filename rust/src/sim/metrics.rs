@@ -8,15 +8,20 @@ use super::stage::StageState;
 /// Per-stage utilisation snapshot.
 #[derive(Debug, Clone)]
 pub struct StageStats {
+    /// Stage (layer) name.
     pub name: String,
+    /// Output tokens the stage produced.
     pub emitted_tokens: u64,
+    /// Cycles the stage spent computing.
     pub busy_cycles: u64,
+    /// busy_cycles over the run length.
     pub utilization: f64,
 }
 
 /// Full report of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Frames completed in the run.
     pub frames: u64,
     /// Arrival cycle of each frame.
     pub arrivals: Vec<u64>,
@@ -26,15 +31,22 @@ pub struct SimReport {
     pub first_frame_latency_cycles: u64,
     /// Steady-state cycles/frame measured over the back half of the run.
     pub steady_cycles_per_frame: f64,
+    /// Pipeline clock the cycle counts convert to time with.
     pub f_mhz: f64,
+    /// Steady-state frames/second at `f_mhz`.
     pub throughput_fps: f64,
+    /// First-frame latency in seconds at `f_mhz`.
     pub latency_s: f64,
+    /// Per-stage utilisation snapshots.
     pub stages: Vec<StageStats>,
+    /// Per-FIFO high-water marks (sizing input).
     pub fifo_max_occupancy: Vec<usize>,
+    /// Cycle the simulation drained at.
     pub end_cycle: u64,
 }
 
 impl SimReport {
+    /// Assemble a report from the raw simulation traces.
     pub fn build(
         arrivals: &[u64],
         completions: &[u64],
@@ -110,6 +122,7 @@ impl SimReport {
             .expect("non-empty pipeline")
     }
 
+    /// Multi-line human-readable report.
     pub fn render(&self) -> String {
         let mut s = format!(
             "sim: {} frames @ {:.1} MHz | latency {:.2} us (p50 {:.2}, p99 {:.2}) | \

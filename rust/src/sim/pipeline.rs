@@ -53,6 +53,8 @@ impl Pipeline {
         Self::with_link(specs, fifo_depth, f_mhz, 1)
     }
 
+    /// Like [`Pipeline::new`] with an explicit input-link width in
+    /// tokens per cycle.
     pub fn with_link(
         specs: Vec<StageSpec>,
         fifo_depth: usize,
@@ -79,10 +81,12 @@ impl Pipeline {
         }
     }
 
+    /// The pipeline clock in MHz.
     pub fn f_mhz(&self) -> f64 {
         self.f_mhz
     }
 
+    /// Stage names in stream order (source excluded).
     pub fn stage_names(&self) -> Vec<&str> {
         self.stages.iter().map(|s| s.spec.name.as_str()).collect()
     }
@@ -93,6 +97,8 @@ impl Pipeline {
         self.try_run(wl).expect("simulation deadlock")
     }
 
+    /// Run the workload to completion, failing on deadlock instead of
+    /// panicking.
     pub fn try_run(&mut self, wl: &Workload) -> Result<SimReport> {
         let frames = wl.frames();
         if frames == 0 {

@@ -33,15 +33,23 @@ pub enum Kind {
 /// Static stage description (built by `sim::build`).
 #[derive(Debug, Clone)]
 pub struct StageSpec {
+    /// Stage (layer) name.
     pub name: String,
+    /// Input-coupling shape.
     pub kind: Kind,
+    /// Output tokens emitted per frame.
     pub tokens_per_frame: u64,
+    /// Input tokens consumed per frame.
     pub in_tokens_per_frame: u64,
+    /// Initiation interval: cycles between successive frame starts.
     pub ii_cycles_per_frame: u64,
+    /// Pipeline fill cycles before the first token of a frame.
     pub fill_cycles: u64,
 }
 
 impl StageSpec {
+    /// Build the timing spec of one graph node from the cost model's
+    /// II/fill estimates.
     pub fn from_node(node: &Node, ii: u64, fill: u64, in_tokens: u64) -> Self {
         let kind = match node.op {
             Op::Conv => Kind::Conv {
@@ -98,6 +106,7 @@ impl StageSpec {
 /// Mutable run state of one stage.
 #[derive(Debug, Clone)]
 pub struct StageState {
+    /// The static timing spec this state advances.
     pub spec: StageSpec,
     /// Current output frame.
     pub frame: u64,
@@ -110,6 +119,7 @@ pub struct StageState {
     pub consumed: u64,
     /// Compute base time of the current frame (set at first token).
     pub frame_base: u64,
+    /// Whether `frame_base` has been fixed for the current frame.
     pub frame_base_set: bool,
     /// Time the current frame's first-token inputs became available
     /// (recorded at pop time so a stage still draining frame f doesn't
@@ -127,6 +137,7 @@ pub struct StageState {
 }
 
 impl StageState {
+    /// Fresh run state at t=0.
     pub fn new(spec: StageSpec) -> Self {
         StageState {
             spec,

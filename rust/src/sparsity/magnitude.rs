@@ -8,7 +8,9 @@ use crate::util::error::{Error, Result};
 
 /// Weights of one layer, flat.
 pub struct LayerWeights<'a> {
+    /// Layer name.
     pub name: &'a str,
+    /// Flattened weights.
     pub w: &'a [f32],
 }
 

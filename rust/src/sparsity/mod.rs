@@ -15,30 +15,38 @@ use crate::util::error::{Error, Result};
 /// A binary mask over one layer's weights (flat, C-order).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mask {
+    /// `true` = the weight survives, `false` = pruned.
     pub keep: Vec<bool>,
 }
 
 impl Mask {
+    /// An all-keep mask of `n` weights.
     pub fn dense(n: usize) -> Self {
         Mask { keep: vec![true; n] }
     }
 
+    /// A mask keeping every nonzero entry of `vals` (the LSTW
+    /// interchange encodes masks as f32 0/1).
     pub fn from_f32(vals: &[f32]) -> Self {
         Mask { keep: vals.iter().map(|&v| v != 0.0).collect() }
     }
 
+    /// Total weights the mask covers.
     pub fn len(&self) -> usize {
         self.keep.len()
     }
 
+    /// True for a zero-length mask.
     pub fn is_empty(&self) -> bool {
         self.keep.is_empty()
     }
 
+    /// Surviving weights.
     pub fn nnz(&self) -> usize {
         self.keep.iter().filter(|&&k| k).count()
     }
 
+    /// Fraction pruned (0.0 for an empty mask).
     pub fn sparsity(&self) -> f64 {
         if self.keep.is_empty() {
             return 0.0;
@@ -96,10 +104,12 @@ pub struct ModelSparsity {
 }
 
 impl ModelSparsity {
+    /// Append one layer's accounting.
     pub fn push(&mut self, name: impl Into<String>, weights: usize, nnz: usize) {
         self.layers.push((name.into(), weights, nnz));
     }
 
+    /// Sparsity of layer `name`, if recorded.
     pub fn layer_sparsity(&self, name: &str) -> Option<f64> {
         self.layers
             .iter()
@@ -107,14 +117,17 @@ impl ModelSparsity {
             .map(|(_, w, nnz)| 1.0 - *nnz as f64 / (*w).max(1) as f64)
     }
 
+    /// Dense weight count across every layer.
     pub fn total_weights(&self) -> usize {
         self.layers.iter().map(|(_, w, _)| w).sum()
     }
 
+    /// Surviving weights across every layer.
     pub fn total_nnz(&self) -> usize {
         self.layers.iter().map(|(_, _, n)| n).sum()
     }
 
+    /// Model-wide pruned fraction.
     pub fn global_sparsity(&self) -> f64 {
         1.0 - self.total_nnz() as f64 / self.total_weights().max(1) as f64
     }

@@ -41,27 +41,36 @@ pub enum Shape {
 /// A finite arrival process: `events` arrivals drawn from `shape`.
 #[derive(Debug, Clone)]
 pub struct Traffic {
+    /// Number of arrivals to generate (capped by the trace length for
+    /// [`Shape::Replay`]).
     pub events: u64,
+    /// The arrival-process shape.
     pub shape: Shape,
 }
 
 impl Traffic {
+    /// All `events` arrivals at t=0 (saturated throughput measurement).
     pub fn saturated(events: u64) -> Traffic {
         Traffic { events, shape: Shape::Saturated }
     }
 
+    /// Fixed inter-arrival interval of `interval_s` seconds.
     pub fn periodic(events: u64, interval_s: f64) -> Traffic {
         Traffic { events, shape: Shape::Periodic { interval_s } }
     }
 
+    /// Memoryless arrivals at `rate_eps` events/second (deterministic
+    /// given `seed`).
     pub fn poisson(events: u64, rate_eps: f64, seed: u64) -> Traffic {
         Traffic { events, shape: Shape::Poisson { rate_eps, seed } }
     }
 
+    /// Bursts of `size` back-to-back events, mean `gap_s` seconds apart.
     pub fn bursty(events: u64, size: u64, gap_s: f64, seed: u64) -> Traffic {
         Traffic { events, shape: Shape::Burst { size, gap_s, seed } }
     }
 
+    /// Replay a recorded trace of absolute offsets in seconds.
     pub fn replay(times_s: Vec<f64>) -> Traffic {
         Traffic { events: times_s.len() as u64, shape: Shape::Replay { times_s } }
     }
@@ -123,6 +132,74 @@ impl Traffic {
     }
 }
 
+/// One arrival of a merged multi-stream schedule ([`Mix::schedule`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MixArrival {
+    /// Arrival offset in seconds (monotone across the merged schedule).
+    pub at_s: f64,
+    /// Index of the stream (mix order) this arrival belongs to.
+    pub stream: usize,
+}
+
+/// A heterogeneous traffic mix: one named arrival process per stream
+/// (model tag), merged into a single monotone wall-clock schedule — what
+/// the multi-model load generator
+/// (`coordinator::loadgen::run_open_loop_mix`) replays against a serving
+/// fleet, so per-tag offered load stays exactly the per-stream [`Traffic`]
+/// while the host sees the interleaved aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct Mix {
+    streams: Vec<(String, Traffic)>,
+}
+
+impl Mix {
+    /// An empty mix; add streams with [`Mix::stream`].
+    pub fn new() -> Mix {
+        Mix::default()
+    }
+
+    /// Add one `(tag, traffic)` stream (builder-style).
+    pub fn stream(mut self, tag: impl Into<String>, traffic: Traffic) -> Mix {
+        self.streams.push((tag.into(), traffic));
+        self
+    }
+
+    /// The `(tag, traffic)` streams, in insertion order.
+    pub fn streams(&self) -> &[(String, Traffic)] {
+        &self.streams
+    }
+
+    /// Total arrivals across all streams.
+    pub fn events(&self) -> u64 {
+        self.streams.iter().map(|(_, t)| t.events()).sum()
+    }
+
+    /// The merged schedule: every stream's [`Traffic::schedule`]
+    /// interleaved into one monotone-by-time sequence. Ties break by
+    /// stream order (stable), so the merge is deterministic.
+    pub fn schedule(&self) -> Vec<MixArrival> {
+        let per_stream: Vec<Vec<f64>> =
+            self.streams.iter().map(|(_, t)| t.schedule()).collect();
+        let mut cursor = vec![0usize; per_stream.len()];
+        let total: usize = per_stream.iter().map(|s| s.len()).sum();
+        let mut merged = Vec::with_capacity(total);
+        for _ in 0..total {
+            let mut best: Option<(usize, f64)> = None;
+            for (k, s) in per_stream.iter().enumerate() {
+                if let Some(&at) = s.get(cursor[k]) {
+                    if best.map(|(_, b)| at < b).unwrap_or(true) {
+                        best = Some((k, at));
+                    }
+                }
+            }
+            let (k, at_s) = best.expect("cursor accounting broke");
+            cursor[k] += 1;
+            merged.push(MixArrival { at_s, stream: k });
+        }
+        merged
+    }
+}
+
 /// Cycle-domain workload for the simulator. Extracted from `sim::pipeline`
 /// and re-exported there; arrival generation is shared with the serving
 /// load generator through [`Traffic`].
@@ -141,6 +218,7 @@ pub enum Workload {
 }
 
 impl Workload {
+    /// Number of frames this workload will generate.
     pub fn frames(&self) -> u64 {
         match self {
             Workload::Saturated { frames }
@@ -295,6 +373,35 @@ mod tests {
         let wl = Workload::Poisson { frames: 64, rate_fps: 50_000.0, seed: 9 };
         let direct = Traffic::poisson(64, 50_000.0, 9).to_cycles(f_mhz);
         assert_eq!(wl.arrivals(f_mhz), direct);
+    }
+
+    #[test]
+    fn mix_merges_streams_monotone_and_complete() {
+        let mix = Mix::new()
+            .stream("a", Traffic::periodic(5, 0.010))
+            .stream("b", Traffic::poisson(20, 500.0, 3));
+        assert_eq!(mix.events(), 25);
+        assert_eq!(mix.streams().len(), 2);
+        let sched = mix.schedule();
+        assert_eq!(sched.len(), 25);
+        assert!(sched.windows(2).all(|w| w[0].at_s <= w[1].at_s), "not monotone");
+        // Per-stream arrivals survive the merge exactly.
+        let a: Vec<f64> = sched.iter().filter(|x| x.stream == 0).map(|x| x.at_s).collect();
+        let b: Vec<f64> = sched.iter().filter(|x| x.stream == 1).map(|x| x.at_s).collect();
+        assert_eq!(a, Traffic::periodic(5, 0.010).schedule());
+        assert_eq!(b, Traffic::poisson(20, 500.0, 3).schedule());
+    }
+
+    #[test]
+    fn mix_ties_break_by_stream_order() {
+        // Two saturated streams: every arrival ties at t=0; the merge must
+        // be deterministic with stream 0 first at each step.
+        let mix = Mix::new()
+            .stream("x", Traffic::saturated(2))
+            .stream("y", Traffic::saturated(2));
+        let sched = mix.schedule();
+        let order: Vec<usize> = sched.iter().map(|a| a.stream).collect();
+        assert_eq!(order, vec![0, 0, 1, 1]);
     }
 
     #[test]

@@ -13,44 +13,69 @@ use std::time::Instant;
 /// Scenario name -> flat metric map, serialised by [`BenchLog::write`].
 type Metrics = Vec<(String, f64)>;
 
+/// The `model` label [`BenchLog::push`] stamps on rows that predate the
+/// multi-model fleet (single-model scenarios).
+pub const SINGLE_MODEL: &str = "single";
+
 /// Machine-readable results of one bench binary.
 #[derive(Debug, Clone)]
 pub struct BenchLog {
     bench: String,
-    scenarios: Vec<(String, Metrics)>,
+    /// `(scenario, model, metrics)` rows in insertion order.
+    scenarios: Vec<(String, String, Metrics)>,
 }
 
 impl BenchLog {
+    /// A fresh log for the bench binary `bench`.
     pub fn new(bench: impl Into<String>) -> Self {
         BenchLog { bench: bench.into(), scenarios: Vec::new() }
     }
 
-    /// Record one scenario's metrics (insertion-ordered, overwrites an
-    /// existing scenario of the same name).
+    /// Record one single-model scenario's metrics (insertion-ordered,
+    /// overwrites an existing scenario of the same name). The row's
+    /// `model` field defaults to [`SINGLE_MODEL`].
     pub fn push(&mut self, scenario: &str, metrics: &[(&str, f64)]) {
-        let entry = metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect();
-        match self.scenarios.iter_mut().find(|(n, _)| n == scenario) {
-            Some((_, m)) => *m = entry,
-            None => self.scenarios.push((scenario.to_string(), entry)),
+        self.push_model(scenario, SINGLE_MODEL, metrics);
+    }
+
+    /// Record one scenario's metrics labelled with the model (tag) they
+    /// were measured on, so fleet rows stay distinguishable across PRs.
+    /// Rows are keyed by `(scenario, model)`: the same scenario measured
+    /// on two models keeps both rows (the JSON keys disambiguate as
+    /// `scenario@model`), while re-pushing the same pair overwrites.
+    pub fn push_model(&mut self, scenario: &str, model: &str, metrics: &[(&str, f64)]) {
+        let entry: Metrics = metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        match self
+            .scenarios
+            .iter_mut()
+            .find(|(n, m, _)| n == scenario && m == model)
+        {
+            Some((_, _, ms)) => *ms = entry,
+            None => self
+                .scenarios
+                .push((scenario.to_string(), model.to_string(), entry)),
         }
     }
 
+    /// True when no scenario has been recorded.
     pub fn is_empty(&self) -> bool {
         self.scenarios.is_empty()
     }
 
-    /// Write `{"bench": ..., "results": {scenario: {metric: value}}}`.
+    /// Write `{"bench": ..., "results": {scenario: {"model": ..., metric:
+    /// value}}}`. A scenario recorded under several models emits one key
+    /// per row, disambiguated as `scenario@model` so keys stay unique.
     pub fn write(&self, path: impl AsRef<std::path::Path>) -> crate::util::error::Result<()> {
         let results = Value::Obj(
             self.scenarios
                 .iter()
-                .map(|(name, ms)| {
-                    (
-                        name.clone(),
-                        Value::Obj(
-                            ms.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
-                        ),
-                    )
+                .map(|(name, model, ms)| {
+                    let multi =
+                        self.scenarios.iter().filter(|(n, _, _)| n == name).count() > 1;
+                    let key = if multi { format!("{name}@{model}") } else { name.clone() };
+                    let mut fields = vec![("model".to_string(), json::s(model.clone()))];
+                    fields.extend(ms.iter().map(|(k, v)| (k.clone(), Value::Num(*v))));
+                    (key, Value::Obj(fields))
                 })
                 .collect(),
         );
@@ -65,9 +90,12 @@ impl BenchLog {
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Benchmark name.
     pub name: String,
+    /// Iterations each sample timed.
     pub iters_per_sample: u64,
-    pub samples: Vec<f64>, // seconds per iteration
+    /// Seconds per iteration, one entry per sample.
+    pub samples: Vec<f64>,
 }
 
 impl Stats {
@@ -78,14 +106,17 @@ impl Stats {
         s[idx]
     }
 
+    /// Median seconds per iteration.
     pub fn median(&self) -> f64 {
         self.pct(0.5)
     }
 
+    /// 10th-percentile seconds per iteration.
     pub fn p10(&self) -> f64 {
         self.pct(0.1)
     }
 
+    /// 90th-percentile seconds per iteration.
     pub fn p90(&self) -> f64 {
         self.pct(0.9)
     }
@@ -95,6 +126,7 @@ impl Stats {
         1.0 / self.median()
     }
 
+    /// One-line report in the EXPERIMENTS.md §Perf format.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  (p10 {}, p90 {}, {} samples x {} iters)",
@@ -108,6 +140,7 @@ impl Stats {
     }
 }
 
+/// Human-readable duration (s / ms / us / ns).
 pub fn fmt_dur(secs: f64) -> String {
     if secs >= 1.0 {
         format!("{secs:.3}s")
@@ -122,8 +155,11 @@ pub fn fmt_dur(secs: f64) -> String {
 
 /// Benchmark runner with a time budget per benchmark.
 pub struct Bencher {
+    /// Warmup + calibration budget in seconds.
     pub warmup_s: f64,
+    /// Target seconds per sample.
     pub sample_s: f64,
+    /// Samples to collect.
     pub n_samples: usize,
 }
 
@@ -134,6 +170,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A fast low-fidelity configuration for smoke runs.
     pub fn quick() -> Self {
         Bencher { warmup_s: 0.05, sample_s: 0.02, n_samples: 5 }
     }
@@ -196,6 +233,12 @@ mod tests {
         log.push("scenario_a", &[("rps", 1234.5), ("p99_ms", 7.25)]);
         log.push("scenario_b", &[("shed", 0.0)]);
         log.push("scenario_a", &[("rps", 2000.0)]); // overwrite wins
+        log.push_model("scenario_fleet", "lenet-sparse", &[("rps", 500.0)]);
+        // Same scenario on two models: both rows survive, keys
+        // disambiguate.
+        log.push_model("per_tag", "dense", &[("rps", 100.0)]);
+        log.push_model("per_tag", "sparse", &[("rps", 300.0)]);
+        log.push_model("per_tag", "sparse", &[("rps", 350.0)]); // same pair overwrites
         let path = std::env::temp_dir().join(format!("bench_log_{}.json", std::process::id()));
         log.write(&path).unwrap();
         let v = json::parse_file(&path).unwrap();
@@ -204,6 +247,19 @@ mod tests {
         assert_eq!(results.get("scenario_a").unwrap().req_f64("rps").unwrap(), 2000.0);
         assert!(results.get("scenario_a").unwrap().get("p99_ms").is_none());
         assert_eq!(results.get("scenario_b").unwrap().req_f64("shed").unwrap(), 0.0);
+        // Single-model rows default the model field; fleet rows carry
+        // their tag.
+        assert_eq!(
+            results.get("scenario_a").unwrap().req_str("model").unwrap(),
+            SINGLE_MODEL
+        );
+        assert_eq!(
+            results.get("scenario_fleet").unwrap().req_str("model").unwrap(),
+            "lenet-sparse"
+        );
+        assert_eq!(results.get("per_tag@dense").unwrap().req_f64("rps").unwrap(), 100.0);
+        assert_eq!(results.get("per_tag@sparse").unwrap().req_f64("rps").unwrap(), 350.0);
+        assert!(results.get("per_tag").is_none(), "multi-model scenario must split keys");
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -1,38 +1,64 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
-//! and a generated usage string. Subcommand dispatch lives in `main.rs`.
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! **repeatable** value options ([`Args::get_all`] — e.g. `serve`'s
+//! `--model` fleet spec) and a generated usage string. Subcommand
+//! dispatch lives in `main.rs`.
 
 use crate::util::error::{Error, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Declarative option spec.
 #[derive(Debug, Clone)]
 pub struct Opt {
+    /// Long option name (without the `--`).
     pub name: &'static str,
+    /// Whether the option consumes a value (`--key value` / `--key=v`).
     pub takes_value: bool,
+    /// Default value seeded before parsing (value options only).
     pub default: Option<&'static str>,
+    /// One-line help text for the usage block.
     pub help: &'static str,
 }
 
 /// Parsed arguments.
 #[derive(Debug, Default)]
 pub struct Args {
-    values: BTreeMap<String, String>,
+    /// Every value given per option. The first explicit occurrence
+    /// replaces the seeded default; later occurrences accumulate, so
+    /// options are repeatable ([`Args::get_all`]) while [`Args::get`]
+    /// keeps last-one-wins semantics.
+    values: BTreeMap<String, Vec<String>>,
+    /// Options whose current value is still the seeded default.
+    defaulted: BTreeSet<String>,
     flags: Vec<String>,
+    /// Non-option arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// The value of `name` (the last occurrence when repeated), if any.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.values.get(name).map(|s| s.as_str())
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Every explicitly given value of a repeated option, in order.
+    /// Empty when the option was never given explicitly (a seeded
+    /// default does not count as an occurrence here).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        if self.defaulted.contains(name) {
+            return &[];
+        }
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// The value of `name`, or a config error naming the option.
     pub fn req(&self, name: &str) -> Result<&str> {
         self.get(name)
             .ok_or_else(|| Error::config(format!("missing required option --{name}")))
     }
 
+    /// Parse the value of `name` as `usize`, if present.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         match self.get(name) {
             None => Ok(None),
@@ -43,6 +69,7 @@ impl Args {
         }
     }
 
+    /// Parse the value of `name` as `f64`, if present.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         match self.get(name) {
             None => Ok(None),
@@ -53,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Whether the boolean flag `name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -64,7 +92,8 @@ pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
     // Seed defaults.
     for o in opts {
         if let Some(d) = o.default {
-            args.values.insert(o.name.to_string(), d.to_string());
+            args.values.insert(o.name.to_string(), vec![d.to_string()]);
+            args.defaulted.insert(o.name.to_string());
         }
     }
     let mut i = 0;
@@ -89,7 +118,12 @@ pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
                             .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
                     }
                 };
-                args.values.insert(name.to_string(), val);
+                if args.defaulted.remove(name) {
+                    // First explicit occurrence replaces the default.
+                    args.values.insert(name.to_string(), vec![val]);
+                } else {
+                    args.values.entry(name.to_string()).or_default().push(val);
+                }
             } else {
                 if inline.is_some() {
                     return Err(Error::config(format!("--{name} takes no value")));
@@ -151,6 +185,20 @@ mod tests {
         assert_eq!(a.get("device"), Some("sim"));
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse(&sv(&["--steps", "1", "--steps=2", "--steps", "3"]), &opts()).unwrap();
+        assert_eq!(a.get_all("steps"), &["1".to_string(), "2".into(), "3".into()]);
+        // Scalar accessors keep last-one-wins semantics.
+        assert_eq!(a.get_usize("steps").unwrap(), Some(3));
+        // A seeded default is not an explicit occurrence...
+        assert_eq!(a.get_all("device"), &[] as &[String]);
+        // ...and the first explicit occurrence replaces it.
+        let b = parse(&sv(&["--device", "tiny", "--device", "zcu104"]), &opts()).unwrap();
+        assert_eq!(b.get_all("device"), &["tiny".to_string(), "zcu104".into()]);
+        assert_eq!(b.get("device"), Some("zcu104"));
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub enum Error {
     /// Admission control shed the request: the in-flight bound is hit.
     /// A fast reject at submit time — retry later or drop (never queued).
     Overloaded,
+    /// The fleet has no serving plane for the requested model tag. A fast
+    /// reject at submit time, distinct from [`Error::Overloaded`]: retrying
+    /// cannot help until an operator registers the model.
+    UnknownModel(String),
     /// Config file / CLI argument problems.
     Config(String),
 }
@@ -53,6 +57,9 @@ impl fmt::Display for Error {
             Error::Kernel(m) => write!(f, "kernel: {m}"),
             Error::QueueClosed => write!(f, "request queue closed"),
             Error::Overloaded => write!(f, "overloaded: admission queue full, request shed"),
+            Error::UnknownModel(tag) => {
+                write!(f, "unknown model: no serving plane for tag '{tag}'")
+            }
             Error::Config(m) => write!(f, "config: {m}"),
         }
     }
@@ -74,26 +81,37 @@ impl From<xla::Error> for Error {
 
 /// Convenience constructors used across the crate.
 impl Error {
+    /// Build an [`Error::Graph`].
     pub fn graph(msg: impl Into<String>) -> Self {
         Error::Graph(msg.into())
     }
+    /// Build an [`Error::Folding`].
     pub fn folding(msg: impl Into<String>) -> Self {
         Error::Folding(msg.into())
     }
+    /// Build an [`Error::Dse`].
     pub fn dse(msg: impl Into<String>) -> Self {
         Error::Dse(msg.into())
     }
+    /// Build an [`Error::Sim`].
     pub fn sim(msg: impl Into<String>) -> Self {
         Error::Sim(msg.into())
     }
+    /// Build an [`Error::Config`].
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    /// Build an [`Error::Lstw`].
     pub fn lstw(msg: impl Into<String>) -> Self {
         Error::Lstw(msg.into())
     }
+    /// Build an [`Error::Kernel`].
     pub fn kernel(msg: impl Into<String>) -> Self {
         Error::Kernel(msg.into())
+    }
+    /// Build an [`Error::UnknownModel`].
+    pub fn unknown_model(tag: impl Into<String>) -> Self {
+        Error::UnknownModel(tag.into())
     }
 }
 
@@ -107,6 +125,9 @@ mod tests {
         assert_eq!(e.to_string(), "dse: no legal move");
         let e = Error::Json { msg: "bad token".into(), offset: 17 };
         assert!(e.to_string().contains("byte 17"));
+        let e = Error::unknown_model("resnet");
+        assert!(matches!(e, Error::UnknownModel(_)));
+        assert!(e.to_string().contains("'resnet'"));
     }
 
     #[test]

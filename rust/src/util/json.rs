@@ -13,16 +13,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64, as in javascript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
     /// Insertion-ordered object (no hashing: objects here are small).
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -38,6 +44,7 @@ impl Value {
         })
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -45,6 +52,7 @@ impl Value {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -52,10 +60,12 @@ impl Value {
         }
     }
 
+    /// [`Value::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -63,6 +73,7 @@ impl Value {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -70,6 +81,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -77,6 +89,7 @@ impl Value {
         }
     }
 
+    /// The fields, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Value)]> {
         match self {
             Value::Obj(o) => Some(o),
@@ -92,6 +105,7 @@ impl Value {
         })
     }
 
+    /// Required non-negative integer field `key`.
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?.as_usize().ok_or_else(|| Error::Json {
             msg: format!("key '{key}' is not a non-negative integer"),
@@ -99,6 +113,7 @@ impl Value {
         })
     }
 
+    /// Required string field `key`.
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?.as_str().ok_or_else(|| Error::Json {
             msg: format!("key '{key}' is not a string"),
@@ -199,19 +214,22 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Builder helpers so call sites stay terse.
+/// Build an object value (builder helpers keep call sites terse).
 pub fn obj(kv: Vec<(&str, Value)>) -> Value {
     Value::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Build a number value.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// Build a string value.
 pub fn s(v: impl Into<String>) -> Value {
     Value::Str(v.into())
 }
 
+/// Build an array value.
 pub fn arr(v: Vec<Value>) -> Value {
     Value::Arr(v)
 }

@@ -20,14 +20,19 @@ use crate::util::error::{Error, Result};
 use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
 use std::io::{Read, Write};
 
+/// File magic: format name + version.
 pub const MAGIC: &[u8; 8] = b"LSTW0001";
 
 /// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32 = 0,
+    /// 32-bit signed integer.
     I32 = 1,
+    /// 8-bit signed integer.
     I8 = 2,
+    /// 8-bit unsigned integer.
     U8 = 3,
 }
 
@@ -42,6 +47,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
@@ -53,13 +59,18 @@ impl DType {
 /// Tensor payload, kept in its native representation.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
+    /// f32 payload.
     F32(Vec<f32>),
+    /// i32 payload.
     I32(Vec<i32>),
+    /// i8 payload.
     I8(Vec<i8>),
+    /// u8 payload.
     U8(Vec<u8>),
 }
 
 impl Data {
+    /// The element type of this payload.
     pub fn dtype(&self) -> DType {
         match self {
             Data::F32(_) => DType::F32,
@@ -69,6 +80,7 @@ impl Data {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Data::F32(v) => v.len(),
@@ -78,6 +90,7 @@ impl Data {
         }
     }
 
+    /// True for a zero-element payload.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -92,6 +105,7 @@ impl Data {
         }
     }
 
+    /// Borrow as f32, erroring on other dtypes.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Data::F32(v) => Ok(v),
@@ -99,6 +113,7 @@ impl Data {
         }
     }
 
+    /// Borrow as i32, erroring on other dtypes.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Data::I32(v) => Ok(v),
@@ -110,16 +125,21 @@ impl Data {
 /// A named tensor with shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Tensor name (store lookup key).
     pub name: String,
+    /// Dimensions, C order.
     pub shape: Vec<usize>,
+    /// The payload.
     pub data: Data,
 }
 
 impl Tensor {
+    /// Build an f32 tensor.
     pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
         Tensor { name: name.into(), shape, data: Data::F32(data) }
     }
 
+    /// Element count the shape implies.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -141,31 +161,38 @@ impl Tensor {
 /// An ordered collection of tensors (a whole LSTW file).
 #[derive(Debug, Clone, Default)]
 pub struct Store {
+    /// Tensors in file order.
     pub tensors: Vec<Tensor>,
 }
 
 impl Store {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a tensor.
     pub fn push(&mut self, t: Tensor) {
         self.tensors.push(t);
     }
 
+    /// The tensor called `name`, if present.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors.iter().find(|t| t.name == name)
     }
 
+    /// The tensor called `name`, or an LSTW error.
     pub fn req(&self, name: &str) -> Result<&Tensor> {
         self.get(name)
             .ok_or_else(|| Error::lstw(format!("tensor '{name}' not found")))
     }
 
+    /// Every tensor name, in file order.
     pub fn names(&self) -> Vec<&str> {
         self.tensors.iter().map(|t| t.name.as_str()).collect()
     }
 
+    /// Read a whole LSTW file.
     pub fn read_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
         let bytes = std::fs::read(&path)?;
         Self::read(&mut &bytes[..]).map_err(|e| {
@@ -173,6 +200,7 @@ impl Store {
         })
     }
 
+    /// Write a whole LSTW file (creating parent directories).
     pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
@@ -183,6 +211,7 @@ impl Store {
         Ok(())
     }
 
+    /// Decode a store from a reader.
     pub fn read(r: &mut impl Read) -> Result<Self> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
@@ -232,6 +261,7 @@ impl Store {
         Ok(Store { tensors })
     }
 
+    /// Encode the store to a writer.
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
         w.write_all(MAGIC)?;
         w.write_u32::<LittleEndian>(self.tensors.len() as u32)?;

@@ -23,6 +23,7 @@ pub struct Gen {
     /// Scale factor in (0, 1]: shrinking re-runs with smaller scale to bias
     /// generated sizes toward minimal counterexamples.
     scale: f64,
+    /// Index of the current case (usable as an auxiliary seed).
     pub case: u64,
 }
 
@@ -45,18 +46,22 @@ impl Gen {
         self.rng.range(lo, cap.max(lo + 1))
     }
 
+    /// u64 in `[lo, hi]` (inclusive).
     pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
         lo + (self.rng.next_u64() % (hi - lo + 1))
     }
 
+    /// f64 uniform in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.f64() * (hi - lo)
     }
 
+    /// f32 uniform in `[lo, hi)`.
     pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.f32() * (hi - lo)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.bool(p)
     }

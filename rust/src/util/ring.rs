@@ -70,18 +70,22 @@ impl<T> RingQueue<T> {
         }
     }
 
+    /// Maximum entries the ring holds.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.state.lock().expect("ring poisoned").buf.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// True once [`RingQueue::close`] has been called.
     pub fn is_closed(&self) -> bool {
         self.state.lock().expect("ring poisoned").closed
     }
@@ -168,12 +172,14 @@ impl Default for Parker {
 }
 
 impl Parker {
+    /// A parker with no token pending.
     pub fn new() -> Parker {
         Parker {
             inner: Arc::new(ParkState { token: Mutex::new(false), cv: Condvar::new() }),
         }
     }
 
+    /// A cloneable wake handle for this parker.
     pub fn unparker(&self) -> Unparker {
         Unparker { inner: Arc::clone(&self.inner) }
     }

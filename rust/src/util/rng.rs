@@ -28,6 +28,7 @@ impl Pcg32 {
         Self::new(seed, 0xda3e39cb94b95bdb)
     }
 
+    /// Next 32 random bits (the PCG-XSH-RR output function).
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(MULT).wrapping_add(self.inc);
@@ -36,6 +37,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -86,6 +88,7 @@ impl Pcg32 {
         -self.f64().max(1e-300).ln() / rate
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

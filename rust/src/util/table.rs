@@ -7,7 +7,9 @@
 /// Column alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// Pad on the right.
     Left,
+    /// Pad on the left (numeric columns).
     Right,
 }
 
@@ -20,6 +22,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers (all right-aligned).
     pub fn new(headers: &[&str]) -> Self {
         Table {
             aligns: headers.iter().map(|_| Align::Right).collect(),
@@ -34,16 +37,19 @@ impl Table {
         self
     }
 
+    /// Append one row (arity must match the headers).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render the boxed ASCII table.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -100,6 +106,7 @@ pub fn fmt_si(v: f64) -> String {
     }
 }
 
+/// Integer with thousands separators.
 pub fn fmt_int(v: f64) -> String {
     let n = v.round() as i64;
     let s = n.abs().to_string();
@@ -117,6 +124,7 @@ pub fn fmt_int(v: f64) -> String {
     }
 }
 
+/// Seconds rendered as microseconds with two decimals.
 pub fn fmt_us(seconds: f64) -> String {
     format!("{:.2}", seconds * 1e6)
 }

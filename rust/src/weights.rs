@@ -17,16 +17,22 @@ use std::path::Path;
 /// One MAC layer's parameters.
 #[derive(Debug, Clone)]
 pub struct LayerParams {
+    /// Layer name (matches the graph node).
     pub name: String,
     /// Weights, flattened to [fold_in, cout] row-major.
     pub w: Vec<f32>,
+    /// Per-output-channel biases.
     pub bias: Vec<f32>,
+    /// Unstructured keep-mask over the flattened weights.
     pub mask: Mask,
+    /// Rows of the flattened layout (k*k*cin for conv, inputs for fc).
     pub fold_in: usize,
+    /// Output channels (columns of the flattened layout).
     pub cout: usize,
 }
 
 impl LayerParams {
+    /// Surviving (unpruned) weights of this layer.
     pub fn nnz(&self) -> usize {
         self.mask.nnz()
     }
@@ -42,10 +48,12 @@ impl LayerParams {
 /// All MAC layers of a model, stream-ordered.
 #[derive(Debug, Clone, Default)]
 pub struct ModelParams {
+    /// Per-layer parameters in graph order.
     pub layers: Vec<LayerParams>,
 }
 
 impl ModelParams {
+    /// The parameters of layer `name`, if present.
     pub fn get(&self, name: &str) -> Option<&LayerParams> {
         self.layers.iter().find(|l| l.name == name)
     }

@@ -3,12 +3,13 @@
 //! and graceful shutdown are exercised without artifacts or XLA.
 
 use logicsparse::coordinator::{
-    loadgen, BatchPolicy, Server, ServerOptions, ShedMode,
+    loadgen, BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Server,
+    ServerOptions, ShedMode,
 };
 use logicsparse::graph::builder::lenet5;
 use logicsparse::kernel::{CompiledModel, KernelSpec};
 use logicsparse::runtime::SyntheticRuntime;
-use logicsparse::traffic::Traffic;
+use logicsparse::traffic::{Mix, Traffic};
 use logicsparse::weights::ModelParams;
 use logicsparse::Error;
 use std::sync::Arc;
@@ -297,6 +298,230 @@ fn native_dense_and_sparse_serve_identical_classes() {
         classes
     };
     assert_eq!(run(dense), run(sparse));
+}
+
+fn synth_backend(per_image: Duration) -> EngineBackend {
+    EngineBackend::Synthetic { per_image }
+}
+
+#[test]
+fn fleet_slow_tag_does_not_stall_other_planes() {
+    // Isolation: a wedged/slow model fills only its own rings and
+    // batcher; another tag's plane must keep its full dispatch path. The
+    // planes share nothing but the admission gate (sized far above this
+    // test's load, so it never interferes).
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("slow", synth_backend(Duration::from_millis(20)))
+                .policy(BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) })
+                .queue_depth(1),
+            ModelSpec::new("fast", synth_backend(Duration::ZERO))
+                .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) }),
+        ],
+        admission_capacity: 4096,
+    })
+    .unwrap();
+
+    // Wedge the slow plane: ~1.6s of strictly serial work (1 engine,
+    // 1-batch rings, 1-request batches).
+    let slow_rxs: Vec<_> = (0..80u64)
+        .map(|i| fleet.submit("slow", image(i)).unwrap())
+        .collect();
+
+    // The fast tag must stay fully serviceable while slow is backed up.
+    let t0 = Instant::now();
+    for i in 0..50u64 {
+        let resp = fleet.infer_blocking("fast", image(i)).unwrap();
+        assert_eq!(resp.class(), (i % 10) as usize);
+    }
+    let fast_wall = t0.elapsed();
+    let snap = fleet.stats();
+    assert_eq!(snap.get("fast").unwrap().completed, 50);
+    assert!(
+        snap.get("slow").unwrap().completed < 80,
+        "slow plane drained its backlog implausibly fast; the test lost its wedge"
+    );
+    assert!(
+        fast_wall < Duration::from_secs(5),
+        "fast tag stalled behind the slow tag's backlog: {fast_wall:?}"
+    );
+
+    // The lossless drain guarantee still covers the wedged backlog.
+    let final_snap = fleet.shutdown();
+    for (i, rx) in slow_rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("slow request {i} dropped in shutdown"));
+        assert!(!resp.is_error(), "slow request {i} failed");
+    }
+    assert_eq!(final_snap.get("slow").unwrap().completed, 80);
+    assert_eq!(final_snap.errors(), 0);
+}
+
+#[test]
+fn fleet_unknown_model_is_rejected_without_side_effects() {
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![ModelSpec::new("only", synth_backend(Duration::ZERO))],
+        admission_capacity: 8,
+    })
+    .unwrap();
+    for _ in 0..16 {
+        assert!(matches!(
+            fleet.submit("ghost", image(0)),
+            Err(Error::UnknownModel(_))
+        ));
+    }
+    assert!(matches!(fleet.resolve("ghost"), Err(Error::UnknownModel(_))));
+    assert!(fleet.handle("ghost").is_err());
+    // Nothing was admitted or leaked: the full budget is still available
+    // and the known tag serves normally.
+    assert_eq!(fleet.in_flight(), 0);
+    for i in 0..8u64 {
+        fleet.infer_blocking("only", image(i)).unwrap();
+    }
+    let snap = fleet.shutdown();
+    assert_eq!(snap.completed(), 8);
+    assert_eq!(snap.submitted(), 8);
+    // Unknown-tag rejects are not admission sheds.
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.shed_by_tag(), 0);
+}
+
+#[test]
+fn fleet_shutdown_loses_no_requests_across_three_tags() {
+    // The single-plane drain guarantee, applied per tag: shut down with
+    // most of a 3-tag fleet's work still queued; every admitted request
+    // of every tag must receive a real response.
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("a", synth_backend(Duration::from_micros(200))),
+            ModelSpec::new("b", synth_backend(Duration::from_micros(200))).engines(2),
+            ModelSpec::new("c", synth_backend(Duration::from_micros(200))),
+        ],
+        admission_capacity: 4096,
+    })
+    .unwrap();
+    let tags = ["a", "b", "c"];
+    let n = 240u64;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let tag = tags[(i % 3) as usize];
+        rxs.push((i, fleet.submit(tag, image(i)).unwrap()));
+    }
+    // Immediately begin graceful shutdown — the queues are mostly unserved.
+    let snap = fleet.shutdown();
+
+    for (i, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("request {i} dropped in fleet shutdown"));
+        assert!(!resp.is_error(), "request {i} failed");
+        assert_eq!(resp.class(), (i % 10) as usize, "request {i} misclassified");
+    }
+    for tag in tags {
+        let s = snap.get(tag).unwrap();
+        assert_eq!(s.submitted, n / 3, "[{tag}] submit accounting");
+        assert_eq!(s.completed, n / 3, "[{tag}] lost admitted requests");
+        assert_eq!(s.errors, 0, "[{tag}] errors");
+    }
+    assert_eq!(snap.completed(), n);
+}
+
+#[test]
+fn fleet_shared_admission_shed_accounting_sums_across_tags() {
+    // One shared budget governs both tags: a burst across the fleet must
+    // shed once the *host-wide* bound is hit, the shared gate and the
+    // per-tag counters must agree, and everything admitted completes.
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("a", synth_backend(Duration::from_millis(2)))
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) })
+                .queue_depth(4),
+            ModelSpec::new("b", synth_backend(Duration::from_millis(2)))
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) })
+                .queue_depth(4),
+        ],
+        admission_capacity: 8,
+    })
+    .unwrap();
+
+    let mut client_shed = [0u64; 2];
+    let mut accepted = Vec::new();
+    for i in 0..64u64 {
+        let k = (i % 2) as usize;
+        let tag = if k == 0 { "a" } else { "b" };
+        match fleet.submit(tag, image(i)) {
+            Ok(rx) => accepted.push(rx),
+            Err(Error::Overloaded) => client_shed[k] += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(
+        client_shed[0] + client_shed[1] > 0,
+        "64 fast submits over a shared 8-deep gate must shed"
+    );
+    for rx in accepted {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.is_error());
+    }
+    let snap = fleet.shutdown();
+    assert_eq!(
+        snap.get("a").unwrap().shed,
+        client_shed[0],
+        "tag a's shed attribution disagrees with the client"
+    );
+    assert_eq!(
+        snap.get("b").unwrap().shed,
+        client_shed[1],
+        "tag b's shed attribution disagrees with the client"
+    );
+    // The shared gate's total and the per-tag sum are two views of the
+    // same events.
+    assert_eq!(snap.shed, client_shed[0] + client_shed[1]);
+    assert_eq!(snap.shed_by_tag(), snap.shed);
+    assert_eq!(snap.completed(), snap.submitted());
+}
+
+#[test]
+fn fleet_mixed_open_loop_replays_per_tag_traffic() {
+    // The per-tag arrival mixes: a heterogeneous Mix replayed against the
+    // fleet must offer each tag exactly its own Traffic while the
+    // accounting stays complete per tag.
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("fast", synth_backend(Duration::ZERO)),
+            ModelSpec::new("steady", synth_backend(Duration::from_micros(100))),
+        ],
+        admission_capacity: 1024,
+    })
+    .unwrap();
+    let mix = Mix::new()
+        .stream("fast", Traffic::poisson(150, 3000.0, 5))
+        .stream("steady", Traffic::periodic(100, 0.0005));
+    let rep = loadgen::run_open_loop_mix(&fleet, &mix, |_, i| image(i), ShedMode::Retry)
+        .unwrap();
+    assert_eq!(rep.get("fast").unwrap().offered, 150);
+    assert_eq!(rep.get("steady").unwrap().offered, 100);
+    assert_eq!(rep.offered(), 250);
+    assert_eq!(rep.completed(), 250);
+    assert_eq!(rep.lost(), 0, "responses dropped");
+    for (_, r) in &rep.per_tag {
+        assert_eq!(r.completed + r.errors, r.accepted, "requests unaccounted");
+        assert_eq!(r.latencies_s.len() as u64, r.completed);
+    }
+    assert!(rep.aggregate_rps() > 0.0);
+
+    let snap = fleet.stats();
+    assert_eq!(snap.get("fast").unwrap().completed, 150);
+    assert_eq!(snap.get("steady").unwrap().completed, 100);
+
+    // A mix naming an unserved tag is rejected before anything submits.
+    let bad = Mix::new().stream("ghost", Traffic::saturated(5));
+    assert!(matches!(
+        loadgen::run_open_loop_mix(&fleet, &bad, |_, i| image(i), ShedMode::Retry),
+        Err(Error::UnknownModel(_))
+    ));
+    let _ = fleet.shutdown();
 }
 
 #[test]
