@@ -7,11 +7,16 @@ PYTHON ?= python3
 
 .PHONY: verify build test doc fmt fmt-check clippy bench bench-smoke artifacts clean
 
-## Tier-1 gate: release build + full test suite + doc gate.
+## Tier-1 gate: release build + full test suite + doc gate + lint gate
+## (rustfmt check + clippy -D warnings). Lint is a hard gate now; if a
+## toolchain run still finds offline-written fmt/clippy debt, pay it
+## (`make fmt`, fix findings) rather than re-softening the gate.
 verify:
 	$(CARGO) build --release
 	$(CARGO) test -q
 	$(MAKE) doc
+	$(MAKE) fmt-check
+	$(MAKE) clippy
 
 ## Doc gate: broken intra-doc links and missing public docs fail loudly
 ## (the lib carries #![warn(missing_docs)]; -D promotes rustdoc warnings).

@@ -22,7 +22,14 @@
 //! must sustain >= 0.8x the aggregate throughput of three isolated
 //! single-model planes, with zero dropped responses (DESIGN.md §10).
 //!
-//! Part 4 measures the PJRT artifact path and skips with a notice when
+//! Part 4 is the **policy control plane** acceptance (DESIGN.md §11):
+//! under a saturating noisy neighbour, a weighted/SLO tag must hold its
+//! p99 target with zero sheds of its own — the neighbour's weighted
+//! admission cap absorbs every shed — and nothing may be dropped. An
+//! unweighted contrast run records how the same traffic behaves without
+//! budgets (trajectory only, no assertions).
+//!
+//! Part 5 measures the PJRT artifact path and skips with a notice when
 //! `make artifacts` has not been run.
 //!
 //! Every scenario's numbers are also written to `BENCH_serve.json`
@@ -34,7 +41,7 @@
 
 use logicsparse::coordinator::{
     loadgen, BatchPolicy, EngineBackend, Fleet, FleetOptions, LoadReport, ModelSpec,
-    Server, ServerOptions, ShedMode,
+    Server, ServerOptions, ShedMode, StatsSnapshot,
 };
 use logicsparse::experiments::headline;
 use logicsparse::graph::builder::lenet5;
@@ -53,17 +60,38 @@ fn synth_image(i: u64) -> Vec<f32> {
     SyntheticRuntime::stripe_image(i as usize)
 }
 
-fn record(log: &mut BenchLog, scenario: &str, rep: &LoadReport) {
-    log.push(
-        scenario,
-        &[
-            ("rps", rep.achieved_rps),
-            ("p50_ms", rep.latency_pct_s(0.5) * 1e3),
-            ("p99_ms", rep.latency_pct_s(0.99) * 1e3),
-            ("shed", rep.shed as f64),
-            ("completed", rep.completed as f64),
-        ],
-    );
+/// Record one scenario row: the load report's client-side view plus the
+/// plane's final snapshot (steals, shed attribution, final ring depth) —
+/// so autotuning's effect on queue depths and the shed/steal trajectory
+/// stay machine-readable across PRs.
+fn record(log: &mut BenchLog, scenario: &str, rep: &LoadReport, snap: &StatsSnapshot) {
+    log.push(scenario, &metrics(rep, snap));
+}
+
+/// Like [`record`] but labelled with the model tag (fleet scenarios).
+fn record_model(
+    log: &mut BenchLog,
+    scenario: &str,
+    model: &str,
+    rep: &LoadReport,
+    snap: &StatsSnapshot,
+) {
+    log.push_model(scenario, model, &metrics(rep, snap));
+}
+
+fn metrics(rep: &LoadReport, snap: &StatsSnapshot) -> Vec<(&'static str, f64)> {
+    vec![
+        ("rps", rep.achieved_rps),
+        ("p50_ms", rep.latency_pct_s(0.5) * 1e3),
+        ("p99_ms", rep.latency_pct_s(0.99) * 1e3),
+        ("shed", rep.shed as f64),
+        ("shed_host", snap.shed as f64),
+        ("shed_budget", snap.shed_budget as f64),
+        ("steals", snap.steals as f64),
+        ("ring_depth", snap.ring_depth as f64),
+        ("ring_full", snap.ring_full_backoffs as f64),
+        ("completed", rep.completed as f64),
+    ]
 }
 
 fn synthetic_scaling(log: &mut BenchLog, smoke: bool) {
@@ -93,7 +121,7 @@ fn synthetic_scaling(log: &mut BenchLog, smoke: bool) {
             "saturated Retry run must complete every request"
         );
         assert_eq!(snap.completed, snap.submitted, "server lost admitted requests");
-        record(log, &format!("synthetic_saturated_{engines}_engines"), &rep);
+        record(log, &format!("synthetic_saturated_{engines}_engines"), &rep, &snap);
         rps_by_engines.push((engines, rep.achieved_rps));
     }
 
@@ -139,8 +167,7 @@ fn synthetic_poisson(log: &mut BenchLog, smoke: bool) {
         rep.accepted,
         "accepted requests unaccounted for"
     );
-    record(log, "synthetic_poisson_open_loop", &rep);
-    let _ = snap;
+    record(log, "synthetic_poisson_open_loop", &rep, &snap);
 }
 
 /// The tentpole scenario: baked sparse kernels vs the dense native
@@ -201,7 +228,7 @@ fn native_kernels(log: &mut BenchLog, smoke: bool) {
             snap.completed, snap.submitted,
             "native/{name}: admitted requests lost"
         );
-        record(log, &format!("native_{name}"), &rep);
+        record(log, &format!("native_{name}"), &rep, &snap);
         rps.push(rep.achieved_rps);
     }
 
@@ -309,6 +336,7 @@ fn fleet_heterogeneous(log: &mut BenchLog, smoke: bool) {
             })
             .collect(),
         admission_capacity: 512,
+        autotune: None,
     })
     .unwrap();
     let mut mix = Mix::new();
@@ -328,16 +356,7 @@ fn fleet_heterogeneous(log: &mut BenchLog, smoke: bool) {
     assert_eq!(snap.completed(), snap.submitted(), "fleet: admitted requests lost");
     for (tag, r) in &rep.per_tag {
         assert_eq!(r.errors, 0, "fleet/{tag}: engine failures");
-        log.push_model(
-            &format!("fleet_{tag}"),
-            tag,
-            &[
-                ("rps", r.achieved_rps),
-                ("p50_ms", r.latency_pct_s(0.5) * 1e3),
-                ("p99_ms", r.latency_pct_s(0.99) * 1e3),
-                ("completed", r.completed as f64),
-            ],
-        );
+        record_model(log, &format!("fleet_{tag}"), tag, r, snap.get(tag).unwrap());
     }
     let agg = rep.aggregate_rps();
     let ratio = agg / isolated_sum;
@@ -358,6 +377,105 @@ fn fleet_heterogeneous(log: &mut BenchLog, smoke: bool) {
             "fleet aggregate {agg:.0} req/s fell below 0.8x the isolated sum \
              {isolated_sum:.0} req/s"
         );
+    }
+}
+
+/// Policy control-plane acceptance (DESIGN.md §11): one weighted/SLO
+/// tag at a comfortable Poisson rate next to an unweighted neighbour
+/// offered ~2.4x its capacity. With weighted admission the neighbour's
+/// cap (1/9 of the shared budget) absorbs every shed while the SLO tag
+/// keeps full availability and holds its p99 target; nothing is dropped.
+/// A second, unweighted run of the same traffic is recorded for the
+/// cross-PR trajectory (no assertions) so the policy's effect is visible
+/// in `BENCH_serve.json`.
+fn fleet_noisy_neighbour(log: &mut BenchLog, smoke: bool) {
+    println!("== policy control plane: weighted SLO tag vs noisy neighbour ==");
+    let dur_s = if smoke { 0.3 } else { 1.5 };
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) };
+    let slo_p99_ms = 20.0;
+    // slo: 100us/image (~10k/s capacity) offered 2k/s. noisy: 200us/image
+    // (~5k/s capacity) offered 12k/s — saturating.
+    let slo_rate = 2_000.0;
+    let noisy_rate = 12_000.0;
+    let traffic = |rate: f64, seed: u64| {
+        Traffic::poisson((rate * dur_s).round() as u64, rate, seed)
+    };
+
+    let run = |weighted: bool| {
+        let slo_backend = EngineBackend::Synthetic { per_image: Duration::from_micros(100) };
+        let mut slo_spec = ModelSpec::new("slo", slo_backend).policy(policy.clone());
+        if weighted {
+            slo_spec = slo_spec.slo(slo_p99_ms, 8.0);
+        }
+        let fleet = Fleet::start(FleetOptions {
+            models: vec![
+                slo_spec,
+                ModelSpec::new(
+                    "noisy",
+                    EngineBackend::Synthetic { per_image: Duration::from_micros(200) },
+                )
+                .policy(policy.clone()),
+            ],
+            admission_capacity: 63,
+            autotune: None,
+        })
+        .unwrap();
+        let mix = Mix::new()
+            .stream("slo", traffic(slo_rate, 41))
+            .stream("noisy", traffic(noisy_rate, 43));
+        let rep =
+            loadgen::run_open_loop_mix(&fleet, &mix, |_, i| synth_image(i), ShedMode::Drop)
+                .unwrap();
+        let snap = fleet.shutdown();
+        (rep, snap)
+    };
+
+    // Weighted run: budgets 56/7 out of the 63-slot host gate.
+    let (rep, snap) = run(true);
+    let label = |w: &str| format!("noisy_neighbour_{w}");
+    println!("weighted: {}", rep.render());
+    println!("weighted: {}", snap.render());
+    assert_eq!(rep.lost(), 0, "responses dropped across graceful shutdown");
+    let slo_stats = snap.get("slo").unwrap();
+    let noisy_stats = snap.get("noisy").unwrap();
+    assert_eq!(slo_stats.budget_capacity, Some(56), "weights not applied");
+    assert_eq!(noisy_stats.budget_capacity, Some(7), "weights not applied");
+    assert!(
+        noisy_stats.shed_total() > 0,
+        "a 2.4x-overloaded tag behind a 7-slot cap must shed"
+    );
+    for (tag, r) in &rep.per_tag {
+        record_model(log, &label("weighted"), tag, r, snap.get(tag).unwrap());
+    }
+    let slo_rep = rep.get("slo").unwrap();
+    if !smoke {
+        assert_eq!(
+            slo_stats.shed_total(),
+            0,
+            "the weighted tag shed despite its reserved headroom"
+        );
+        assert_eq!(slo_rep.completed, slo_rep.offered, "SLO tag lost availability");
+        let p99_ms = slo_rep.latency_pct_s(0.99) * 1e3;
+        assert!(
+            p99_ms <= slo_p99_ms,
+            "weighted tag missed its SLO under a noisy neighbour: \
+             p99 {p99_ms:.2}ms > {slo_p99_ms}ms"
+        );
+        println!(
+            "slo tag held p99 {p99_ms:.2}ms <= {slo_p99_ms}ms while noisy shed {}",
+            noisy_stats.shed_total()
+        );
+    }
+
+    // Unweighted contrast: same traffic, FIFO-fair shared gate. Recorded
+    // for the trajectory only — under saturation the noisy tag may spend
+    // the whole budget and starve the SLO tag's availability.
+    if !smoke {
+        let (rep, snap) = run(false);
+        println!("unweighted: {}", rep.render());
+        for (tag, r) in &rep.per_tag {
+            record_model(log, &label("unweighted"), tag, r, snap.get(tag).unwrap());
+        }
     }
 }
 
@@ -421,7 +539,7 @@ fn artifact_scenarios(log: &mut BenchLog) {
         println!("coordinator/{name}: {}", rep.render());
         println!("coordinator/{name}: {}", snap.render());
         assert_eq!(rep.lost, 0);
-        record(log, &format!("pjrt_coordinator_{name}"), &rep);
+        record(log, &format!("pjrt_coordinator_{name}"), &rep, &snap);
     }
 }
 
@@ -438,6 +556,7 @@ fn main() {
     synthetic_poisson(&mut log, smoke);
     native_kernels(&mut log, smoke);
     fleet_heterogeneous(&mut log, smoke);
+    fleet_noisy_neighbour(&mut log, smoke);
     artifact_scenarios(&mut log);
     log.write("BENCH_serve.json").unwrap();
     println!("wrote BENCH_serve.json");

@@ -4,7 +4,13 @@
 //! and the python stage-2 compile path (consumer: re-sparse fine-tune and
 //! AOT of the proposed design), and between the CLI and the serving
 //! coordinator (artifact selection).
+//!
+//! [`PolicyConfig`] is the serving control plane's operator-facing
+//! configuration (DESIGN.md §11): per-tag SLOs parsed from the CLI's
+//! repeatable `--slo tag=p99_ms[:weight]` plus the queue-autotune
+//! toggle, with a JSON round-trip so a fleet policy can ship as a file.
 
+use crate::coordinator::policy::{AutotuneConfig, SloSpec};
 use crate::folding::{FoldingConfig, LayerFold, Style};
 use crate::graph::Graph;
 use crate::util::error::{Error, Result};
@@ -99,6 +105,160 @@ impl FoldingConfigFile {
     /// Validate the folding against a graph (after loading).
     pub fn check(&self, g: &Graph) -> Result<()> {
         self.folding.check(g)
+    }
+}
+
+/// Operator-level policy configuration for the serving control plane
+/// (DESIGN.md §11): per-tag SLOs (p99 target + admission weight) and the
+/// optional queue-depth autotuner.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyConfig {
+    /// `(tag, slo)` pairs, in declaration order (tags unique).
+    pub slos: Vec<(String, SloSpec)>,
+    /// Queue-depth autotuner bounds, when enabled.
+    pub autotune: Option<AutotuneConfig>,
+}
+
+impl PolicyConfig {
+    /// Parse one `--slo` argument of the form `tag=p99_ms[:weight]`
+    /// (weight defaults to 1.0) and add it. Rejects malformed specs,
+    /// non-positive or non-finite numbers, and duplicate tags.
+    pub fn add_slo_arg(&mut self, spec: &str) -> Result<()> {
+        let bad =
+            || Error::config(format!("--slo wants tag=p99_ms[:weight], got '{spec}'"));
+        let (tag, rest) = spec.split_once('=').ok_or_else(bad)?;
+        if tag.is_empty() || rest.is_empty() {
+            return Err(bad());
+        }
+        let (p99_s, weight_s) = match rest.split_once(':') {
+            Some((p, w)) => (p, Some(w)),
+            None => (rest, None),
+        };
+        let p99_ms: f64 = p99_s.parse().map_err(|_| bad())?;
+        let weight: f64 = match weight_s {
+            Some(w) => w.parse().map_err(|_| bad())?,
+            None => 1.0,
+        };
+        let positive_finite = |x: f64| x.is_finite() && x > 0.0;
+        if !(positive_finite(p99_ms) && positive_finite(weight)) {
+            return Err(Error::config(format!(
+                "--slo '{spec}': p99_ms and weight must be positive finite numbers"
+            )));
+        }
+        if self.slos.iter().any(|(t, _)| t == tag) {
+            return Err(Error::config(format!("--slo: duplicate tag '{tag}'")));
+        }
+        self.slos.push((tag.to_string(), SloSpec::new(p99_ms, weight)));
+        Ok(())
+    }
+
+    /// The SLO configured for `tag`, if any.
+    pub fn slo_for(&self, tag: &str) -> Option<SloSpec> {
+        self.slos.iter().find(|(t, _)| t == tag).map(|(_, s)| *s)
+    }
+
+    /// Serialise to JSON (`{"slos": {tag: {p99_ms, weight}}, "autotune":
+    /// {...}?}`).
+    pub fn to_json(&self) -> Value {
+        let slos = self
+            .slos
+            .iter()
+            .map(|(tag, s)| {
+                (
+                    tag.clone(),
+                    json::obj(vec![
+                        ("p99_ms", json::num(s.p99_ms)),
+                        ("weight", json::num(s.weight)),
+                    ]),
+                )
+            })
+            .collect();
+        let mut fields = vec![("slos", Value::Obj(slos))];
+        if let Some(a) = &self.autotune {
+            fields.push((
+                "autotune",
+                json::obj(vec![
+                    ("min_depth", json::num(a.min_depth as f64)),
+                    ("max_depth", json::num(a.max_depth as f64)),
+                    ("hysteresis_ticks", json::num(a.hysteresis_ticks as f64)),
+                    ("cooldown_ticks", json::num(a.cooldown_ticks as f64)),
+                    ("steal_fraction", json::num(a.steal_fraction)),
+                ]),
+            ));
+        }
+        json::obj(fields)
+    }
+
+    /// Parse the [`PolicyConfig::to_json`] shape. A policy file is
+    /// untrusted operator input, so the same domain rules the CLI path
+    /// enforces apply here: positive finite SLO numbers, unique tags,
+    /// and autotune bounds that `QueueAutotune::new` would accept —
+    /// violations return a config error instead of panicking later.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let positive_finite = |x: f64| x.is_finite() && x > 0.0;
+        let slos_v = v
+            .req("slos")?
+            .as_obj()
+            .ok_or_else(|| Error::config("'slos' is not an object"))?;
+        let mut slos: Vec<(String, SloSpec)> = Vec::with_capacity(slos_v.len());
+        for (tag, sv) in slos_v {
+            let p99_ms = sv.req_f64("p99_ms")?;
+            let weight = sv.req_f64("weight")?;
+            if !(positive_finite(p99_ms) && positive_finite(weight)) {
+                return Err(Error::config(format!(
+                    "slo '{tag}': p99_ms and weight must be positive finite numbers"
+                )));
+            }
+            if slos.iter().any(|(t, _)| t == tag) {
+                return Err(Error::config(format!("slo: duplicate tag '{tag}'")));
+            }
+            slos.push((tag.clone(), SloSpec::new(p99_ms, weight)));
+        }
+        let autotune = match v.get("autotune") {
+            None => None,
+            Some(av) => {
+                let depth = |key: &str| -> Result<usize> {
+                    let x = av.req_f64(key)?;
+                    if !x.is_finite() || x < 1.0 || x.fract() != 0.0 {
+                        return Err(Error::config(format!(
+                            "autotune.{key} must be a positive integer, got {x}"
+                        )));
+                    }
+                    Ok(x as usize)
+                };
+                let ticks = |key: &str| -> Result<u32> {
+                    let x = av.req_f64(key)?;
+                    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+                        return Err(Error::config(format!(
+                            "autotune.{key} must be a non-negative integer, got {x}"
+                        )));
+                    }
+                    Ok(x as u32)
+                };
+                let cfg = AutotuneConfig {
+                    min_depth: depth("min_depth")?,
+                    max_depth: depth("max_depth")?,
+                    hysteresis_ticks: ticks("hysteresis_ticks")?,
+                    cooldown_ticks: ticks("cooldown_ticks")?,
+                    steal_fraction: av.req_f64("steal_fraction")?,
+                };
+                if cfg.max_depth < cfg.min_depth {
+                    return Err(Error::config(format!(
+                        "autotune: max_depth {} < min_depth {}",
+                        cfg.max_depth, cfg.min_depth
+                    )));
+                }
+                if !cfg.steal_fraction.is_finite() || cfg.steal_fraction < 0.0 {
+                    return Err(Error::config(format!(
+                        "autotune.steal_fraction must be a non-negative finite number, \
+                         got {}",
+                        cfg.steal_fraction
+                    )));
+                }
+                Some(cfg)
+            }
+        };
+        Ok(PolicyConfig { slos, autotune })
     }
 }
 
@@ -240,5 +400,78 @@ mod tests {
         let g = lenet5();
         let p = PruneProfile::uniform(&g, &[0.5, 0.8], 0.9);
         assert_eq!(p.layer_sparsity_at_reference("conv2"), Some(0.8));
+    }
+
+    #[test]
+    fn policy_config_parses_slo_args() {
+        let mut p = PolicyConfig::default();
+        p.add_slo_arg("gold=20:8").unwrap();
+        p.add_slo_arg("bulk=50").unwrap(); // weight defaults to 1.0
+        let gold = p.slo_for("gold").unwrap();
+        assert_eq!(gold.p99_ms, 20.0);
+        assert_eq!(gold.weight, 8.0);
+        assert_eq!(p.slo_for("bulk").unwrap().weight, 1.0);
+        assert!(p.slo_for("ghost").is_none());
+        // A duplicate tag is rejected, leaving the first entry intact.
+        assert!(p.add_slo_arg("gold=30:2").is_err());
+        assert_eq!(p.slo_for("gold").unwrap().p99_ms, 20.0);
+        // Malformed / out-of-domain specs are rejected.
+        for bad in [
+            "gold", "=20", "gold=", "gold=abc", "gold=20:x", "gold=0:1", "gold=-5",
+            "gold=20:-1", "gold=nan", "gold=20:inf",
+        ] {
+            let mut q = PolicyConfig::default();
+            assert!(q.add_slo_arg(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn policy_config_roundtrips_through_json() {
+        let mut p = PolicyConfig {
+            slos: Vec::new(),
+            autotune: Some(crate::coordinator::policy::AutotuneConfig::default()),
+        };
+        p.add_slo_arg("a=20:8").unwrap();
+        p.add_slo_arg("b=100:0.5").unwrap();
+        let text = p.to_json().to_string_pretty();
+        let q = PolicyConfig::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(q.slos.len(), 2);
+        assert_eq!(q.slo_for("a"), p.slo_for("a"));
+        assert_eq!(q.slo_for("b"), p.slo_for("b"));
+        assert_eq!(q.autotune, p.autotune);
+        // Autotune is optional in the file.
+        let bare = PolicyConfig::from_json(&json::parse(r#"{"slos": {}}"#).unwrap()).unwrap();
+        assert!(bare.autotune.is_none());
+        assert!(bare.slos.is_empty());
+    }
+
+    #[test]
+    fn policy_config_from_json_rejects_out_of_domain_files() {
+        // A policy file is untrusted input: the same domain rules as the
+        // CLI path, and autotune bounds QueueAutotune::new would assert
+        // on must come back as Err, never a later panic.
+        for bad in [
+            r#"{"slos": {"a": {"p99_ms": -1, "weight": 1}}}"#,
+            r#"{"slos": {"a": {"p99_ms": 20, "weight": 0}}}"#,
+            r#"{"slos": {},
+                "autotune": {"min_depth": 0, "max_depth": 64,
+                             "hysteresis_ticks": 2, "cooldown_ticks": 2,
+                             "steal_fraction": 0.5}}"#,
+            r#"{"slos": {},
+                "autotune": {"min_depth": 8, "max_depth": 4,
+                             "hysteresis_ticks": 2, "cooldown_ticks": 2,
+                             "steal_fraction": 0.5}}"#,
+            r#"{"slos": {},
+                "autotune": {"min_depth": 2, "max_depth": 64,
+                             "hysteresis_ticks": 2, "cooldown_ticks": 2,
+                             "steal_fraction": -0.5}}"#,
+            r#"{"slos": {},
+                "autotune": {"min_depth": 2.5, "max_depth": 64,
+                             "hysteresis_ticks": 2, "cooldown_ticks": 2,
+                             "steal_fraction": 0.5}}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(PolicyConfig::from_json(&v).is_err(), "accepted {bad}");
+        }
     }
 }

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use super::shard::ExecutionPlane;
 use super::{Batch, Request};
-use crate::coordinator::queue::AdmissionGate;
+use crate::coordinator::queue::PlaneGates;
 use crate::coordinator::stats::ServerStats;
 use crate::runtime::NUM_CLASSES;
 
@@ -65,7 +65,7 @@ impl BatchPolicy {
 pub(crate) fn run(
     rx: mpsc::Receiver<Request>,
     plane: Arc<ExecutionPlane>,
-    gate: Arc<AdmissionGate>,
+    gates: Arc<PlaneGates>,
     policy: BatchPolicy,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
@@ -86,7 +86,7 @@ pub(crate) fn run(
                 Err(batch) => {
                     // Plane fully closed under us: fail the requests
                     // loudly rather than dropping their response channels.
-                    fail_batch(batch, &stats, &gate);
+                    fail_batch(batch, &stats, &gates);
                     false
                 }
             }
@@ -143,12 +143,13 @@ pub(crate) fn run(
 }
 
 /// Complete every request of an undispatchable batch with NaN logits (the
-/// same client-visible shape as an engine failure) and release admission.
+/// same client-visible shape as an engine failure) and release admission
+/// (both scopes).
 ///
 /// Failures count only toward `errors` — `completed` and the latency
 /// percentiles mean *successfully served* throughout the stats, matching
 /// `LoadReport`'s convention.
-pub(crate) fn fail_batch(batch: Batch, stats: &ServerStats, gate: &AdmissionGate) {
+pub(crate) fn fail_batch(batch: Batch, stats: &ServerStats, gates: &PlaneGates) {
     for req in batch.requests {
         stats.on_error();
         let latency_s = req.enqueued.elapsed().as_secs_f64();
@@ -157,13 +158,14 @@ pub(crate) fn fail_batch(batch: Batch, stats: &ServerStats, gate: &AdmissionGate
             logits: vec![f32::NAN; NUM_CLASSES],
             latency_s,
         });
-        gate.exit();
+        gates.exit();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::queue::{AdmissionGate, TagBudget};
     use crate::util::ring::PopError;
 
     fn req(id: u64) -> (Request, mpsc::Receiver<super::super::Response>) {
@@ -177,7 +179,7 @@ mod tests {
     struct Harness {
         tx: mpsc::Sender<Request>,
         plane: Arc<ExecutionPlane>,
-        gate: Arc<AdmissionGate>,
+        gates: Arc<PlaneGates>,
         shutdown: Arc<AtomicBool>,
         handle: std::thread::JoinHandle<()>,
     }
@@ -186,15 +188,18 @@ mod tests {
         let (tx, in_rx) = mpsc::channel();
         // One-engine plane: the test inspects ring 0 directly.
         let (plane, _mailboxes) = ExecutionPlane::new(1, 64);
-        let gate = Arc::new(AdmissionGate::new(1024));
+        let gates = Arc::new(PlaneGates::new(
+            Arc::new(AdmissionGate::new(1024)),
+            Arc::new(TagBudget::unlimited()),
+        ));
         let stats = Arc::new(ServerStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let sd = Arc::clone(&shutdown);
         let p = Arc::clone(&plane);
-        let g = Arc::clone(&gate);
+        let g = Arc::clone(&gates);
         let handle =
             std::thread::spawn(move || run(in_rx, p, g, policy, stats, sd));
-        Harness { tx, plane, gate, shutdown, handle }
+        Harness { tx, plane, gates, shutdown, handle }
     }
 
     fn recv_batch(plane: &ExecutionPlane, timeout: Duration) -> Batch {
@@ -263,9 +268,10 @@ mod tests {
         });
         h.plane.close();
         let (r, rx) = req(0);
-        // Mirror the production flow: the request entered the gate at
-        // submit time, so fail_batch's gate.exit() has an enter to match.
-        h.gate.try_enter();
+        // Mirror the production flow: the request entered both admission
+        // scopes at submit time, so fail_batch's gates.exit() has an
+        // enter to match.
+        h.gates.try_enter();
         h.tx.send(r).unwrap();
         // The batcher must answer (NaN logits), not drop the channel.
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();

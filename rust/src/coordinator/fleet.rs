@@ -1,5 +1,6 @@
 //! Multi-model serving fleet: per-tag execution planes under one shared
-//! admission gate (DESIGN.md §10).
+//! admission gate, governed by the policy control plane (DESIGN.md §10,
+//! §11).
 //!
 //! The engine-free premise makes models cheap to replicate — a baked
 //! `CompiledModel` is immutable plain data behind an `Arc`, a synthetic
@@ -12,12 +13,29 @@
 //! traffic spike on one model sheds load instead of starving the others'
 //! memory and queues.
 //!
-//! Routing is lock-free on the hot path: a tag resolves to a plane index
-//! with one scan of a small immutable `Vec<String>` (no map, no lock),
-//! and [`Fleet::handle`] resolves once up front so repeat submitters skip
+//! On top of that shared budget, each plane carries its **own retunable
+//! [`TagBudget`](super::TagBudget)** and the fleet runs a
+//! [`Controller`]: [`Fleet::tick`] samples telemetry, asks the policies
+//! to decide, and applies the decisions (per-tag admission caps from SLO
+//! weights, ring-depth autotuning). Decisions are pure functions of the
+//! telemetry snapshot — no wall-clock reads — so control behaviour is
+//! replayable (see `coordinator::policy`).
+//!
+//! **Membership is dynamic**: [`Fleet::register`] adds a tagged plane to
+//! a running host and [`Fleet::retire`] drains one losslessly (every
+//! in-flight request of the retired tag still receives its response).
+//! Retired planes leave a tombstone slot, so stale pre-resolved indices
+//! fail with [`Error::UnknownModel`] instead of silently routing to a
+//! neighbour.
+//!
+//! Routing is lock-free on the hot path: a tag resolves to a slot index
+//! with one scan of a small slot vector (no map, no lock), and
+//! [`Fleet::handle`] resolves once up front so repeat submitters skip
 //! even that. Rejections are distinguishable: [`Error::Overloaded`] means
-//! the shared budget is spent (retry later), [`Error::UnknownModel`] means
-//! no plane serves the tag (retrying cannot help).
+//! an admission budget is spent — the tag's own or the host's, told apart
+//! in the stats (`shed_budget` vs `shed`) — while [`Error::UnknownModel`]
+//! means no live plane serves the tag (retrying cannot help until an
+//! operator registers it).
 //!
 //! Isolation: planes share *only* the admission gate. A wedged or slow
 //! model fills its own rings and its own batcher queue; other tags keep
@@ -27,18 +45,24 @@
 //! request of every tag receives a response.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use super::policy::{
+    AutotuneConfig, Controller, Decision, FleetTelemetry, QueueAutotune, SloSpec,
+    TagTelemetry, WeightedAdmission,
+};
 use super::queue::AdmissionGate;
-use super::{BatchPolicy, EngineBackend, Plane, Response, StatsSnapshot};
+use super::{BatchPolicy, EngineBackend, Plane, PlaneConfig, Response, StatsSnapshot};
 use crate::util::error::{Error, Result};
 
 /// Configuration of one fleet member: a model tag plus the per-plane
 /// knobs a single-model [`super::ServerOptions`] would carry (everything
-/// except the admission bound, which the fleet shares).
+/// except the admission bound, which the fleet shares), plus an optional
+/// per-tag SLO.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
-    /// Routing key clients submit against (must be unique in the fleet).
+    /// Routing key clients submit against (must be unique among live
+    /// tags).
     pub tag: String,
     /// Backend every engine replica of this plane runs.
     pub backend: EngineBackend,
@@ -46,13 +70,18 @@ pub struct ModelSpec {
     pub policy: BatchPolicy,
     /// Engine replicas of this plane.
     pub engines: usize,
-    /// Per-engine work-ring depth, in batches.
+    /// Initial per-engine work-ring depth, in batches (autotuning may
+    /// retune it).
     pub queue_depth: usize,
+    /// Per-tag SLO: p99 target + admission weight. When any live tag
+    /// carries one, the host budget is partitioned into per-tag caps by
+    /// weight (DESIGN.md §11).
+    pub slo: Option<SloSpec>,
 }
 
 impl ModelSpec {
     /// A spec with the single-model defaults (1 engine, default policy,
-    /// 16-deep rings); chain the builder methods to adjust.
+    /// 16-deep rings, no SLO); chain the builder methods to adjust.
     pub fn new(tag: impl Into<String>, backend: EngineBackend) -> Self {
         ModelSpec {
             tag: tag.into(),
@@ -60,6 +89,7 @@ impl ModelSpec {
             policy: BatchPolicy::default(),
             engines: 1,
             queue_depth: 16,
+            slo: None,
         }
     }
 
@@ -80,10 +110,28 @@ impl ModelSpec {
         self.queue_depth = queue_depth;
         self
     }
+
+    /// Set the tag's SLO: a p99 latency target (ms) and an admission
+    /// weight (> 0).
+    pub fn slo(mut self, p99_ms: f64, weight: f64) -> Self {
+        self.slo = Some(SloSpec::new(p99_ms, weight));
+        self
+    }
+
+    fn plane_config(&self) -> PlaneConfig {
+        PlaneConfig {
+            policy: self.policy.clone(),
+            engines: self.engines,
+            backend: self.backend.clone(),
+            queue_depth: self.queue_depth,
+            slo: self.slo,
+        }
+    }
 }
 
-/// Fleet configuration: the member planes plus the one shared admission
-/// budget that governs the whole host.
+/// Fleet configuration: the member planes, the one shared admission
+/// budget that governs the whole host, and the optional queue-depth
+/// autotuner.
 #[derive(Debug, Clone)]
 pub struct FleetOptions {
     /// One entry per model tag (tags must be unique).
@@ -91,20 +139,37 @@ pub struct FleetOptions {
     /// Shared admission bound across **all** planes: total requests
     /// admitted but not yet completed, host-wide.
     pub admission_capacity: usize,
+    /// When set, [`Fleet::tick`] additionally runs the queue-depth
+    /// autotuner with these bounds (weighted admission always runs).
+    pub autotune: Option<AutotuneConfig>,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        FleetOptions { models: Vec::new(), admission_capacity: 1024 }
+        FleetOptions { models: Vec::new(), admission_capacity: 1024, autotune: None }
     }
 }
 
-/// A running multi-model fleet: N per-tag planes behind one shared
-/// admission gate. See the [module docs](self) for the architecture.
+/// One membership slot: a tag and its plane, or a tombstone once the tag
+/// retired (the slot keeps its index so stale pre-resolved handles fail
+/// with `UnknownModel` instead of routing to a shifted neighbour).
+struct Slot {
+    tag: String,
+    plane: Option<Plane>,
+    slo: Option<SloSpec>,
+}
+
+/// A running multi-model fleet: per-tag planes behind one shared
+/// admission gate, with a policy control loop and dynamic membership.
+/// See the [module docs](self) for the architecture.
 pub struct Fleet {
-    tags: Vec<String>,
-    planes: Vec<Plane>,
+    slots: Vec<Slot>,
     gate: Arc<AdmissionGate>,
+    controller: Mutex<Controller>,
+    /// Host-gate sheds attributed to tags that have since retired, kept
+    /// so the gate-total vs per-tag reconciliation survives membership
+    /// churn.
+    retired_shed: u64,
 }
 
 impl Fleet {
@@ -123,38 +188,55 @@ impl Fleet {
             }
         }
         let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
-        let mut tags = Vec::with_capacity(opts.models.len());
-        let mut planes = Vec::with_capacity(opts.models.len());
-        for spec in opts.models {
-            let plane = Plane::start(
-                spec.policy,
-                spec.engines,
-                spec.backend,
-                spec.queue_depth,
-                Arc::clone(&gate),
-            )?;
-            tags.push(spec.tag);
-            planes.push(plane);
+        let mut controller = Controller::new();
+        controller.push(Box::new(WeightedAdmission));
+        if let Some(cfg) = opts.autotune {
+            controller.push(Box::new(QueueAutotune::new(cfg)));
         }
-        Ok(Fleet { tags, planes, gate })
+        let mut slots = Vec::with_capacity(opts.models.len());
+        for spec in &opts.models {
+            let plane = Plane::start(spec.plane_config(), Arc::clone(&gate))?;
+            slots.push(Slot { tag: spec.tag.clone(), plane: Some(plane), slo: spec.slo });
+        }
+        let fleet = Fleet {
+            slots,
+            gate,
+            controller: Mutex::new(controller),
+            retired_shed: 0,
+        };
+        // First control tick: applies the weighted budgets (and baselines
+        // the autotuner) before any traffic arrives.
+        let _ = fleet.tick();
+        Ok(fleet)
     }
 
-    /// The model tags this fleet serves, in plane order.
-    pub fn tags(&self) -> &[String] {
-        &self.tags
-    }
-
-    /// Resolve a tag to its plane index (the one-time routing step);
-    /// [`Error::UnknownModel`] if no plane serves the tag.
-    pub fn resolve(&self, tag: &str) -> Result<usize> {
-        self.tags
+    /// Live slots, in slot order.
+    fn live(&self) -> impl Iterator<Item = (usize, &Slot, &Plane)> {
+        self.slots
             .iter()
-            .position(|t| t == tag)
+            .enumerate()
+            .filter_map(|(i, s)| s.plane.as_ref().map(|p| (i, s, p)))
+    }
+
+    /// The model tags this fleet currently serves, in slot order.
+    pub fn tags(&self) -> Vec<String> {
+        self.live().map(|(_, s, _)| s.tag.clone()).collect()
+    }
+
+    /// Resolve a tag to its slot index (the one-time routing step);
+    /// [`Error::UnknownModel`] if no live plane serves the tag.
+    pub fn resolve(&self, tag: &str) -> Result<usize> {
+        self.live()
+            .find(|(_, s, _)| s.tag == tag)
+            .map(|(i, _, _)| i)
             .ok_or_else(|| Error::unknown_model(tag))
     }
 
     /// A pre-resolved submit handle for `tag`: repeat submitters pay the
-    /// tag scan once here and never again on the hot path.
+    /// tag scan once here and never again on the hot path. Handles are
+    /// borrows, so membership changes (`&mut self`) invalidate them at
+    /// compile time; a raw index kept across a retire fails with
+    /// [`Error::UnknownModel`] at submit.
     pub fn handle(&self, tag: &str) -> Result<TagHandle<'_>> {
         Ok(TagHandle { fleet: self, index: self.resolve(tag)? })
     }
@@ -162,24 +244,27 @@ impl Fleet {
     /// Submit one image to the plane serving `tag`.
     ///
     /// Fast paths out, all without queueing anything:
-    /// [`Error::UnknownModel`] when no plane serves the tag,
-    /// [`Error::Overloaded`] when the shared admission budget is spent,
-    /// [`Error::QueueClosed`] once shutdown began.
+    /// [`Error::UnknownModel`] when no live plane serves the tag,
+    /// [`Error::Overloaded`] when an admission budget is spent (the tag's
+    /// own or the shared host budget — attributed separately in the
+    /// stats), [`Error::QueueClosed`] once shutdown began.
     pub fn submit(&self, tag: &str, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        self.planes[self.resolve(tag)?].submit(image)
+        self.submit_at(self.resolve(tag)?, image)
     }
 
-    /// Submit to a plane by pre-resolved index (see [`Fleet::resolve`]);
-    /// an out-of-range index is a config error, not a panic.
+    /// Submit to a plane by pre-resolved index (see [`Fleet::resolve`]).
+    /// An out-of-range index is a config error; the index of a retired
+    /// tag fails with [`Error::UnknownModel`].
     pub fn submit_at(&self, index: usize, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        self.planes
-            .get(index)
-            .ok_or_else(|| {
-                Error::config(format!(
-                    "plane index {index} out of range for a {}-model fleet",
-                    self.planes.len()
-                ))
-            })?
+        let slot = self.slots.get(index).ok_or_else(|| {
+            Error::config(format!(
+                "plane index {index} out of range for a {}-slot fleet",
+                self.slots.len()
+            ))
+        })?;
+        slot.plane
+            .as_ref()
+            .ok_or_else(|| Error::unknown_model(&slot.tag))?
             .submit(image)
     }
 
@@ -187,6 +272,115 @@ impl Fleet {
     pub fn infer_blocking(&self, tag: &str, image: Vec<f32>) -> Result<Response> {
         let rx = self.submit(tag, image)?;
         rx.recv().map_err(|_| Error::QueueClosed)
+    }
+
+    /// Register a new model on the **running** host: starts a fresh
+    /// plane behind the shared admission gate and rebalances per-tag
+    /// budgets. Fails (without side effects) if a live plane already
+    /// serves the tag or the backend cannot be built. A tag that retired
+    /// earlier may be registered again — it gets a new slot; stale
+    /// indices keep failing with [`Error::UnknownModel`].
+    pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
+        if self.live().any(|(_, s, _)| s.tag == spec.tag) {
+            return Err(Error::config(format!(
+                "duplicate model tag '{}': already live",
+                spec.tag
+            )));
+        }
+        let plane = Plane::start(spec.plane_config(), Arc::clone(&self.gate))?;
+        self.slots.push(Slot { tag: spec.tag, plane: Some(plane), slo: spec.slo });
+        let _ = self.tick();
+        Ok(())
+    }
+
+    /// Retire `tag` from the running host: the plane stops accepting,
+    /// drains **losslessly** (every in-flight request of the tag still
+    /// receives its response — the §8 shutdown protocol, applied to one
+    /// plane), and its final snapshot is returned. The slot becomes a
+    /// tombstone, so later submits against the tag or a stale index
+    /// fail with [`Error::UnknownModel`]. Budgets rebalance over the
+    /// remaining live tags.
+    pub fn retire(&mut self, tag: &str) -> Result<StatsSnapshot> {
+        let index = self.resolve(tag)?;
+        let mut plane = self.slots[index]
+            .plane
+            .take()
+            .expect("resolve returned a live slot");
+        plane.shutdown_impl();
+        let snap = plane.snapshot();
+        drop(plane);
+        self.retired_shed += snap.shed;
+        let _ = self.tick();
+        Ok(snap)
+    }
+
+    /// Sample the control-plane telemetry: host admission state plus one
+    /// [`TagTelemetry`] per live tag. Pure data — policies consume it
+    /// without touching the clock. The snapshots are the
+    /// **counters-only** variant (no latency clone/sort; percentile
+    /// fields are zeroed): every shipped policy acts on counters, so a
+    /// tick stays O(tags) no matter how much has been served. A future
+    /// latency-aware policy should add bounded percentile sampling here
+    /// rather than paying the full-reservoir sort per tick.
+    pub fn telemetry(&self) -> FleetTelemetry {
+        FleetTelemetry {
+            tick: 0, // stamped by the controller
+            capacity: self.gate.capacity(),
+            in_flight: self.gate.depth(),
+            per_tag: self
+                .live()
+                .map(|(_, s, plane)| TagTelemetry {
+                    tag: s.tag.clone(),
+                    slo: s.slo,
+                    stats: plane.snapshot_counters(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Run one control-loop tick: sample [`Fleet::telemetry`], let the
+    /// policies decide, apply the decisions (budget caps, ring depths),
+    /// and return what was applied. Safe to call from an operator thread
+    /// while traffic flows; tests call it directly, which makes control
+    /// behaviour deterministic (decisions depend only on the telemetry
+    /// sequence, never on the wall clock).
+    pub fn tick(&self) -> Vec<Decision> {
+        let mut telemetry = self.telemetry();
+        let decisions = self
+            .controller
+            .lock()
+            .expect("controller poisoned")
+            .tick(&mut telemetry);
+        for d in &decisions {
+            self.apply(d);
+        }
+        decisions
+    }
+
+    /// Apply one policy decision to the live fleet. Decisions naming a
+    /// tag that retired since the telemetry was sampled are dropped
+    /// silently — the next tick sees the new membership.
+    fn apply(&self, decision: &Decision) {
+        let plane_of = |tag: &str| {
+            self.live().find(|(_, s, _)| s.tag == tag).map(|(_, _, p)| p)
+        };
+        match decision {
+            Decision::SetTagBudget { tag, budget } => {
+                if let Some(p) = plane_of(tag) {
+                    p.budget().set_capacity((*budget).max(1));
+                }
+            }
+            Decision::SetTagUnlimited { tag } => {
+                if let Some(p) = plane_of(tag) {
+                    p.budget().set_unlimited();
+                }
+            }
+            Decision::SetRingDepth { tag, depth } => {
+                if let Some(p) = plane_of(tag) {
+                    p.set_queue_depth((*depth).max(1));
+                }
+            }
+        }
     }
 
     /// In-flight requests currently admitted host-wide (queued or
@@ -200,25 +394,28 @@ impl Fleet {
         self.gate.capacity()
     }
 
-    /// Snapshot every plane's stats plus the shared-gate shed total.
+    /// Snapshot every live plane's stats plus the shared-gate state.
     pub fn stats(&self) -> FleetSnapshot {
         FleetSnapshot {
             per_model: self
-                .tags
-                .iter()
-                .zip(&self.planes)
-                .map(|(t, p)| (t.clone(), p.snapshot()))
+                .live()
+                .map(|(_, s, p)| (s.tag.clone(), p.snapshot()))
                 .collect(),
             shed: self.gate.shed_total(),
+            shed_retired: self.retired_shed,
+            in_flight: self.gate.depth(),
+            capacity: self.gate.capacity(),
         }
     }
 
-    /// Graceful shutdown: drain every plane deterministically (same
+    /// Graceful shutdown: drain every live plane deterministically (same
     /// lossless protocol as [`super::Server::shutdown`], applied per
     /// plane) and return the final roll-up.
     pub fn shutdown(mut self) -> FleetSnapshot {
-        for plane in &mut self.planes {
-            plane.shutdown_impl();
+        for slot in &mut self.slots {
+            if let Some(plane) = slot.plane.as_mut() {
+                plane.shutdown_impl();
+            }
         }
         self.stats()
     }
@@ -228,7 +425,9 @@ impl Fleet {
 /// routing scan already happened in [`Fleet::handle`], so every
 /// [`TagHandle::submit`] is a direct plane submit. Implements
 /// [`super::Submit`], so the open-loop load generator can drive a single
-/// fleet tag exactly like a standalone [`super::Server`].
+/// fleet tag exactly like a standalone [`super::Server`]. Membership
+/// changes take `&mut Fleet`, so a handle can never outlive the
+/// membership it was resolved against.
 #[derive(Clone, Copy)]
 pub struct TagHandle<'a> {
     fleet: &'a Fleet,
@@ -238,10 +437,10 @@ pub struct TagHandle<'a> {
 impl TagHandle<'_> {
     /// The tag this handle routes to.
     pub fn tag(&self) -> &str {
-        &self.fleet.tags[self.index]
+        &self.fleet.slots[self.index].tag
     }
 
-    /// The resolved plane index.
+    /// The resolved slot index.
     pub fn index(&self) -> usize {
         self.index
     }
@@ -253,16 +452,26 @@ impl TagHandle<'_> {
     }
 }
 
-/// Roll-up of a fleet's statistics: one [`StatsSnapshot`] per tag plus
-/// the shared admission gate's shed total. Per-tag sheds (each plane's
-/// `shed` counter) and the gate total count the same events from two
-/// sides and must agree: `shed == sum(per-tag shed)`.
+/// Roll-up of a fleet's statistics: one [`StatsSnapshot`] per live tag
+/// plus the shared admission gate's state. Host-gate sheds are counted
+/// from two sides and must agree:
+/// `shed == sum(per-tag shed) + shed_retired` — per-tag **budget** sheds
+/// (`shed_budget`) are deliberately outside this identity because the
+/// host gate never sees them.
 #[derive(Debug, Clone)]
 pub struct FleetSnapshot {
-    /// `(tag, snapshot)` per plane, in plane order.
+    /// `(tag, snapshot)` per live plane, in slot order.
     pub per_model: Vec<(String, StatsSnapshot)>,
     /// Host-wide sheds counted by the shared admission gate.
     pub shed: u64,
+    /// Host-gate sheds attributed to tags retired before this snapshot
+    /// (kept so the reconciliation identity survives membership churn).
+    pub shed_retired: u64,
+    /// Requests admitted host-wide at snapshot time (shared budget in
+    /// use).
+    pub in_flight: usize,
+    /// The shared host admission bound.
+    pub capacity: usize,
 }
 
 impl FleetSnapshot {
@@ -271,35 +480,47 @@ impl FleetSnapshot {
         self.per_model.iter().find(|(t, _)| t == tag).map(|(_, s)| s)
     }
 
-    /// Total requests admitted across all tags.
+    /// Total requests admitted across all live tags.
     pub fn submitted(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.submitted).sum()
     }
 
-    /// Total requests served successfully across all tags.
+    /// Total requests served successfully across all live tags.
     pub fn completed(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.completed).sum()
     }
 
-    /// Total requests answered with an engine error across all tags.
+    /// Total requests answered with an engine error across all live tags.
     pub fn errors(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.errors).sum()
     }
 
-    /// Per-tag sheds summed — must equal [`FleetSnapshot::shed`].
+    /// Per-tag **host-gate** sheds summed — must equal
+    /// [`FleetSnapshot::shed`] minus [`FleetSnapshot::shed_retired`].
     pub fn shed_by_tag(&self) -> u64 {
         self.per_model.iter().map(|(_, s)| s.shed).sum()
     }
 
-    /// Fleet summary line plus one indented line per tag.
+    /// Per-tag **budget** sheds summed (never counted on the host gate).
+    pub fn shed_budget_by_tag(&self) -> u64 {
+        self.per_model.iter().map(|(_, s)| s.shed_budget).sum()
+    }
+
+    /// Fleet summary line plus one indented line per tag (each tag line
+    /// carries its own latency percentiles, budget occupancy and — when
+    /// an SLO is set — the p99 conformance verdict).
     pub fn render(&self) -> String {
         let mut s = format!(
-            "fleet: {} models | served {}/{} ({} errors, {} shed)",
+            "fleet: {} models | served {}/{} ({} errors, {} shed, {} budget-shed) \
+             | in-flight {}/{}",
             self.per_model.len(),
             self.completed(),
             self.submitted(),
             self.errors(),
             self.shed,
+            self.shed_budget_by_tag(),
+            self.in_flight,
+            self.capacity,
         );
         for (tag, snap) in &self.per_model {
             s.push_str(&format!("\n  [{tag}] {}", snap.render()));
@@ -322,6 +543,18 @@ mod tests {
         SyntheticRuntime::stripe_image(i as usize)
     }
 
+    fn two_tag_fleet(admission: usize) -> Fleet {
+        Fleet::start(FleetOptions {
+            models: vec![
+                ModelSpec::new("alpha", synthetic(0)),
+                ModelSpec::new("beta", synthetic(0)),
+            ],
+            admission_capacity: admission,
+            autotune: None,
+        })
+        .unwrap()
+    }
+
     #[test]
     fn config_validation() {
         assert!(Fleet::start(FleetOptions::default()).is_err());
@@ -331,26 +564,21 @@ mod tests {
                 ModelSpec::new("a", synthetic(0)),
             ],
             admission_capacity: 16,
+            autotune: None,
         };
         assert!(Fleet::start(dup).is_err());
         let zero_cap = FleetOptions {
             models: vec![ModelSpec::new("a", synthetic(0))],
             admission_capacity: 0,
+            autotune: None,
         };
         assert!(Fleet::start(zero_cap).is_err());
     }
 
     #[test]
     fn routes_by_tag_and_rejects_unknown() {
-        let fleet = Fleet::start(FleetOptions {
-            models: vec![
-                ModelSpec::new("alpha", synthetic(0)),
-                ModelSpec::new("beta", synthetic(0)),
-            ],
-            admission_capacity: 64,
-        })
-        .unwrap();
-        assert_eq!(fleet.tags(), &["alpha".to_string(), "beta".to_string()]);
+        let fleet = two_tag_fleet(64);
+        assert_eq!(fleet.tags(), vec!["alpha".to_string(), "beta".to_string()]);
         assert_eq!(fleet.resolve("beta").unwrap(), 1);
         assert!(matches!(fleet.resolve("gamma"), Err(Error::UnknownModel(_))));
         assert!(matches!(
@@ -384,6 +612,7 @@ mod tests {
                 ModelSpec::new("y", synthetic(0)),
             ],
             admission_capacity: 256,
+            autotune: None,
         })
         .unwrap();
         for i in 0..6u64 {
@@ -398,8 +627,121 @@ mod tests {
         assert_eq!(snap.completed(), 10);
         assert_eq!(snap.submitted(), 10);
         assert_eq!(snap.errors(), 0);
+        assert_eq!(snap.capacity, 256);
+        assert_eq!(snap.in_flight, 0);
+        // Ring depths are visible in the roll-up (default 16).
+        assert_eq!(snap.get("x").unwrap().ring_depth, 16);
         assert_eq!(fleet.in_flight(), 0);
         assert_eq!(fleet.admission_capacity(), 256);
+        let _ = fleet.shutdown();
+    }
+
+    #[test]
+    fn slo_weights_partition_the_host_budget() {
+        let fleet = Fleet::start(FleetOptions {
+            models: vec![
+                ModelSpec::new("gold", synthetic(0)).slo(20.0, 8.0),
+                ModelSpec::new("bulk", synthetic(0)),
+            ],
+            admission_capacity: 63,
+            autotune: None,
+        })
+        .unwrap();
+        let snap = fleet.stats();
+        assert_eq!(snap.get("gold").unwrap().budget_capacity, Some(56));
+        assert_eq!(snap.get("bulk").unwrap().budget_capacity, Some(7));
+        assert_eq!(snap.get("gold").unwrap().slo_p99_ms, Some(20.0));
+        assert_eq!(snap.get("bulk").unwrap().slo_p99_ms, None);
+        // The tick is idempotent once rebalance has run.
+        assert!(fleet.tick().is_empty());
+        // Retiring the SLO tag lifts every cap (no SLO left).
+        let mut fleet = fleet;
+        let _ = fleet.retire("gold").unwrap();
+        assert_eq!(fleet.stats().get("bulk").unwrap().budget_capacity, None);
+        let _ = fleet.shutdown();
+    }
+
+    #[test]
+    fn register_and_retire_drive_membership() {
+        let mut fleet = two_tag_fleet(64);
+        // Pre-resolve beta, then retire alpha: beta's index must survive
+        // (tombstones keep indices stable).
+        let beta_idx = fleet.resolve("beta").unwrap();
+        let retired = fleet.retire("alpha").unwrap();
+        assert_eq!(retired.errors, 0);
+        assert_eq!(fleet.tags(), vec!["beta".to_string()]);
+        assert!(matches!(fleet.resolve("alpha"), Err(Error::UnknownModel(_))));
+        // The stale index of the retired tag reports UnknownModel, not a
+        // silent route to a neighbour.
+        assert!(matches!(fleet.submit_at(0, image(0)), Err(Error::UnknownModel(_))));
+        let resp = fleet.submit_at(beta_idx, image(4)).unwrap().recv().unwrap();
+        assert_eq!(resp.class(), 4);
+
+        // Registering a live duplicate fails; a fresh tag (or the retired
+        // one) succeeds and serves immediately.
+        assert!(fleet.register(ModelSpec::new("beta", synthetic(0))).is_err());
+        fleet.register(ModelSpec::new("alpha", synthetic(0))).unwrap();
+        assert_eq!(fleet.tags(), vec!["beta".to_string(), "alpha".to_string()]);
+        let resp = fleet.infer_blocking("alpha", image(9)).unwrap();
+        assert_eq!(resp.class(), 9);
+        // The re-registered tag lives in a new slot; the old index stays
+        // dead.
+        assert_eq!(fleet.resolve("alpha").unwrap(), 2);
+        assert!(matches!(fleet.submit_at(0, image(0)), Err(Error::UnknownModel(_))));
+        let snap = fleet.shutdown();
+        assert_eq!(snap.per_model.len(), 2);
+    }
+
+    #[test]
+    fn autotune_tick_grows_rings_under_queue_pressure() {
+        // Two ticks under genuine queue-full pressure (the dispatcher
+        // backing off on a full ring — the one signal deeper rings can
+        // relieve) must double the ring depth once; hysteresis keeps the
+        // first tick quiet.
+        let fleet = Fleet::start(FleetOptions {
+            // 1-deep ring, 1-request batches, 50ms/image: the first
+            // batch occupies the engine, the second fills the ring, and
+            // the third parks the dispatcher in its full-ring backoff
+            // loop for the whole engine busy-window.
+            models: vec![ModelSpec::new("only", synthetic(50_000))
+                .policy(BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                })
+                .queue_depth(1)],
+            admission_capacity: 64,
+            autotune: Some(AutotuneConfig {
+                min_depth: 1,
+                max_depth: 8,
+                hysteresis_ticks: 2,
+                cooldown_ticks: 2,
+                steal_fraction: 0.5,
+            }),
+        })
+        .unwrap();
+        let rxs: Vec<_> = (0..3u64)
+            .map(|i| fleet.submit("only", image(i)).unwrap())
+            .collect();
+        // Let the batcher reach the full-ring backoff loop, then tick
+        // twice inside the 50ms busy-window.
+        std::thread::sleep(Duration::from_millis(15));
+        let d1 = fleet.tick(); // full-backoff delta > 0 -> streak 1
+        assert!(d1.is_empty(), "hysteresis must hold the first tick: {d1:?}");
+        std::thread::sleep(Duration::from_millis(10));
+        let d2 = fleet.tick(); // streak 2 -> grow 1 -> 2
+        assert_eq!(
+            d2,
+            vec![Decision::SetRingDepth { tag: "only".into(), depth: 2 }]
+        );
+        let snap = fleet.stats().get("only").unwrap().clone();
+        assert_eq!(snap.ring_depth, 2);
+        assert!(snap.ring_full_backoffs > 0, "no queue pressure was recorded");
+        // The grown ring relieves the very pressure that triggered it:
+        // the parked dispatch lands and everything completes losslessly.
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(!resp.is_error());
+        }
         let _ = fleet.shutdown();
     }
 }

@@ -21,7 +21,7 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::fleet::{Fleet, TagHandle};
+use super::fleet::{Fleet, ModelSpec, TagHandle};
 use super::{Response, Server};
 use crate::traffic::{Mix, Traffic};
 use crate::util::error::{Error, Result};
@@ -296,8 +296,8 @@ pub fn run_open_loop_mix(
 ) -> Result<MixReport> {
     let n_streams = mix.streams().len();
     let mut plane_of = Vec::with_capacity(n_streams);
-    for (tag, _) in mix.streams() {
-        plane_of.push(fleet.resolve(tag)?);
+    for s in mix.streams() {
+        plane_of.push(fleet.resolve(&s.tag)?);
     }
     let schedule = mix.schedule();
     let mut offered = vec![0u64; n_streams];
@@ -363,12 +363,12 @@ pub fn run_open_loop_mix(
     let (completed, errors, lost, lats) = collected;
     let wall_s = t0.elapsed().as_secs_f64();
     let mut per_tag = Vec::with_capacity(n_streams);
-    for (k, ((tag, _), mut latencies_s)) in
+    for (k, (stream, mut latencies_s)) in
         mix.streams().iter().zip(lats).enumerate()
     {
         latencies_s.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
         per_tag.push((
-            tag.clone(),
+            stream.tag.clone(),
             LoadReport {
                 offered: offered[k],
                 accepted: accepted[k],
@@ -387,6 +387,48 @@ pub fn run_open_loop_mix(
         ));
     }
     Ok(MixReport { per_tag, wall_s })
+}
+
+/// One phase of a membership-churning load run ([`run_phases`]):
+/// membership actions applied up front, then a [`Mix`] replayed against
+/// the resulting fleet. A tag that joins partway through the phase is
+/// modelled with [`Mix::stream_at`] (register it here, phase-shift its
+/// stream).
+#[derive(Clone, Default)]
+pub struct Phase {
+    /// Tags to retire (lossless drain) before this phase's traffic.
+    pub retire: Vec<String>,
+    /// Models to register before this phase's traffic.
+    pub register: Vec<ModelSpec>,
+    /// The traffic replayed during this phase.
+    pub mix: Mix,
+}
+
+/// Replay a sequence of [`Phase`]s against a fleet: each phase first
+/// retires / registers its tags (both are lossless for in-flight work —
+/// responses of earlier phases keep arriving on their channels, and both
+/// run a control-loop tick internally so budgets reflect the new
+/// membership), then replays its mix open-loop and reports per tag.
+/// This is the phase-shift scenario from DESIGN.md §11: a tag joining
+/// (or leaving) a running host mid-run, driven by the same traffic model
+/// everything else uses.
+pub fn run_phases(
+    fleet: &mut Fleet,
+    phases: &[Phase],
+    image_of: impl Fn(usize, u64) -> Vec<f32>,
+    shed_mode: ShedMode,
+) -> Result<Vec<MixReport>> {
+    let mut reports = Vec::with_capacity(phases.len());
+    for phase in phases {
+        for tag in &phase.retire {
+            fleet.retire(tag)?;
+        }
+        for spec in &phase.register {
+            fleet.register(spec.clone())?;
+        }
+        reports.push(run_open_loop_mix(fleet, &phase.mix, &image_of, shed_mode)?);
+    }
+    Ok(reports)
 }
 
 #[cfg(test)]

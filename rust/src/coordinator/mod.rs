@@ -32,6 +32,7 @@
 pub mod batcher;
 pub mod fleet;
 pub mod loadgen;
+pub mod policy;
 pub mod queue;
 pub(crate) mod shard;
 pub mod stats;
@@ -48,8 +49,12 @@ use crate::util::error::{Error, Result};
 
 pub use batcher::BatchPolicy;
 pub use fleet::{Fleet, FleetOptions, FleetSnapshot, ModelSpec, TagHandle};
-pub use loadgen::{LoadReport, MixReport, ShedMode, Submit};
-pub use queue::{Admission, AdmissionGate};
+pub use loadgen::{LoadReport, MixReport, Phase, ShedMode, Submit};
+pub use policy::{
+    AutotuneConfig, Controller, Decision, FleetTelemetry, Policy, QueueAutotune, SloSpec,
+    TagTelemetry, WeightedAdmission,
+};
+pub use queue::{Admission, AdmissionGate, Entry, PlaneGates, TagBudget};
 pub use stats::{ServerStats, StatsSnapshot};
 
 /// One inference request.
@@ -175,40 +180,57 @@ impl ServerOptions {
     }
 }
 
-/// One per-model serving plane: batcher thread + sharded engines, gated by
-/// an [`AdmissionGate`] it does **not** own — the single-model [`Server`]
-/// gives its plane a private gate, a [`Fleet`] shares one gate across all
-/// of its planes. Extracted from the old `Server` body so both shapes run
-/// the identical submit / dispatch / drain machinery.
+/// Per-plane knobs [`Plane::start`] consumes — everything a plane needs
+/// besides the (possibly shared) host admission gate. Bundled so the
+/// single-model [`Server`], the [`Fleet`], and live registration all
+/// build planes through one door.
+pub(crate) struct PlaneConfig {
+    /// Batch formation policy.
+    pub policy: BatchPolicy,
+    /// Engine replicas.
+    pub engines: usize,
+    /// Backend every engine replica runs.
+    pub backend: EngineBackend,
+    /// Initial per-engine work-ring depth, in batches (the policy
+    /// control plane may retune it later).
+    pub queue_depth: usize,
+    /// The tag's SLO, when one is configured (fleet planes only).
+    pub slo: Option<policy::SloSpec>,
+}
+
+/// One per-model serving plane: batcher thread + sharded engines, gated
+/// by a [`PlaneGates`] pair — its **own** [`TagBudget`] (retunable by
+/// the policy control plane, DESIGN.md §11) in front of a host
+/// [`AdmissionGate`] it does **not** own. The single-model [`Server`]
+/// gives its plane a private gate, a [`Fleet`] shares one gate across
+/// all of its planes. Extracted from the old `Server` body so both
+/// shapes run the identical submit / dispatch / drain machinery.
 pub(crate) struct Plane {
     /// `Some` while accepting; taken (dropped) first at shutdown so the
     /// batcher's channel-closed exit path actually fires.
     submit_tx: Option<mpsc::Sender<Request>>,
-    gate: Arc<AdmissionGate>,
+    gates: Arc<PlaneGates>,
     plane: Arc<shard::ExecutionPlane>,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
     batcher: Option<JoinHandle<()>>,
     engines: Option<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
+    slo: Option<policy::SloSpec>,
 }
 
 impl Plane {
     /// Start one plane; fails fast if the backend cannot be built (each
     /// engine verifies its backend before the plane is returned).
-    pub(crate) fn start(
-        policy: BatchPolicy,
-        engines: usize,
-        backend: EngineBackend,
-        queue_depth: usize,
-        gate: Arc<AdmissionGate>,
-    ) -> Result<Plane> {
+    pub(crate) fn start(cfg: PlaneConfig, gate: Arc<AdmissionGate>) -> Result<Plane> {
+        let PlaneConfig { policy, engines, backend, queue_depth, slo } = cfg;
         if engines == 0 {
             return Err(Error::config("engines must be >= 1"));
         }
         if queue_depth == 0 {
             return Err(Error::config("queue_depth must be >= 1"));
         }
+        let gates = Arc::new(PlaneGates::new(gate, Arc::new(queue::TagBudget::unlimited())));
         let stats = Arc::new(ServerStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
 
@@ -221,7 +243,7 @@ impl Plane {
         for mailbox in mailboxes {
             let plane = Arc::clone(&plane);
             let st = Arc::clone(&stats);
-            let g = Arc::clone(&gate);
+            let g = Arc::clone(&gates);
             let spec = backend.clone();
             let ready = ready_tx.clone();
             engine_handles.push(std::thread::spawn(move || {
@@ -288,28 +310,31 @@ impl Plane {
         let st = Arc::clone(&stats);
         let sd = Arc::clone(&shutdown);
         let p = Arc::clone(&plane);
-        let g = Arc::clone(&gate);
+        let g = Arc::clone(&gates);
         let batcher = std::thread::spawn(move || {
             batcher::run(submit_rx, p, g, policy, st, sd);
         });
 
         Ok(Plane {
             submit_tx: Some(submit_tx),
-            gate,
+            gates,
             plane,
             stats,
             shutdown,
             batcher: Some(batcher),
             engines: Some(engine_handles),
             next_id: AtomicU64::new(0),
+            slo,
         })
     }
 
     /// Submit one image to this plane; returns the response channel.
     ///
-    /// Fast paths out: [`Error::Overloaded`] when the (possibly shared)
-    /// admission bound is hit (nothing queued, and the shed is attributed
-    /// to this plane's stats), [`Error::QueueClosed`] once shutdown began.
+    /// Fast paths out: [`Error::Overloaded`] when either admission scope
+    /// is spent — the plane's own tag budget (attributed to
+    /// `shed_budget`) or the (possibly shared) host bound (attributed to
+    /// `shed`) — and [`Error::QueueClosed`] once shutdown began. Nothing
+    /// is queued on any of them.
     pub(crate) fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         if image.len() != IMG * IMG {
             return Err(Error::config(format!(
@@ -319,9 +344,16 @@ impl Plane {
             )));
         }
         let tx = self.submit_tx.as_ref().ok_or(Error::QueueClosed)?;
-        if self.gate.try_enter() == Admission::Shed {
-            self.stats.on_shed();
-            return Err(Error::Overloaded);
+        match self.gates.try_enter() {
+            Entry::ShedBudget => {
+                self.stats.on_shed_budget();
+                return Err(Error::Overloaded);
+            }
+            Entry::ShedHost => {
+                self.stats.on_shed();
+                return Err(Error::Overloaded);
+            }
+            Entry::Admitted => {}
         }
         let (resp_tx, resp_rx) = mpsc::channel();
         let req = Request {
@@ -332,14 +364,41 @@ impl Plane {
         };
         self.stats.on_submit();
         if tx.send(req).is_err() {
-            self.gate.exit();
+            self.gates.exit();
             return Err(Error::QueueClosed);
         }
         Ok(resp_rx)
     }
 
+    /// This plane's stats, augmented with the live plane state the
+    /// counters cannot see (budget occupancy/cap, ring depth, SLO).
     pub(crate) fn snapshot(&self) -> StatsSnapshot {
-        self.stats.snapshot()
+        self.augment(self.stats.snapshot())
+    }
+
+    /// Counters-only variant for the policy control plane (no latency
+    /// clone/sort — percentile fields are zeroed).
+    pub(crate) fn snapshot_counters(&self) -> StatsSnapshot {
+        self.augment(self.stats.snapshot_counters())
+    }
+
+    fn augment(&self, mut snap: StatsSnapshot) -> StatsSnapshot {
+        snap.in_flight = self.gates.budget().depth();
+        snap.budget_capacity = self.gates.budget().limit();
+        snap.ring_depth = self.plane.depth();
+        snap.ring_full_backoffs = self.plane.full_backoffs();
+        snap.slo_p99_ms = self.slo.map(|s| s.p99_ms);
+        snap
+    }
+
+    /// This plane's retunable admission budget.
+    pub(crate) fn budget(&self) -> &queue::TagBudget {
+        self.gates.budget()
+    }
+
+    /// Retune every engine ring of this plane to `depth` batches.
+    pub(crate) fn set_queue_depth(&self, depth: usize) {
+        self.plane.set_depth(depth);
     }
 
     /// Graceful, lossless drain: stop accepting, flush, join everything.
@@ -389,10 +448,13 @@ impl Server {
         }
         let gate = Arc::new(AdmissionGate::new(opts.admission_capacity));
         let plane = Plane::start(
-            opts.policy,
-            opts.engines,
-            opts.backend,
-            opts.queue_depth,
+            PlaneConfig {
+                policy: opts.policy,
+                engines: opts.engines,
+                backend: opts.backend,
+                queue_depth: opts.queue_depth,
+                slo: None,
+            },
             Arc::clone(&gate),
         )?;
         Ok(Server { gate, plane })
@@ -429,13 +491,14 @@ impl Server {
     }
 }
 
-/// Execute one batch on `backend` and complete its requests. Admission is
-/// released per request, after its response is sent.
+/// Execute one batch on `backend` and complete its requests. Admission
+/// (both scopes: tag budget + host gate) is released per request, after
+/// its response is sent.
 fn execute_batch(
     backend: &dyn InferenceBackend,
     batch: Batch,
     stats: &ServerStats,
-    gate: &AdmissionGate,
+    gates: &PlaneGates,
 ) {
     let n = batch.requests.len();
     if n == 0 {
@@ -471,7 +534,7 @@ fn execute_batch(
                     latency_s,
                 };
                 let _ = req.resp.send(resp); // client may have gone away
-                gate.exit();
+                gates.exit();
             }
         }
         Err(e) => {
@@ -480,7 +543,7 @@ fn execute_batch(
             // can distinguish failure via `Response::is_error`) and
             // releases admission — same protocol as an undispatchable
             // batch.
-            batcher::fail_batch(batch, stats, gate);
+            batcher::fail_batch(batch, stats, gates);
         }
     }
 }

@@ -1,0 +1,583 @@
+//! Policy control plane (DESIGN.md §11): closes the loop from the
+//! serving telemetry the fleet already exports (per-tag steal / shed /
+//! queue-full counters, ring depths, budget occupancy) to the three
+//! knobs the execution plane exposes — per-tag admission budgets,
+//! per-engine ring depths, and fleet membership.
+//!
+//! The paper's engine-free thesis is that sparsity pays off only when
+//! the surrounding dataflow keeps every lane busy; HPIPE makes the same
+//! point with heterogeneous per-layer resource allocation. On the
+//! serving side the analogous resources are admission slots and queue
+//! capacity, and this module allocates them **per tag** instead of
+//! FIFO-fair.
+//!
+//! Design rules:
+//!
+//! * **Decisions are pure functions of telemetry snapshots.** A
+//!   [`Policy`] sees only a [`FleetTelemetry`] value (plus its own state
+//!   from earlier ticks) and returns [`Decision`]s; nothing in the
+//!   decision path reads the wall clock, so a recorded telemetry trace
+//!   replays to the identical decision stream (asserted in the unit
+//!   tests) and tests drive ticks on a seeded schedule.
+//! * **Mechanism under the trait, policy above it.** The fleet applies
+//!   decisions mechanically (`TagBudget::set_capacity`, ring
+//!   `set_capacity`); what to decide lives here and is swappable.
+//! * **Bounded and hysteretic.** The queue autotuner only moves depths
+//!   within `[min_depth, max_depth]`, requires the same pressure signal
+//!   on consecutive ticks before acting, and holds a cooldown after each
+//!   change, so a noisy tick cannot thrash the rings.
+
+use std::collections::BTreeMap;
+
+use super::stats::StatsSnapshot;
+
+/// Per-tag service-level objective: a p99 latency target (reported and
+/// benchmarked against) and an admission **weight** (enforced — the
+/// weights partition the host admission budget into per-tag caps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Target p99 latency in milliseconds (surfaced in renders and the
+    /// noisy-neighbour bench; the weight is what enforces it).
+    pub p99_ms: f64,
+    /// Admission weight (> 0). Tags without an SLO weigh 1.0.
+    pub weight: f64,
+}
+
+impl SloSpec {
+    /// An SLO with the given p99 target and weight. Both must be
+    /// positive finite numbers — a zero or negative weight would
+    /// silently starve the tag to a 1-slot budget, so it is rejected
+    /// here (the CLI and file parsers return config errors for the same
+    /// inputs before reaching this constructor).
+    pub fn new(p99_ms: f64, weight: f64) -> Self {
+        assert!(
+            p99_ms.is_finite() && p99_ms > 0.0,
+            "slo p99_ms must be a positive finite number, got {p99_ms}"
+        );
+        assert!(
+            weight.is_finite() && weight > 0.0,
+            "slo weight must be a positive finite number, got {weight}"
+        );
+        SloSpec { p99_ms, weight }
+    }
+}
+
+/// Telemetry of one tag: its identity, its SLO (if any), and the plane's
+/// counters-only stats snapshot (shed / shed_budget / steals / batches /
+/// ring depth / ring-full backoffs / budget occupancy; latency
+/// percentile fields are zeroed on the control path — see
+/// `Fleet::telemetry`).
+#[derive(Debug, Clone)]
+pub struct TagTelemetry {
+    /// The model tag.
+    pub tag: String,
+    /// The tag's SLO, when one is configured.
+    pub slo: Option<SloSpec>,
+    /// The plane's counters-only stats snapshot at this tick.
+    pub stats: StatsSnapshot,
+}
+
+/// One tick's input to every policy: host-level admission state plus one
+/// [`TagTelemetry`] per live tag. Pure data — building it samples
+/// counters, consuming it never touches the clock.
+#[derive(Debug, Clone)]
+pub struct FleetTelemetry {
+    /// Monotone tick counter (the control loop's logical clock).
+    pub tick: u64,
+    /// The shared host admission bound.
+    pub capacity: usize,
+    /// Host-wide in-flight requests at this tick.
+    pub in_flight: usize,
+    /// Per-live-tag telemetry, in plane order.
+    pub per_tag: Vec<TagTelemetry>,
+}
+
+/// One actuation the control loop applies to the fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Cap `tag`'s admission budget at `budget` in-flight requests.
+    SetTagBudget {
+        /// Target tag.
+        tag: String,
+        /// New in-flight cap (>= 1).
+        budget: usize,
+    },
+    /// Lift `tag`'s admission cap entirely.
+    SetTagUnlimited {
+        /// Target tag.
+        tag: String,
+    },
+    /// Retune `tag`'s per-engine work-ring depth to `depth` batches.
+    SetRingDepth {
+        /// Target tag.
+        tag: String,
+        /// New per-engine ring capacity (>= 1).
+        depth: usize,
+    },
+}
+
+/// A control policy: consumes one telemetry tick, emits decisions.
+/// Implementations may keep state across ticks (hysteresis, deltas) but
+/// must stay deterministic functions of the telemetry stream.
+pub trait Policy: Send {
+    /// Decide this tick's actuations from the telemetry snapshot.
+    fn decide(&mut self, t: &FleetTelemetry) -> Vec<Decision>;
+}
+
+/// Partition `capacity` admission slots across `tags` by weight:
+/// `budget_i = max(1, floor(capacity * w_i / sum(w)))`. The budgets are
+/// **caps**, not reservations — flooring may leave slack, which stays
+/// governed by the shared host gate. Returns one `(tag, budget)` pair
+/// per input tag, in order.
+pub fn weighted_budgets(capacity: usize, tags: &[(String, f64)]) -> Vec<(String, usize)> {
+    let sum: f64 = tags.iter().map(|(_, w)| w.max(0.0)).sum();
+    tags.iter()
+        .map(|(tag, w)| {
+            let share = if sum > 0.0 { w.max(0.0) / sum } else { 0.0 };
+            let budget = ((capacity as f64) * share).floor() as usize;
+            (tag.clone(), budget.max(1))
+        })
+        .collect()
+}
+
+/// Weighted-admission policy: whenever at least one live tag carries an
+/// SLO, every tag's budget is set to its weighted share of the host
+/// capacity (unweighted tags weigh 1.0); with no SLOs anywhere, all
+/// budgets are lifted (the pre-§11 FIFO-fair behaviour). Emits only the
+/// decisions that change something, so a steady fleet gets no churn.
+#[derive(Debug, Default)]
+pub struct WeightedAdmission;
+
+impl Policy for WeightedAdmission {
+    fn decide(&mut self, t: &FleetTelemetry) -> Vec<Decision> {
+        let any_slo = t.per_tag.iter().any(|tt| tt.slo.is_some());
+        if !any_slo {
+            return t
+                .per_tag
+                .iter()
+                .filter(|tt| tt.stats.budget_capacity.is_some())
+                .map(|tt| Decision::SetTagUnlimited { tag: tt.tag.clone() })
+                .collect();
+        }
+        let weights: Vec<(String, f64)> = t
+            .per_tag
+            .iter()
+            .map(|tt| (tt.tag.clone(), tt.slo.map(|s| s.weight).unwrap_or(1.0)))
+            .collect();
+        weighted_budgets(t.capacity, &weights)
+            .into_iter()
+            .zip(&t.per_tag)
+            .filter(|((_, budget), tt)| tt.stats.budget_capacity != Some(*budget))
+            .map(|((tag, budget), _)| Decision::SetTagBudget { tag, budget })
+            .collect()
+    }
+}
+
+/// Queue-depth autotuner configuration. All counts are in ticks of the
+/// control loop, so behaviour is independent of how often the operator
+/// ticks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutotuneConfig {
+    /// Smallest per-engine ring depth the tuner will set.
+    pub min_depth: usize,
+    /// Largest per-engine ring depth the tuner will set.
+    pub max_depth: usize,
+    /// Consecutive same-direction pressure ticks required before acting.
+    pub hysteresis_ticks: u32,
+    /// Ticks to hold after a change before acting again.
+    pub cooldown_ticks: u32,
+    /// Shrink signal threshold: steals-per-dispatched-batch above this
+    /// (with no queue-full pressure) reads as "work is clumping in
+    /// oversized rings".
+    pub steal_fraction: f64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            min_depth: 2,
+            max_depth: 64,
+            hysteresis_ticks: 2,
+            cooldown_ticks: 2,
+            steal_fraction: 0.5,
+        }
+    }
+}
+
+/// Per-tag autotuner state: counter values at the previous tick plus the
+/// hysteresis bookkeeping.
+#[derive(Debug, Clone, Copy, Default)]
+struct TagTune {
+    full_backoffs: u64,
+    steals: u64,
+    batches: u64,
+    /// Signed signal streak: positive = grow pressure, negative = shrink.
+    streak: i32,
+    cooldown: u32,
+}
+
+/// Queue-depth autotuning policy: grows a tag's rings when its
+/// dispatcher is hitting **full-ring backoffs** (the one pressure deeper
+/// rings actually relieve — admission sheds happen upstream of the rings
+/// and cannot be fixed by buffering, so they deliberately play no part
+/// here) and shrinks them when steals dominate dispatches with no
+/// queue-full pressure (deep rings let work clump on one engine, which
+/// stealing then has to undo). Depth moves by doubling/halving within
+/// [`AutotuneConfig`] bounds, gated by hysteresis and cooldown.
+/// Deterministic: state advances only on `decide`, from counter deltas.
+#[derive(Debug)]
+pub struct QueueAutotune {
+    cfg: AutotuneConfig,
+    state: BTreeMap<String, TagTune>,
+}
+
+impl QueueAutotune {
+    /// An autotuner with the given bounds and hysteresis.
+    pub fn new(cfg: AutotuneConfig) -> Self {
+        assert!(cfg.min_depth >= 1, "min_depth must be >= 1");
+        assert!(cfg.max_depth >= cfg.min_depth, "max_depth < min_depth");
+        QueueAutotune { cfg, state: BTreeMap::new() }
+    }
+}
+
+impl Policy for QueueAutotune {
+    fn decide(&mut self, t: &FleetTelemetry) -> Vec<Decision> {
+        // Drop state of retired tags so a re-registered tag starts fresh.
+        let live: Vec<&str> = t.per_tag.iter().map(|tt| tt.tag.as_str()).collect();
+        self.state.retain(|tag, _| live.contains(&tag.as_str()));
+
+        let mut out = Vec::new();
+        for tt in &t.per_tag {
+            let depth = tt.stats.ring_depth;
+            if depth == 0 {
+                continue; // plane did not report a depth; nothing to tune
+            }
+            let st = self.state.entry(tt.tag.clone()).or_default();
+            let d_full = tt.stats.ring_full_backoffs.saturating_sub(st.full_backoffs);
+            let d_steals = tt.stats.steals.saturating_sub(st.steals);
+            let d_batches = tt.stats.batches.saturating_sub(st.batches);
+            st.full_backoffs = tt.stats.ring_full_backoffs;
+            st.steals = tt.stats.steals;
+            st.batches = tt.stats.batches;
+
+            let signal: i32 = if d_full > 0 {
+                1
+            } else if d_batches > 0
+                && (d_steals as f64) > self.cfg.steal_fraction * (d_batches as f64)
+            {
+                -1
+            } else {
+                0
+            };
+
+            if st.cooldown > 0 {
+                st.cooldown -= 1;
+                st.streak = 0;
+                continue;
+            }
+            st.streak = if signal == 0 {
+                0
+            } else if signal.signum() == st.streak.signum() || st.streak == 0 {
+                st.streak + signal
+            } else {
+                signal
+            };
+            // A zero streak means "no pressure this tick" and must never
+            // act, even with hysteresis_ticks == 0 (where a non-zero
+            // signal acts immediately).
+            if st.streak == 0 || st.streak.unsigned_abs() < self.cfg.hysteresis_ticks {
+                continue;
+            }
+            let target = if st.streak > 0 {
+                (depth * 2).min(self.cfg.max_depth)
+            } else {
+                (depth / 2).max(self.cfg.min_depth)
+            };
+            st.streak = 0;
+            st.cooldown = self.cfg.cooldown_ticks;
+            if target != depth {
+                out.push(Decision::SetRingDepth { tag: tt.tag.clone(), depth: target });
+            }
+        }
+        out
+    }
+}
+
+/// The fleet's control loop: an ordered stack of policies sharing one
+/// logical tick counter. The fleet gathers telemetry, the controller
+/// decides, the fleet applies — see `Fleet::tick`.
+pub struct Controller {
+    policies: Vec<Box<dyn Policy>>,
+    tick: u64,
+}
+
+impl Controller {
+    /// An empty controller (ticks are no-ops until policies are pushed).
+    pub fn new() -> Self {
+        Controller { policies: Vec::new(), tick: 0 }
+    }
+
+    /// Append a policy; policies run in insertion order each tick.
+    pub fn push(&mut self, policy: Box<dyn Policy>) {
+        self.policies.push(policy);
+    }
+
+    /// Ticks taken so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// Run one tick: stamp the telemetry with the logical tick and
+    /// collect every policy's decisions, in order.
+    pub fn tick(&mut self, telemetry: &mut FleetTelemetry) -> Vec<Decision> {
+        telemetry.tick = self.tick;
+        self.tick += 1;
+        let mut out = Vec::new();
+        for p in &mut self.policies {
+            out.extend(p.decide(telemetry));
+        }
+        out
+    }
+}
+
+impl Default for Controller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stats::ServerStats;
+
+    fn tag_t(tag: &str, slo: Option<SloSpec>, f: impl Fn(&mut StatsSnapshot)) -> TagTelemetry {
+        let mut stats = ServerStats::new().snapshot();
+        f(&mut stats);
+        TagTelemetry { tag: tag.to_string(), slo, stats }
+    }
+
+    fn telem(capacity: usize, per_tag: Vec<TagTelemetry>) -> FleetTelemetry {
+        FleetTelemetry { tick: 0, capacity, in_flight: 0, per_tag }
+    }
+
+    #[test]
+    fn weighted_budgets_partition_by_weight() {
+        let tags = vec![("a".to_string(), 8.0), ("b".to_string(), 1.0)];
+        let b = weighted_budgets(64, &tags);
+        assert_eq!(b, vec![("a".to_string(), 56), ("b".to_string(), 7)]);
+        // Budgets are caps: the floored sum may undershoot capacity.
+        assert!(b.iter().map(|(_, v)| v).sum::<usize>() <= 64);
+        // Tiny weights still get a floor of 1.
+        let tiny = weighted_budgets(4, &[("x".to_string(), 1e-9), ("y".to_string(), 1.0)]);
+        assert_eq!(tiny[0].1, 1);
+    }
+
+    #[test]
+    fn weighted_admission_caps_only_when_an_slo_exists() {
+        let mut p = WeightedAdmission;
+        // No SLOs: nothing to do (budgets already unlimited).
+        let t = telem(64, vec![tag_t("a", None, |_| {}), tag_t("b", None, |_| {})]);
+        assert!(p.decide(&t).is_empty());
+        // One SLO: every tag gets its weighted cap.
+        let t = telem(
+            64,
+            vec![
+                tag_t("a", Some(SloSpec::new(20.0, 8.0)), |_| {}),
+                tag_t("b", None, |_| {}),
+            ],
+        );
+        let d = p.decide(&t);
+        assert_eq!(
+            d,
+            vec![
+                Decision::SetTagBudget { tag: "a".into(), budget: 56 },
+                Decision::SetTagBudget { tag: "b".into(), budget: 7 },
+            ]
+        );
+        // Idempotent: with the caps already applied, no churn.
+        let t = telem(
+            64,
+            vec![
+                tag_t("a", Some(SloSpec::new(20.0, 8.0)), |s| {
+                    s.budget_capacity = Some(56)
+                }),
+                tag_t("b", None, |s| s.budget_capacity = Some(7)),
+            ],
+        );
+        assert!(p.decide(&t).is_empty());
+        // Last SLO gone: caps are lifted.
+        let t = telem(
+            64,
+            vec![
+                tag_t("a", None, |s| s.budget_capacity = Some(56)),
+                tag_t("b", None, |s| s.budget_capacity = Some(7)),
+            ],
+        );
+        let d = p.decide(&t);
+        assert_eq!(
+            d,
+            vec![
+                Decision::SetTagUnlimited { tag: "a".into() },
+                Decision::SetTagUnlimited { tag: "b".into() },
+            ]
+        );
+    }
+
+    /// Replay a synthetic queue-pressure ramp through the autotuner
+    /// twice: the decision streams must be identical (determinism), every
+    /// depth must stay within bounds, and a single noisy tick must not
+    /// act (hysteresis).
+    #[test]
+    fn autotune_is_bounded_hysteretic_and_deterministic() {
+        let cfg = AutotuneConfig {
+            min_depth: 2,
+            max_depth: 32,
+            hysteresis_ticks: 2,
+            cooldown_ticks: 1,
+            steal_fraction: 0.5,
+        };
+        // Tick-indexed (full_backoffs, steals, batches, current depth).
+        let trace: Vec<(u64, u64, u64, usize)> = vec![
+            (0, 0, 10, 16),    // baseline
+            (5, 0, 20, 16),    // rings full (streak 1)
+            (9, 0, 30, 16),    // rings full (streak 2) -> grow to 32
+            (9, 0, 40, 32),    // cooldown tick
+            (9, 0, 50, 32),    // quiet (streak resets)
+            (9, 40, 90, 32),   // steals dominate dispatches (streak -1)
+            (9, 80, 130, 32),  // streak -2 -> shrink to 16
+            (9, 80, 140, 16),  // cooldown tick
+        ];
+        let run = || {
+            let mut p = QueueAutotune::new(cfg);
+            let mut all = Vec::new();
+            for &(full, steals, batches, depth) in &trace {
+                let t = telem(
+                    64,
+                    vec![tag_t("a", None, |s| {
+                        s.ring_full_backoffs = full;
+                        s.steals = steals;
+                        s.batches = batches;
+                        s.ring_depth = depth;
+                    })],
+                );
+                all.push(p.decide(&t));
+            }
+            all
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same telemetry trace must replay identically");
+        let flat: Vec<&Decision> = a.iter().flatten().collect();
+        assert_eq!(
+            flat,
+            vec![
+                &Decision::SetRingDepth { tag: "a".into(), depth: 32 },
+                &Decision::SetRingDepth { tag: "a".into(), depth: 16 },
+            ]
+        );
+        // One noisy tick never acts: a fresh tuner seeing a single
+        // queue-full spike stays quiet (hysteresis needs 2 consecutive
+        // signals).
+        let mut p = QueueAutotune::new(cfg);
+        let quiet = telem(
+            64,
+            vec![tag_t("a", None, |s| {
+                s.ring_depth = 16;
+                s.batches = 10;
+            })],
+        );
+        assert!(p.decide(&quiet).is_empty());
+        let spike = telem(
+            64,
+            vec![tag_t("a", None, |s| {
+                s.ring_full_backoffs = 3;
+                s.ring_depth = 16;
+                s.batches = 20;
+            })],
+        );
+        assert!(p.decide(&spike).is_empty(), "single spike must not act");
+
+        // Admission sheds alone must NOT move depth: they happen upstream
+        // of the rings, where buffering cannot relieve them.
+        let mut p = QueueAutotune::new(cfg);
+        for shed in [0u64, 50, 100, 150] {
+            let t = telem(
+                64,
+                vec![tag_t("a", None, |s| {
+                    s.shed = shed;
+                    s.shed_budget = shed;
+                    s.ring_depth = 16;
+                    s.batches = shed + 10;
+                })],
+            );
+            assert!(p.decide(&t).is_empty(), "sheds must not drive ring depth");
+        }
+
+        // hysteresis_ticks = 0 means "act on the first signal", never
+        // "act on no signal": quiet ticks must not shrink healthy rings.
+        let mut p = QueueAutotune::new(AutotuneConfig {
+            hysteresis_ticks: 0,
+            cooldown_ticks: 0,
+            ..AutotuneConfig::default()
+        });
+        for batches in [10u64, 20, 30] {
+            let t = telem(
+                64,
+                vec![tag_t("a", None, |s| {
+                    s.ring_depth = 16;
+                    s.batches = batches;
+                })],
+            );
+            assert!(p.decide(&t).is_empty(), "quiet tick acted at hysteresis 0");
+        }
+        let t = telem(
+            64,
+            vec![tag_t("a", None, |s| {
+                s.ring_full_backoffs = 1;
+                s.ring_depth = 16;
+                s.batches = 40;
+            })],
+        );
+        assert_eq!(
+            p.decide(&t),
+            vec![Decision::SetRingDepth { tag: "a".into(), depth: 32 }],
+            "hysteresis 0 must act on the first real signal"
+        );
+    }
+
+    #[test]
+    fn autotune_forgets_retired_tags() {
+        let mut p = QueueAutotune::new(AutotuneConfig::default());
+        let t = telem(
+            64,
+            vec![tag_t("gone", None, |s| {
+                s.ring_full_backoffs = 5;
+                s.ring_depth = 16;
+            })],
+        );
+        let _ = p.decide(&t);
+        assert!(p.state.contains_key("gone"));
+        let t = telem(64, vec![tag_t("other", None, |s| s.ring_depth = 16)]);
+        let _ = p.decide(&t);
+        assert!(!p.state.contains_key("gone"), "retired tag state retained");
+    }
+
+    #[test]
+    fn controller_stamps_ticks_and_runs_policies_in_order() {
+        let mut c = Controller::new();
+        c.push(Box::new(WeightedAdmission));
+        c.push(Box::new(QueueAutotune::new(AutotuneConfig::default())));
+        let mut t = telem(
+            16,
+            vec![tag_t("a", Some(SloSpec::new(10.0, 1.0)), |s| s.ring_depth = 8)],
+        );
+        let d = c.tick(&mut t);
+        assert_eq!(t.tick, 0);
+        assert_eq!(d, vec![Decision::SetTagBudget { tag: "a".into(), budget: 16 }]);
+        let mut t2 = telem(16, Vec::new());
+        let _ = c.tick(&mut t2);
+        assert_eq!(t2.tick, 1);
+        assert_eq!(c.ticks(), 2);
+    }
+}

@@ -17,8 +17,17 @@
 //! [`crate::coordinator::Fleet`] threads **one** gate through every
 //! per-tag plane so a single overload budget governs the whole host
 //! (DESIGN.md §10).
+//!
+//! With the policy control plane (DESIGN.md §11) admission is **two
+//! scopes deep**: each plane additionally owns a [`TagBudget`] — a
+//! retunable cap on *its own* in-flight work — and every submit passes
+//! through the [`PlaneGates`] pair (tag budget first, then the shared
+//! host gate). Both scopes shed with `Error::Overloaded`, but the stats
+//! attribute them separately (`shed` vs `shed_budget`), so an operator
+//! can tell "your tag spent its budget" from "the host is full".
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Admission decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +92,140 @@ impl AdmissionGate {
     }
 }
 
+/// Sentinel capacity meaning "no per-tag bound".
+const UNLIMITED: usize = usize::MAX;
+
+/// Per-tag admission budget: a depth-bounded counter like
+/// [`AdmissionGate`], but with a **retunable** capacity so the policy
+/// control plane (DESIGN.md §11) can rebalance budgets on a running
+/// host. A budget starts unlimited; [`TagBudget::set_capacity`] caps it
+/// and [`TagBudget::set_unlimited`] lifts the cap again. Shrinking below
+/// the current depth sheds new admits until in-flight work drains under
+/// the new bound — nothing already admitted is affected.
+pub struct TagBudget {
+    depth: AtomicUsize,
+    capacity: AtomicUsize,
+    shed_total: AtomicU64,
+}
+
+impl TagBudget {
+    /// A budget with no cap (every `try_enter` is admitted).
+    pub fn unlimited() -> Self {
+        TagBudget {
+            depth: AtomicUsize::new(0),
+            capacity: AtomicUsize::new(UNLIMITED),
+            shed_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to take one slot of this tag's budget.
+    pub fn try_enter(&self) -> Admission {
+        let prev = self.depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.capacity.load(Ordering::Acquire) {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.shed_total.fetch_add(1, Ordering::Relaxed);
+            Admission::Shed
+        } else {
+            Admission::Accepted
+        }
+    }
+
+    /// Release one slot taken by `try_enter`.
+    pub fn exit(&self) {
+        let prev = self.depth.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "budget exit without enter");
+    }
+
+    /// Requests of this tag currently in flight.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// The current cap, `None` when unlimited.
+    pub fn limit(&self) -> Option<usize> {
+        match self.capacity.load(Ordering::Acquire) {
+            UNLIMITED => None,
+            c => Some(c),
+        }
+    }
+
+    /// Cap the budget at `capacity` (>= 1) in-flight requests.
+    pub fn set_capacity(&self, capacity: usize) {
+        assert!(capacity >= 1, "tag budget capacity must be >= 1");
+        self.capacity.store(capacity, Ordering::Release);
+    }
+
+    /// Lift the cap (back to unlimited).
+    pub fn set_unlimited(&self) {
+        self.capacity.store(UNLIMITED, Ordering::Release);
+    }
+
+    /// Total requests this budget has shed since construction.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a two-scope admission attempt ([`PlaneGates::try_enter`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    /// Both scopes admitted; the request holds one slot of each until
+    /// [`PlaneGates::exit`].
+    Admitted,
+    /// The tag's own budget is spent (the host may still have room).
+    ShedBudget,
+    /// The shared host gate is full (counted on the gate's shed total).
+    ShedHost,
+}
+
+/// The pair of admission scopes one serving plane's requests pass
+/// through: the plane's own [`TagBudget`] first, then the (possibly
+/// shared) host [`AdmissionGate`]. Checking the budget first keeps the
+/// host gate's `shed_total` meaning exactly "host-wide overload", so the
+/// gate-total vs per-tag reconciliation (`FleetSnapshot::shed ==
+/// sum(per-tag shed)`) survives per-tag budgets.
+pub struct PlaneGates {
+    host: Arc<AdmissionGate>,
+    budget: Arc<TagBudget>,
+}
+
+impl PlaneGates {
+    /// Pair a host gate with one plane's budget.
+    pub fn new(host: Arc<AdmissionGate>, budget: Arc<TagBudget>) -> Self {
+        PlaneGates { host, budget }
+    }
+
+    /// Try to admit one request through both scopes. On a host shed the
+    /// budget slot taken first is rolled back, so the two counters never
+    /// drift.
+    pub fn try_enter(&self) -> Entry {
+        if self.budget.try_enter() == Admission::Shed {
+            return Entry::ShedBudget;
+        }
+        if self.host.try_enter() == Admission::Shed {
+            self.budget.exit();
+            return Entry::ShedHost;
+        }
+        Entry::Admitted
+    }
+
+    /// Release one admitted request from both scopes.
+    pub fn exit(&self) {
+        self.host.exit();
+        self.budget.exit();
+    }
+
+    /// The shared host gate.
+    pub fn host(&self) -> &AdmissionGate {
+        &self.host
+    }
+
+    /// This plane's tag budget.
+    pub fn budget(&self) -> &TagBudget {
+        &self.budget
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +241,61 @@ mod tests {
         g.exit();
         assert_eq!(g.try_enter(), Admission::Accepted);
         assert_eq!(g.depth(), 2);
+    }
+
+    #[test]
+    fn tag_budget_caps_and_retunes() {
+        let b = TagBudget::unlimited();
+        assert_eq!(b.limit(), None);
+        for _ in 0..64 {
+            assert_eq!(b.try_enter(), Admission::Accepted);
+        }
+        assert_eq!(b.depth(), 64);
+        for _ in 0..64 {
+            b.exit();
+        }
+        b.set_capacity(2);
+        assert_eq!(b.limit(), Some(2));
+        assert_eq!(b.try_enter(), Admission::Accepted);
+        assert_eq!(b.try_enter(), Admission::Accepted);
+        assert_eq!(b.try_enter(), Admission::Shed);
+        assert_eq!(b.shed_total(), 1);
+        // Shrinking below the current depth sheds new admits but leaves
+        // in-flight work untouched.
+        b.set_capacity(1);
+        assert_eq!(b.depth(), 2);
+        assert_eq!(b.try_enter(), Admission::Shed);
+        b.exit();
+        b.exit();
+        assert_eq!(b.try_enter(), Admission::Accepted);
+        b.set_unlimited();
+        assert_eq!(b.limit(), None);
+    }
+
+    #[test]
+    fn plane_gates_roll_back_budget_on_host_shed() {
+        let host = Arc::new(AdmissionGate::new(1));
+        let budget = Arc::new(TagBudget::unlimited());
+        budget.set_capacity(2);
+        let gates = PlaneGates::new(Arc::clone(&host), Arc::clone(&budget));
+        assert_eq!(gates.try_enter(), Entry::Admitted);
+        // Host full, budget has room: the budget slot must be returned.
+        assert_eq!(gates.try_enter(), Entry::ShedHost);
+        assert_eq!(budget.depth(), 1, "budget slot leaked on host shed");
+        assert_eq!(host.shed_total(), 1);
+        assert_eq!(budget.shed_total(), 0);
+        gates.exit();
+        assert_eq!(budget.depth(), 0);
+        assert_eq!(host.depth(), 0);
+        // Budget spent, host empty: shed attributed to the budget, host
+        // untouched.
+        budget.set_capacity(1);
+        assert_eq!(gates.try_enter(), Entry::Admitted);
+        assert_eq!(gates.try_enter(), Entry::ShedBudget);
+        assert_eq!(host.depth(), 1);
+        assert_eq!(host.shed_total(), 1, "host must not count budget sheds");
+        assert_eq!(budget.shed_total(), 1);
+        gates.exit();
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! closed-and-empty and only then exit. Nothing dispatched is ever
 //! dropped.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -35,6 +35,10 @@ pub(crate) struct ExecutionPlane {
     queues: Vec<Arc<RingQueue<Batch>>>,
     unparkers: Vec<Unparker>,
     rr: AtomicUsize,
+    /// Times the dispatcher found **every** ring full and had to back
+    /// off — the queue-pressure signal ring-depth autotuning acts on
+    /// (admission sheds happen upstream and say nothing about rings).
+    full_backoffs: AtomicU64,
 }
 
 /// Per-engine private half: the parker the worker sleeps on.
@@ -56,7 +60,13 @@ impl ExecutionPlane {
             unparkers.push(parker.unparker());
             mailboxes.push(EngineMailbox { eid, parker });
         }
-        (Arc::new(ExecutionPlane { queues, unparkers, rr: AtomicUsize::new(0) }), mailboxes)
+        let plane = ExecutionPlane {
+            queues,
+            unparkers,
+            rr: AtomicUsize::new(0),
+            full_backoffs: AtomicU64::new(0),
+        };
+        (Arc::new(plane), mailboxes)
     }
 
     pub fn engines(&self) -> usize {
@@ -65,6 +75,21 @@ impl ExecutionPlane {
 
     pub fn queue(&self, eid: usize) -> &RingQueue<Batch> {
         &self.queues[eid]
+    }
+
+    /// Current per-engine ring capacity (every ring shares one bound).
+    pub fn depth(&self) -> usize {
+        self.queues[0].capacity()
+    }
+
+    /// Retune every ring's capacity to `depth` batches (the policy
+    /// control plane's queue-autotuning actuator — DESIGN.md §11).
+    /// Applies between batches: pushes after this call see the new
+    /// bound; queued batches are never dropped.
+    pub fn set_depth(&self, depth: usize) {
+        for q in &self.queues {
+            q.set_capacity(depth);
+        }
     }
 
     /// Place one batch on some engine's ring and wake that engine.
@@ -108,8 +133,15 @@ impl ExecutionPlane {
             if closed == n {
                 return Err(batch);
             }
+            self.full_backoffs.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(FULL_BACKOFF);
         }
+    }
+
+    /// Total full-ring backoffs the dispatcher has taken — the
+    /// queue-pressure signal ring-depth autotuning consumes.
+    pub fn full_backoffs(&self) -> u64 {
+        self.full_backoffs.load(Ordering::Relaxed)
     }
 
     /// Close every ring (idempotent) and wake every worker so drains
@@ -191,6 +223,22 @@ mod tests {
         assert_eq!(plane.queue(0).len() + plane.queue(1).len(), 4);
         assert!(plane.queue(0).len() >= 1, "round-robin left ring 0 empty");
         assert!(plane.queue(1).len() >= 1, "round-robin left ring 1 empty");
+    }
+
+    #[test]
+    fn set_depth_retunes_every_ring() {
+        let (plane, _mb) = ExecutionPlane::new(2, 4);
+        assert_eq!(plane.depth(), 4);
+        plane.set_depth(1);
+        assert_eq!(plane.depth(), 1);
+        for eid in 0..2 {
+            plane.queue(eid).try_push(batch(1)).map_err(|_| "full").unwrap();
+            assert!(plane.queue(eid).try_push(batch(1)).is_err());
+        }
+        plane.set_depth(2);
+        for eid in 0..2 {
+            plane.queue(eid).try_push(batch(1)).map_err(|_| "full").unwrap();
+        }
     }
 
     #[test]

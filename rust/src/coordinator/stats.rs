@@ -11,7 +11,15 @@
 //! therefore counted twice on purpose: per plane here (`shed`, attributed
 //! to the tag whose submit was rejected) and fleet-wide on the shared
 //! [`crate::coordinator::AdmissionGate`]; the two views must sum to the
-//! same total (asserted in `tests/serving.rs`).
+//! same total (asserted in `tests/serving.rs`). Sheds caused by a tag's
+//! **own** budget (DESIGN.md §11) are a separate counter (`shed_budget`)
+//! precisely so that reconciliation keeps holding once per-tag budgets
+//! are active: the host gate never sees a budget shed.
+//!
+//! A handful of snapshot fields (`in_flight`, `budget_capacity`,
+//! `ring_depth`, `slo_p99_ms`) describe plane state the counters cannot
+//! see; `ServerStats::snapshot` leaves them at their inert defaults and
+//! the owning plane fills them in.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -29,6 +37,9 @@ pub struct ServerStats {
     steals: AtomicU64,
     /// Requests admission control rejected at this plane's submit path.
     shed: AtomicU64,
+    /// Requests rejected by this plane's **own** tag budget (DESIGN.md
+    /// §11) — never counted on the shared host gate.
+    shed_budget: AtomicU64,
     exec_time_us: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -47,6 +58,7 @@ impl ServerStats {
             errors: AtomicU64::new(0),
             steals: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            shed_budget: AtomicU64::new(0),
             exec_time_us: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
@@ -93,10 +105,37 @@ impl ServerStats {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Materialise an immutable [`StatsSnapshot`] of the live counters.
+    /// Count one submission rejected by this plane's own tag budget.
+    pub fn on_shed_budget(&self) {
+        self.shed_budget.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Materialise an immutable [`StatsSnapshot`] of the live counters,
+    /// including latency percentiles (clones and sorts the bounded
+    /// reservoir — fine for reporting, wasteful on a control cadence;
+    /// see [`ServerStats::snapshot_counters`]).
     pub fn snapshot(&self) -> StatsSnapshot {
-        let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
-        lat.sort_unstable();
+        self.snapshot_impl(true)
+    }
+
+    /// Counters-only snapshot for the policy control plane: identical to
+    /// [`ServerStats::snapshot`] except the latency reservoir is neither
+    /// cloned nor sorted — every percentile field is 0.0, so
+    /// [`StatsSnapshot::slo_met`] must not be read off this variant.
+    /// Policies consume only counters (sheds, steals, batches, ring
+    /// state), so control ticks stay O(1) in completed-request history.
+    pub fn snapshot_counters(&self) -> StatsSnapshot {
+        self.snapshot_impl(false)
+    }
+
+    fn snapshot_impl(&self, with_latency: bool) -> StatsSnapshot {
+        let lat = if with_latency {
+            let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
+            lat.sort_unstable();
+            lat
+        } else {
+            Vec::new()
+        };
         let pct = |q: f64| -> f64 {
             if lat.is_empty() {
                 return 0.0;
@@ -113,6 +152,7 @@ impl ServerStats {
             errors: self.errors.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            shed_budget: self.shed_budget.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches > 0 {
                 self.dispatched_requests.load(Ordering::Relaxed) as f64 / batches as f64
@@ -125,6 +165,11 @@ impl ServerStats {
             p95_latency_s: pct(0.95),
             p99_latency_s: pct(0.99),
             elapsed_s: elapsed,
+            in_flight: 0,
+            budget_capacity: None,
+            ring_depth: 0,
+            ring_full_backoffs: 0,
+            slo_p99_ms: None,
         }
     }
 }
@@ -148,8 +193,13 @@ pub struct StatsSnapshot {
     /// dispatched to (work stealing).
     pub steals: u64,
     /// Requests fast-rejected by admission control (never queued),
-    /// attributed to this plane's submit path.
+    /// attributed to this plane's submit path. Counts **host-gate**
+    /// sheds only; budget sheds are [`StatsSnapshot::shed_budget`].
     pub shed: u64,
+    /// Requests fast-rejected by this plane's own tag budget (DESIGN.md
+    /// §11) — disjoint from [`StatsSnapshot::shed`], so the host gate's
+    /// total still equals the per-tag `shed` sum.
+    pub shed_budget: u64,
     /// Batches formed and dispatched to the execution plane.
     pub batches: u64,
     /// Dispatched requests per dispatched batch.
@@ -166,18 +216,55 @@ pub struct StatsSnapshot {
     pub p99_latency_s: f64,
     /// Wall time since the stats epoch (server start), seconds.
     pub elapsed_s: f64,
+    /// Requests of this plane currently in flight (budget occupancy at
+    /// snapshot time). Filled by the owning plane.
+    pub in_flight: usize,
+    /// This plane's tag-budget cap, `None` when unlimited. Filled by the
+    /// owning plane.
+    pub budget_capacity: Option<usize>,
+    /// Current per-engine work-ring capacity, in batches (the knob queue
+    /// autotuning turns). Filled by the owning plane; 0 when unknown.
+    pub ring_depth: usize,
+    /// Times this plane's dispatcher found every ring full and backed
+    /// off — the queue-pressure signal autotuning grows depth on
+    /// (admission sheds happen upstream of the rings and cannot be
+    /// relieved by deeper rings). Filled by the owning plane.
+    pub ring_full_backoffs: u64,
+    /// The tag's SLO p99 target in milliseconds, when one is configured.
+    /// Filled by the owning plane.
+    pub slo_p99_ms: Option<f64>,
 }
 
 impl StatsSnapshot {
+    /// Total submissions rejected with `Error::Overloaded`, both scopes
+    /// (host gate + own budget).
+    pub fn shed_total(&self) -> u64 {
+        self.shed + self.shed_budget
+    }
+
+    /// True when an SLO p99 target is configured and the measured p99
+    /// meets it. `None` when no SLO is set **or** nothing completed yet
+    /// — an empty latency reservoir reads as p99 = 0, which must not
+    /// count as conformance (a fully-starved tag serves nothing and
+    /// meets nothing).
+    pub fn slo_met(&self) -> Option<bool> {
+        if self.completed == 0 {
+            return None;
+        }
+        self.slo_p99_ms.map(|t| self.p99_latency_s * 1e3 <= t)
+    }
+
     /// One-line human-readable summary of the snapshot.
     pub fn render(&self) -> String {
-        format!(
-            "served {}/{} ({} errors, {} shed, {} steals) in {:.2}s | {:.0} req/s | \
-             batches {} (mean {:.1}) | latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+        let mut s = format!(
+            "served {}/{} ({} errors, {} shed, {} budget-shed, {} steals) in {:.2}s \
+             | {:.0} req/s | batches {} (mean {:.1}) | latency p50 {:.2}ms \
+             p95 {:.2}ms p99 {:.2}ms",
             self.completed,
             self.submitted,
             self.errors,
             self.shed,
+            self.shed_budget,
             self.steals,
             self.elapsed_s,
             self.throughput_rps,
@@ -186,7 +273,22 @@ impl StatsSnapshot {
             self.p50_latency_s * 1e3,
             self.p95_latency_s * 1e3,
             self.p99_latency_s * 1e3,
-        )
+        );
+        if self.ring_depth > 0 {
+            s.push_str(&format!(" | ring {}b", self.ring_depth));
+        }
+        if let Some(cap) = self.budget_capacity {
+            s.push_str(&format!(" | budget {}/{}", self.in_flight, cap));
+        }
+        if let Some(target) = self.slo_p99_ms {
+            let verdict = match self.slo_met() {
+                Some(true) => "met",
+                Some(false) => "MISSED",
+                None => "no served requests",
+            };
+            s.push_str(&format!(" | slo p99<={target:.1}ms {verdict}"));
+        }
+        s
     }
 }
 
@@ -210,11 +312,14 @@ mod tests {
         s.on_error();
         s.on_shed();
         s.on_shed();
+        s.on_shed_budget();
         let snap = s.snapshot();
         assert_eq!(snap.submitted, 10);
         assert_eq!(snap.completed, 10);
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.shed, 2);
+        assert_eq!(snap.shed_budget, 1);
+        assert_eq!(snap.shed_total(), 3);
         assert_eq!(snap.batches, 2);
         assert!((snap.mean_batch_size - 5.0).abs() < 1e-9);
         assert!(snap.p50_latency_s > 0.0);
@@ -224,9 +329,52 @@ mod tests {
     }
 
     #[test]
+    fn counters_snapshot_skips_latency_work() {
+        let s = ServerStats::new();
+        for _ in 0..4 {
+            s.on_submit();
+            s.on_complete(0.002);
+        }
+        s.on_shed();
+        let c = s.snapshot_counters();
+        assert_eq!(c.completed, 4);
+        assert_eq!(c.shed, 1);
+        assert_eq!(c.p99_latency_s, 0.0, "counters variant must skip percentiles");
+        // The full snapshot still reports them.
+        assert!(s.snapshot().p99_latency_s > 0.0);
+    }
+
+    #[test]
     fn empty_snapshot_safe() {
         let snap = ServerStats::new().snapshot();
         assert_eq!(snap.p99_latency_s, 0.0);
         assert_eq!(snap.mean_batch_size, 0.0);
+        assert_eq!(snap.budget_capacity, None);
+        assert_eq!(snap.slo_met(), None);
+    }
+
+    #[test]
+    fn render_surfaces_plane_state_and_slo_verdict() {
+        let mut snap = ServerStats::new().snapshot();
+        // Inert defaults render no plane-state suffixes.
+        let plain = snap.render();
+        assert!(!plain.contains("slo"));
+        assert!(!plain.contains("budget "));
+        snap.ring_depth = 24;
+        snap.in_flight = 3;
+        snap.budget_capacity = Some(56);
+        snap.slo_p99_ms = Some(20.0);
+        snap.p99_latency_s = 0.005;
+        // Nothing completed: an empty reservoir must not read as
+        // conformance.
+        assert_eq!(snap.slo_met(), None);
+        assert!(snap.render().contains("no served requests"));
+        snap.completed = 10;
+        let s = snap.render();
+        assert!(s.contains("ring 24b"), "{s}");
+        assert!(s.contains("budget 3/56"), "{s}");
+        assert!(s.contains("slo p99<=20.0ms met"), "{s}");
+        snap.p99_latency_s = 0.050;
+        assert!(snap.render().contains("MISSED"));
     }
 }

@@ -27,9 +27,11 @@
 //! * [`runtime`] — xla/PJRT wrapper that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them on the request path;
 //! * [`coordinator`] — the serving plane: admission gate, dynamic
-//!   batcher, sharded per-engine work rings with stealing, and the
+//!   batcher, sharded per-engine work rings with stealing, the
 //!   multi-model [`coordinator::Fleet`] (per-tag planes under one shared
-//!   admission budget);
+//!   admission budget, dynamic register/retire membership), and the
+//!   [`coordinator::policy`] control plane (per-tag SLO admission
+//!   weights, queue-depth autotuning from queue-full/steal telemetry);
 //! * [`weights`] — LSTW tensor store shared with the python exporter;
 //! * [`util`] — offline substrates (JSON, RNG, property testing, CLI,
 //!   tables, micro-bench harness) — crates.io is not reachable in this

@@ -11,9 +11,10 @@
 //! logicsparse pareto   sweep budgets -> Pareto frontier ablation
 //! ```
 
-use logicsparse::config::PruneProfile;
+use logicsparse::config::{PolicyConfig, PruneProfile};
 use logicsparse::coordinator::{
-    BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Server, ServerOptions,
+    AutotuneConfig, BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Server,
+    ServerOptions,
 };
 use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
@@ -232,6 +233,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
         Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
         Opt { name: "model", takes_value: true, default: None, help: "repeatable fleet member 'tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag]': serve a multi-model fleet behind one shared admission gate" },
+        Opt { name: "slo", takes_value: true, default: None, help: "repeatable per-tag SLO 'tag=p99_ms[:weight]': partition the shared admission budget by weight (fleet mode)" },
+        Opt { name: "autotune", takes_value: false, default: None, help: "enable queue-depth autotuning from queue-full/steal telemetry (fleet mode)" },
+        Opt { name: "churn", takes_value: true, default: None, help: "live-membership demo: retire this tag halfway through the run and re-register it at 3/4 (fleet mode)" },
     ]);
     let a = cli::parse(argv, &opts)?;
     if a.flag("help") {
@@ -251,6 +255,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             }
         }
         return cmd_serve_fleet(&a);
+    }
+    // The policy-control-plane options only make sense for a fleet.
+    for fleet_only in ["slo", "churn"] {
+        if !a.get_all(fleet_only).is_empty() {
+            return Err(logicsparse::Error::config(format!(
+                "--{fleet_only} needs fleet mode: add at least one --model"
+            )));
+        }
+    }
+    if a.flag("autotune") {
+        return Err(logicsparse::Error::config(
+            "--autotune needs fleet mode: add at least one --model",
+        ));
     }
     let artifacts = a.req("artifacts")?;
     let tag = a.req("tag")?;
@@ -434,9 +451,13 @@ fn parse_model_spec(
 }
 
 /// `serve --model a=native:0.8 --model b=synthetic:100 ...`: start one
-/// plane per tag behind the shared admission gate, replay a closed-loop
-/// round-robin request stream across the tags, and print the fleet
-/// summary (per-tag stats roll-up plus accuracy where an oracle exists).
+/// plane per tag behind the shared admission gate (with per-tag `--slo`
+/// budgets and optional `--autotune` ring retuning), replay a
+/// closed-loop round-robin request stream across the tags, and print the
+/// fleet summary (per-tag stats roll-up plus accuracy where an oracle
+/// exists). With `--churn <tag>` the run additionally demonstrates live
+/// membership: the tag is retired (lossless drain) halfway through and
+/// re-registered at three quarters.
 fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     let artifacts = a.req("artifacts")?;
     let n_req = a.get_usize("requests")?.unwrap_or(2048);
@@ -447,29 +468,74 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     let engines = a.get_usize("engines")?.unwrap_or(1);
     let queue_depth = a.get_usize("queue-depth")?.unwrap_or(16);
 
+    // Duplicate --model tags are a CLI error before anything spawns
+    // (duplicate --slo tags are rejected by add_slo_arg below).
+    cli::check_unique_keys("model", a.get_all("model"))?;
+    let mut pcfg = PolicyConfig::default();
+    for spec in a.get_all("slo") {
+        pcfg.add_slo_arg(spec)?;
+    }
+    if a.flag("autotune") {
+        pcfg.autotune = Some(AutotuneConfig::default());
+    }
+
     let mut models = Vec::new();
+    let mut route: Vec<String> = Vec::new();
     let mut oracles = Vec::new();
     for spec in a.get_all("model") {
         let (tag, backend, oracle) = parse_model_spec(spec, artifacts)?;
-        models.push(
-            ModelSpec::new(tag, backend)
-                .policy(policy.clone())
-                .engines(engines)
-                .queue_depth(queue_depth),
-        );
+        let mut m = ModelSpec::new(tag.clone(), backend)
+            .policy(policy.clone())
+            .engines(engines)
+            .queue_depth(queue_depth);
+        if let Some(slo) = pcfg.slo_for(&tag) {
+            m = m.slo(slo.p99_ms, slo.weight);
+        }
+        models.push(m);
+        route.push(tag);
         oracles.push(oracle);
     }
-    let fleet = Fleet::start(FleetOptions {
+    for (tag, _) in &pcfg.slos {
+        if !route.contains(tag) {
+            return Err(logicsparse::Error::config(format!(
+                "--slo names tag '{tag}' but no --model declares it"
+            )));
+        }
+    }
+    let churn: Option<ModelSpec> = match a.get("churn") {
+        None => None,
+        Some(tag) => {
+            let k = route.iter().position(|t| t == tag).ok_or_else(|| {
+                logicsparse::Error::config(format!(
+                    "--churn names tag '{tag}' but no --model declares it"
+                ))
+            })?;
+            Some(models[k].clone())
+        }
+    };
+
+    let autotune_on = pcfg.autotune.is_some();
+    let mut fleet = Fleet::start(FleetOptions {
         models,
         admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
+        autotune: pcfg.autotune,
     })?;
     println!(
-        "fleet: {} models ({}) | shared admission {} | {} engines/plane",
-        fleet.tags().len(),
-        fleet.tags().join(", "),
+        "fleet: {} models ({}) | shared admission {} | {} engines/plane{}{}",
+        route.len(),
+        route.join(", "),
         fleet.admission_capacity(),
         engines,
+        if pcfg.slos.is_empty() { "" } else { " | slo budgets active" },
+        if autotune_on { " | autotune on" } else { "" },
     );
+    if !pcfg.slos.is_empty() {
+        for (tag, snap) in &fleet.stats().per_model {
+            if let Some(cap) = snap.budget_capacity {
+                println!("  [{tag}] admission budget {cap}");
+            }
+        }
+    }
 
     // One synthetic request set shared by every tag; per-tag expected
     // classes wherever a local oracle exists.
@@ -497,9 +563,10 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
         });
     }
 
-    let n_tags = fleet.tags().len();
+    let n_tags = route.len();
     let mut correct = vec![0usize; n_tags];
     let mut checked = vec![0usize; n_tags];
+    let mut skipped_retired = 0usize;
     type Pending = Vec<(usize, std::sync::mpsc::Receiver<logicsparse::coordinator::Response>, usize)>;
     let mut pending: Pending = Vec::new();
     let drain = |pending: &mut Pending,
@@ -518,19 +585,54 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
         Ok(())
     };
 
+    // Pre-resolved routing (route order == initial slot order): the hot
+    // loop submits by index; only the churn events change the mapping
+    // (retire leaves a tombstone the loop skips via UnknownModel, and
+    // re-registration refreshes the index).
+    let mut slot_of: Vec<usize> = (0..n_tags).collect();
     let t0 = std::time::Instant::now();
     for i in 0..n_req {
+        // The live-membership demo: retire the churn tag at the halfway
+        // point (its in-flight responses keep arriving — the drain is
+        // lossless) and bring it back at three quarters.
+        if let Some(spec) = &churn {
+            if i == n_req / 2 {
+                let snap = fleet.retire(&spec.tag)?;
+                println!(
+                    "[churn] retired '{}' at request {i}: {}",
+                    spec.tag,
+                    snap.render()
+                );
+            } else if i == n_req * 3 / 4 {
+                fleet.register(spec.clone())?;
+                let k = route.iter().position(|t| t == &spec.tag).expect("churn tag routed");
+                slot_of[k] = fleet.resolve(&spec.tag)?;
+                println!("[churn] re-registered '{}' at request {i}", spec.tag);
+            }
+        }
+        if autotune_on && i % 256 == 255 {
+            for d in fleet.tick() {
+                println!("[policy] {d:?}");
+            }
+        }
         // Round-robin across tags so every plane sees the stream.
         let k = i % n_tags;
         let j = i % n_imgs;
         let rx = loop {
-            match fleet.submit_at(k, imgs[j * px..(j + 1) * px].to_vec()) {
-                Ok(rx) => break rx,
+            match fleet.submit_at(slot_of[k], imgs[j * px..(j + 1) * px].to_vec()) {
+                Ok(rx) => break Some(rx),
                 Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
+                Err(logicsparse::Error::UnknownModel(_)) => {
+                    // The churn tag is retired right now; skip its slot.
+                    skipped_retired += 1;
+                    break None;
+                }
                 Err(e) => return Err(e),
             }
         };
-        pending.push((k, rx, j));
+        if let Some(rx) = rx {
+            pending.push((k, rx, j));
+        }
         // Keep a bounded in-flight window, like a real client pool.
         if pending.len() >= 256 {
             drain(&mut pending, &mut correct, &mut checked)?;
@@ -541,7 +643,7 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
 
     let snap = fleet.shutdown();
     println!("{}", snap.render());
-    for (k, tag) in snap.per_model.iter().map(|(t, _)| t).enumerate() {
+    for (k, tag) in route.iter().enumerate() {
         if checked[k] > 0 {
             println!(
                 "  [{tag}] accuracy {:.2}% over {} checked requests",
@@ -551,6 +653,9 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
         } else {
             println!("  [{tag}] accuracy n/a (no local oracle for this backend)");
         }
+    }
+    if skipped_retired > 0 {
+        println!("[churn] {skipped_retired} arrivals skipped while the tag was retired");
     }
     println!(
         "fleet total: {} requests | wall {:.2}s | {:.0} req/s aggregate",

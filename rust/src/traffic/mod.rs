@@ -141,45 +141,86 @@ pub struct MixArrival {
     pub stream: usize,
 }
 
+/// One stream of a [`Mix`]: a tagged arrival process plus the wall-clock
+/// offset it phases in at. `start_s > 0` models a tag that **joins
+/// mid-run** (e.g. a model registered on a live host): its arrivals are
+/// the underlying [`Traffic`] schedule shifted wholesale by the offset.
+#[derive(Debug, Clone)]
+pub struct MixStream {
+    /// The model tag this stream submits against.
+    pub tag: String,
+    /// The stream's arrival process.
+    pub traffic: Traffic,
+    /// Offset (seconds) added to every arrival of this stream.
+    pub start_s: f64,
+}
+
 /// A heterogeneous traffic mix: one named arrival process per stream
 /// (model tag), merged into a single monotone wall-clock schedule — what
 /// the multi-model load generator
 /// (`coordinator::loadgen::run_open_loop_mix`) replays against a serving
 /// fleet, so per-tag offered load stays exactly the per-stream [`Traffic`]
-/// while the host sees the interleaved aggregate.
+/// while the host sees the interleaved aggregate. Streams may be
+/// phase-shifted ([`Mix::stream_at`]) to model tags joining mid-run.
 #[derive(Debug, Clone, Default)]
 pub struct Mix {
-    streams: Vec<(String, Traffic)>,
+    streams: Vec<MixStream>,
 }
 
 impl Mix {
-    /// An empty mix; add streams with [`Mix::stream`].
+    /// An empty mix; add streams with [`Mix::stream`] /
+    /// [`Mix::stream_at`].
     pub fn new() -> Mix {
         Mix::default()
     }
 
-    /// Add one `(tag, traffic)` stream (builder-style).
+    /// Add one `(tag, traffic)` stream starting at t=0 (builder-style).
     pub fn stream(mut self, tag: impl Into<String>, traffic: Traffic) -> Mix {
-        self.streams.push((tag.into(), traffic));
+        self.streams.push(MixStream { tag: tag.into(), traffic, start_s: 0.0 });
         self
     }
 
-    /// The `(tag, traffic)` streams, in insertion order.
-    pub fn streams(&self) -> &[(String, Traffic)] {
+    /// Add one stream whose arrivals are phase-shifted by `start_s`
+    /// seconds — the tag joins the run at that offset (builder-style).
+    pub fn stream_at(
+        mut self,
+        tag: impl Into<String>,
+        traffic: Traffic,
+        start_s: f64,
+    ) -> Mix {
+        assert!(start_s >= 0.0, "stream offset must be >= 0");
+        self.streams.push(MixStream { tag: tag.into(), traffic, start_s });
+        self
+    }
+
+    /// The streams, in insertion order.
+    pub fn streams(&self) -> &[MixStream] {
         &self.streams
     }
 
     /// Total arrivals across all streams.
     pub fn events(&self) -> u64 {
-        self.streams.iter().map(|(_, t)| t.events()).sum()
+        self.streams.iter().map(|s| s.traffic.events()).sum()
     }
 
     /// The merged schedule: every stream's [`Traffic::schedule`]
-    /// interleaved into one monotone-by-time sequence. Ties break by
-    /// stream order (stable), so the merge is deterministic.
+    /// (shifted by its `start_s`) interleaved into one monotone-by-time
+    /// sequence. Ties break by stream order (stable), so the merge is
+    /// deterministic.
     pub fn schedule(&self) -> Vec<MixArrival> {
-        let per_stream: Vec<Vec<f64>> =
-            self.streams.iter().map(|(_, t)| t.schedule()).collect();
+        let per_stream: Vec<Vec<f64>> = self
+            .streams
+            .iter()
+            .map(|s| {
+                let mut ts = s.traffic.schedule();
+                if s.start_s > 0.0 {
+                    for t in &mut ts {
+                        *t += s.start_s;
+                    }
+                }
+                ts
+            })
+            .collect();
         let mut cursor = vec![0usize; per_stream.len()];
         let total: usize = per_stream.iter().map(|s| s.len()).sum();
         let mut merged = Vec::with_capacity(total);
@@ -265,7 +306,7 @@ impl Workload {
             let rate_fps: f64 = fps
                 .parse()
                 .map_err(|_| Error::config(format!("bad poisson rate '{fps}'")))?;
-            if !(rate_fps > 0.0) || !rate_fps.is_finite() {
+            if !rate_fps.is_finite() || rate_fps <= 0.0 {
                 return Err(Error::config(format!(
                     "poisson rate must be a positive finite fps, got '{fps}'"
                 )));
@@ -390,6 +431,36 @@ mod tests {
         let b: Vec<f64> = sched.iter().filter(|x| x.stream == 1).map(|x| x.at_s).collect();
         assert_eq!(a, Traffic::periodic(5, 0.010).schedule());
         assert_eq!(b, Traffic::poisson(20, 500.0, 3).schedule());
+    }
+
+    #[test]
+    fn mix_stream_at_phase_shifts_one_stream() {
+        // The phase-shift scenario: tag "late" joins 50ms into the run.
+        let mix = Mix::new()
+            .stream("base", Traffic::periodic(5, 0.010))
+            .stream_at("late", Traffic::periodic(3, 0.010), 0.050);
+        assert_eq!(mix.events(), 8);
+        assert_eq!(mix.streams()[1].start_s, 0.050);
+        let sched = mix.schedule();
+        assert!(sched.windows(2).all(|w| w[0].at_s <= w[1].at_s), "not monotone");
+        let late: Vec<f64> =
+            sched.iter().filter(|a| a.stream == 1).map(|a| a.at_s).collect();
+        // Same float ops as the mix applies, so the match is exact.
+        let expect: Vec<f64> = Traffic::periodic(3, 0.010)
+            .schedule()
+            .iter()
+            .map(|t| t + 0.050)
+            .collect();
+        assert_eq!(late, expect);
+        // The base stream is untouched by the neighbour's offset.
+        let base: Vec<f64> =
+            sched.iter().filter(|a| a.stream == 0).map(|a| a.at_s).collect();
+        assert_eq!(base, Traffic::periodic(5, 0.010).schedule());
+        // Nothing of "late" arrives before its join offset.
+        assert!(sched
+            .iter()
+            .filter(|a| a.stream == 1)
+            .all(|a| a.at_s >= 0.050));
     }
 
     #[test]

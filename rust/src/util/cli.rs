@@ -138,6 +138,24 @@ pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
     Ok(args)
 }
 
+/// Validate that the repeated values of `--{option}` have unique keys,
+/// where the key is the text before the first `=` (the whole value when
+/// there is no `=`). Used by `serve` so `--model a=... --model a=...`
+/// fails with a clear CLI-shaped error instead of relying on whatever
+/// the downstream consumer does with the duplicate.
+pub fn check_unique_keys(option: &str, values: &[String]) -> Result<()> {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for v in values {
+        let key = v.split_once('=').map_or(v.as_str(), |(k, _)| k);
+        if !seen.insert(key) {
+            return Err(Error::config(format!(
+                "--{option}: duplicate tag '{key}' (each --{option} needs a unique tag)"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Render a usage block for a subcommand.
 pub fn usage(cmd: &str, about: &str, opts: &[Opt]) -> String {
     let mut s = format!("{cmd} — {about}\n\noptions:\n");
@@ -208,6 +226,21 @@ mod tests {
         assert!(parse(&sv(&["--verbose=1"]), &opts()).is_err());
         let a = parse(&sv(&["--steps", "abc"]), &opts()).unwrap();
         assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn unique_keys_rejects_duplicate_tags() {
+        // Distinct tags pass, whatever follows the '='.
+        check_unique_keys("model", &sv(&["a=native:0.8", "b=native:0.8"])).unwrap();
+        // Same tag twice is a loud error naming the tag and the option.
+        let err = check_unique_keys("model", &sv(&["a=native", "a=synthetic"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate tag 'a'"), "{err}");
+        assert!(err.contains("--model"), "{err}");
+        // Values without '=' compare whole.
+        assert!(check_unique_keys("slo", &sv(&["x", "x"])).is_err());
+        check_unique_keys("slo", &sv(&[])).unwrap();
     }
 
     #[test]

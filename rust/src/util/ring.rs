@@ -2,11 +2,17 @@
 //! first-party building blocks of the sharded execution plane
 //! (`coordinator::shard`); crossbeam is unavailable offline.
 //!
-//! [`RingQueue`] is a fixed-capacity multi-producer/multi-consumer queue
-//! over pre-allocated ring storage. Every operation is a short critical
+//! [`RingQueue`] is a bounded multi-producer/multi-consumer queue over
+//! pre-allocated ring storage. Every operation is a short critical
 //! section (one lock, no allocation after construction); blocking is
 //! layered on top with [`Parker`], so a work-stealing consumer can probe
 //! many queues cheaply and only sleep once *all* of them came up empty.
+//! The capacity bound is **adjustable** ([`RingQueue::set_capacity`]):
+//! the policy control plane retunes ring depths between batches
+//! (DESIGN.md §11), so the bound is an atomic consulted by `try_push`
+//! rather than a construction-time constant. Shrinking below the current
+//! occupancy never drops queued items — pushes simply fail `Full` until
+//! consumers drain under the new bound.
 //! Close semantics are drain-friendly: after [`RingQueue::close`] pushes
 //! fail immediately, but pops keep draining and report [`PopError::Closed`]
 //! only once the queue is also empty — exactly the contract deterministic
@@ -20,6 +26,7 @@
 //! parks forever" race.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -47,12 +54,13 @@ struct RingState<T> {
     closed: bool,
 }
 
-/// Bounded MPMC queue with drain-friendly close.
+/// Bounded MPMC queue with drain-friendly close and an adjustable bound.
 pub struct RingQueue<T> {
     state: Mutex<RingState<T>>,
     /// Signalled on push and on close (for blocked `pop_timeout` callers).
     not_empty: Condvar,
-    capacity: usize,
+    /// Current capacity bound; adjustable at runtime (policy autotuning).
+    capacity: AtomicUsize,
 }
 
 impl<T> RingQueue<T> {
@@ -66,13 +74,22 @@ impl<T> RingQueue<T> {
                 closed: false,
             }),
             not_empty: Condvar::new(),
-            capacity,
+            capacity: AtomicUsize::new(capacity),
         }
     }
 
-    /// Maximum entries the ring holds.
+    /// Maximum entries the ring currently admits.
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.capacity.load(Ordering::Acquire)
+    }
+
+    /// Retune the capacity bound (>= 1). Takes effect on subsequent
+    /// pushes; shrinking below the current occupancy drops nothing —
+    /// pushes fail [`PushError::Full`] until consumers drain below the
+    /// new bound.
+    pub fn set_capacity(&self, capacity: usize) {
+        assert!(capacity >= 1, "ring capacity must be >= 1");
+        self.capacity.store(capacity, Ordering::Release);
     }
 
     /// Entries currently queued.
@@ -96,7 +113,7 @@ impl<T> RingQueue<T> {
         if st.closed {
             return Err(PushError::Closed(v));
         }
-        if st.buf.len() >= self.capacity {
+        if st.buf.len() >= self.capacity() {
             return Err(PushError::Full(v));
         }
         st.buf.push_back(v);
@@ -243,6 +260,28 @@ mod tests {
         assert_eq!(q.try_pop(), Ok(2));
         assert_eq!(q.try_pop(), Ok(3));
         assert_eq!(q.try_pop(), Err(PopError::Empty));
+    }
+
+    #[test]
+    fn set_capacity_retunes_without_dropping() {
+        let q = RingQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        // Grow: the next push fits immediately.
+        q.set_capacity(4);
+        assert_eq!(q.capacity(), 4);
+        q.try_push(3).unwrap();
+        // Shrink below occupancy: nothing queued is lost, but pushes
+        // fail until consumers drain under the new bound.
+        q.set_capacity(1);
+        assert_eq!(q.len(), 3, "shrink must not drop queued items");
+        assert_eq!(q.try_push(4), Err(PushError::Full(4)));
+        assert_eq!(q.try_pop(), Ok(1));
+        assert_eq!(q.try_pop(), Ok(2));
+        assert_eq!(q.try_pop(), Ok(3));
+        q.try_push(4).unwrap();
+        assert_eq!(q.try_push(5), Err(PushError::Full(5)));
     }
 
     #[test]

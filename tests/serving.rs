@@ -3,7 +3,7 @@
 //! and graceful shutdown are exercised without artifacts or XLA.
 
 use logicsparse::coordinator::{
-    loadgen, BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Server,
+    loadgen, BatchPolicy, EngineBackend, Fleet, FleetOptions, ModelSpec, Phase, Server,
     ServerOptions, ShedMode,
 };
 use logicsparse::graph::builder::lenet5;
@@ -319,6 +319,7 @@ fn fleet_slow_tag_does_not_stall_other_planes() {
                 .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) }),
         ],
         admission_capacity: 4096,
+        autotune: None,
     })
     .unwrap();
 
@@ -363,6 +364,7 @@ fn fleet_unknown_model_is_rejected_without_side_effects() {
     let fleet = Fleet::start(FleetOptions {
         models: vec![ModelSpec::new("only", synth_backend(Duration::ZERO))],
         admission_capacity: 8,
+        autotune: None,
     })
     .unwrap();
     for _ in 0..16 {
@@ -399,6 +401,7 @@ fn fleet_shutdown_loses_no_requests_across_three_tags() {
             ModelSpec::new("c", synth_backend(Duration::from_micros(200))),
         ],
         admission_capacity: 4096,
+        autotune: None,
     })
     .unwrap();
     let tags = ["a", "b", "c"];
@@ -442,6 +445,7 @@ fn fleet_shared_admission_shed_accounting_sums_across_tags() {
                 .queue_depth(4),
         ],
         admission_capacity: 8,
+        autotune: None,
     })
     .unwrap();
 
@@ -493,6 +497,7 @@ fn fleet_mixed_open_loop_replays_per_tag_traffic() {
             ModelSpec::new("steady", synth_backend(Duration::from_micros(100))),
         ],
         admission_capacity: 1024,
+        autotune: None,
     })
     .unwrap();
     let mix = Mix::new()
@@ -522,6 +527,205 @@ fn fleet_mixed_open_loop_replays_per_tag_traffic() {
         Err(Error::UnknownModel(_))
     ));
     let _ = fleet.shutdown();
+}
+
+#[test]
+fn fleet_budgeted_admission_reconciles_under_burst() {
+    // Per-tag budgets active (one tag carries an SLO weight), bursty
+    // mixed traffic: the gate-total vs per-tag reconciliation must still
+    // hold — the host gate counts exactly the per-tag `shed` sum, while
+    // budget sheds stay a disjoint per-tag counter.
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("gold", synth_backend(Duration::from_millis(2)))
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) })
+                .queue_depth(4)
+                .slo(50.0, 3.0),
+            ModelSpec::new("bulk", synth_backend(Duration::from_millis(2)))
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) })
+                .queue_depth(4),
+        ],
+        admission_capacity: 12,
+        autotune: None,
+    })
+    .unwrap();
+    // Weighted partition of 12 by 3:1 -> gold 9, bulk 3.
+    let start = fleet.stats();
+    assert_eq!(start.get("gold").unwrap().budget_capacity, Some(9));
+    assert_eq!(start.get("bulk").unwrap().budget_capacity, Some(3));
+
+    // Burst-shaped offered load on both tags, open-loop with drops.
+    let mix = Mix::new()
+        .stream("gold", Traffic::bursty(120, 24, 0.01, 7))
+        .stream("bulk", Traffic::bursty(120, 24, 0.01, 9));
+    let rep = loadgen::run_open_loop_mix(&fleet, &mix, |_, i| image(i), ShedMode::Drop)
+        .unwrap();
+    assert_eq!(rep.lost(), 0, "responses dropped");
+    // 24-deep back-to-back bursts over a 3-deep budget must shed on the
+    // bulk tag's own budget.
+    let snap = fleet.shutdown();
+    let bulk = snap.get("bulk").unwrap();
+    assert!(bulk.shed_budget > 0, "bulk's 3-deep budget never shed under 24-bursts");
+    // Client-observed sheds per tag = that tag's host sheds + budget
+    // sheds (two scopes, one client-visible error).
+    for tag in ["gold", "bulk"] {
+        let s = snap.get(tag).unwrap();
+        let r = rep.get(tag).unwrap();
+        assert_eq!(
+            s.shed + s.shed_budget,
+            r.shed,
+            "[{tag}] client and server disagree on total sheds"
+        );
+        assert_eq!(s.completed + s.errors, r.accepted, "[{tag}] unaccounted");
+    }
+    // The reconciliation identity with budgets active: the shared gate
+    // counted exactly the host-scope sheds, no more, no less.
+    assert_eq!(snap.shed, snap.shed_by_tag(), "gate total != per-tag host sheds");
+    assert_eq!(snap.shed_retired, 0);
+    // Budget occupancy fields are present in the roll-up.
+    assert!(snap.render().contains("budget"));
+}
+
+#[test]
+fn fleet_retire_mid_burst_is_lossless_and_invalidates_handles() {
+    // Retire a tag while a burst of its work is still in flight: the
+    // drain must answer every admitted request, later submits against
+    // the tag (or its stale index) must fail UnknownModel, and the other
+    // tag must be unaffected.
+    let mut fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("doomed", synth_backend(Duration::from_micros(500))),
+            ModelSpec::new("stable", synth_backend(Duration::ZERO)),
+        ],
+        admission_capacity: 4096,
+        autotune: None,
+    })
+    .unwrap();
+    let doomed_idx = fleet.resolve("doomed").unwrap();
+
+    // A burst of 120 requests, most still queued when retire begins.
+    let rxs: Vec<_> = (0..120u64)
+        .map(|i| fleet.submit("doomed", image(i)).unwrap())
+        .collect();
+    let final_snap = fleet.retire("doomed").unwrap();
+    assert_eq!(final_snap.submitted, 120);
+    assert_eq!(final_snap.completed, 120, "retire dropped in-flight requests");
+    assert_eq!(final_snap.errors, 0);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("request {i} dropped in retire"));
+        assert!(!resp.is_error(), "request {i} failed");
+        assert_eq!(resp.class(), (i % 10), "request {i} misclassified");
+    }
+
+    // The tag and its stale index are gone — UnknownModel, not a silent
+    // reroute.
+    assert!(matches!(
+        fleet.submit("doomed", image(0)),
+        Err(Error::UnknownModel(_))
+    ));
+    assert!(matches!(
+        fleet.submit_at(doomed_idx, image(0)),
+        Err(Error::UnknownModel(_))
+    ));
+    assert_eq!(fleet.tags(), vec!["stable".to_string()]);
+    // The survivor serves normally; registering the tag again revives it.
+    fleet.infer_blocking("stable", image(1)).unwrap();
+    fleet
+        .register(ModelSpec::new("doomed", synth_backend(Duration::ZERO)))
+        .unwrap();
+    let resp = fleet.infer_blocking("doomed", image(5)).unwrap();
+    assert_eq!(resp.class(), 5);
+    let snap = fleet.shutdown();
+    assert_eq!(snap.get("doomed").unwrap().completed, 1);
+    assert_eq!(snap.get("stable").unwrap().completed, 1);
+}
+
+#[test]
+fn phase_shift_run_replays_membership_and_offset_streams() {
+    // The §11 phase-shift scenario: phase 1 serves one tag; phase 2
+    // registers a second tag mid-run whose stream joins at an offset.
+    // Every phase's accounting must be complete with zero losses.
+    let mut fleet = Fleet::start(FleetOptions {
+        models: vec![ModelSpec::new("base", synth_backend(Duration::from_micros(50)))],
+        admission_capacity: 1024,
+        autotune: None,
+    })
+    .unwrap();
+    let phases = vec![
+        Phase {
+            retire: Vec::new(),
+            register: Vec::new(),
+            mix: Mix::new().stream("base", Traffic::poisson(80, 4000.0, 11)),
+        },
+        Phase {
+            retire: Vec::new(),
+            register: vec![ModelSpec::new("joiner", synth_backend(Duration::ZERO))],
+            mix: Mix::new()
+                .stream("base", Traffic::poisson(60, 3000.0, 12))
+                .stream_at("joiner", Traffic::poisson(40, 3000.0, 13), 0.005),
+        },
+    ];
+    let reports =
+        loadgen::run_phases(&mut fleet, &phases, |_, i| image(i), ShedMode::Retry).unwrap();
+    assert_eq!(reports.len(), 2);
+    assert_eq!(reports[0].offered(), 80);
+    assert_eq!(reports[0].completed(), 80);
+    assert_eq!(reports[0].lost(), 0);
+    assert_eq!(reports[1].get("base").unwrap().completed, 60);
+    assert_eq!(reports[1].get("joiner").unwrap().completed, 40);
+    assert_eq!(reports[1].lost(), 0);
+    let snap = fleet.shutdown();
+    assert_eq!(snap.get("base").unwrap().completed, 140);
+    assert_eq!(snap.get("joiner").unwrap().completed, 40);
+}
+
+#[test]
+fn weighted_tag_keeps_headroom_while_noisy_neighbour_sheds() {
+    // The admission-policy acceptance shape at test scale: the noisy
+    // tag's weighted cap keeps it from spending the shared budget, so
+    // the SLO tag never sheds even while the neighbour saturates.
+    let fleet = Fleet::start(FleetOptions {
+        models: vec![
+            ModelSpec::new("slo", synth_backend(Duration::from_micros(100))).slo(50.0, 8.0),
+            ModelSpec::new("noisy", synth_backend(Duration::from_millis(2)))
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) })
+                .queue_depth(2),
+        ],
+        admission_capacity: 63,
+        autotune: None,
+    })
+    .unwrap();
+    // Saturate the noisy tag far beyond its 7-slot budget.
+    let mut noisy_rxs = Vec::new();
+    let mut noisy_shed = 0u64;
+    for i in 0..200u64 {
+        match fleet.submit("noisy", image(i)) {
+            Ok(rx) => noisy_rxs.push(rx),
+            Err(Error::Overloaded) => noisy_shed += 1,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(noisy_shed > 0, "200 fast submits over a 7-slot budget must shed");
+    // The SLO tag retains headroom: a full window of its own budget
+    // admits without a single shed.
+    for i in 0..50u64 {
+        let resp = fleet.infer_blocking("slo", image(i)).unwrap();
+        assert_eq!(resp.class(), (i % 10) as usize);
+    }
+    let snap = fleet.shutdown();
+    assert_eq!(snap.get("slo").unwrap().shed_total(), 0, "SLO tag shed");
+    assert_eq!(snap.get("slo").unwrap().completed, 50);
+    assert_eq!(
+        snap.get("noisy").unwrap().shed_total(),
+        noisy_shed,
+        "noisy shed attribution disagrees with the client"
+    );
+    for rx in noisy_rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!resp.is_error());
+    }
 }
 
 #[test]
