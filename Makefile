@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test doc fmt fmt-check clippy bench bench-smoke artifacts clean
+.PHONY: verify build test doc fmt fmt-check clippy bench bench-smoke bench-compare bench-baseline artifacts clean
 
 ## Tier-1 gate: release build + full test suite + doc gate + lint gate
 ## (rustfmt check + clippy -D warnings). Lint is a hard gate now; if a
@@ -42,13 +42,26 @@ clippy:
 ## Each bench also writes its numbers to BENCH_<name>.json so the perf
 ## trajectory is machine-trackable across PRs.
 bench:
+	$(CARGO) bench --bench kernel_perf
 	$(CARGO) bench --bench serve_perf
 	$(CARGO) bench --bench sim_perf
 
 ## Fast CI smoke: small request counts, timing-ratio assertions off
-## (zero-loss and accounting assertions stay on).
+## (zero-loss and accounting assertions stay on; the kernel datapath
+## identity assertions always run).
 bench-smoke:
+	BENCH_SMOKE=1 $(CARGO) bench --bench kernel_perf
 	BENCH_SMOKE=1 $(CARGO) bench --bench serve_perf
+
+## Diff the current BENCH_*.json files against the committed baseline
+## (reporting-only; pass strict via `cargo run -- bench-compare --strict`).
+bench-compare:
+	$(CARGO) run --release --quiet -- bench-compare
+
+## Refresh the committed baseline from the BENCH_*.json files present
+## (run `make bench` first, on a quiet machine).
+bench-baseline:
+	$(CARGO) run --release --quiet -- bench-compare --write-baseline
 
 ## Build the AOT artifacts (needs the python/JAX environment):
 ## stage 1 trains + exports, the rust DSE emits folding_config.json,
@@ -58,6 +71,8 @@ artifacts:
 	$(CARGO) run --release -- dse --artifacts artifacts
 	cd python/compile && $(PYTHON) aot.py --stage 2 --out ../../artifacts
 
+## BENCH_baseline.json is the committed snapshot — clean spares it and
+## removes only the per-run outputs.
 clean:
 	$(CARGO) clean
-	rm -f BENCH_*.json
+	find . -maxdepth 1 -name 'BENCH_*.json' ! -name 'BENCH_baseline.json' -delete

@@ -1,0 +1,193 @@
+//! Per-kernel-flavour micro-benches for the native datapaths: dense /
+//! unrolled-sparse / block partial-sparse, each on every compiled-in
+//! [`Datapath`] plus the batch-parallel pool — the measured multiples
+//! behind the vectorisation tentpole (DESIGN.md §12).
+//!
+//! Writes `BENCH_kernels.json` with one row per `flavour@path`, e.g.
+//! `block_partial_sparse@vector`. Identity assertions (vector and pooled
+//! outputs bit-identical to scalar) run on **every** invocation, smoke
+//! included — they are cheap and they are the contract. Timing
+//! assertions (vector >= 1.5x scalar on the block partial-sparse
+//! flavour; pool >= 1.5x serial at batch >= 8 on >= 4 cores) only run on
+//! full runs, since smoke runs and starved CI runners measure noise.
+//!
+//! Set `BENCH_SMOKE=1` for a fast low-fidelity pass.
+
+use logicsparse::folding::{FoldingConfig, LayerFold, Style};
+use logicsparse::graph::builder::lenet5;
+use logicsparse::kernel::{BatchPool, CompiledModel, Datapath, KernelSpec};
+use logicsparse::runtime::SyntheticRuntime;
+use logicsparse::util::bench::{BenchLog, Bencher};
+use logicsparse::weights::ModelParams;
+use std::sync::Arc;
+
+/// The three kernel flavours on the LeNet-5 shape (the paper's model).
+fn flavours() -> Vec<(&'static str, Arc<CompiledModel>)> {
+    let g = lenet5();
+    let spec = KernelSpec::default();
+
+    let dense_params = ModelParams::synthetic(&g, 7);
+    let dense = CompiledModel::compile_dense(&g, &dense_params, &spec).unwrap();
+
+    let mut sparse_params = ModelParams::synthetic(&g, 7);
+    sparse_params.prune_global(0.75, 0.05).unwrap();
+    let sparse = CompiledModel::compile_sparse(&g, &sparse_params, &spec).unwrap();
+
+    // Block partial-sparse: per-layer SIMD width = the largest lane
+    // granularity dividing fold_in (folding enforces divisibility).
+    let mut cfg = FoldingConfig::default();
+    for n in g.mac_nodes() {
+        let simd = [8usize, 5, 4, 2]
+            .into_iter()
+            .find(|s| n.fold_in() % s == 0)
+            .unwrap_or(1);
+        cfg.set(
+            &n.name,
+            LayerFold { pe: 1, simd, style: Style::PartialSparse, sparsity: 0.5 },
+        );
+    }
+    let partial = CompiledModel::compile(&g, &sparse_params, &spec, &cfg).unwrap();
+
+    vec![
+        ("dense", Arc::new(dense)),
+        ("unrolled_sparse", Arc::new(sparse)),
+        ("block_partial_sparse", Arc::new(partial)),
+    ]
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(SyntheticRuntime::stripe_image).collect()
+}
+
+fn main() {
+    // Value-sensitive: BENCH_SMOKE=0 / empty / "false" mean a full run.
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    if smoke {
+        println!("kernel_perf: BENCH_SMOKE set — small runs, timing assertions off");
+    }
+    let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut log = BenchLog::new("kernel_perf");
+
+    let imgs = images(8);
+    let batch_n = if smoke { 8 } else { 16 };
+    let batch: Vec<f32> = (0..batch_n)
+        .flat_map(|i| imgs[i % imgs.len()].clone())
+        .collect();
+    let pool_workers = (cores - 1).max(1);
+    let pool = BatchPool::new(pool_workers);
+
+    for (name, model) in flavours() {
+        // Identity first, always: every datapath and the pooled batch
+        // path must reproduce the scalar reference bit for bit.
+        let scalar_ref: Vec<Vec<f32>> = imgs
+            .iter()
+            .map(|img| model.forward_with(img, Datapath::Scalar).unwrap())
+            .collect();
+        for dp in Datapath::all() {
+            for (img, want) in imgs.iter().zip(&scalar_ref) {
+                assert_eq!(
+                    &model.forward_with(img, dp).unwrap(),
+                    want,
+                    "{name}: {} datapath diverged from scalar",
+                    dp.label()
+                );
+            }
+        }
+        let serial_batch = model.infer_batch(&batch, batch_n).unwrap();
+        assert_eq!(
+            pool.infer_batch(&model, &batch, batch_n).unwrap(),
+            serial_batch,
+            "{name}: pooled batch diverged from serial"
+        );
+
+        // Single-frame forward per datapath.
+        let mut scalar_fps = 0.0;
+        for dp in Datapath::all() {
+            let mut i = 0usize;
+            let m = Arc::clone(&model);
+            let frames = &imgs;
+            let stats = bencher.run(&format!("{name}@{}", dp.label()), move || {
+                i = (i + 1) % frames.len();
+                m.forward_with(&frames[i], dp).unwrap()
+            });
+            let fps = stats.throughput();
+            if dp == Datapath::Scalar {
+                scalar_fps = fps;
+            }
+            log.push_model(
+                name,
+                dp.label(),
+                &[
+                    ("frames_per_s", fps),
+                    ("median_us", stats.median() * 1e6),
+                    ("speedup_vs_scalar_x", fps / scalar_fps),
+                ],
+            );
+        }
+
+        // Batch path: serial loop vs the worker pool, best datapath.
+        let m = Arc::clone(&model);
+        let (b, bn) = (&batch, batch_n);
+        let serial_stats = bencher.run(&format!("{name}@batch_serial"), move || {
+            m.infer_batch(b, bn).unwrap()
+        });
+        let m = Arc::clone(&model);
+        let (p, b, bn) = (&pool, &batch, batch_n);
+        let pool_stats = bencher.run(&format!("{name}@batch_parallel"), move || {
+            p.infer_batch(&m, b, bn).unwrap()
+        });
+        let serial_fps = serial_stats.throughput() * bn as f64;
+        let pool_fps = pool_stats.throughput() * bn as f64;
+        log.push_model(
+            name,
+            "batch_parallel",
+            &[
+                ("frames_per_s", pool_fps),
+                ("median_us", pool_stats.median() * 1e6),
+                ("speedup_vs_serial_x", pool_fps / serial_fps),
+                ("batch", bn as f64),
+                ("workers", pool_workers as f64),
+            ],
+        );
+
+        // Acceptance (full runs only; smoke fidelity is too low to
+        // judge):
+        // block partial-sparse was *designed* for lanes — the vector
+        // datapath must clear 1.5x its scalar walk on LeNet-5.
+        if !smoke && name == "block_partial_sparse" {
+            let vec_fps = {
+                let mut i = 0usize;
+                let m = Arc::clone(&model);
+                let frames = &imgs;
+                bencher
+                    .run(&format!("{name}@vector(accept)"), move || {
+                        i = (i + 1) % frames.len();
+                        m.forward_with(&frames[i], Datapath::Vector).unwrap()
+                    })
+                    .throughput()
+            };
+            assert!(
+                vec_fps >= 1.5 * scalar_fps,
+                "vectorised block partial-sparse must be >= 1.5x scalar \
+                 (got {:.2}x)",
+                vec_fps / scalar_fps
+            );
+        }
+        // The pool must beat the serial loop >= 1.5x at batch >= 8 when
+        // the host actually has cores to fan across.
+        if !smoke && cores >= 4 {
+            assert!(
+                pool_fps >= 1.5 * serial_fps,
+                "{name}: batch-parallel must be >= 1.5x serial on {cores} \
+                 cores (got {:.2}x)",
+                pool_fps / serial_fps
+            );
+        }
+    }
+
+    log.write("BENCH_kernels.json").unwrap();
+    println!("kernel_perf: wrote BENCH_kernels.json");
+}

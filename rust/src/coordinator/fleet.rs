@@ -44,8 +44,9 @@
 //! the single-model [`Server`](super::Server) uses — every admitted
 //! request of every tag receives a response.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
 
 use super::policy::{
     AutotuneConfig, Controller, Decision, FleetTelemetry, QueueAutotune, SloSpec,
@@ -163,13 +164,28 @@ struct Slot {
 /// admission gate, with a policy control loop and dynamic membership.
 /// See the [module docs](self) for the architecture.
 pub struct Fleet {
-    slots: Vec<Slot>,
+    /// Membership behind a read-write lock: the hot path (submit,
+    /// telemetry) takes cheap read guards, while `register`/`retire`
+    /// take the write guard only for the membership edit itself — plane
+    /// startup and the lossless retire drain both happen **outside** the
+    /// lock, so traffic to other tags never stalls behind them. Interior
+    /// mutability is what lets the serve loop, a churn script and the
+    /// background cadence thread share one `&Fleet`.
+    slots: RwLock<Vec<Slot>>,
     gate: Arc<AdmissionGate>,
     controller: Mutex<Controller>,
     /// Host-gate sheds attributed to tags that have since retired, kept
     /// so the gate-total vs per-tag reconciliation survives membership
     /// churn.
-    retired_shed: u64,
+    retired_shed: AtomicU64,
+}
+
+/// Live `(index, slot, plane)` triples of one locked slot vector.
+fn live<'a>(slots: &'a [Slot]) -> impl Iterator<Item = (usize, &'a Slot, &'a Plane)> {
+    slots
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| s.plane.as_ref().map(|p| (i, s, p)))
 }
 
 impl Fleet {
@@ -199,10 +215,10 @@ impl Fleet {
             slots.push(Slot { tag: spec.tag.clone(), plane: Some(plane), slo: spec.slo });
         }
         let fleet = Fleet {
-            slots,
+            slots: RwLock::new(slots),
             gate,
             controller: Mutex::new(controller),
-            retired_shed: 0,
+            retired_shed: AtomicU64::new(0),
         };
         // First control tick: applies the weighted budgets (and baselines
         // the autotuner) before any traffic arrives.
@@ -210,33 +226,32 @@ impl Fleet {
         Ok(fleet)
     }
 
-    /// Live slots, in slot order.
-    fn live(&self) -> impl Iterator<Item = (usize, &Slot, &Plane)> {
-        self.slots
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.plane.as_ref().map(|p| (i, s, p)))
+    /// The slot vector under a read guard (poisoning is unrecoverable
+    /// here — a panicked membership edit leaves no sane fleet).
+    fn slots(&self) -> RwLockReadGuard<'_, Vec<Slot>> {
+        self.slots.read().expect("fleet membership poisoned")
     }
 
     /// The model tags this fleet currently serves, in slot order.
     pub fn tags(&self) -> Vec<String> {
-        self.live().map(|(_, s, _)| s.tag.clone()).collect()
+        live(&self.slots()).map(|(_, s, _)| s.tag.clone()).collect()
     }
 
     /// Resolve a tag to its slot index (the one-time routing step);
     /// [`Error::UnknownModel`] if no live plane serves the tag.
     pub fn resolve(&self, tag: &str) -> Result<usize> {
-        self.live()
+        live(&self.slots())
             .find(|(_, s, _)| s.tag == tag)
             .map(|(i, _, _)| i)
             .ok_or_else(|| Error::unknown_model(tag))
     }
 
     /// A pre-resolved submit handle for `tag`: repeat submitters pay the
-    /// tag scan once here and never again on the hot path. Handles are
-    /// borrows, so membership changes (`&mut self`) invalidate them at
-    /// compile time; a raw index kept across a retire fails with
-    /// [`Error::UnknownModel`] at submit.
+    /// tag scan once here and never again on the hot path. Membership may
+    /// change under a live handle (`register`/`retire` take `&self`); a
+    /// handle whose tag retires fails each submit with
+    /// [`Error::UnknownModel`] — tombstone slots keep indices stable, so
+    /// it can never silently route to a neighbour.
     pub fn handle(&self, tag: &str) -> Result<TagHandle<'_>> {
         Ok(TagHandle { fleet: self, index: self.resolve(tag)? })
     }
@@ -256,10 +271,11 @@ impl Fleet {
     /// An out-of-range index is a config error; the index of a retired
     /// tag fails with [`Error::UnknownModel`].
     pub fn submit_at(&self, index: usize, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        let slot = self.slots.get(index).ok_or_else(|| {
+        let slots = self.slots();
+        let slot = slots.get(index).ok_or_else(|| {
             Error::config(format!(
                 "plane index {index} out of range for a {}-slot fleet",
-                self.slots.len()
+                slots.len()
             ))
         })?;
         slot.plane
@@ -280,15 +296,31 @@ impl Fleet {
     /// serves the tag or the backend cannot be built. A tag that retired
     /// earlier may be registered again — it gets a new slot; stale
     /// indices keep failing with [`Error::UnknownModel`].
-    pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
-        if self.live().any(|(_, s, _)| s.tag == spec.tag) {
-            return Err(Error::config(format!(
-                "duplicate model tag '{}': already live",
-                spec.tag
-            )));
+    ///
+    /// Takes `&self`: plane startup happens outside the membership lock,
+    /// so in-flight traffic on other tags never stalls behind a backend
+    /// build. Two racing registers of one tag are serialised by a
+    /// re-check under the write guard — the loser's plane is drained and
+    /// the loser gets the duplicate-tag error.
+    pub fn register(&self, spec: ModelSpec) -> Result<()> {
+        let duplicate =
+            || Error::config(format!("duplicate model tag '{}': already live", spec.tag));
+        // Fail fast without paying for a plane start (best-effort; the
+        // authoritative check is under the write guard below).
+        if live(&self.slots()).any(|(_, s, _)| s.tag == spec.tag) {
+            return Err(duplicate());
         }
         let plane = Plane::start(spec.plane_config(), Arc::clone(&self.gate))?;
-        self.slots.push(Slot { tag: spec.tag, plane: Some(plane), slo: spec.slo });
+        {
+            let mut slots = self.slots.write().expect("fleet membership poisoned");
+            if live(&slots).any(|(_, s, _)| s.tag == spec.tag) {
+                drop(slots);
+                let mut plane = plane;
+                plane.shutdown_impl();
+                return Err(duplicate());
+            }
+            slots.push(Slot { tag: spec.tag, plane: Some(plane), slo: spec.slo });
+        }
         let _ = self.tick();
         Ok(())
     }
@@ -300,16 +332,24 @@ impl Fleet {
     /// tombstone, so later submits against the tag or a stale index
     /// fail with [`Error::UnknownModel`]. Budgets rebalance over the
     /// remaining live tags.
-    pub fn retire(&mut self, tag: &str) -> Result<StatsSnapshot> {
-        let index = self.resolve(tag)?;
-        let mut plane = self.slots[index]
-            .plane
-            .take()
-            .expect("resolve returned a live slot");
+    ///
+    /// Takes `&self`: the write guard covers only the `plane.take()`
+    /// tombstoning; the drain itself runs outside the lock, so other
+    /// tags keep their full submit and drain paths while this one winds
+    /// down (the isolation property `tests/serving.rs` asserts).
+    pub fn retire(&self, tag: &str) -> Result<StatsSnapshot> {
+        let mut plane = {
+            let mut slots = self.slots.write().expect("fleet membership poisoned");
+            let index = live(&slots)
+                .find(|(_, s, _)| s.tag == tag)
+                .map(|(i, _, _)| i)
+                .ok_or_else(|| Error::unknown_model(tag))?;
+            slots[index].plane.take().expect("live() returned a live slot")
+        };
         plane.shutdown_impl();
         let snap = plane.snapshot();
         drop(plane);
-        self.retired_shed += snap.shed;
+        self.retired_shed.fetch_add(snap.shed, Ordering::Relaxed);
         let _ = self.tick();
         Ok(snap)
     }
@@ -327,8 +367,7 @@ impl Fleet {
             tick: 0, // stamped by the controller
             capacity: self.gate.capacity(),
             in_flight: self.gate.depth(),
-            per_tag: self
-                .live()
+            per_tag: live(&self.slots())
                 .map(|(_, s, plane)| TagTelemetry {
                     tag: s.tag.clone(),
                     slo: s.slo,
@@ -361,9 +400,9 @@ impl Fleet {
     /// tag that retired since the telemetry was sampled are dropped
     /// silently — the next tick sees the new membership.
     fn apply(&self, decision: &Decision) {
-        let plane_of = |tag: &str| {
-            self.live().find(|(_, s, _)| s.tag == tag).map(|(_, _, p)| p)
-        };
+        let slots = self.slots();
+        let plane_of =
+            |tag: &str| live(&slots).find(|(_, s, _)| s.tag == tag).map(|(_, _, p)| p);
         match decision {
             Decision::SetTagBudget { tag, budget } => {
                 if let Some(p) = plane_of(tag) {
@@ -397,12 +436,11 @@ impl Fleet {
     /// Snapshot every live plane's stats plus the shared-gate state.
     pub fn stats(&self) -> FleetSnapshot {
         FleetSnapshot {
-            per_model: self
-                .live()
+            per_model: live(&self.slots())
                 .map(|(_, s, p)| (s.tag.clone(), p.snapshot()))
                 .collect(),
             shed: self.gate.shed_total(),
-            shed_retired: self.retired_shed,
+            shed_retired: self.retired_shed.load(Ordering::Relaxed),
             in_flight: self.gate.depth(),
             capacity: self.gate.capacity(),
         }
@@ -410,9 +448,11 @@ impl Fleet {
 
     /// Graceful shutdown: drain every live plane deterministically (same
     /// lossless protocol as [`super::Server::shutdown`], applied per
-    /// plane) and return the final roll-up.
+    /// plane) and return the final roll-up. Consumes the fleet, so no
+    /// lock is contended (`get_mut` reaches the slots directly).
     pub fn shutdown(mut self) -> FleetSnapshot {
-        for slot in &mut self.slots {
+        let slots = self.slots.get_mut().expect("fleet membership poisoned");
+        for slot in slots.iter_mut() {
             if let Some(plane) = slot.plane.as_mut() {
                 plane.shutdown_impl();
             }
@@ -425,9 +465,10 @@ impl Fleet {
 /// routing scan already happened in [`Fleet::handle`], so every
 /// [`TagHandle::submit`] is a direct plane submit. Implements
 /// [`super::Submit`], so the open-loop load generator can drive a single
-/// fleet tag exactly like a standalone [`super::Server`]. Membership
-/// changes take `&mut Fleet`, so a handle can never outlive the
-/// membership it was resolved against.
+/// fleet tag exactly like a standalone [`super::Server`]. Membership may
+/// change while a handle is live (`register`/`retire` take `&self`); a
+/// handle to a retired tag fails each submit with
+/// [`Error::UnknownModel`] because tombstone slots keep indices stable.
 #[derive(Clone, Copy)]
 pub struct TagHandle<'a> {
     fleet: &'a Fleet,
@@ -435,9 +476,10 @@ pub struct TagHandle<'a> {
 }
 
 impl TagHandle<'_> {
-    /// The tag this handle routes to.
-    pub fn tag(&self) -> &str {
-        &self.fleet.slots[self.index].tag
+    /// The tag this handle routes to (owned: the membership table lives
+    /// behind a lock, so no borrow can escape it).
+    pub fn tag(&self) -> String {
+        self.fleet.slots()[self.index].tag.clone()
     }
 
     /// The resolved slot index.
@@ -655,7 +697,6 @@ mod tests {
         // The tick is idempotent once rebalance has run.
         assert!(fleet.tick().is_empty());
         // Retiring the SLO tag lifts every cap (no SLO left).
-        let mut fleet = fleet;
         let _ = fleet.retire("gold").unwrap();
         assert_eq!(fleet.stats().get("bulk").unwrap().budget_capacity, None);
         let _ = fleet.shutdown();
@@ -663,7 +704,7 @@ mod tests {
 
     #[test]
     fn register_and_retire_drive_membership() {
-        let mut fleet = two_tag_fleet(64);
+        let fleet = two_tag_fleet(64);
         // Pre-resolve beta, then retire alpha: beta's index must survive
         // (tombstones keep indices stable).
         let beta_idx = fleet.resolve("beta").unwrap();
@@ -690,6 +731,53 @@ mod tests {
         assert!(matches!(fleet.submit_at(0, image(0)), Err(Error::UnknownModel(_))));
         let snap = fleet.shutdown();
         assert_eq!(snap.per_model.len(), 2);
+    }
+
+    #[test]
+    fn membership_churn_races_safely_with_traffic() {
+        // `register`/`retire` take `&self` now: a churn thread and a
+        // submit loop share one `&Fleet` with no outer lock. The
+        // surviving tag must serve correctly throughout.
+        let fleet = two_tag_fleet(256);
+        std::thread::scope(|s| {
+            let f = &fleet;
+            let churn = s.spawn(move || {
+                let snap = f.retire("alpha").unwrap();
+                assert_eq!(snap.errors, 0);
+                f.register(ModelSpec::new("gamma", synthetic(0))).unwrap();
+            });
+            for i in 0..50u64 {
+                let resp = f.infer_blocking("beta", image(i % 10)).unwrap();
+                assert_eq!(resp.class(), (i % 10) as usize);
+            }
+            churn.join().unwrap();
+        });
+        assert_eq!(fleet.tags(), vec!["beta".to_string(), "gamma".to_string()]);
+        let _ = fleet.shutdown();
+    }
+
+    #[test]
+    fn racing_duplicate_registers_leave_one_live_plane() {
+        // Plane startup happens outside the membership lock, so two
+        // racing registers of one tag can both build a plane; the
+        // write-guard re-check must let exactly one through and drain
+        // the loser's plane.
+        let fleet = two_tag_fleet(64);
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let f = &fleet;
+                    s.spawn(move || f.register(ModelSpec::new("gamma", synthetic(0))))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        assert_eq!(ok, 1, "exactly one register must win: {results:?}");
+        assert_eq!(fleet.resolve("gamma").unwrap(), 2);
+        let resp = fleet.infer_blocking("gamma", image(6)).unwrap();
+        assert_eq!(resp.class(), 6);
+        let _ = fleet.shutdown();
     }
 
     #[test]

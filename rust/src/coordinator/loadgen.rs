@@ -413,7 +413,7 @@ pub struct Phase {
 /// (or leaving) a running host mid-run, driven by the same traffic model
 /// everything else uses.
 pub fn run_phases(
-    fleet: &mut Fleet,
+    fleet: &Fleet,
     phases: &[Phase],
     image_of: impl Fn(usize, u64) -> Vec<f32>,
     shed_mode: ShedMode,

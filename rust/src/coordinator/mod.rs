@@ -265,7 +265,10 @@ impl Plane {
                         Box::new(SyntheticRuntime::new(*per_image))
                     }
                     EngineBackend::Native { model } => {
-                        match NativeSparseBackend::new(Arc::clone(model)) {
+                        // Spare cores become per-engine batch-pool workers
+                        // (0 on saturated hosts → plain serial batches).
+                        let workers = shard::workers_per_engine(engines);
+                        match NativeSparseBackend::with_workers(Arc::clone(model), workers) {
                             Ok(b) => {
                                 let _ = ready.send(Ok(()));
                                 Box::new(b)

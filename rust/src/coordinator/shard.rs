@@ -30,6 +30,16 @@ const IDLE_PARK: Duration = Duration::from_millis(1);
 /// bounds total in-flight work, so this clears as soon as an engine pops).
 const FULL_BACKOFF: Duration = Duration::from_micros(50);
 
+/// Batch-pool workers each engine's backend gets: spread the host's cores
+/// across the plane's engines, keeping one core per engine for the engine
+/// thread itself. On a single-core host (or when engines already saturate
+/// the cores) this is 0 and the backend's batch path degenerates to the
+/// serial loop — no pool threads, no overhead.
+pub(crate) fn workers_per_engine(engines: usize) -> usize {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    (cores / engines.max(1)).saturating_sub(1)
+}
+
 /// The shared state of the sharded plane: one ring + unparker per engine.
 pub(crate) struct ExecutionPlane {
     queues: Vec<Arc<RingQueue<Batch>>>,
@@ -212,6 +222,18 @@ mod tests {
             });
         }
         Batch { requests }
+    }
+
+    #[test]
+    fn worker_sizing_leaves_a_core_per_engine() {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        // One engine: every spare core becomes a batch worker.
+        assert_eq!(workers_per_engine(1), cores - 1);
+        // Engines >= cores: no spare cores, serial batches.
+        assert_eq!(workers_per_engine(cores), 0);
+        assert_eq!(workers_per_engine(cores + 7), 0);
+        // Degenerate input is clamped, not a panic.
+        assert_eq!(workers_per_engine(0), cores - 1);
     }
 
     #[test]

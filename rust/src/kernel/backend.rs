@@ -5,20 +5,33 @@
 
 use std::sync::Arc;
 
-use super::CompiledModel;
+use super::{BatchPool, CompiledModel};
 use crate::runtime::{InferenceBackend, IMG, NUM_CLASSES};
 use crate::util::error::{Error, Result};
 
 /// Serving adapter for a [`CompiledModel`]. The model is immutable shared
 /// state, so engine replicas clone one `Arc` instead of re-compiling.
+/// With a [`BatchPool`] attached ([`NativeSparseBackend::with_workers`])
+/// batched requests fan across the pool's worker threads — bit-identical
+/// to the serial loop, just faster on multi-core hosts.
 pub struct NativeSparseBackend {
     model: Arc<CompiledModel>,
+    pool: Option<BatchPool>,
 }
 
 impl NativeSparseBackend {
     /// Wrap `model` for the request path; rejects models whose shape does
-    /// not match the serving contract (28x28 in, 10 logits out).
+    /// not match the serving contract (28x28 in, 10 logits out). Batches
+    /// run serially — see [`NativeSparseBackend::with_workers`].
     pub fn new(model: Arc<CompiledModel>) -> Result<Self> {
+        Self::with_workers(model, 0)
+    }
+
+    /// Like [`NativeSparseBackend::new`] but with `workers` pool threads
+    /// fanning each batch (the coordinator sizes this from the host core
+    /// count via `shard::workers_per_engine`). `workers == 0` keeps the
+    /// serial path with no pool threads at all.
+    pub fn with_workers(model: Arc<CompiledModel>, workers: usize) -> Result<Self> {
         if model.input_pixels() != IMG * IMG {
             return Err(Error::kernel(format!(
                 "model takes {} inputs, serving needs {}",
@@ -32,22 +45,34 @@ impl NativeSparseBackend {
                 model.output_len()
             )));
         }
-        Ok(NativeSparseBackend { model })
+        let pool = (workers > 0).then(|| BatchPool::new(workers));
+        Ok(NativeSparseBackend { model, pool })
     }
 
     /// The compiled model this backend serves.
     pub fn model(&self) -> &CompiledModel {
         &self.model
     }
+
+    /// Pool worker threads fanning batches (0 = serial).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, BatchPool::workers)
+    }
 }
 
 impl InferenceBackend for NativeSparseBackend {
     fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-        self.model.infer_batch(x, n)
+        match &self.pool {
+            Some(pool) => pool.infer_batch(&self.model, x, n),
+            None => self.model.infer_batch(x, n),
+        }
     }
 
     fn label(&self) -> String {
-        format!("native/{}", self.model.summary())
+        match self.workers() {
+            0 => format!("native/{}", self.model.summary()),
+            w => format!("native+{w}w/{}", self.model.summary()),
+        }
     }
 }
 
@@ -76,6 +101,28 @@ mod tests {
         assert_eq!(&logits[10..], &model.forward(&b).unwrap()[..]);
         assert!(be.label().starts_with("native/"));
         assert!(be.infer_padded(&x, 3).is_err());
+    }
+
+    #[test]
+    fn pooled_backend_matches_serial_backend() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 23);
+        p.prune_global(0.7, 0.05).unwrap();
+        let model =
+            Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap());
+        let serial = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        let pooled = NativeSparseBackend::with_workers(Arc::clone(&model), 3).unwrap();
+        assert_eq!(serial.workers(), 0);
+        assert_eq!(pooled.workers(), 3);
+        assert!(pooled.label().starts_with("native+3w/"));
+        for n in [1usize, 2, 8, 11] {
+            let x: Vec<f32> = (0..n).flat_map(SyntheticRuntime::stripe_image).collect();
+            assert_eq!(
+                pooled.infer_padded(&x, n).unwrap(),
+                serial.infer_padded(&x, n).unwrap(),
+                "batch {n} diverged between pooled and serial backends"
+            );
+        }
     }
 
     #[test]

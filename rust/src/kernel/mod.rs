@@ -58,6 +58,7 @@
 
 pub mod backend;
 pub mod pack;
+pub mod pool;
 
 use crate::folding::{FoldingConfig, LayerFold, Style};
 use crate::graph::{Graph, Op};
@@ -67,6 +68,74 @@ use crate::util::error::{Error, Result};
 use crate::weights::ModelParams;
 
 pub use backend::NativeSparseBackend;
+pub use pool::BatchPool;
+
+/// Independent accumulator lanes the chunked datapaths use (eight i32
+/// lanes: two SSE registers, one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Which inner-loop implementation the MAC stages execute.
+///
+/// Every datapath produces **bit-identical** logits: the i32 MAC
+/// accumulation is exact (wrapping two's-complement addition is
+/// associative and commutative), so reassociating the sums — lane
+/// chunking, multi-row fusion, pairwise `madd` — cannot change a single
+/// bit of any output. Tests assert this across all kernel flavours; see
+/// DESIGN.md §12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datapath {
+    /// Reference implementation: the straightforward scalar schedule
+    /// walk (one loop-carried accumulator per output channel).
+    Scalar,
+    /// Lane-chunked loops in stable Rust: dense rows are fused four at a
+    /// time per pass over the output channels, sparse dot products run on
+    /// [`LANES`] independent partial sums. The shapes are what LLVM's
+    /// autovectoriser keeps in vector registers — no intrinsics, no
+    /// `unsafe`, works on every target.
+    Vector,
+    /// Explicit `std::arch` x86_64 SSE2 intrinsics (`_mm_madd_epi16` for
+    /// sparse dot products, widening `mullo` for dense rows). Only
+    /// compiled behind the off-by-default `simd` cargo feature; SSE2 is
+    /// part of the x86_64 baseline, so no runtime detection is needed.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Simd,
+}
+
+impl Datapath {
+    /// The fastest datapath compiled into this build — what
+    /// [`CompiledModel::forward`] executes by default.
+    pub fn best() -> Datapath {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            Datapath::Simd
+        }
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        {
+            Datapath::Vector
+        }
+    }
+
+    /// Every datapath compiled into this build, reference first (the
+    /// grid benches and bit-identity tests iterate this).
+    pub fn all() -> Vec<Datapath> {
+        vec![
+            Datapath::Scalar,
+            Datapath::Vector,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Datapath::Simd,
+        ]
+    }
+
+    /// Short label for bench rows and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Datapath::Scalar => "scalar",
+            Datapath::Vector => "vector",
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Datapath::Simd => "simd",
+        }
+    }
+}
 
 /// Quantisation operating point of a compiled model (default: the paper's
 /// W4A4 LeNet-5 point).
@@ -211,7 +280,18 @@ impl MacStage {
         self.out_pixels() * self.weights
     }
 
-    fn accumulate(&self, act: &[u8], base: usize, acc: &mut [i32]) {
+    fn accumulate(&self, act: &[u8], base: usize, acc: &mut [i32], dp: Datapath) {
+        match dp {
+            Datapath::Scalar => self.accumulate_scalar(act, base, acc),
+            Datapath::Vector => self.accumulate_vector(act, base, acc),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Datapath::Simd => self.accumulate_simd(act, base, acc),
+        }
+    }
+
+    /// Reference scalar schedule walk (the datapath every other
+    /// implementation must match bit for bit).
+    fn accumulate_scalar(&self, act: &[u8], base: usize, acc: &mut [i32]) {
         match &self.kernel {
             Kernel::Dense { codes, rel } => {
                 acc.fill(0);
@@ -235,6 +315,72 @@ impl MacStage {
         }
     }
 
+    /// Lane-chunked stable-Rust form. Dense: four schedule rows fuse into
+    /// one pass over the output channels (4× fewer `acc` traversals, four
+    /// independent products per channel). Sparse: each channel's dot
+    /// product runs on [`LANES`] independent partial sums, removing the
+    /// loop-carried dependence of the scalar walk (the gathers stay
+    /// scalar — schedule offsets are irregular by design). Sums are
+    /// reassociated only, so results match scalar exactly.
+    fn accumulate_vector(&self, act: &[u8], base: usize, acc: &mut [i32]) {
+        match &self.kernel {
+            Kernel::Dense { codes, rel } => {
+                acc.fill(0);
+                let cout = self.cout;
+                let fused = rel.len() / 4 * 4;
+                for r in (0..fused).step_by(4) {
+                    let a0 = act[base + rel[r] as usize] as i32;
+                    let a1 = act[base + rel[r + 1] as usize] as i32;
+                    let a2 = act[base + rel[r + 2] as usize] as i32;
+                    let a3 = act[base + rel[r + 3] as usize] as i32;
+                    let (row0, rest) = codes[r * cout..(r + 4) * cout].split_at(cout);
+                    let (row1, rest) = rest.split_at(cout);
+                    let (row2, row3) = rest.split_at(cout);
+                    for (c, slot) in acc.iter_mut().enumerate() {
+                        *slot += row0[c] as i32 * a0
+                            + row1[c] as i32 * a1
+                            + row2[c] as i32 * a2
+                            + row3[c] as i32 * a3;
+                    }
+                }
+                for (r, &off) in rel.iter().enumerate().skip(fused) {
+                    let a = act[base + off as usize] as i32;
+                    let row = &codes[r * cout..(r + 1) * cout];
+                    for (c, slot) in acc.iter_mut().enumerate() {
+                        *slot += row[c] as i32 * a;
+                    }
+                }
+            }
+            Kernel::Sparse { ptr, rel, code, .. } => {
+                for (c, slot) in acc.iter_mut().enumerate() {
+                    let lo = ptr[c] as usize;
+                    let hi = ptr[c + 1] as usize;
+                    *slot = dot_sparse_lanes(&code[lo..hi], &rel[lo..hi], act, base);
+                }
+            }
+        }
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn accumulate_simd(&self, act: &[u8], base: usize, acc: &mut [i32]) {
+        match &self.kernel {
+            Kernel::Dense { codes, rel } => {
+                acc.fill(0);
+                for (r, &off) in rel.iter().enumerate() {
+                    let a = act[base + off as usize] as i32;
+                    simd::dense_row_madd(&codes[r * self.cout..(r + 1) * self.cout], a, acc);
+                }
+            }
+            Kernel::Sparse { ptr, rel, code, .. } => {
+                for (c, slot) in acc.iter_mut().enumerate() {
+                    let lo = ptr[c] as usize;
+                    let hi = ptr[c + 1] as usize;
+                    *slot = simd::dot_sparse(&code[lo..hi], &rel[lo..hi], act, base);
+                }
+            }
+        }
+    }
+
     fn patch_base(&self, oh: usize, ow: usize) -> usize {
         match self.op {
             Op::Conv => (oh * self.ifm + ow) * self.cin,
@@ -242,12 +388,12 @@ impl MacStage {
         }
     }
 
-    fn run_hidden(&self, act: &[u8], qmax: i32) -> Vec<u8> {
+    fn run_hidden(&self, act: &[u8], qmax: i32, dp: Datapath) -> Vec<u8> {
         let mut out = vec![0u8; self.out_pixels() * self.cout];
         let mut acc = vec![0i32; self.cout];
         for oh in 0..self.ofm {
             for ow in 0..self.ofm {
-                self.accumulate(act, self.patch_base(oh, ow), &mut acc);
+                self.accumulate(act, self.patch_base(oh, ow), &mut acc, dp);
                 let o = (oh * self.ofm + ow) * self.cout;
                 for c in 0..self.cout {
                     let v = (acc[c] as f32 * self.mul[c] + self.add[c]).round() as i32;
@@ -258,12 +404,12 @@ impl MacStage {
         out
     }
 
-    fn run_output(&self, act: &[u8]) -> Vec<f32> {
+    fn run_output(&self, act: &[u8], dp: Datapath) -> Vec<f32> {
         let mut out = vec![0f32; self.out_pixels() * self.cout];
         let mut acc = vec![0i32; self.cout];
         for oh in 0..self.ofm {
             for ow in 0..self.ofm {
-                self.accumulate(act, self.patch_base(oh, ow), &mut acc);
+                self.accumulate(act, self.patch_base(oh, ow), &mut acc, dp);
                 let o = (oh * self.ofm + ow) * self.cout;
                 for c in 0..self.cout {
                     out[o + c] = acc[c] as f32 * self.mul[c] + self.add[c];
@@ -271,6 +417,102 @@ impl MacStage {
             }
         }
         out
+    }
+}
+
+/// [`LANES`]-way chunked sparse dot product (the [`Datapath::Vector`]
+/// inner loop): multiply-adds land in independent partial sums instead of
+/// serialising on one accumulator. i32 addition is associative, so the
+/// folded lane sums equal the scalar result exactly.
+#[inline]
+fn dot_sparse_lanes(code: &[i8], rel: &[u32], act: &[u8], base: usize) -> i32 {
+    let mut lanes = [0i32; LANES];
+    let mut code_chunks = code.chunks_exact(LANES);
+    let mut rel_chunks = rel.chunks_exact(LANES);
+    for (cs, rs) in (&mut code_chunks).zip(&mut rel_chunks) {
+        for l in 0..LANES {
+            lanes[l] += cs[l] as i32 * act[base + rs[l] as usize] as i32;
+        }
+    }
+    let mut s: i32 = lanes.iter().sum();
+    for (&w, &r) in code_chunks.remainder().iter().zip(rel_chunks.remainder()) {
+        s += w as i32 * act[base + r as usize] as i32;
+    }
+    s
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    //! SSE2 intrinsics datapath (`simd` feature). SSE2 is part of the
+    //! x86_64 baseline, so no runtime feature detection is needed. Every
+    //! i16 product fits: |code| ≤ 127 (W8 worst case) and activation
+    //! codes ≤ 255 (A8 worst case) give |product| ≤ 32385 < 32767, and
+    //! accumulation is exact in i32 — results are bit-identical to the
+    //! scalar datapath.
+
+    use std::arch::x86_64::*;
+
+    /// Sparse dot product over 8-entry chunks: scalar gathers fill two
+    /// i16 registers, `_mm_madd_epi16` multiplies and pair-sums into
+    /// four i32 lanes, which accumulate exactly; the tail runs scalar.
+    pub fn dot_sparse(code: &[i8], rel: &[u32], act: &[u8], base: usize) -> i32 {
+        let chunks = code.len() / 8;
+        // SAFETY: SSE2 is unconditionally available on x86_64; all loads
+        // and stores go through 16-byte stack arrays of exactly 8 i16 /
+        // 4 i32.
+        let mut s = unsafe {
+            let mut acc = _mm_setzero_si128();
+            for k in 0..chunks {
+                let o = k * 8;
+                let mut w = [0i16; 8];
+                let mut a = [0i16; 8];
+                for l in 0..8 {
+                    w[l] = code[o + l] as i16;
+                    a[l] = act[base + rel[o + l] as usize] as i16;
+                }
+                let wv = _mm_loadu_si128(w.as_ptr() as *const __m128i);
+                let av = _mm_loadu_si128(a.as_ptr() as *const __m128i);
+                acc = _mm_add_epi32(acc, _mm_madd_epi16(wv, av));
+            }
+            let mut out = [0i32; 4];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, acc);
+            out.iter().sum::<i32>()
+        };
+        for j in chunks * 8..code.len() {
+            s += code[j] as i32 * act[base + rel[j] as usize] as i32;
+        }
+        s
+    }
+
+    /// Dense row update `acc[c] += row[c] * a` over 8 channels per pass:
+    /// codes sign-extend i8→i16, multiply against the broadcast
+    /// activation in i16 (products fit, see module docs), widen to i32
+    /// with the duplicate-and-shift idiom, and accumulate in place.
+    pub fn dense_row_madd(row: &[i8], a: i32, acc: &mut [i32]) {
+        let cout = acc.len();
+        let chunks = cout / 8;
+        // SAFETY: SSE2 baseline; every pointer stays within `row` /
+        // `acc` (o + 8 ≤ cout by construction) and uses unaligned ops.
+        unsafe {
+            let av = _mm_set1_epi16(a as i16);
+            for k in 0..chunks {
+                let o = k * 8;
+                // 8 i8 codes → 8 sign-extended i16 lanes.
+                let w8 = _mm_loadl_epi64(row.as_ptr().add(o) as *const __m128i);
+                let w16 = _mm_srai_epi16(_mm_unpacklo_epi8(w8, w8), 8);
+                let p = _mm_mullo_epi16(w16, av);
+                // i16 products → i32 (duplicate + arithmetic shift).
+                let lo = _mm_srai_epi32(_mm_unpacklo_epi16(p, p), 16);
+                let hi = _mm_srai_epi32(_mm_unpackhi_epi16(p, p), 16);
+                let acc_lo = acc.as_mut_ptr().add(o) as *mut __m128i;
+                _mm_storeu_si128(acc_lo, _mm_add_epi32(_mm_loadu_si128(acc_lo), lo));
+                let acc_hi = acc.as_mut_ptr().add(o + 4) as *mut __m128i;
+                _mm_storeu_si128(acc_hi, _mm_add_epi32(_mm_loadu_si128(acc_hi), hi));
+            }
+        }
+        for c in chunks * 8..cout {
+            acc[c] += row[c] as i32 * a;
+        }
     }
 }
 
@@ -335,6 +577,7 @@ pub struct CompiledModel {
     stages: Vec<Stage>,
     input_pixels: usize,
     output_len: usize,
+    datapath: Datapath,
 }
 
 impl CompiledModel {
@@ -494,6 +737,7 @@ impl CompiledModel {
             stages,
             input_pixels: first.ifm * first.ifm * first.cin,
             output_len: g.nodes[last].out_elements(),
+            datapath: Datapath::best(),
         })
     }
 
@@ -605,9 +849,31 @@ impl CompiledModel {
         )
     }
 
+    /// The datapath [`CompiledModel::forward`] and
+    /// [`CompiledModel::infer_batch`] execute (defaults to
+    /// [`Datapath::best`]).
+    pub fn datapath(&self) -> Datapath {
+        self.datapath
+    }
+
+    /// Pin the default datapath (builder-style; benches and tests pin
+    /// [`Datapath::Scalar`] to measure the reference, serving keeps
+    /// [`Datapath::best`]). Results never change, only speed.
+    pub fn with_datapath(mut self, dp: Datapath) -> Self {
+        self.datapath = dp;
+        self
+    }
+
     /// Run one frame: `image` is the flattened NHWC input in
     /// [0, input_ceil]; returns `output_len` f32 logits.
     pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
+        self.forward_with(image, self.datapath)
+    }
+
+    /// [`CompiledModel::forward`] on an explicit datapath. Bit-identical
+    /// across datapaths (asserted in tests); exists so benches can put
+    /// scalar and vector side by side and tests can pin the reference.
+    pub fn forward_with(&self, image: &[f32], dp: Datapath) -> Result<Vec<f32>> {
         if image.len() != self.input_pixels {
             return Err(Error::kernel(format!(
                 "input length {} != {}",
@@ -626,9 +892,9 @@ impl CompiledModel {
                 Stage::Pool(p) => act = p.run(&act),
                 Stage::Mac(m) => {
                     if m.is_output {
-                        return Ok(m.run_output(&act));
+                        return Ok(m.run_output(&act, dp));
                     }
-                    act = m.run_hidden(&act, qmax);
+                    act = m.run_hidden(&act, qmax, dp);
                 }
             }
         }
@@ -642,7 +908,14 @@ impl CompiledModel {
     }
 
     /// Run `n` frames packed into `x`; returns `n * output_len` logits.
+    /// Serial frame loop — [`BatchPool::infer_batch`] fans the same
+    /// computation across worker threads with bit-identical results.
     pub fn infer_batch(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.infer_batch_with(x, n, self.datapath)
+    }
+
+    /// [`CompiledModel::infer_batch`] on an explicit datapath.
+    pub fn infer_batch_with(&self, x: &[f32], n: usize, dp: Datapath) -> Result<Vec<f32>> {
         let px = self.input_pixels;
         if x.len() != n * px {
             return Err(Error::kernel(format!(
@@ -652,7 +925,7 @@ impl CompiledModel {
         }
         let mut out = Vec::with_capacity(n * self.output_len);
         for i in 0..n {
-            out.extend(self.forward(&x[i * px..(i + 1) * px])?);
+            out.extend(self.forward_with(&x[i * px..(i + 1) * px], dp)?);
         }
         Ok(out)
     }
@@ -853,6 +1126,90 @@ mod tests {
             assert!(mac.packed_codes.len() < code.len());
         }
         assert!(m.runtime_bytes() > 0);
+    }
+
+    #[test]
+    fn datapaths_are_bit_identical_across_flavours() {
+        // The tentpole identity guarantee: every compiled-in datapath
+        // (scalar reference, lane-chunked vector, intrinsics when the
+        // `simd` feature is on) produces bit-identical logits on every
+        // kernel flavour. LeNet-5 shapes exercise the lane remainders:
+        // cout 6 is no multiple of the dense 4-row fuse width, and
+        // per-channel nnz counts are arbitrary relative to LANES.
+        let (g, p) = lenet_params(12, Some(0.7));
+        let spec = KernelSpec::default();
+        let mut cfg = FoldingConfig::default();
+        for n in g.mac_nodes() {
+            // Largest lane granularity dividing fold_in (folding checks
+            // divisibility; the datapaths themselves need no alignment).
+            let simd = [8usize, 5, 4, 2]
+                .into_iter()
+                .find(|s| n.fold_in() % s == 0)
+                .unwrap_or(1);
+            cfg.set(
+                &n.name,
+                LayerFold { pe: 1, simd, style: Style::PartialSparse, sparsity: 0.5 },
+            );
+        }
+        let models = [
+            CompiledModel::compile_dense(&g, &p, &spec).unwrap(),
+            CompiledModel::compile_sparse(&g, &p, &spec).unwrap(),
+            CompiledModel::compile(&g, &p, &spec, &cfg).unwrap(),
+        ];
+        for m in &models {
+            for img in images(3) {
+                let reference = m.forward_with(&img, Datapath::Scalar).unwrap();
+                for dp in Datapath::all() {
+                    assert_eq!(
+                        m.forward_with(&img, dp).unwrap(),
+                        reference,
+                        "{} datapath diverged on {}",
+                        dp.label(),
+                        m.model
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn datapath_selection_and_labels() {
+        let all = Datapath::all();
+        assert_eq!(all[0], Datapath::Scalar);
+        assert!(all.contains(&Datapath::best()));
+        assert_eq!(Datapath::Scalar.label(), "scalar");
+        assert_eq!(Datapath::Vector.label(), "vector");
+        // A compiled model defaults to the best datapath and can be
+        // pinned without changing results.
+        let (g, p) = lenet_params(13, Some(0.6));
+        let m = CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap();
+        assert_eq!(m.datapath(), Datapath::best());
+        let img = SyntheticRuntime::stripe_image(5);
+        let fast = m.forward(&img).unwrap();
+        let pinned = m.clone().with_datapath(Datapath::Scalar);
+        assert_eq!(pinned.datapath(), Datapath::Scalar);
+        assert_eq!(pinned.forward(&img).unwrap(), fast);
+    }
+
+    #[test]
+    fn vector_datapath_handles_non_lane_multiple_mlp_shapes() {
+        // fold_in 19 / 13 and cout 13 / 10: nothing is a multiple of the
+        // 4-row dense fuse width or the 8-wide sparse lanes, so every
+        // remainder loop runs.
+        let g = mlp(19, 13, 10);
+        let mut p = ModelParams::synthetic(&g, 14);
+        p.prune_global(0.4, 0.1).unwrap();
+        let spec = KernelSpec::default();
+        for m in [
+            CompiledModel::compile_dense(&g, &p, &spec).unwrap(),
+            CompiledModel::compile_sparse(&g, &p, &spec).unwrap(),
+        ] {
+            let x: Vec<f32> = (0..19).map(|i| (i % 5) as f32 / 5.0).collect();
+            let reference = m.forward_with(&x, Datapath::Scalar).unwrap();
+            for dp in Datapath::all() {
+                assert_eq!(m.forward_with(&x, dp).unwrap(), reference, "{}", dp.label());
+            }
+        }
     }
 
     #[test]

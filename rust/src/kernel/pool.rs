@@ -1,0 +1,269 @@
+//! [`BatchPool`]: intra-engine batch data-parallelism for baked kernels.
+//!
+//! One serving engine owns one pool. A batch of `n` frames is split into
+//! `workers + 1` contiguous chunks; the caller executes chunk 0 inline
+//! (so a pool is never slower than serial on tiny batches) while
+//! persistent worker threads pull the remaining chunks from a bounded
+//! [`RingQueue`] — the same first-party substrate the sharded execution
+//! plane is built on (crossbeam/rayon are unavailable offline).
+//!
+//! ## Identity guarantee
+//!
+//! Chunks are executed by [`CompiledModel::infer_batch_with`], i.e. the
+//! exact serial frame loop, and reassembled in chunk order. Frames never
+//! interact (the i32 MAC datapath is per-frame), so the concatenation is
+//! bit-identical to a serial [`CompiledModel::infer_batch`] — asserted in
+//! `tests/kernel_batch.rs` alongside the scalar/vector datapath identity.
+//!
+//! ## Failure semantics
+//!
+//! Any chunk error (only possible via length-contract violations today)
+//! fails the whole batch with the lowest-indexed chunk's error, matching
+//! the serial loop's first-error behaviour. A full ring never deadlocks:
+//! the dispatching caller runs the chunk inline instead of waiting.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{CompiledModel, Datapath};
+use crate::util::error::Result;
+use crate::util::ring::{PopError, PushError, RingQueue};
+
+/// Batches below this many frames skip the pool entirely: the dispatch +
+/// wakeup cost dwarfs a couple of LeNet forwards.
+const MIN_PARALLEL_BATCH: usize = 4;
+
+/// One dispatched chunk of a batch. The input is shared (`Arc`) so
+/// dispatch copies the batch once, not per worker.
+struct Job {
+    model: Arc<CompiledModel>,
+    input: Arc<Vec<f32>>,
+    /// Frame range `[start, end)` of the parent batch.
+    start: usize,
+    end: usize,
+    dp: Datapath,
+    /// Chunk index + per-chunk logits, sent back to the dispatcher.
+    tx: mpsc::Sender<(usize, Result<Vec<f32>>)>,
+    chunk: usize,
+}
+
+impl Job {
+    fn run(self) {
+        let px = self.model.input_pixels();
+        let x = &self.input[self.start * px..self.end * px];
+        let out = self.model.infer_batch_with(x, self.end - self.start, self.dp);
+        // The dispatcher may have given up on the batch (first error
+        // wins); a dead receiver is not a worker error.
+        let _ = self.tx.send((self.chunk, out));
+    }
+}
+
+/// A persistent worker pool that fans [`CompiledModel::infer_batch`]
+/// chunks across threads. `workers == 0` degenerates to the serial loop
+/// (the single-core container case), so callers never special-case.
+pub struct BatchPool {
+    jobs: Arc<RingQueue<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Batches that actually fanned out (observability for benches).
+    dispatched: AtomicUsize,
+}
+
+impl BatchPool {
+    /// Spawn `workers` threads pulling from a bounded ring. Zero workers
+    /// is valid and means "always serial".
+    pub fn new(workers: usize) -> Self {
+        // Capacity == workers: a dispatch pushes at most `workers` jobs,
+        // so `Full` is impossible in steady state; the bound exists to
+        // keep the inline-on-full fallback honest rather than to queue.
+        let jobs: Arc<RingQueue<Job>> = Arc::new(RingQueue::new(workers.max(1)));
+        let handles = (0..workers)
+            .map(|i| {
+                let jobs = Arc::clone(&jobs);
+                std::thread::Builder::new()
+                    .name(format!("batch-worker-{i}"))
+                    .spawn(move || loop {
+                        match jobs.pop_timeout(Duration::from_millis(50)) {
+                            Ok(job) => job.run(),
+                            Err(PopError::Empty) => continue,
+                            Err(PopError::Closed) => break,
+                        }
+                    })
+                    .expect("spawn batch worker")
+            })
+            .collect();
+        BatchPool { jobs, handles, dispatched: AtomicUsize::new(0) }
+    }
+
+    /// Worker threads owned by this pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Batches that took the parallel path (vs the serial fallback).
+    pub fn dispatched(&self) -> usize {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// [`CompiledModel::infer_batch`] fanned across the pool: `n` frames
+    /// packed in `x`, `n * output_len` logits out, bit-identical to the
+    /// serial loop. Small batches and worker-less pools run serially.
+    pub fn infer_batch(&self, model: &Arc<CompiledModel>, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let workers = self.workers();
+        if workers == 0 || n < MIN_PARALLEL_BATCH || n < workers + 1 {
+            return model.infer_batch(x, n);
+        }
+        let px = model.input_pixels();
+        if x.len() != n * px {
+            // Fail the contract before copying the batch; the serial
+            // path produces the canonical error message.
+            return model.infer_batch(x, n);
+        }
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+
+        // `workers + 1` contiguous chunks, sized within one frame of each
+        // other; the caller keeps chunk 0 so every core works.
+        let chunks = workers + 1;
+        let base = n / chunks;
+        let extra = n % chunks;
+        let bounds: Vec<(usize, usize)> = (0..chunks)
+            .scan(0usize, |start, c| {
+                let len = base + usize::from(c < extra);
+                let b = (*start, *start + len);
+                *start += len;
+                Some(b)
+            })
+            .collect();
+
+        let input = Arc::new(x.to_vec());
+        let (tx, rx) = mpsc::channel();
+        let mut inline = Vec::new();
+        for (chunk, &(start, end)) in bounds.iter().enumerate().skip(1) {
+            let job = Job {
+                model: Arc::clone(model),
+                input: Arc::clone(&input),
+                start,
+                end,
+                dp: model.datapath(),
+                tx: tx.clone(),
+                chunk,
+            };
+            // Full/Closed cannot strand the batch: run the chunk on the
+            // dispatching thread instead.
+            if let Err(PushError::Full(job) | PushError::Closed(job)) = self.jobs.try_push(job)
+            {
+                inline.push(job);
+            }
+        }
+        drop(tx);
+
+        // Chunk 0 inline on the dispatcher, then any overflow chunks.
+        let (s0, e0) = bounds[0];
+        let mut parts: Vec<Option<Result<Vec<f32>>>> = (0..chunks).map(|_| None).collect();
+        parts[0] = Some(model.infer_batch_with(
+            &x[s0 * px..e0 * px],
+            e0 - s0,
+            model.datapath(),
+        ));
+        for job in inline {
+            let chunk = job.chunk;
+            let px = job.model.input_pixels();
+            let out = job.model.infer_batch_with(
+                &job.input[job.start * px..job.end * px],
+                job.end - job.start,
+                job.dp,
+            );
+            parts[chunk] = Some(out);
+        }
+        for (chunk, out) in rx {
+            parts[chunk] = Some(out);
+        }
+
+        // Reassemble in chunk order; the lowest-indexed error wins so the
+        // result matches what the serial loop would have reported first.
+        let mut logits = Vec::with_capacity(n * model.output_len());
+        for part in parts {
+            logits.extend(part.expect("every chunk reports exactly once")?);
+        }
+        Ok(logits)
+    }
+}
+
+impl Drop for BatchPool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::kernel::KernelSpec;
+    use crate::runtime::SyntheticRuntime;
+    use crate::weights::ModelParams;
+
+    fn model(seed: u64) -> Arc<CompiledModel> {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, seed);
+        p.prune_global(0.7, 0.05).unwrap();
+        Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap())
+    }
+
+    fn batch(m: &CompiledModel, n: usize) -> Vec<f32> {
+        (0..n)
+            .flat_map(|i| SyntheticRuntime::stripe_image(i % 10))
+            .take(n * m.input_pixels())
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_serial_across_batch_sizes() {
+        let m = model(31);
+        let pool = BatchPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for n in [1usize, 3, 4, 5, 8, 13] {
+            let x = batch(&m, n);
+            let serial = m.infer_batch(&x, n).unwrap();
+            let pooled = pool.infer_batch(&m, &x, n).unwrap();
+            assert_eq!(pooled, serial, "batch {n} diverged");
+        }
+        // Batches >= MIN_PARALLEL_BATCH and >= workers + 1 fan out.
+        assert!(pool.dispatched() >= 3);
+    }
+
+    #[test]
+    fn zero_worker_pool_is_serial() {
+        let m = model(32);
+        let pool = BatchPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let x = batch(&m, 8);
+        assert_eq!(
+            pool.infer_batch(&m, &x, 8).unwrap(),
+            m.infer_batch(&x, 8).unwrap()
+        );
+        assert_eq!(pool.dispatched(), 0, "no workers, no dispatch");
+    }
+
+    #[test]
+    fn length_contract_errors_propagate() {
+        let m = model(33);
+        let pool = BatchPool::new(2);
+        let x = batch(&m, 8);
+        assert!(pool.infer_batch(&m, &x[..100], 8).is_err());
+        assert!(pool.infer_batch(&m, &x, 9).is_err());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let m = model(34);
+        let pool = BatchPool::new(2);
+        let x = batch(&m, 8);
+        pool.infer_batch(&m, &x, 8).unwrap();
+        drop(pool); // must not hang: close() wakes the pop_timeout loop
+    }
+}

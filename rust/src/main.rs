@@ -40,7 +40,8 @@ fn main() {
     std::process::exit(code);
 }
 
-const GLOBAL_USAGE: &str = "logicsparse <dse|table1|fig2|sim|serve|pareto> [options]
+const GLOBAL_USAGE: &str =
+    "logicsparse <dse|table1|fig2|sim|serve|pareto|bench-compare> [options]
 Run `logicsparse <cmd> --help` for per-command options.";
 
 fn run(args: &[String]) -> Result<()> {
@@ -56,6 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "sim" => cmd_sim(rest),
         "serve" => cmd_serve(rest),
         "pareto" => cmd_pareto(rest),
+        "bench-compare" => cmd_bench_compare(rest),
         "--help" | "-h" | "help" => {
             println!("{GLOBAL_USAGE}");
             Ok(())
@@ -515,7 +517,7 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     };
 
     let autotune_on = pcfg.autotune.is_some();
-    let mut fleet = Fleet::start(FleetOptions {
+    let fleet = Fleet::start(FleetOptions {
         models,
         admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
         autotune: pcfg.autotune,
@@ -591,54 +593,84 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     // re-registration refreshes the index).
     let mut slot_of: Vec<usize> = (0..n_tags).collect();
     let t0 = std::time::Instant::now();
-    for i in 0..n_req {
-        // The live-membership demo: retire the churn tag at the halfway
-        // point (its in-flight responses keep arriving — the drain is
-        // lossless) and bring it back at three quarters.
-        if let Some(spec) = &churn {
-            if i == n_req / 2 {
-                let snap = fleet.retire(&spec.tag)?;
-                println!(
-                    "[churn] retired '{}' at request {i}: {}",
-                    spec.tag,
-                    snap.render()
-                );
-            } else if i == n_req * 3 / 4 {
-                fleet.register(spec.clone())?;
-                let k = route.iter().position(|t| t == &spec.tag).expect("churn tag routed");
-                slot_of[k] = fleet.resolve(&spec.tag)?;
-                println!("[churn] re-registered '{}' at request {i}", spec.tag);
-            }
-        }
-        if autotune_on && i % 256 == 255 {
-            for d in fleet.tick() {
-                println!("[policy] {d:?}");
-            }
-        }
-        // Round-robin across tags so every plane sees the stream.
-        let k = i % n_tags;
-        let j = i % n_imgs;
-        let rx = loop {
-            match fleet.submit_at(slot_of[k], imgs[j * px..(j + 1) * px].to_vec()) {
-                Ok(rx) => break Some(rx),
-                Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
-                Err(logicsparse::Error::UnknownModel(_)) => {
-                    // The churn tag is retired right now; skip its slot.
-                    skipped_retired += 1;
-                    break None;
+    // Policy cadence: with autotuning on, a background thread ticks the
+    // control loop on a fixed period instead of the request loop pausing
+    // every 256 submits. `Fleet::tick` snapshots telemetry on the calling
+    // (cadence) thread and the policies are pure functions of that
+    // snapshot sequence, so decisions stay replay-deterministic — only
+    // *when* a snapshot is taken moved off the hot path.
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let served = std::thread::scope(|s| -> Result<()> {
+        use std::sync::atomic::Ordering;
+        if autotune_on {
+            let (fleet, stop) = (&fleet, &stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for d in fleet.tick() {
+                        println!("[policy] {d:?}");
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
                 }
-                Err(e) => return Err(e),
+            });
+        }
+        // Run the request loop in a closure so every exit path — errors
+        // included — still stops the cadence thread before the scope
+        // joins it.
+        let run = (|| -> Result<()> {
+            for i in 0..n_req {
+                // The live-membership demo: retire the churn tag at the
+                // halfway point (its in-flight responses keep arriving —
+                // the drain is lossless) and bring it back at three
+                // quarters.
+                if let Some(spec) = &churn {
+                    if i == n_req / 2 {
+                        let snap = fleet.retire(&spec.tag)?;
+                        println!(
+                            "[churn] retired '{}' at request {i}: {}",
+                            spec.tag,
+                            snap.render()
+                        );
+                    } else if i == n_req * 3 / 4 {
+                        fleet.register(spec.clone())?;
+                        let k = route
+                            .iter()
+                            .position(|t| t == &spec.tag)
+                            .expect("churn tag routed");
+                        slot_of[k] = fleet.resolve(&spec.tag)?;
+                        println!("[churn] re-registered '{}' at request {i}", spec.tag);
+                    }
+                }
+                // Round-robin across tags so every plane sees the stream.
+                let k = i % n_tags;
+                let j = i % n_imgs;
+                let rx = loop {
+                    match fleet.submit_at(slot_of[k], imgs[j * px..(j + 1) * px].to_vec()) {
+                        Ok(rx) => break Some(rx),
+                        Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
+                        Err(logicsparse::Error::UnknownModel(_)) => {
+                            // The churn tag is retired right now; skip
+                            // its slot.
+                            skipped_retired += 1;
+                            break None;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                if let Some(rx) = rx {
+                    pending.push((k, rx, j));
+                }
+                // Keep a bounded in-flight window, like a real client
+                // pool.
+                if pending.len() >= 256 {
+                    drain(&mut pending, &mut correct, &mut checked)?;
+                }
             }
-        };
-        if let Some(rx) = rx {
-            pending.push((k, rx, j));
-        }
-        // Keep a bounded in-flight window, like a real client pool.
-        if pending.len() >= 256 {
-            drain(&mut pending, &mut correct, &mut checked)?;
-        }
-    }
-    drain(&mut pending, &mut correct, &mut checked)?;
+            drain(&mut pending, &mut correct, &mut checked)
+        })();
+        stop.store(true, Ordering::Relaxed);
+        run
+    });
+    served?;
     let wall = t0.elapsed().as_secs_f64();
 
     let snap = fleet.shutdown();
@@ -663,6 +695,121 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
         wall,
         n_req as f64 / wall
     );
+    Ok(())
+}
+
+/// Diff the `BENCH_*.json` files of the current run against the
+/// committed `BENCH_baseline.json`, flagging drift beyond a noise band.
+/// Reporting-only by default (CI runs it on every PR without gating);
+/// `--strict` turns regressions into a nonzero exit, and
+/// `--write-baseline` refreshes the committed snapshot from the bench
+/// files present in the working directory.
+fn cmd_bench_compare(argv: &[String]) -> Result<()> {
+    use logicsparse::util::bench;
+    use logicsparse::util::json::{self, Value};
+
+    let opts = vec![
+        Opt { name: "baseline", takes_value: true, default: Some("BENCH_baseline.json"), help: "baseline snapshot path" },
+        Opt { name: "noise", takes_value: true, default: None, help: "noise band fraction (default: baseline's, else 0.3)" },
+        Opt { name: "strict", takes_value: false, default: None, help: "exit nonzero on regressions" },
+        Opt { name: "write-baseline", takes_value: false, default: None, help: "rewrite the baseline from current BENCH_*.json files" },
+        Opt { name: "help", takes_value: false, default: None, help: "show usage" },
+    ];
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") {
+        println!("{}", cli::usage("bench-compare", "diff BENCH_*.json against the committed baseline", &opts));
+        return Ok(());
+    }
+    let baseline_path = a.req("baseline")?;
+
+    // The bench files a run produces, in report order.
+    let bench_files: Vec<String> = {
+        let mut v: Vec<String> = std::fs::read_dir(".")
+            .map_err(logicsparse::Error::Io)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| {
+                n.starts_with("BENCH_")
+                    && n.ends_with(".json")
+                    && n != baseline_path
+                    && n != "BENCH_baseline.json"
+            })
+            .collect();
+        v.sort();
+        v
+    };
+
+    if a.flag("write-baseline") {
+        if bench_files.is_empty() {
+            return Err(logicsparse::Error::config(
+                "no BENCH_*.json files to snapshot; run `make bench` first",
+            ));
+        }
+        let mut benches = Vec::new();
+        for f in &bench_files {
+            benches.push((f.clone(), json::parse_file(f)?));
+        }
+        let doc = json::obj(vec![
+            (
+                "provenance",
+                json::s(
+                    "measured snapshot written by `logicsparse bench-compare \
+                     --write-baseline` (see `make bench-baseline`); diff with \
+                     `make bench-compare`",
+                ),
+            ),
+            ("noise", Value::Num(0.3)),
+            ("benches", Value::Obj(benches)),
+        ]);
+        json::write_file(baseline_path, &doc)?;
+        println!("baseline written to {baseline_path} ({} benches)", bench_files.len());
+        return Ok(());
+    }
+
+    let baseline = json::parse_file(baseline_path)?;
+    let noise = match a.get_f64("noise")? {
+        Some(n) => n,
+        None => baseline.get("noise").and_then(Value::as_f64).unwrap_or(0.3),
+    };
+    if let Some(p) = baseline.get("provenance").and_then(Value::as_str) {
+        println!("baseline: {p}");
+    }
+    let empty: &[(String, Value)] = &[];
+    let benches = baseline.get("benches").and_then(Value::as_obj).unwrap_or(empty);
+    if benches.is_empty() {
+        println!(
+            "baseline holds no measured benches yet; run `make bench` then \
+             `make bench-baseline` on a machine with a Rust toolchain"
+        );
+        return Ok(());
+    }
+
+    let mut regressions = 0usize;
+    let mut missing_files = 0usize;
+    for (file, base_doc) in benches {
+        match json::parse_file(file) {
+            Ok(current) => {
+                let rep = bench::compare(base_doc, &current, noise);
+                print!("{}", rep.render(file));
+                regressions += rep.regressions().len();
+            }
+            Err(_) => {
+                println!("{file}: not present in this run (baseline has it)");
+                missing_files += 1;
+            }
+        }
+    }
+    println!(
+        "bench-compare: {} regressions, {} baseline benches missing (noise band {:.0}%)",
+        regressions,
+        missing_files,
+        noise * 100.0
+    );
+    if a.flag("strict") && (regressions > 0 || missing_files > 0) {
+        return Err(logicsparse::Error::config(format!(
+            "strict mode: {regressions} regressions, {missing_files} missing benches"
+        )));
+    }
     Ok(())
 }
 

@@ -87,6 +87,154 @@ impl BenchLog {
     }
 }
 
+/// Which way a metric improves, inferred from its naming convention so
+/// the baseline diff needs no per-metric registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Larger is better (throughput-like: `rps`, `*_per_s`, `*_x`, ...).
+    HigherBetter,
+    /// Smaller is better (latency-like: `*_ms`, `*_us`, ...).
+    LowerBetter,
+}
+
+/// Classify a metric name by suffix/stem convention; `None` means the
+/// metric is a descriptive counter (shed counts, worker counts, model
+/// sparsity, ...) that a regression diff should skip rather than judge.
+pub fn metric_direction(name: &str) -> Option<Direction> {
+    let higher = ["rps", "per_s", "throughput", "speedup", "ratio"];
+    if higher.iter().any(|s| name == *s || name.ends_with(&format!("_{s}")))
+        || name.ends_with("_x")
+    {
+        return Some(Direction::HigherBetter);
+    }
+    let lower = ["ms", "us", "ns", "s", "cycles", "latency"];
+    if lower.iter().any(|s| name.ends_with(&format!("_{s}")) || name == *s) {
+        return Some(Direction::LowerBetter);
+    }
+    None
+}
+
+/// One metric's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    /// Scenario key the metric lives under (`scenario` or
+    /// `scenario@model`).
+    pub scenario: String,
+    /// Metric name within the scenario.
+    pub metric: String,
+    /// Baseline value.
+    pub base: f64,
+    /// Current value.
+    pub current: f64,
+    /// `current / base` (0.0 when the baseline value is 0).
+    pub ratio: f64,
+    /// Worse than baseline beyond the noise band.
+    pub regressed: bool,
+    /// Better than baseline beyond the noise band.
+    pub improved: bool,
+}
+
+/// Result of diffing one bench's current results against its baseline.
+#[derive(Debug, Clone, Default)]
+pub struct CompareReport {
+    /// Judged metrics, in baseline order.
+    pub deltas: Vec<MetricDelta>,
+    /// Baseline scenarios absent from the current run.
+    pub missing: Vec<String>,
+}
+
+impl CompareReport {
+    /// Metrics that regressed beyond the noise band.
+    pub fn regressions(&self) -> Vec<&MetricDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// One line per judged metric plus a verdict line.
+    pub fn render(&self, bench: &str) -> String {
+        let mut out = String::new();
+        for d in &self.deltas {
+            let verdict = if d.regressed {
+                "REGRESSED"
+            } else if d.improved {
+                "improved"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "  {:<52} {:>12.3} -> {:>12.3}  ({:>6.2}x)  {}\n",
+                format!("{}.{}", d.scenario, d.metric),
+                d.base,
+                d.current,
+                d.ratio,
+                verdict
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("  {m:<52} missing from current run\n"));
+        }
+        let n_reg = self.regressions().len();
+        out.push_str(&format!(
+            "{bench}: {} metrics judged, {} regressed, {} missing\n",
+            self.deltas.len(),
+            n_reg,
+            self.missing.len()
+        ));
+        out
+    }
+}
+
+/// Diff `current` (a `BENCH_*.json` document) against `baseline` (the
+/// same `results` shape). A metric regresses when it is worse than the
+/// baseline by more than `noise` (fractional, e.g. 0.3 = 30%) in its
+/// [`metric_direction`]; direction-less counters are skipped. Scenarios
+/// present only in the current run are ignored (new benches are not
+/// drift), while baseline scenarios absent from the current run are
+/// reported in `missing`.
+pub fn compare(baseline: &Value, current: &Value, noise: f64) -> CompareReport {
+    let mut report = CompareReport::default();
+    let empty: &[(String, Value)] = &[];
+    let base_results = baseline.get("results").and_then(Value::as_obj).unwrap_or(empty);
+    let cur_results = current.get("results").and_then(Value::as_obj).unwrap_or(empty);
+    for (scenario, base_row) in base_results {
+        let Some(cur_row) = cur_results
+            .iter()
+            .find(|(k, _)| k == scenario)
+            .map(|(_, v)| v)
+        else {
+            report.missing.push(scenario.clone());
+            continue;
+        };
+        let Some(base_metrics) = base_row.as_obj() else { continue };
+        for (metric, base_val) in base_metrics {
+            let Some(dir) = metric_direction(metric) else { continue };
+            let (Some(base), Some(current)) =
+                (base_val.as_f64(), cur_row.get(metric).and_then(Value::as_f64))
+            else {
+                continue;
+            };
+            let ratio = if base != 0.0 { current / base } else { 0.0 };
+            let (regressed, improved) = match dir {
+                Direction::HigherBetter => {
+                    (current < base * (1.0 - noise), current > base * (1.0 + noise))
+                }
+                Direction::LowerBetter => {
+                    (current > base * (1.0 + noise), current < base * (1.0 - noise))
+                }
+            };
+            report.deltas.push(MetricDelta {
+                scenario: scenario.clone(),
+                metric: metric.clone(),
+                base,
+                current,
+                ratio,
+                regressed,
+                improved,
+            });
+        }
+    }
+    report
+}
+
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -261,6 +409,95 @@ mod tests {
         assert_eq!(results.get("per_tag@sparse").unwrap().req_f64("rps").unwrap(), 350.0);
         assert!(results.get("per_tag").is_none(), "multi-model scenario must split keys");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn metric_directions_follow_naming_convention() {
+        assert_eq!(metric_direction("rps"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("achieved_rps"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("frames_per_s"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("speedup_vs_scalar_x"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("batch_speedup"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("p99_ms"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("median_us"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("wall_s"), Some(Direction::LowerBetter));
+        // Counters and labels are skipped, not judged.
+        assert_eq!(metric_direction("shed"), None);
+        assert_eq!(metric_direction("completed"), None);
+        assert_eq!(metric_direction("workers"), None);
+        assert_eq!(metric_direction("sparsity"), None);
+    }
+
+    fn doc(rows: Vec<(&str, Vec<(&str, f64)>)>) -> Value {
+        json::obj(vec![
+            ("bench", json::s("unit")),
+            (
+                "results",
+                Value::Obj(
+                    rows.into_iter()
+                        .map(|(k, ms)| {
+                            (
+                                k.to_string(),
+                                Value::Obj(
+                                    ms.into_iter()
+                                        .map(|(m, v)| (m.to_string(), Value::Num(v)))
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn compare_flags_regressions_beyond_noise() {
+        let base = doc(vec![
+            ("throughput", vec![("rps", 1000.0), ("p99_ms", 10.0), ("shed", 5.0)]),
+            ("gone", vec![("rps", 1.0)]),
+        ]);
+        let cur = doc(vec![
+            // rps fell 50% (regressed beyond 30% noise); p99 doubled
+            // (regressed); shed is a counter (skipped).
+            ("throughput", vec![("rps", 500.0), ("p99_ms", 20.0), ("shed", 50.0)]),
+            ("brand_new", vec![("rps", 9.0)]),
+        ]);
+        let rep = compare(&base, &cur, 0.3);
+        assert_eq!(rep.deltas.len(), 2, "counter must be skipped: {:?}", rep.deltas);
+        assert!(rep.deltas.iter().all(|d| d.regressed));
+        assert_eq!(rep.regressions().len(), 2);
+        assert_eq!(rep.missing, vec!["gone".to_string()]);
+        let rendered = rep.render("unit");
+        assert!(rendered.contains("REGRESSED"));
+        assert!(rendered.contains("2 regressed"));
+        assert!(rendered.contains("missing from current run"));
+    }
+
+    #[test]
+    fn compare_inside_noise_band_is_quiet() {
+        let base = doc(vec![("t", vec![("rps", 1000.0), ("p99_ms", 10.0)])]);
+        let cur = doc(vec![("t", vec![("rps", 900.0), ("p99_ms", 11.0)])]);
+        let rep = compare(&base, &cur, 0.3);
+        assert_eq!(rep.deltas.len(), 2);
+        assert!(rep.regressions().is_empty());
+        assert!(rep.deltas.iter().all(|d| !d.improved));
+        assert!(rep.missing.is_empty());
+        // A big gain is reported as improved, not regressed.
+        let fast = doc(vec![("t", vec![("rps", 2000.0), ("p99_ms", 2.0)])]);
+        let rep = compare(&base, &fast, 0.3);
+        assert!(rep.deltas.iter().all(|d| d.improved && !d.regressed));
+    }
+
+    #[test]
+    fn compare_tolerates_empty_or_malformed_documents() {
+        let empty = json::obj(vec![("bench", json::s("x"))]);
+        let base = doc(vec![("t", vec![("rps", 100.0)])]);
+        let rep = compare(&empty, &base, 0.3);
+        assert!(rep.deltas.is_empty() && rep.missing.is_empty());
+        let rep = compare(&base, &empty, 0.3);
+        assert!(rep.deltas.is_empty());
+        assert_eq!(rep.missing, vec!["t".to_string()]);
     }
 
     #[test]

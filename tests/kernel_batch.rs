@@ -1,0 +1,161 @@
+//! Batched-forward identity: `infer_batch` (serial and pooled) must be
+//! bit-identical to per-image `forward` across all three kernel flavours
+//! and every compiled-in datapath — including layer shapes that are not
+//! multiples of the dense 4-row fuse width or the 8-wide sparse lanes.
+//! This is the test-side half of the PR-6 acceptance criteria (benches
+//! measure the speedups; identity lives here, where `cargo test` runs
+//! it).
+
+use logicsparse::folding::{FoldingConfig, LayerFold, Style};
+use logicsparse::graph::builder::{lenet5, mlp};
+use logicsparse::graph::Graph;
+use logicsparse::kernel::{BatchPool, CompiledModel, Datapath, KernelSpec, NativeSparseBackend};
+use logicsparse::runtime::{InferenceBackend, SyntheticRuntime};
+use logicsparse::weights::ModelParams;
+use std::sync::Arc;
+
+/// All three kernel flavours for one graph: dense, unrolled sparse, and
+/// block partial-sparse with per-layer lane widths picked to divide each
+/// `fold_in` (folding enforces divisibility; awkward graphs get awkward
+/// divisors, which is the point).
+fn flavours(g: &Graph, seed: u64) -> Vec<(&'static str, Arc<CompiledModel>)> {
+    let spec = KernelSpec::default();
+    let dense_params = ModelParams::synthetic(g, seed);
+    let mut sparse_params = ModelParams::synthetic(g, seed);
+    sparse_params.prune_global(0.7, 0.05).unwrap();
+
+    let mut cfg = FoldingConfig::default();
+    for n in g.mac_nodes() {
+        let simd = [8usize, 7, 5, 4, 3, 2]
+            .into_iter()
+            .find(|s| n.fold_in() % s == 0)
+            .unwrap_or(1);
+        cfg.set(
+            &n.name,
+            LayerFold { pe: 1, simd, style: Style::PartialSparse, sparsity: 0.5 },
+        );
+    }
+
+    vec![
+        (
+            "dense",
+            Arc::new(CompiledModel::compile_dense(g, &dense_params, &spec).unwrap()),
+        ),
+        (
+            "unrolled_sparse",
+            Arc::new(CompiledModel::compile_sparse(g, &sparse_params, &spec).unwrap()),
+        ),
+        (
+            "block_partial_sparse",
+            Arc::new(CompiledModel::compile(g, &sparse_params, &spec, &cfg).unwrap()),
+        ),
+    ]
+}
+
+/// A batch of `n` frames sized for `model`.
+fn batch_for(model: &CompiledModel, n: usize) -> Vec<f32> {
+    let px = model.input_pixels();
+    (0..n)
+        .flat_map(|i| {
+            (0..px).map(move |j| (((i * 31 + j * 7) % 97) as f32) / 97.0)
+        })
+        .collect()
+}
+
+/// The reference: per-image scalar `forward`, concatenated.
+fn per_image_scalar(model: &CompiledModel, x: &[f32], n: usize) -> Vec<f32> {
+    let px = model.input_pixels();
+    (0..n)
+        .flat_map(|i| {
+            model
+                .forward_with(&x[i * px..(i + 1) * px], Datapath::Scalar)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn infer_batch_matches_per_image_forward_on_lenet() {
+    for (name, model) in flavours(&lenet5(), 41) {
+        for n in [1usize, 2, 5, 8, 13] {
+            let x = batch_for(&model, n);
+            let want = per_image_scalar(&model, &x, n);
+            for dp in Datapath::all() {
+                assert_eq!(
+                    model.infer_batch_with(&x, n, dp).unwrap(),
+                    want,
+                    "{name}: {} infer_batch != per-image forward at n={n}",
+                    dp.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn infer_batch_matches_on_non_lane_multiple_shapes() {
+    // fold_ins 19 / 13 / 13 and couts 13 / 13 / 10: no multiple of the
+    // 4-row dense fuse width or the 8-wide lanes anywhere, so every
+    // remainder path runs on every layer.
+    for (name, model) in flavours(&mlp(19, 13, 10), 42) {
+        for n in [1usize, 3, 7] {
+            let x = batch_for(&model, n);
+            let want = per_image_scalar(&model, &x, n);
+            for dp in Datapath::all() {
+                assert_eq!(
+                    model.infer_batch_with(&x, n, dp).unwrap(),
+                    want,
+                    "{name}: {} diverged on awkward shapes at n={n}",
+                    dp.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_pool_matches_serial_across_flavours() {
+    let pool = BatchPool::new(3);
+    for (name, model) in flavours(&lenet5(), 43) {
+        for n in [1usize, 4, 8, 13] {
+            let x = batch_for(&model, n);
+            let want = per_image_scalar(&model, &x, n);
+            assert_eq!(
+                pool.infer_batch(&model, &x, n).unwrap(),
+                want,
+                "{name}: pooled batch != per-image scalar forward at n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_backend_matches_plain_backend_end_to_end() {
+    // The serving seam: NativeSparseBackend::with_workers must answer
+    // exactly what the worker-less backend answers.
+    for (name, model) in flavours(&lenet5(), 44) {
+        let plain = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        let pooled = NativeSparseBackend::with_workers(Arc::clone(&model), 2).unwrap();
+        let n = 9usize;
+        let x: Vec<f32> = (0..n).flat_map(SyntheticRuntime::stripe_image).collect();
+        assert_eq!(
+            pooled.infer_padded(&x, n).unwrap(),
+            plain.infer_padded(&x, n).unwrap(),
+            "{name}: pooled backend diverged"
+        );
+    }
+}
+
+#[test]
+fn batch_length_contract_holds_on_every_path() {
+    let flavs = flavours(&lenet5(), 45);
+    let model = &flavs[1].1;
+    let pool = BatchPool::new(2);
+    let x = batch_for(model, 8);
+    for dp in Datapath::all() {
+        assert!(model.infer_batch_with(&x[..10], 8, dp).is_err());
+        assert!(model.infer_batch_with(&x, 7, dp).is_err());
+    }
+    assert!(pool.infer_batch(model, &x[..10], 8).is_err());
+    assert!(pool.infer_batch(model, &x, 7).is_err());
+}

@@ -592,7 +592,7 @@ fn fleet_retire_mid_burst_is_lossless_and_invalidates_handles() {
     // drain must answer every admitted request, later submits against
     // the tag (or its stale index) must fail UnknownModel, and the other
     // tag must be unaffected.
-    let mut fleet = Fleet::start(FleetOptions {
+    let fleet = Fleet::start(FleetOptions {
         models: vec![
             ModelSpec::new("doomed", synth_backend(Duration::from_micros(500))),
             ModelSpec::new("stable", synth_backend(Duration::ZERO)),
@@ -647,7 +647,7 @@ fn phase_shift_run_replays_membership_and_offset_streams() {
     // The §11 phase-shift scenario: phase 1 serves one tag; phase 2
     // registers a second tag mid-run whose stream joins at an offset.
     // Every phase's accounting must be complete with zero losses.
-    let mut fleet = Fleet::start(FleetOptions {
+    let fleet = Fleet::start(FleetOptions {
         models: vec![ModelSpec::new("base", synth_backend(Duration::from_micros(50)))],
         admission_capacity: 1024,
         autotune: None,
@@ -668,7 +668,7 @@ fn phase_shift_run_replays_membership_and_offset_streams() {
         },
     ];
     let reports =
-        loadgen::run_phases(&mut fleet, &phases, |_, i| image(i), ShedMode::Retry).unwrap();
+        loadgen::run_phases(&fleet, &phases, |_, i| image(i), ShedMode::Retry).unwrap();
     assert_eq!(reports.len(), 2);
     assert_eq!(reports[0].offered(), 80);
     assert_eq!(reports[0].completed(), 80);
