@@ -48,15 +48,18 @@ bench:
 
 ## Fast CI smoke: small request counts, timing-ratio assertions off
 ## (zero-loss and accounting assertions stay on; the kernel datapath
-## identity assertions always run).
+## identity assertions — including the layer-pipelined executor's
+## bit-identity and zero-dropped-frames checks — always run).
 bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench kernel_perf
 	BENCH_SMOKE=1 $(CARGO) bench --bench serve_perf
 
-## Diff the current BENCH_*.json files against the committed baseline
-## (reporting-only; pass strict via `cargo run -- bench-compare --strict`).
+## Diff the current BENCH_*.json files against the committed baseline.
+## Reporting-only by default; STRICT=1 turns drift beyond the noise band
+## (and missing baseline rows) into a nonzero exit — the ROADMAP #5
+## gating step, opt-in until runner noise is characterised.
 bench-compare:
-	$(CARGO) run --release --quiet -- bench-compare
+	$(CARGO) run --release --quiet -- bench-compare $(if $(STRICT),--strict)
 
 ## Refresh the committed baseline from the BENCH_*.json files present
 ## (run `make bench` first, on a quiet machine).

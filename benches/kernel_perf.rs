@@ -4,18 +4,22 @@
 //! behind the vectorisation tentpole (DESIGN.md §12).
 //!
 //! Writes `BENCH_kernels.json` with one row per `flavour@path`, e.g.
-//! `block_partial_sparse@vector`. Identity assertions (vector and pooled
-//! outputs bit-identical to scalar) run on **every** invocation, smoke
-//! included — they are cheap and they are the contract. Timing
+//! `block_partial_sparse@vector` or `dense@pipeline` (the staged
+//! layer-pipelined executor, DESIGN.md §13). Identity assertions
+//! (vector, pooled, and pipelined outputs bit-identical to scalar) and
+//! the pipeline's zero-dropped-frames check run on **every** invocation,
+//! smoke included — they are cheap and they are the contract. Timing
 //! assertions (vector >= 1.5x scalar on the block partial-sparse
-//! flavour; pool >= 1.5x serial at batch >= 8 on >= 4 cores) only run on
-//! full runs, since smoke runs and starved CI runners measure noise.
+//! flavour; pool >= 1.5x serial at batch >= 8 on >= 4 cores; pipeline
+//! >= 1.3x serial on a >= 32-request dense stream on >= 4 cores) only
+//! run on full runs, since smoke runs and starved CI runners measure
+//! noise.
 //!
 //! Set `BENCH_SMOKE=1` for a fast low-fidelity pass.
 
 use logicsparse::folding::{FoldingConfig, LayerFold, Style};
 use logicsparse::graph::builder::lenet5;
-use logicsparse::kernel::{BatchPool, CompiledModel, Datapath, KernelSpec};
+use logicsparse::kernel::{BatchPool, CompiledModel, Datapath, KernelSpec, StagedExecutor};
 use logicsparse::runtime::SyntheticRuntime;
 use logicsparse::util::bench::{BenchLog, Bencher};
 use logicsparse::weights::ModelParams;
@@ -153,6 +157,47 @@ fn main() {
             ],
         );
 
+        // Layer-pipelined path: a stream of single requests through the
+        // staged executor (4 cost-balanced stage groups, one worker
+        // each) vs the same stream through the serial stage walk —
+        // request k's layer N overlapping request k+1's layer N−1
+        // (DESIGN.md §13). Identity + zero-drop are asserted on every
+        // run; the ≥ 1.3x throughput floor is acceptance-gated below.
+        let exec = StagedExecutor::new(Arc::clone(&model), 4).unwrap();
+        let stream_n = if smoke { 32 } else { 64 };
+        let stream: Vec<f32> = (0..stream_n)
+            .flat_map(|i| imgs[i % imgs.len()].clone())
+            .collect();
+        assert_eq!(
+            exec.infer_batch(&stream, stream_n).unwrap(),
+            model.infer_batch(&stream, stream_n).unwrap(),
+            "{name}: pipelined stream diverged from serial"
+        );
+        let m = Arc::clone(&model);
+        let (s, sn) = (&stream, stream_n);
+        let serial_stream_stats = bencher.run(&format!("{name}@stream_serial"), move || {
+            m.infer_batch(s, sn).unwrap()
+        });
+        let e = &exec;
+        let pipe_stats = bencher.run(&format!("{name}@pipeline"), move || {
+            e.infer_batch(s, sn).unwrap()
+        });
+        let pst = exec.stats();
+        assert_eq!(pst.in_flight(), 0, "{name}: pipeline dropped frames");
+        let serial_stream_fps = serial_stream_stats.throughput() * sn as f64;
+        let pipe_fps = pipe_stats.throughput() * sn as f64;
+        log.push_model(
+            name,
+            "pipeline",
+            &[
+                ("frames_per_s", pipe_fps),
+                ("median_us", pipe_stats.median() * 1e6),
+                ("speedup_vs_serial_x", pipe_fps / serial_stream_fps),
+                ("stage_groups", exec.groups() as f64),
+                ("stream", sn as f64),
+            ],
+        );
+
         // Acceptance (full runs only; smoke fidelity is too low to
         // judge):
         // block partial-sparse was *designed* for lanes — the vector
@@ -184,6 +229,19 @@ fn main() {
                 "{name}: batch-parallel must be >= 1.5x serial on {cores} \
                  cores (got {:.2}x)",
                 pool_fps / serial_fps
+            );
+        }
+        // The staged pipeline must beat the serial single-request walk
+        // >= 1.3x on a >= 32-request stream when the groups have cores
+        // to live on. Dense only: its stage costs dominate any queueing
+        // overhead, so the floor is robust; the sparse flavours' rows
+        // are recorded for trajectory without a hard gate.
+        if !smoke && cores >= 4 && name == "dense" {
+            assert!(
+                pipe_fps >= 1.3 * serial_stream_fps,
+                "{name}: layer pipeline must be >= 1.3x serial on {cores} \
+                 cores over a {sn}-request stream (got {:.2}x)",
+                pipe_fps / serial_stream_fps
             );
         }
     }

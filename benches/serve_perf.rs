@@ -79,6 +79,26 @@ fn record_model(
     log.push_model(scenario, model, &metrics(rep, snap));
 }
 
+/// Per-layer kernel-flavour counts of a compiled model, as bench metrics
+/// (`layers_<style>` = MAC layers baked with that flavour) — the same
+/// attribution axis `BENCH_kernels.json` rows carry.
+fn flavour_counts(model: &CompiledModel) -> Vec<(&'static str, f64)> {
+    use logicsparse::folding::Style;
+    [
+        ("layers_folded", Style::Folded),
+        ("layers_unrolled_dense", Style::UnrolledDense),
+        ("layers_unrolled_sparse", Style::UnrolledSparse),
+        ("layers_partial_sparse", Style::PartialSparse),
+    ]
+    .into_iter()
+    .map(|(key, style)| {
+        let n = model.mac_stages().filter(|m| m.style == style).count();
+        (key, n as f64)
+    })
+    .filter(|(_, n)| *n > 0.0)
+    .collect()
+}
+
 fn metrics(rep: &LoadReport, snap: &StatsSnapshot) -> Vec<(&'static str, f64)> {
     vec![
         ("rps", rep.achieved_rps),
@@ -228,8 +248,45 @@ fn native_kernels(log: &mut BenchLog, smoke: bool) {
             snap.completed, snap.submitted,
             "native/{name}: admitted requests lost"
         );
-        record(log, &format!("native_{name}"), &rep, &snap);
+        // Attribute the row the same way BENCH_kernels.json does: the
+        // datapath the compiled model pinned plus how many MAC layers
+        // each kernel flavour baked — so end-to-end rows and micro-bench
+        // rows name the exact same configuration.
+        let mut ms = metrics(&rep, &snap);
+        ms.extend(flavour_counts(model));
+        log.push_model(&format!("native_{name}"), model.datapath().label(), &ms);
         rps.push(rep.achieved_rps);
+    }
+
+    // Same sparse model through the third execution mode: layer-pipelined
+    // stage groups (auto-sized from the core budget; on saturated hosts
+    // this degenerates to one group and must still be lossless). The
+    // ≥ 1.3x pipeline throughput claim lives in benches/kernel_perf.rs —
+    // here we assert serving-plane integrity only.
+    {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines: 2,
+            admission_capacity: 512,
+            queue_depth: 16,
+            ..ServerOptions::native_pipelined(Arc::clone(&sparse), 0)
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(requests),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        println!("native/sparse-pipelined: {}", rep.render());
+        assert_eq!(rep.lost, 0, "pipelined: responses dropped in shutdown");
+        assert_eq!(rep.errors, 0, "pipelined: kernel execution failed");
+        assert_eq!(rep.completed, requests, "pipelined: incomplete run");
+        assert_eq!(snap.completed, snap.submitted, "pipelined: admitted requests lost");
+        let mut ms = metrics(&rep, &snap);
+        ms.extend(flavour_counts(&sparse));
+        log.push_model("native_sparse_pipelined", sparse.datapath().label(), &ms);
     }
 
     let speedup = rps[1] / rps[0];

@@ -356,12 +356,12 @@ impl Fleet {
 
     /// Sample the control-plane telemetry: host admission state plus one
     /// [`TagTelemetry`] per live tag. Pure data — policies consume it
-    /// without touching the clock. The snapshots are the
-    /// **counters-only** variant (no latency clone/sort; percentile
-    /// fields are zeroed): every shipped policy acts on counters, so a
-    /// tick stays O(tags) no matter how much has been served. A future
-    /// latency-aware policy should add bounded percentile sampling here
-    /// rather than paying the full-reservoir sort per tick.
+    /// without touching the clock. The snapshots are the **sampled**
+    /// variant: counters plus latency percentiles from each plane's
+    /// bounded recent-completions window (one clone + sort of ≤
+    /// `stats::WINDOW` values per tag), so a tick stays O(tags) no
+    /// matter how much has been served while still letting policies act
+    /// on the tag's *current* p50/p95/p99, not just counters.
     pub fn telemetry(&self) -> FleetTelemetry {
         FleetTelemetry {
             tick: 0, // stamped by the controller
@@ -371,7 +371,7 @@ impl Fleet {
                 .map(|(_, s, plane)| TagTelemetry {
                     tag: s.tag.clone(),
                     slo: s.slo,
-                    stats: plane.snapshot_counters(),
+                    stats: plane.snapshot_sampled(),
                 })
                 .collect(),
         }

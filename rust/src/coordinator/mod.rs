@@ -121,6 +121,18 @@ pub enum EngineBackend {
         /// The compiled model every replica executes.
         model: Arc<CompiledModel>,
     },
+    /// Baked native kernels executed as a layer pipeline
+    /// ([`kernel::StagedExecutor`](crate::kernel::StagedExecutor)):
+    /// stages split into cost-balanced groups, one worker per group,
+    /// bounded rings between them — request k's layer N overlaps
+    /// request k+1's layer N−1 (DESIGN.md §13). Spare cores budget
+    /// stage groups instead of batch-pool workers.
+    NativePipelined {
+        /// The compiled model every replica executes.
+        model: Arc<CompiledModel>,
+        /// Requested stage groups; 0 = auto (per-engine core budget).
+        stages: usize,
+    },
 }
 
 /// Server configuration.
@@ -175,6 +187,15 @@ impl ServerOptions {
     pub fn native(model: Arc<CompiledModel>) -> Self {
         ServerOptions {
             backend: EngineBackend::Native { model },
+            ..Default::default()
+        }
+    }
+
+    /// Engine-free serving with baked native kernels running as a layer
+    /// pipeline (`stages` groups; 0 = auto from the core budget).
+    pub fn native_pipelined(model: Arc<CompiledModel>, stages: usize) -> Self {
+        ServerOptions {
+            backend: EngineBackend::NativePipelined { model, stages },
             ..Default::default()
         }
     }
@@ -269,6 +290,26 @@ impl Plane {
                         // (0 on saturated hosts → plain serial batches).
                         let workers = shard::workers_per_engine(engines);
                         match NativeSparseBackend::with_workers(Arc::clone(model), workers) {
+                            Ok(b) => {
+                                let _ = ready.send(Ok(()));
+                                Box::new(b)
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                    EngineBackend::NativePipelined { model, stages } => {
+                        // Spare cores become stage-group workers instead of
+                        // batch-pool workers (1 group on saturated hosts →
+                        // the serial walk on a single worker).
+                        let groups = shard::pipeline_groups_per_engine(
+                            engines,
+                            *stages,
+                            model.stages().len(),
+                        );
+                        match NativeSparseBackend::with_pipeline(Arc::clone(model), groups) {
                             Ok(b) => {
                                 let _ = ready.send(Ok(()));
                                 Box::new(b)
@@ -383,6 +424,15 @@ impl Plane {
     /// clone/sort — percentile fields are zeroed).
     pub(crate) fn snapshot_counters(&self) -> StatsSnapshot {
         self.augment(self.stats.snapshot_counters())
+    }
+
+    /// Bounded-cost variant for the policy control plane: percentiles
+    /// from the fixed-size recent-completions window (sort of ≤
+    /// `stats::WINDOW` values), not the full reservoir — cheap enough
+    /// for every telemetry tick, latency-aware unlike
+    /// [`Plane::snapshot_counters`].
+    pub(crate) fn snapshot_sampled(&self) -> StatsSnapshot {
+        self.augment(self.stats.snapshot_sampled())
     }
 
     fn augment(&self, mut snap: StatsSnapshot) -> StatsSnapshot {

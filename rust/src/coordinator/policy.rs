@@ -63,17 +63,20 @@ impl SloSpec {
 }
 
 /// Telemetry of one tag: its identity, its SLO (if any), and the plane's
-/// counters-only stats snapshot (shed / shed_budget / steals / batches /
-/// ring depth / ring-full backoffs / budget occupancy; latency
-/// percentile fields are zeroed on the control path — see
-/// `Fleet::telemetry`).
+/// sampled stats snapshot — counters (shed / shed_budget / steals /
+/// batches / ring depth / ring-full backoffs / budget occupancy) plus
+/// latency percentiles from the plane's bounded recent-completions
+/// window, so a policy can act on the tag's current p99 without the
+/// control path ever sorting a full-run reservoir — see
+/// `Fleet::telemetry`.
 #[derive(Debug, Clone)]
 pub struct TagTelemetry {
     /// The model tag.
     pub tag: String,
     /// The tag's SLO, when one is configured.
     pub slo: Option<SloSpec>,
-    /// The plane's counters-only stats snapshot at this tick.
+    /// The plane's sampled stats snapshot at this tick (bounded-window
+    /// percentiles, full counters).
     pub stats: StatsSnapshot,
 }
 

@@ -40,6 +40,24 @@ pub(crate) fn workers_per_engine(engines: usize) -> usize {
     (cores / engines.max(1)).saturating_sub(1)
 }
 
+/// Pipeline stage groups each engine's staged executor gets, sharing the
+/// same per-engine core budget as [`workers_per_engine`] — a pipelined
+/// backend spends its spare cores on stage-group workers instead of
+/// batch-pool workers, never both. `requested == 0` means auto (use the
+/// whole budget); an explicit request is clamped to the budget and to
+/// the model's stage count. Always ≥ 1: on saturated hosts the pipeline
+/// degenerates to the serial walk on a single worker, mirroring the
+/// pool's 0-worker degeneracy.
+pub(crate) fn pipeline_groups_per_engine(
+    engines: usize,
+    requested: usize,
+    n_stages: usize,
+) -> usize {
+    let budget = workers_per_engine(engines).max(1);
+    let want = if requested == 0 { budget } else { requested };
+    want.min(budget).min(n_stages.max(1)).max(1)
+}
+
 /// The shared state of the sharded plane: one ring + unparker per engine.
 pub(crate) struct ExecutionPlane {
     queues: Vec<Arc<RingQueue<Batch>>>,
@@ -234,6 +252,23 @@ mod tests {
         assert_eq!(workers_per_engine(cores + 7), 0);
         // Degenerate input is clamped, not a panic.
         assert_eq!(workers_per_engine(0), cores - 1);
+    }
+
+    #[test]
+    fn pipeline_sizing_shares_the_pool_budget() {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        let budget = workers_per_engine(1).max(1);
+        // Auto (0) takes the whole per-engine budget, capped by stages.
+        assert_eq!(pipeline_groups_per_engine(1, 0, 7), budget.min(7));
+        // Explicit requests clamp to the budget and the stage count.
+        assert_eq!(pipeline_groups_per_engine(1, 3, 7), 3.min(budget));
+        assert_eq!(pipeline_groups_per_engine(1, 99, 7), budget.min(7));
+        assert_eq!(pipeline_groups_per_engine(1, 99, 2), budget.min(2));
+        // Saturated hosts degenerate to a single group, never 0.
+        assert_eq!(pipeline_groups_per_engine(cores + 7, 0, 7), 1);
+        assert_eq!(pipeline_groups_per_engine(cores + 7, 4, 7), 1);
+        // A stage-less count never produces 0 groups.
+        assert_eq!(pipeline_groups_per_engine(1, 0, 0), 1);
     }
 
     #[test]

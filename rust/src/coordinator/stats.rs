@@ -41,10 +41,51 @@ pub struct ServerStats {
     /// §11) — never counted on the shared host gate.
     shed_budget: AtomicU64,
     exec_time_us: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies: Mutex<LatencyBuf>,
 }
 
 const RESERVOIR: usize = 100_000;
+
+/// Recent-completions window behind [`ServerStats::snapshot_sampled`]:
+/// the per-tick percentile cost is one clone + sort of at most this many
+/// values, regardless of how many requests the plane has ever served.
+pub(crate) const WINDOW: usize = 512;
+
+/// Latency samples, two views under one lock: the bounded first-N
+/// `reservoir` (full-run percentiles for final reports) and a sliding
+/// `window` ring of the most recent completions (bounded-cost percentiles
+/// for the policy control plane's telemetry cadence).
+#[derive(Default)]
+struct LatencyBuf {
+    reservoir: Vec<u64>,
+    window: Vec<u64>,
+    /// Next write slot in `window` once it has filled.
+    next: usize,
+}
+
+impl LatencyBuf {
+    fn record(&mut self, us: u64) {
+        if self.reservoir.len() < RESERVOIR {
+            self.reservoir.push(us);
+        }
+        if self.window.len() < WINDOW {
+            self.window.push(us);
+        } else {
+            self.window[self.next] = us;
+            self.next = (self.next + 1) % WINDOW;
+        }
+    }
+}
+
+/// Which latency view a snapshot pays for.
+enum LatencySource {
+    /// Clone + sort the full reservoir (final reports).
+    Full,
+    /// Clone + sort the recent-completions window (control cadence).
+    Window,
+    /// Neither — percentile fields stay 0.0 (counters-only control).
+    None,
+}
 
 impl ServerStats {
     /// Fresh counters; the wall-clock epoch for throughput starts now.
@@ -60,7 +101,7 @@ impl ServerStats {
             shed: AtomicU64::new(0),
             shed_budget: AtomicU64::new(0),
             exec_time_us: AtomicU64::new(0),
-            latencies_us: Mutex::new(Vec::new()),
+            latencies: Mutex::new(LatencyBuf::default()),
         }
     }
 
@@ -81,13 +122,14 @@ impl ServerStats {
             .fetch_add((exec_s * 1e6) as u64, Ordering::Relaxed);
     }
 
-    /// Count one successfully served request and sample its latency.
+    /// Count one successfully served request and sample its latency
+    /// (into both the full-run reservoir and the recent window).
     pub fn on_complete(&self, latency_s: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut res = self.latencies_us.lock().expect("stats poisoned");
-        if res.len() < RESERVOIR {
-            res.push((latency_s * 1e6) as u64);
-        }
+        self.latencies
+            .lock()
+            .expect("stats poisoned")
+            .record((latency_s * 1e6) as u64);
     }
 
     /// Count one request answered with an engine error.
@@ -115,26 +157,43 @@ impl ServerStats {
     /// reservoir — fine for reporting, wasteful on a control cadence;
     /// see [`ServerStats::snapshot_counters`]).
     pub fn snapshot(&self) -> StatsSnapshot {
-        self.snapshot_impl(true)
+        self.snapshot_impl(LatencySource::Full)
     }
 
     /// Counters-only snapshot for the policy control plane: identical to
-    /// [`ServerStats::snapshot`] except the latency reservoir is neither
-    /// cloned nor sorted — every percentile field is 0.0, so
+    /// [`ServerStats::snapshot`] except no latency view is cloned or
+    /// sorted — every percentile field is 0.0, so
     /// [`StatsSnapshot::slo_met`] must not be read off this variant.
-    /// Policies consume only counters (sheds, steals, batches, ring
-    /// state), so control ticks stay O(1) in completed-request history.
+    /// Counter-driven control ticks stay O(1) in completed-request
+    /// history; latency-aware policies use
+    /// [`ServerStats::snapshot_sampled`] instead.
     pub fn snapshot_counters(&self) -> StatsSnapshot {
-        self.snapshot_impl(false)
+        self.snapshot_impl(LatencySource::None)
     }
 
-    fn snapshot_impl(&self, with_latency: bool) -> StatsSnapshot {
-        let lat = if with_latency {
-            let mut lat = self.latencies_us.lock().expect("stats poisoned").clone();
-            lat.sort_unstable();
-            lat
-        } else {
-            Vec::new()
+    /// Bounded-cost latency-aware snapshot for the policy control plane:
+    /// percentiles come from the sliding window of the most recent
+    /// [`WINDOW`] completions, so each tick pays one clone + sort of at
+    /// most that many values no matter how long the plane has served —
+    /// and the reported p99 tracks *current* behaviour rather than the
+    /// whole run (what an SLO policy actually wants to act on).
+    pub fn snapshot_sampled(&self) -> StatsSnapshot {
+        self.snapshot_impl(LatencySource::Window)
+    }
+
+    fn snapshot_impl(&self, source: LatencySource) -> StatsSnapshot {
+        let lat = match source {
+            LatencySource::None => Vec::new(),
+            LatencySource::Full | LatencySource::Window => {
+                let buf = self.latencies.lock().expect("stats poisoned");
+                let mut lat = match source {
+                    LatencySource::Full => buf.reservoir.clone(),
+                    _ => buf.window.clone(),
+                };
+                drop(buf);
+                lat.sort_unstable();
+                lat
+            }
         };
         let pct = |q: f64| -> f64 {
             if lat.is_empty() {
@@ -342,6 +401,36 @@ mod tests {
         assert_eq!(c.p99_latency_s, 0.0, "counters variant must skip percentiles");
         // The full snapshot still reports them.
         assert!(s.snapshot().p99_latency_s > 0.0);
+    }
+
+    #[test]
+    fn sampled_snapshot_tracks_recent_completions() {
+        let s = ServerStats::new();
+        // Fill well past the window with slow completions, then overwrite
+        // the whole window with fast ones: the sampled view must follow
+        // the recent behaviour while the full reservoir keeps the past.
+        for _ in 0..(WINDOW * 2) {
+            s.on_complete(0.100);
+        }
+        for _ in 0..WINDOW {
+            s.on_complete(0.001);
+        }
+        let sampled = s.snapshot_sampled();
+        let full = s.snapshot();
+        assert!(
+            (sampled.p99_latency_s - 0.001).abs() < 1e-4,
+            "window p99 {} should track the recent fast completions",
+            sampled.p99_latency_s
+        );
+        assert!(
+            full.p99_latency_s > 0.05,
+            "reservoir p99 {} should still see the slow past",
+            full.p99_latency_s
+        );
+        // Same counters either way.
+        assert_eq!(sampled.completed, full.completed);
+        // And the counters-only variant still skips the work entirely.
+        assert_eq!(s.snapshot_counters().p99_latency_s, 0.0);
     }
 
     #[test]

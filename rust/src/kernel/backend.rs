@@ -5,18 +5,22 @@
 
 use std::sync::Arc;
 
-use super::{BatchPool, CompiledModel};
+use super::{BatchPool, CompiledModel, StagedExecutor};
 use crate::runtime::{InferenceBackend, IMG, NUM_CLASSES};
 use crate::util::error::{Error, Result};
 
 /// Serving adapter for a [`CompiledModel`]. The model is immutable shared
 /// state, so engine replicas clone one `Arc` instead of re-compiling.
-/// With a [`BatchPool`] attached ([`NativeSparseBackend::with_workers`])
-/// batched requests fan across the pool's worker threads — bit-identical
-/// to the serial loop, just faster on multi-core hosts.
+/// Three execution modes, all bit-identical to the serial stage walk:
+/// plain serial ([`NativeSparseBackend::new`]), data-parallel batches
+/// over a [`BatchPool`] ([`NativeSparseBackend::with_workers`]), or
+/// layer-pipelined over a [`StagedExecutor`]
+/// ([`NativeSparseBackend::with_pipeline`]) — request k's layer N
+/// concurrent with request k+1's layer N−1.
 pub struct NativeSparseBackend {
     model: Arc<CompiledModel>,
     pool: Option<BatchPool>,
+    pipeline: Option<StagedExecutor>,
 }
 
 impl NativeSparseBackend {
@@ -32,6 +36,24 @@ impl NativeSparseBackend {
     /// count via `shard::workers_per_engine`). `workers == 0` keeps the
     /// serial path with no pool threads at all.
     pub fn with_workers(model: Arc<CompiledModel>, workers: usize) -> Result<Self> {
+        Self::validate(&model)?;
+        let pool = (workers > 0).then(|| BatchPool::new(workers));
+        Ok(NativeSparseBackend { model, pool, pipeline: None })
+    }
+
+    /// Layer-pipelined mode: execute stages across (at most) `groups`
+    /// cost-balanced stage groups, one persistent worker each, bounded
+    /// rings between them (see [`StagedExecutor`]). Same shape contract
+    /// as [`NativeSparseBackend::new`]; the coordinator budgets `groups`
+    /// from the host core count via `shard::pipeline_groups_per_engine`.
+    /// `groups == 1` degenerates to the serial walk on one worker.
+    pub fn with_pipeline(model: Arc<CompiledModel>, groups: usize) -> Result<Self> {
+        Self::validate(&model)?;
+        let pipeline = Some(StagedExecutor::new(Arc::clone(&model), groups)?);
+        Ok(NativeSparseBackend { model, pool: None, pipeline })
+    }
+
+    fn validate(model: &CompiledModel) -> Result<()> {
         if model.input_pixels() != IMG * IMG {
             return Err(Error::kernel(format!(
                 "model takes {} inputs, serving needs {}",
@@ -45,8 +67,7 @@ impl NativeSparseBackend {
                 model.output_len()
             )));
         }
-        let pool = (workers > 0).then(|| BatchPool::new(workers));
-        Ok(NativeSparseBackend { model, pool })
+        Ok(())
     }
 
     /// The compiled model this backend serves.
@@ -58,10 +79,24 @@ impl NativeSparseBackend {
     pub fn workers(&self) -> usize {
         self.pool.as_ref().map_or(0, BatchPool::workers)
     }
+
+    /// Stage groups when pipelined (0 = not in pipeline mode).
+    pub fn stage_groups(&self) -> usize {
+        self.pipeline.as_ref().map_or(0, StagedExecutor::groups)
+    }
+
+    /// The staged executor, when running in pipeline mode (occupancy
+    /// stats and the calibration sim hang off it).
+    pub fn pipeline(&self) -> Option<&StagedExecutor> {
+        self.pipeline.as_ref()
+    }
 }
 
 impl InferenceBackend for NativeSparseBackend {
     fn infer_padded(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if let Some(pipe) = &self.pipeline {
+            return pipe.infer_batch(x, n);
+        }
         match &self.pool {
             Some(pool) => pool.infer_batch(&self.model, x, n),
             None => self.model.infer_batch(x, n),
@@ -69,6 +104,9 @@ impl InferenceBackend for NativeSparseBackend {
     }
 
     fn label(&self) -> String {
+        if let Some(pipe) = &self.pipeline {
+            return format!("native+pipe{}/{}", pipe.groups(), self.model.summary());
+        }
         match self.workers() {
             0 => format!("native/{}", self.model.summary()),
             w => format!("native+{w}w/{}", self.model.summary()),
@@ -123,6 +161,29 @@ mod tests {
                 "batch {n} diverged between pooled and serial backends"
             );
         }
+    }
+
+    #[test]
+    fn pipelined_backend_matches_serial_backend() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 29);
+        p.prune_global(0.7, 0.05).unwrap();
+        let model =
+            Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap());
+        let serial = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        let piped = NativeSparseBackend::with_pipeline(Arc::clone(&model), 3).unwrap();
+        assert_eq!(piped.stage_groups(), 3);
+        assert_eq!(piped.workers(), 0);
+        assert!(piped.label().starts_with("native+pipe3/"));
+        for n in [1usize, 2, 8, 11] {
+            let x: Vec<f32> = (0..n).flat_map(SyntheticRuntime::stripe_image).collect();
+            assert_eq!(
+                piped.infer_padded(&x, n).unwrap(),
+                serial.infer_padded(&x, n).unwrap(),
+                "batch {n} diverged between pipelined and serial backends"
+            );
+        }
+        assert!(piped.infer_padded(&[0.0; 10], 1).is_err());
     }
 
     #[test]

@@ -58,6 +58,7 @@
 
 pub mod backend;
 pub mod pack;
+pub mod pipeline;
 pub mod pool;
 
 use crate::folding::{FoldingConfig, LayerFold, Style};
@@ -68,6 +69,7 @@ use crate::util::error::{Error, Result};
 use crate::weights::ModelParams;
 
 pub use backend::NativeSparseBackend;
+pub use pipeline::StagedExecutor;
 pub use pool::BatchPool;
 
 /// Independent accumulator lanes the chunked datapaths use (eight i32

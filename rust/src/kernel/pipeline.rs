@@ -1,0 +1,680 @@
+//! [`StagedExecutor`]: layer-pipelined execution of a [`CompiledModel`]
+//! — the serving-side realisation of the pipeline the cycle simulator
+//! predicts (DESIGN.md §13).
+//!
+//! The model's [`Stage`] list is partitioned into contiguous,
+//! cost-balanced **stage groups** (per-stage cost =
+//! [`MacStage::scheduled_macs`](super::MacStage::scheduled_macs) for MAC
+//! layers, window ops for pools; exact min-max linear partitioning).
+//! Each group gets one persistent worker thread, and neighbouring groups
+//! are connected by bounded [`RingQueue`] FIFOs carrying **activation
+//! frames** — so request k's layer N runs concurrently with request
+//! k+1's layer N−1, the HPIPE-style inter-request parallelism batch
+//! pools cannot express. This is the third native execution mode,
+//! alongside the serial walk and the data-parallel
+//! [`BatchPool`](super::BatchPool)
+//! ([`NativeSparseBackend::with_pipeline`](super::NativeSparseBackend::with_pipeline),
+//! `serve --pipeline`).
+//!
+//! **Identity.** A frame is quantised once at the submit side with the
+//! exact expression [`CompiledModel::forward_with`] uses, then walks the
+//! same private stage entry points (`PoolStage::run`,
+//! `MacStage::run_hidden` / `run_output`) in the same order — the group
+//! boundaries move work between threads, never between operations, so
+//! outputs are bit-identical to the serial forward on every
+//! [`Datapath`] (asserted in `tests/kernel_pipeline.rs`).
+//!
+//! **Lossless shutdown.** [`StagedExecutor::close`] closes the submit
+//! ring only; [`RingQueue`] pops keep draining after a close, so each
+//! worker finishes every queued frame, then cascades the close to the
+//! next ring and exits. Every frame accepted by
+//! [`StagedExecutor::submit`] therefore still delivers its logits;
+//! submissions after the close fail fast with
+//! [`Error::QueueClosed`]. Dropping the executor closes and joins.
+//!
+//! **Calibration.** [`StagedExecutor::sim_specs`] exports the *same*
+//! grouping as [`sim::stage::StageSpec`]s (one "cycle" per
+//! MAC-equivalent op, whole frames as tokens, same FIFO depth), so a
+//! [`sim::Pipeline`](crate::sim::Pipeline) built from them predicts
+//! which group bottlenecks the served pipeline — and the measured
+//! per-group occupancy ([`StagedExecutor::stats`]) must agree (asserted
+//! in `tests/kernel_pipeline.rs`).
+
+use super::{CompiledModel, Datapath, Stage};
+use crate::sim::stage::{Kind, StageSpec};
+use crate::sim::Pipeline as SimPipeline;
+use crate::util::error::{Error, Result};
+use crate::util::ring::{PopError, PushError, RingQueue};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Default inter-group FIFO capacity, in activation frames: deep enough
+/// to absorb per-frame service jitter between unequal groups, shallow
+/// enough that in-flight memory stays bounded (mirrors the simulator's
+/// shallow-FIFO regime).
+pub const DEFAULT_FIFO_DEPTH: usize = 4;
+
+/// Idle-consumer poll period — the same drain-friendly timeout idiom the
+/// batch pool and the sharded plane use.
+const POLL: Duration = Duration::from_millis(50);
+
+/// One in-flight frame between stage groups: the activation codes
+/// leaving the previous group (input codes for group 0) plus the channel
+/// the final group answers on. The sender rides the frame end to end, so
+/// interleaved submitters can never receive each other's logits.
+struct Frame {
+    act: Vec<u8>,
+    tx: mpsc::Sender<Vec<f32>>,
+}
+
+/// Per-group occupancy counters, written by the group's worker.
+#[derive(Default)]
+struct GroupMeter {
+    frames: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Execution cost proxy of one stage, in MAC-equivalent operations —
+/// the partitioning and calibration currency.
+fn stage_cost(stage: &Stage) -> u64 {
+    match stage {
+        Stage::Mac(m) => m.scheduled_macs() as u64,
+        // Max-pool: one compare per window element per output pixel per
+        // channel. A compare is cheaper than a MAC + requant, but pools
+        // are orders of magnitude smaller than their neighbouring MAC
+        // layers, so face value keeps the proxy simple without moving
+        // any partition boundary in practice.
+        Stage::Pool(p) => (p.ofm * p.ofm * p.k * p.k * p.ch) as u64,
+    }
+}
+
+fn stage_name(stage: &Stage) -> &str {
+    match stage {
+        Stage::Mac(m) => &m.name,
+        Stage::Pool(p) => &p.name,
+    }
+}
+
+/// Contiguous min-max partition of `costs` into at most `groups` parts
+/// (classic linear partitioning, exact DP — stage lists are tiny).
+/// Returns one `Range` of stage indices per group, covering `0..n`.
+fn partition(costs: &[u64], groups: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    let g = groups.clamp(1, n);
+    let mut prefix = vec![0u64; n + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a];
+    // best[k][i]: minimal achievable max-group cost splitting the first
+    // i stages into k+1 groups; cut[k][i]: where the last group starts.
+    let mut best = vec![vec![u64::MAX; n + 1]; g];
+    let mut cut = vec![vec![0usize; n + 1]; g];
+    for i in 1..=n {
+        best[0][i] = seg(0, i);
+    }
+    for k in 1..g {
+        for i in (k + 1)..=n {
+            for j in k..i {
+                let cand = best[k - 1][j].max(seg(j, i));
+                if cand < best[k][i] {
+                    best[k][i] = cand;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![n];
+    let (mut k, mut i) = (g - 1, n);
+    while k > 0 {
+        i = cut[k][i];
+        bounds.push(i);
+        k -= 1;
+    }
+    bounds.push(0);
+    bounds.reverse();
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Blocking push with bounded-ring backpressure: spin briefly, then
+/// sleep — the ring ahead only stays full while the downstream group is
+/// the bottleneck, in which case throughput is its service rate and the
+/// producer's wait is free. `Err` means the ring closed underneath the
+/// producer (only possible if the consumer died); the frame is dropped
+/// and its sender with it, so the submitter observes a clean
+/// channel-closed error instead of a hang.
+fn push_frame(q: &RingQueue<Frame>, mut f: Frame) -> std::result::Result<(), ()> {
+    let mut tries = 0u32;
+    loop {
+        match q.try_push(f) {
+            Ok(()) => return Ok(()),
+            Err(PushError::Full(back)) => {
+                f = back;
+                tries += 1;
+                if tries < 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+            }
+            Err(PushError::Closed(_)) => return Err(()),
+        }
+    }
+}
+
+/// One stage group's worker: drain the input ring, run the group's
+/// stages on each frame, hand off downstream (or answer, for the final
+/// group). Exits when the input ring is closed **and** empty — the
+/// drain-friendly contract [`RingQueue`] guarantees — then cascades the
+/// close so the next group can wind down the same way.
+#[allow(clippy::too_many_arguments)]
+fn group_worker(
+    model: Arc<CompiledModel>,
+    dp: Datapath,
+    span: Range<usize>,
+    inq: Arc<RingQueue<Frame>>,
+    outq: Option<Arc<RingQueue<Frame>>>,
+    out_high_water: Option<Arc<AtomicUsize>>,
+    meter: Arc<GroupMeter>,
+) {
+    let qmax = model.spec.act_qmax();
+    loop {
+        let frame = match inq.pop_timeout(POLL) {
+            Ok(f) => f,
+            Err(PopError::Empty) => continue,
+            Err(PopError::Closed) => break,
+        };
+        let t0 = Instant::now();
+        let mut act = frame.act;
+        let mut logits: Option<Vec<f32>> = None;
+        for stage in &model.stages()[span.clone()] {
+            match stage {
+                Stage::Pool(p) => act = p.run(&act),
+                Stage::Mac(m) => {
+                    if m.is_output {
+                        logits = Some(m.run_output(&act, dp));
+                    } else {
+                        act = m.run_hidden(&act, qmax, dp);
+                    }
+                }
+            }
+        }
+        meter
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        meter.frames.fetch_add(1, Ordering::Relaxed);
+        match (logits, &outq) {
+            // The output MAC is the model's last stage, so only the
+            // final group produces logits.
+            (Some(v), _) => {
+                // A dropped receiver (caller gave up) is not an error.
+                let _ = frame.tx.send(v);
+            }
+            (None, Some(q)) => {
+                if push_frame(q, Frame { act, tx: frame.tx }).is_ok() {
+                    if let Some(hw) = &out_high_water {
+                        hw.fetch_max(q.len(), Ordering::Relaxed);
+                    }
+                }
+            }
+            (None, None) => unreachable!("compile validated the graph ends in an output MAC"),
+        }
+    }
+    if let Some(q) = outq {
+        q.close();
+    }
+}
+
+/// A compiled model executing as a staged layer pipeline: one worker
+/// thread per cost-balanced stage group, bounded rings between groups.
+/// See the module docs for the identity / shutdown / calibration
+/// contracts.
+pub struct StagedExecutor {
+    model: Arc<CompiledModel>,
+    dp: Datapath,
+    spans: Vec<Range<usize>>,
+    costs: Vec<u64>,
+    names: Vec<String>,
+    fifo_depth: usize,
+    /// `fifos[g]` feeds group g; `fifos[0]` is the submit ring.
+    fifos: Vec<Arc<RingQueue<Frame>>>,
+    high_water: Vec<Arc<AtomicUsize>>,
+    meters: Vec<Arc<GroupMeter>>,
+    submitted: AtomicU64,
+    started: Instant,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StagedExecutor {
+    /// Pipeline `model` across (at most) `groups` stage groups with the
+    /// default FIFO depth, executing the model's pinned datapath.
+    /// `groups` is clamped to the stage count; `groups == 1` is the
+    /// degenerate pipeline — the whole serial walk on one worker,
+    /// correct but not concurrent.
+    pub fn new(model: Arc<CompiledModel>, groups: usize) -> Result<Self> {
+        let dp = model.datapath();
+        Self::with_config(model, groups, DEFAULT_FIFO_DEPTH, dp)
+    }
+
+    /// Full-control constructor: explicit FIFO depth and [`Datapath`]
+    /// override (the identity tests sweep every compiled-in datapath
+    /// without recompiling the model).
+    pub fn with_config(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+    ) -> Result<Self> {
+        if model.stages().is_empty() {
+            return Err(Error::kernel("cannot pipeline a model with no stages"));
+        }
+        if groups == 0 {
+            return Err(Error::config("pipeline needs >= 1 stage group"));
+        }
+        if fifo_depth == 0 {
+            return Err(Error::config("pipeline FIFO depth must be >= 1"));
+        }
+        let per_stage: Vec<u64> = model.stages().iter().map(stage_cost).collect();
+        let spans = partition(&per_stage, groups);
+        let costs: Vec<u64> = spans
+            .iter()
+            .map(|s| per_stage[s.clone()].iter().sum())
+            .collect();
+        let names: Vec<String> = spans
+            .iter()
+            .map(|s| {
+                model.stages()[s.clone()]
+                    .iter()
+                    .map(stage_name)
+                    .collect::<Vec<_>>()
+                    .join("+")
+            })
+            .collect();
+
+        let fifos: Vec<Arc<RingQueue<Frame>>> = (0..spans.len())
+            .map(|_| Arc::new(RingQueue::new(fifo_depth)))
+            .collect();
+        let high_water: Vec<Arc<AtomicUsize>> =
+            (0..spans.len()).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let meters: Vec<Arc<GroupMeter>> =
+            (0..spans.len()).map(|_| Arc::new(GroupMeter::default())).collect();
+
+        let mut workers = Vec::with_capacity(spans.len());
+        for (g, span) in spans.iter().enumerate() {
+            let m = Arc::clone(&model);
+            let span = span.clone();
+            let inq = Arc::clone(&fifos[g]);
+            let outq = fifos.get(g + 1).map(Arc::clone);
+            let hw = high_water.get(g + 1).map(Arc::clone);
+            let meter = Arc::clone(&meters[g]);
+            workers.push(std::thread::spawn(move || {
+                group_worker(m, dp, span, inq, outq, hw, meter);
+            }));
+        }
+        Ok(StagedExecutor {
+            model,
+            dp,
+            spans,
+            costs,
+            names,
+            fifo_depth,
+            fifos,
+            high_water,
+            meters,
+            submitted: AtomicU64::new(0),
+            started: Instant::now(),
+            workers,
+        })
+    }
+
+    /// The model this pipeline executes.
+    pub fn model(&self) -> &Arc<CompiledModel> {
+        &self.model
+    }
+
+    /// The datapath every group executes.
+    pub fn datapath(&self) -> Datapath {
+        self.dp
+    }
+
+    /// Number of stage groups (== worker threads).
+    pub fn groups(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Stage-index span of each group, in stream order.
+    pub fn group_spans(&self) -> &[Range<usize>] {
+        &self.spans
+    }
+
+    /// MAC-equivalent cost of each group (the partitioning input).
+    pub fn group_costs(&self) -> &[u64] {
+        &self.costs
+    }
+
+    /// Human-readable name of each group (member stages joined by `+`).
+    pub fn group_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Inter-group FIFO capacity, in frames.
+    pub fn fifo_depth(&self) -> usize {
+        self.fifo_depth
+    }
+
+    /// Quantise one image and enqueue it; the receiver yields the
+    /// frame's logits once it drains out of the final group. Frames
+    /// flow in FIFO order end to end. Fails with [`Error::QueueClosed`]
+    /// once [`StagedExecutor::close`] has run.
+    pub fn submit(&self, image: &[f32]) -> Result<mpsc::Receiver<Vec<f32>>> {
+        if image.len() != self.model.input_pixels() {
+            return Err(Error::kernel(format!(
+                "input length {} != {}",
+                image.len(),
+                self.model.input_pixels()
+            )));
+        }
+        // Entry quantisation, byte for byte the forward_with expression.
+        let qmax = self.model.spec.act_qmax();
+        let in_scale = self.model.spec.input_scale();
+        let act: Vec<u8> = image
+            .iter()
+            .map(|&x| ((x / in_scale).round() as i32).clamp(0, qmax) as u8)
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        push_frame(&self.fifos[0], Frame { act, tx }).map_err(|_| Error::QueueClosed)?;
+        self.high_water[0].fetch_max(self.fifos[0].len(), Ordering::Relaxed);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(rx)
+    }
+
+    /// One frame through the pipeline, blocking for its logits.
+    pub fn infer(&self, image: &[f32]) -> Result<Vec<f32>> {
+        self.submit(image)?.recv().map_err(|_| Error::QueueClosed)
+    }
+
+    /// Stream a batch of `n` frames through the pipeline and collect the
+    /// logits in submission order — same length contract and result
+    /// layout as [`CompiledModel::infer_batch`], but frame k+1 enters
+    /// group 0 while frame k is still in a later group. Deadlock-free by
+    /// construction: results leave through unbounded channels, so the
+    /// final group never blocks and the bounded rings always drain.
+    pub fn infer_batch(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let px = self.model.input_pixels();
+        if x.len() != n * px {
+            return Err(Error::kernel(format!(
+                "batch of {n} needs {} values, got {}",
+                n * px,
+                x.len()
+            )));
+        }
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            rxs.push(self.submit(&x[i * px..(i + 1) * px])?);
+        }
+        let mut out = Vec::with_capacity(n * self.model.output_len());
+        for rx in rxs {
+            out.extend(rx.recv().map_err(|_| Error::QueueClosed)?);
+        }
+        Ok(out)
+    }
+
+    /// Stop accepting frames and let the pipeline drain: closes the
+    /// submit ring only; each worker finishes every queued frame, then
+    /// cascades the close downstream and exits. Receivers returned by
+    /// earlier [`StagedExecutor::submit`] calls still deliver.
+    /// Idempotent; [`Drop`] calls it and joins the workers.
+    pub fn close(&self) {
+        self.fifos[0].close();
+    }
+
+    /// Measured per-group occupancy since start (the calibration
+    /// counterpart of the simulator's per-stage utilisation).
+    pub fn stats(&self) -> PipelineStats {
+        PipelineStats {
+            groups: (0..self.spans.len())
+                .map(|g| GroupStats {
+                    name: self.names[g].clone(),
+                    stages: self.spans[g].clone(),
+                    cost: self.costs[g],
+                    frames: self.meters[g].frames.load(Ordering::Relaxed),
+                    busy_s: self.meters[g].busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                })
+                .collect(),
+            fifo_high_water: self
+                .high_water
+                .iter()
+                .map(|hw| hw.load(Ordering::Relaxed))
+                .collect(),
+            fifo_capacity: self.fifo_depth,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// The simulator's view of this exact pipeline: one [`StageSpec`]
+    /// per stage group in stream order, II = the group's MAC-equivalent
+    /// cost (one simulated cycle per op), whole activation frames as
+    /// tokens. Feed them to [`StagedExecutor::calibration_sim`] (or
+    /// [`sim::Pipeline`](crate::sim::Pipeline) directly) to predict the
+    /// bottleneck group of the served pipeline.
+    pub fn sim_specs(&self) -> Vec<StageSpec> {
+        (0..self.spans.len())
+            .map(|g| StageSpec {
+                name: self.names[g].clone(),
+                kind: Kind::Fc,
+                tokens_per_frame: 1,
+                in_tokens_per_frame: 1,
+                ii_cycles_per_frame: self.costs[g].max(1),
+                fill_cycles: 0,
+            })
+            .collect()
+    }
+
+    /// Build the calibration pipeline: the same grouping, group costs
+    /// and FIFO depth as the served executor, as a cycle simulation at
+    /// `f_mhz`. Its [`SimReport`](crate::sim::SimReport) must identify
+    /// the same bottleneck group as [`StagedExecutor::stats`] measures.
+    pub fn calibration_sim(&self, f_mhz: f64) -> SimPipeline {
+        SimPipeline::new(self.sim_specs(), self.fifo_depth, f_mhz)
+    }
+}
+
+impl Drop for StagedExecutor {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Measured occupancy of one stage group.
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    /// Member stage names joined by `+`.
+    pub name: String,
+    /// Stage-index span within the model's stage list.
+    pub stages: Range<usize>,
+    /// MAC-equivalent cost (the partitioning input).
+    pub cost: u64,
+    /// Frames this group finished.
+    pub frames: u64,
+    /// Wall time the group's worker spent executing stages, seconds.
+    pub busy_s: f64,
+}
+
+/// Measured pipeline occupancy: the served-side counterpart of the
+/// simulator's [`SimReport`](crate::sim::SimReport) stage utilisation.
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    /// Per-group occupancy, in stream order.
+    pub groups: Vec<GroupStats>,
+    /// High-water occupancy of each ring (`[g]` feeds group g; `[0]` is
+    /// the submit ring).
+    pub fifo_high_water: Vec<usize>,
+    /// Ring capacity, in frames.
+    pub fifo_capacity: usize,
+    /// Frames accepted at the submit side.
+    pub submitted: u64,
+    /// Wall time since the executor started, seconds.
+    pub elapsed_s: f64,
+}
+
+impl PipelineStats {
+    /// Frames that drained out of the final group.
+    pub fn completed(&self) -> u64 {
+        self.groups.last().map_or(0, |g| g.frames)
+    }
+
+    /// Frames accepted but not (yet) completed. After a drain this must
+    /// be 0 — the lossless-shutdown acceptance counter.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.completed()
+    }
+
+    /// Index of the measured bottleneck group: the one that spent the
+    /// most wall time executing (all groups see the same frame stream,
+    /// so busy-time order is service-time order).
+    pub fn bottleneck_group(&self) -> usize {
+        self.groups
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.busy_s.total_cmp(&b.1.busy_s))
+            .map(|(i, _)| i)
+            .expect("non-empty pipeline")
+    }
+
+    /// Per-group utilisation over the elapsed wall time (comparable to
+    /// the simulator's per-stage utilisation in steady state).
+    pub fn utilisation(&self) -> Vec<f64> {
+        let wall = self.elapsed_s.max(1e-12);
+        self.groups.iter().map(|g| g.busy_s / wall).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::lenet5;
+    use crate::kernel::KernelSpec;
+    use crate::weights::ModelParams;
+
+    #[test]
+    fn partition_balances_and_isolates_the_heavy_stage() {
+        assert_eq!(partition(&[5, 5, 5, 5], 2), vec![0..2, 2..4]);
+        // The dominant stage ends up alone: min-max has no better cut.
+        let p = partition(&[10, 100, 10], 3);
+        assert_eq!(p, vec![0..1, 1..2, 2..3]);
+        // 2-way split of [10, 100, 10]: both cuts cost max 110 — assert
+        // the DP achieves that optimum rather than a specific cut.
+        let p = partition(&[10, 100, 10], 2);
+        let worst = p
+            .iter()
+            .map(|s| [10u64, 100, 10][s.clone()].iter().sum::<u64>())
+            .max()
+            .unwrap();
+        assert_eq!(worst, 110);
+        // More groups than stages clamps; zero-ish inputs never panic.
+        assert_eq!(partition(&[3], 5), vec![0..1]);
+        assert_eq!(partition(&[1, 2, 3], 1), vec![0..3]);
+    }
+
+    #[test]
+    fn partition_covers_contiguously() {
+        let costs = [86_400u64, 3_456, 153_600, 1_024, 30_720, 10_080, 840];
+        for g in 1..=costs.len() {
+            let spans = partition(&costs, g);
+            assert_eq!(spans.len(), g);
+            assert_eq!(spans[0].start, 0);
+            assert_eq!(spans.last().unwrap().end, costs.len());
+            for w in spans.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap between groups");
+            }
+            for s in &spans {
+                assert!(s.start < s.end, "empty group in {spans:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_forward_is_bit_identical() {
+        let g = lenet5();
+        let p = ModelParams::synthetic(&g, 31);
+        let model =
+            Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
+        let exec = StagedExecutor::new(Arc::clone(&model), 3).unwrap();
+        assert_eq!(exec.groups(), 3);
+        for seed in 0..4u64 {
+            let img = crate::runtime::SyntheticRuntime::stripe_image(seed as usize);
+            assert_eq!(exec.infer(&img).unwrap(), model.forward(&img).unwrap());
+        }
+    }
+
+    #[test]
+    fn close_drains_then_rejects() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 33);
+        p.prune_global(0.75, 0.05).unwrap();
+        let model =
+            Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap());
+        let exec = StagedExecutor::with_config(
+            Arc::clone(&model),
+            4,
+            2,
+            model.datapath(),
+        )
+        .unwrap();
+        let imgs: Vec<Vec<f32>> = (0..12)
+            .map(crate::runtime::SyntheticRuntime::stripe_image)
+            .collect();
+        let rxs: Vec<_> = imgs.iter().map(|i| exec.submit(i).unwrap()).collect();
+        exec.close();
+        // Every accepted frame still delivers, bit-identically.
+        for (img, rx) in imgs.iter().zip(rxs) {
+            assert_eq!(rx.recv().unwrap(), model.forward(img).unwrap());
+        }
+        assert!(matches!(exec.submit(&imgs[0]), Err(Error::QueueClosed)));
+        let stats = exec.stats();
+        assert_eq!(stats.submitted, 12);
+        assert_eq!(stats.completed(), 12);
+        assert_eq!(stats.in_flight(), 0, "drain lost frames");
+    }
+
+    #[test]
+    fn sim_specs_mirror_the_grouping() {
+        let g = lenet5();
+        let p = ModelParams::synthetic(&g, 35);
+        let model =
+            Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
+        let exec = StagedExecutor::new(Arc::clone(&model), 3).unwrap();
+        let specs = exec.sim_specs();
+        assert_eq!(specs.len(), exec.groups());
+        for (spec, (cost, name)) in specs
+            .iter()
+            .zip(exec.group_costs().iter().zip(exec.group_names()))
+        {
+            assert_eq!(&spec.name, name);
+            assert_eq!(spec.ii_cycles_per_frame, (*cost).max(1));
+            assert_eq!(spec.tokens_per_frame, 1);
+        }
+        // The predicted bottleneck is the costliest group by definition
+        // of the spec II — the serving-side agreement is asserted with
+        // real measurements in tests/kernel_pipeline.rs.
+        let mut sim = exec.calibration_sim(100.0);
+        let rep = sim
+            .try_run(&crate::sim::Workload::parse("saturated", 32).unwrap())
+            .unwrap();
+        let costliest = exec
+            .group_costs()
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap()
+            .0;
+        assert_eq!(rep.bottleneck_stage().name, exec.group_names()[costliest]);
+    }
+}

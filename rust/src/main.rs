@@ -234,6 +234,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "queue-depth", takes_value: true, default: Some("16"), help: "per-engine work-ring depth (batches)" },
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
         Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
+        Opt { name: "pipeline", takes_value: true, default: None, help: "run native kernels layer-pipelined across this many stage groups ('auto' or 0 = size from the core budget; needs --native-sparsity)" },
         Opt { name: "model", takes_value: true, default: None, help: "repeatable fleet member 'tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag]': serve a multi-model fleet behind one shared admission gate" },
         Opt { name: "slo", takes_value: true, default: None, help: "repeatable per-tag SLO 'tag=p99_ms[:weight]': partition the shared admission budget by weight (fleet mode)" },
         Opt { name: "autotune", takes_value: false, default: None, help: "enable queue-depth autotuning from queue-full/steal telemetry (fleet mode)" },
@@ -247,7 +248,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if !a.get_all("model").is_empty() {
         // Fleet mode: the single-model backend selectors would be
         // silently ignored, so reject the combination loudly.
-        for conflicting in ["tag", "synthetic-us", "native-sparsity"] {
+        for conflicting in ["tag", "synthetic-us", "native-sparsity", "pipeline"] {
             if !a.get_all(conflicting).is_empty() {
                 return Err(logicsparse::Error::config(format!(
                     "--{conflicting} conflicts with --model; put the backend in the \
@@ -290,7 +291,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         for i in 0..n {
             labels.push(model.classify(&imgs[i * px..(i + 1) * px])? as i32);
         }
-        (EngineBackend::Native { model }, imgs, labels)
+        let backend = match parse_pipeline_opt(&a)? {
+            Some(stages) => {
+                match stages {
+                    0 => println!("pipeline: auto stage groups (core budget)"),
+                    n => println!("pipeline: {n} stage groups"),
+                }
+                EngineBackend::NativePipelined { model, stages }
+            }
+            None => EngineBackend::Native { model },
+        };
+        (backend, imgs, labels)
+    } else if !a.get_all("pipeline").is_empty() {
+        return Err(logicsparse::Error::config(
+            "--pipeline needs native kernels: add --native-sparsity",
+        ));
     } else if let Some(us) = a.get_usize("synthetic-us")? {
         let (imgs, labels) = runtime::SyntheticRuntime::dataset(512);
         let backend = EngineBackend::Synthetic {
@@ -362,6 +377,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         n_req as f64 / wall
     );
     Ok(())
+}
+
+/// Parse `--pipeline auto|<n>` into `Some(stage_groups)` (0 = auto, the
+/// coordinator sizes it from the per-engine core budget), or `None` when
+/// the flag was not given.
+fn parse_pipeline_opt(a: &cli::Args) -> Result<Option<usize>> {
+    let Some(v) = a.get_all("pipeline").last() else {
+        return Ok(None);
+    };
+    if v == "auto" {
+        return Ok(Some(0));
+    }
+    v.parse::<usize>().map(Some).map_err(|_| {
+        logicsparse::Error::config(format!("--pipeline expects 'auto' or a stage-group count, got '{v}'"))
+    })
 }
 
 /// Compile a baked native model for serving: artifact-backed params when

@@ -18,6 +18,24 @@ pub struct StageStats {
     pub utilization: f64,
 }
 
+/// Per-FIFO occupancy and utilisation snapshot — the sizing and
+/// bottleneck-location signal: a FIFO pinned at capacity sits *in front
+/// of* the bottleneck stage, a near-empty one sits behind it.
+#[derive(Debug, Clone)]
+pub struct FifoStats {
+    /// Configured capacity, in tokens.
+    pub capacity: usize,
+    /// High-water occupancy over the run, in tokens.
+    pub max_occupancy: usize,
+    /// Tokens that passed through over the whole run.
+    pub total_tokens: u64,
+    /// High-water occupancy as a fraction of capacity (1.0 = the FIFO
+    /// filled at least once).
+    pub fill_frac: f64,
+    /// Mean tokens transferred per cycle over the run.
+    pub tokens_per_cycle: f64,
+}
+
 /// Full report of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -39,8 +57,12 @@ pub struct SimReport {
     pub latency_s: f64,
     /// Per-stage utilisation snapshots.
     pub stages: Vec<StageStats>,
-    /// Per-FIFO high-water marks (sizing input).
+    /// Per-FIFO high-water marks (sizing input; kept for report
+    /// stability — the same numbers appear in [`SimReport::fifos`]).
     pub fifo_max_occupancy: Vec<usize>,
+    /// Per-FIFO occupancy/utilisation snapshots, in pipeline order
+    /// (`fifos[i]` feeds stage i; the last one feeds the sink).
+    pub fifos: Vec<FifoStats>,
     /// Cycle the simulation drained at.
     pub end_cycle: u64,
 }
@@ -90,6 +112,16 @@ impl SimReport {
                 })
                 .collect(),
             fifo_max_occupancy: fifos.iter().map(|f| f.max_occupancy()).collect(),
+            fifos: fifos
+                .iter()
+                .map(|f| FifoStats {
+                    capacity: f.capacity,
+                    max_occupancy: f.max_occupancy(),
+                    total_tokens: f.total_tokens(),
+                    fill_frac: f.max_occupancy() as f64 / f.capacity.max(1) as f64,
+                    tokens_per_cycle: f.total_tokens() as f64 / end_cycle.max(1) as f64,
+                })
+                .collect(),
             end_cycle,
         }
     }
@@ -143,6 +175,15 @@ impl SimReport {
                 st.emitted_tokens
             ));
         }
+        for (i, f) in self.fifos.iter().enumerate() {
+            s.push_str(&format!(
+                "  fifo[{i}]      fill {:>2}/{:<3} ({:>5.1}%)  {:.3} tok/cyc\n",
+                f.max_occupancy,
+                f.capacity,
+                f.fill_frac * 100.0,
+                f.tokens_per_cycle
+            ));
+        }
         s
     }
 }
@@ -192,5 +233,32 @@ mod tests {
     #[test]
     fn render_mentions_stage() {
         assert!(fake_report().render().contains("util"));
+    }
+
+    #[test]
+    fn fifo_stats_expose_occupancy_and_utilisation() {
+        let mut fifo = Fifo::new(4);
+        assert!(fifo.push(3));
+        assert!(fifo.pop(1));
+        assert!(fifo.push(1));
+        let spec = StageSpec {
+            name: "x".into(),
+            kind: Kind::Fc,
+            tokens_per_frame: 1,
+            in_tokens_per_frame: 1,
+            ii_cycles_per_frame: 10,
+            fill_cycles: 0,
+        };
+        let r = SimReport::build(&[0], &[10], &[StageState::new(spec)], &[fifo], 100.0, 10);
+        assert_eq!(r.fifos.len(), 1);
+        let f = &r.fifos[0];
+        assert_eq!(f.capacity, 4);
+        assert_eq!(f.max_occupancy, 3);
+        assert_eq!(f.total_tokens, 4);
+        assert!((f.fill_frac - 0.75).abs() < 1e-9);
+        assert!((f.tokens_per_cycle - 0.4).abs() < 1e-9);
+        // The legacy high-water vector reports the same marks.
+        assert_eq!(r.fifo_max_occupancy, vec![3]);
+        assert!(r.render().contains("fifo[0]"));
     }
 }

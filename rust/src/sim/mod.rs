@@ -20,7 +20,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod stage;
 
-pub use metrics::SimReport;
+pub use metrics::{FifoStats, SimReport};
 pub use pipeline::Pipeline;
 // `Workload` moved to the shared `traffic` module (one arrival-process
 // implementation for simulator and server); the historical `sim::Workload`

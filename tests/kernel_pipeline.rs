@@ -1,0 +1,230 @@
+//! Layer-pipelined execution identity and calibration: the staged
+//! executor must be bit-identical to the serial `forward` across every
+//! kernel flavour × compiled-in datapath × stage grouping (uniform and
+//! degenerate), drain losslessly mid-stream, and — the sim-vs-reality
+//! loop — the cycle simulator built from the *served* stage grouping
+//! must identify the same bottleneck group the measured per-group
+//! occupancy does (DESIGN.md §13). The throughput floor lives in
+//! `benches/kernel_perf.rs`; correctness lives here, where `cargo test`
+//! runs it.
+
+use logicsparse::folding::{FoldingConfig, LayerFold, Style};
+use logicsparse::graph::builder::{lenet5, mlp};
+use logicsparse::graph::Graph;
+use logicsparse::kernel::{
+    CompiledModel, Datapath, KernelSpec, NativeSparseBackend, StagedExecutor,
+};
+use logicsparse::runtime::{InferenceBackend, SyntheticRuntime};
+use logicsparse::sim::Workload;
+use logicsparse::weights::ModelParams;
+use std::sync::Arc;
+
+/// All three kernel flavours for one graph (same construction as
+/// `tests/kernel_batch.rs`: awkward graphs get awkward lane divisors).
+fn flavours(g: &Graph, seed: u64) -> Vec<(&'static str, Arc<CompiledModel>)> {
+    let spec = KernelSpec::default();
+    let dense_params = ModelParams::synthetic(g, seed);
+    let mut sparse_params = ModelParams::synthetic(g, seed);
+    sparse_params.prune_global(0.7, 0.05).unwrap();
+
+    let mut cfg = FoldingConfig::default();
+    for n in g.mac_nodes() {
+        let simd = [8usize, 7, 5, 4, 3, 2]
+            .into_iter()
+            .find(|s| n.fold_in() % s == 0)
+            .unwrap_or(1);
+        cfg.set(
+            &n.name,
+            LayerFold { pe: 1, simd, style: Style::PartialSparse, sparsity: 0.5 },
+        );
+    }
+
+    vec![
+        (
+            "dense",
+            Arc::new(CompiledModel::compile_dense(g, &dense_params, &spec).unwrap()),
+        ),
+        (
+            "unrolled_sparse",
+            Arc::new(CompiledModel::compile_sparse(g, &sparse_params, &spec).unwrap()),
+        ),
+        (
+            "block_partial_sparse",
+            Arc::new(CompiledModel::compile(g, &sparse_params, &spec, &cfg).unwrap()),
+        ),
+    ]
+}
+
+/// A stream of `n` frames sized for `model`.
+fn stream_for(model: &CompiledModel, n: usize) -> Vec<f32> {
+    let px = model.input_pixels();
+    (0..n)
+        .flat_map(|i| (0..px).map(move |j| (((i * 31 + j * 7) % 97) as f32) / 97.0))
+        .collect()
+}
+
+/// The reference: per-image scalar `forward`, concatenated.
+fn per_image_scalar(model: &CompiledModel, x: &[f32], n: usize) -> Vec<f32> {
+    let px = model.input_pixels();
+    (0..n)
+        .flat_map(|i| {
+            model
+                .forward_with(&x[i * px..(i + 1) * px], Datapath::Scalar)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn pipeline_matches_forward_across_flavours_datapaths_and_groupings() {
+    for (name, model) in flavours(&lenet5(), 51) {
+        let n_stages = model.stages().len();
+        let n = 9usize;
+        let x = stream_for(&model, n);
+        let want = per_image_scalar(&model, &x, n);
+        // 1 = degenerate serial-on-a-worker; 2/3 = non-uniform groups
+        // (the conv2 stage dominates, so balanced cuts are uneven in
+        // stage count); n_stages = one worker per stage.
+        for groups in [1usize, 2, 3, n_stages] {
+            for dp in Datapath::all() {
+                let exec =
+                    StagedExecutor::with_config(Arc::clone(&model), groups, 2, dp).unwrap();
+                assert_eq!(
+                    exec.infer_batch(&x, n).unwrap(),
+                    want,
+                    "{name}: {} pipeline at {groups} groups != per-image forward",
+                    dp.label()
+                );
+                let st = exec.stats();
+                assert_eq!(st.in_flight(), 0, "{name}: frames lost at {groups} groups");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_matches_forward_on_non_lane_multiple_shapes() {
+    // fold_ins 19 / 13 / 13 and couts 13 / 13 / 10: every remainder path
+    // runs on every layer, and the stage list is short enough that the
+    // group clamp (groups > stages) is exercised too.
+    for (name, model) in flavours(&mlp(19, 13, 10), 52) {
+        let n = 5usize;
+        let x = stream_for(&model, n);
+        let want = per_image_scalar(&model, &x, n);
+        for groups in [1usize, 2, 16] {
+            for dp in Datapath::all() {
+                let exec =
+                    StagedExecutor::with_config(Arc::clone(&model), groups, 2, dp).unwrap();
+                assert_eq!(
+                    exec.infer_batch(&x, n).unwrap(),
+                    want,
+                    "{name}: {} diverged on awkward shapes at {groups} groups",
+                    dp.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_stream_close_is_lossless() {
+    let (_, model) = flavours(&lenet5(), 53).swap_remove(1);
+    let exec = StagedExecutor::with_config(Arc::clone(&model), 3, 2, model.datapath()).unwrap();
+    let px = model.input_pixels();
+    let n = 24usize;
+    let x = stream_for(&model, n);
+    let want = per_image_scalar(&model, &x, n);
+    // Submit the whole stream, then close while frames are still inside
+    // the pipeline: every accepted frame must still deliver its logits,
+    // bit-identically and in order.
+    let rxs: Vec<_> = (0..n)
+        .map(|i| exec.submit(&x[i * px..(i + 1) * px]).unwrap())
+        .collect();
+    exec.close();
+    let got: Vec<f32> = rxs.into_iter().flat_map(|rx| rx.recv().unwrap()).collect();
+    assert_eq!(got, want, "mid-stream close lost or corrupted frames");
+    let st = exec.stats();
+    assert_eq!(st.submitted, n as u64);
+    assert_eq!(st.completed(), n as u64);
+    assert_eq!(st.in_flight(), 0, "drain left frames in flight");
+    // The submit side is closed for good — and stays closed (idempotent).
+    assert!(exec.submit(&x[..px]).is_err());
+    exec.close();
+    assert!(exec.infer_batch(&x, n).is_err());
+}
+
+#[test]
+fn single_group_pipeline_degenerates_to_serial() {
+    let (_, model) = flavours(&lenet5(), 54).swap_remove(0);
+    let exec = StagedExecutor::with_config(Arc::clone(&model), 1, 2, model.datapath()).unwrap();
+    assert_eq!(exec.groups(), 1);
+    assert_eq!(exec.group_spans(), &[0..model.stages().len()]);
+    let n = 4usize;
+    let x = stream_for(&model, n);
+    assert_eq!(
+        exec.infer_batch(&x, n).unwrap(),
+        per_image_scalar(&model, &x, n),
+        "degenerate single-group pipeline diverged"
+    );
+}
+
+#[test]
+fn pipelined_backend_matches_plain_backend_end_to_end() {
+    // The serving seam: NativeSparseBackend::with_pipeline must answer
+    // exactly what the worker-less backend answers.
+    for (name, model) in flavours(&lenet5(), 55) {
+        let plain = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        let piped = NativeSparseBackend::with_pipeline(Arc::clone(&model), 4).unwrap();
+        let n = 9usize;
+        let x: Vec<f32> = (0..n).flat_map(SyntheticRuntime::stripe_image).collect();
+        assert_eq!(
+            piped.infer_padded(&x, n).unwrap(),
+            plain.infer_padded(&x, n).unwrap(),
+            "{name}: pipelined backend diverged"
+        );
+    }
+}
+
+#[test]
+fn calibration_sim_agrees_with_measured_bottleneck() {
+    // The sim-vs-reality loop: build the cycle simulator from the SAME
+    // stage grouping the served executor runs, saturate both, and the
+    // predicted bottleneck group must be the measured one. Dense LeNet-5
+    // at 3 groups isolates conv2 with a ~1.7x cost margin over the next
+    // group, so the agreement is robust to scheduling noise even on
+    // starved single-core runners; the scalar datapath keeps measured
+    // service time proportional to the MAC-count cost proxy.
+    let g = lenet5();
+    let params = ModelParams::synthetic(&g, 56);
+    let model =
+        Arc::new(CompiledModel::compile_dense(&g, &params, &KernelSpec::default()).unwrap());
+    let exec = StagedExecutor::with_config(Arc::clone(&model), 3, 4, Datapath::Scalar).unwrap();
+
+    // Predicted: saturate the simulated pipeline built from the served
+    // grouping (same costs, same FIFO depth).
+    let mut sim = exec.calibration_sim(100.0);
+    let rep = sim.try_run(&Workload::parse("saturated", 64).unwrap()).unwrap();
+    let predicted = rep.bottleneck_stage().name.clone();
+
+    // Measured: stream the same number of frames through the real thing
+    // and take the group that spent the most wall time executing.
+    let n = 64usize;
+    let x = stream_for(&model, n);
+    exec.infer_batch(&x, n).unwrap();
+    let st = exec.stats();
+    let measured = st.groups[st.bottleneck_group()].name.clone();
+
+    assert_eq!(
+        predicted, measured,
+        "simulator predicted '{predicted}' but measured occupancy says '{measured}' \
+         (costs {:?}, busy {:?})",
+        exec.group_costs(),
+        st.groups.iter().map(|g| g.busy_s).collect::<Vec<_>>()
+    );
+
+    // And the sim's exported FIFO stats cover the served FIFO layout:
+    // one per inter-group link plus source and sink ends.
+    assert_eq!(rep.fifos.len(), exec.groups() + 1);
+    assert!(rep.fifos.iter().all(|f| f.capacity == exec.fifo_depth()));
+    assert!(rep.fifos.iter().any(|f| f.total_tokens > 0));
+}
