@@ -1,7 +1,11 @@
 //! Per-kernel-flavour micro-benches for the native datapaths: dense /
-//! unrolled-sparse / block partial-sparse, each on every compiled-in
-//! [`Datapath`] plus the batch-parallel pool — the measured multiples
-//! behind the vectorisation tentpole (DESIGN.md §12).
+//! unrolled-sparse / block partial-sparse / N:M fixed-stride /
+//! cost-model auto-selected, each on every compiled-in [`Datapath`]
+//! plus the batch-parallel pool — the measured multiples behind the
+//! vectorisation tentpole (DESIGN.md §12) and the selection-policy
+//! audit (DESIGN.md §14: every flavour row carries the cost model's
+//! predicted II/LUTs next to the measured rate, and per-layer rows
+//! name the chosen style).
 //!
 //! Writes `BENCH_kernels.json` with one row per `flavour@path`, e.g.
 //! `block_partial_sparse@vector` or `dense@pipeline` (the staged
@@ -19,13 +23,15 @@
 
 use logicsparse::folding::{FoldingConfig, LayerFold, Style};
 use logicsparse::graph::builder::lenet5;
-use logicsparse::kernel::{BatchPool, CompiledModel, Datapath, KernelSpec, StagedExecutor};
+use logicsparse::kernel::{
+    BatchPool, CompiledModel, Datapath, Flavour, KernelSpec, StagedExecutor,
+};
 use logicsparse::runtime::SyntheticRuntime;
 use logicsparse::util::bench::{BenchLog, Bencher};
 use logicsparse::weights::ModelParams;
 use std::sync::Arc;
 
-/// The three kernel flavours on the LeNet-5 shape (the paper's model).
+/// The five kernel flavours on the LeNet-5 shape (the paper's model).
 fn flavours() -> Vec<(&'static str, Arc<CompiledModel>)> {
     let g = lenet5();
     let spec = KernelSpec::default();
@@ -52,10 +58,35 @@ fn flavours() -> Vec<(&'static str, Arc<CompiledModel>)> {
     }
     let partial = CompiledModel::compile(&g, &sparse_params, &spec, &cfg).unwrap();
 
+    // N:M fixed-stride: the same seed-7 weights re-masked 2:8, baked
+    // as padded fixed-slot schedules (DESIGN.md §14).
+    let mut nm_params = ModelParams::synthetic(&g, 7);
+    nm_params.prune_nm(2, 8).unwrap();
+    let nm = CompiledModel::compile_with_choice(&g, &nm_params, &spec, Flavour::Nm).unwrap();
+
+    // Cost-model auto-selection on the unstructured 0.75 masks: the
+    // policy must never schedule more work than the fixed-threshold
+    // nnz-only compile of the same params.
+    let (auto, choice) = CompiledModel::compile_auto(&g, &sparse_params, &spec).unwrap();
+    assert!(
+        auto.scheduled_macs_per_frame() <= sparse.scheduled_macs_per_frame(),
+        "auto-selected compile schedules more MACs ({}) than the fixed \
+         nnz-only compile ({})",
+        auto.scheduled_macs_per_frame(),
+        sparse.scheduled_macs_per_frame()
+    );
+    assert!(
+        choice.layers.iter().all(|l| l.feasible),
+        "auto selection left an infeasible layer on the default device:\n{}",
+        choice.render()
+    );
+
     vec![
         ("dense", Arc::new(dense)),
         ("unrolled_sparse", Arc::new(sparse)),
         ("block_partial_sparse", Arc::new(partial)),
+        ("nm_structured", Arc::new(nm)),
+        ("auto", Arc::new(auto)),
     ]
 }
 
@@ -128,6 +159,32 @@ fn main() {
                     ("frames_per_s", fps),
                     ("median_us", stats.median() * 1e6),
                     ("speedup_vs_scalar_x", fps / scalar_fps),
+                ],
+            );
+        }
+
+        // Selection-policy audit (DESIGN.md §14): the cost model's
+        // predictions for the baked folds next to the measured software
+        // rate, plus one row per layer whose key names the chosen style
+        // — the per-layer chosen-flavour column of BENCH_kernels.json.
+        log.push_model(
+            name,
+            "cost_model",
+            &[
+                ("predicted_ii_cycles", model.predicted_max_ii() as f64),
+                ("predicted_luts", model.predicted_luts() as f64),
+                ("scheduled_macs_per_frame", model.scheduled_macs_per_frame() as f64),
+                ("measured_scalar_frames_per_s", scalar_fps),
+            ],
+        );
+        for st in model.mac_stages() {
+            log.push_model(
+                name,
+                &format!("layer_{}_{}", st.name, st.style.as_str()),
+                &[
+                    ("predicted_ii_cycles", st.predicted_ii as f64),
+                    ("predicted_luts", st.predicted_luts as f64),
+                    ("scheduled_macs", st.scheduled_macs() as f64),
                 ],
             );
         }

@@ -16,6 +16,12 @@
 //! paper's point in wall-clock terms: the nnz-only schedule must beat the
 //! dense loop by >= 1.2x through the full serving plane, and the compiled
 //! model's compression accounting must match `experiments::headline`.
+//! The auto-selection acceptance (`auto_vs_fixed`, DESIGN.md §14) then
+//! serves the cost-model-driven compile against the fixed-threshold
+//! compile of the same mixed-mask params: auto must never schedule more
+//! MACs, must drop nothing, and (full runs) must not serve slower; every
+//! row carries the per-layer chosen flavour plus predicted-vs-measured
+//! cost columns.
 //!
 //! Part 3 is the **multi-model fleet** acceptance: a 3-tag heterogeneous
 //! fleet (2 native + 1 synthetic) under a mixed Poisson arrival process
@@ -45,8 +51,9 @@ use logicsparse::coordinator::{
 };
 use logicsparse::experiments::headline;
 use logicsparse::graph::builder::lenet5;
-use logicsparse::kernel::{CompiledModel, KernelSpec};
+use logicsparse::kernel::{CompiledModel, Flavour, KernelSpec};
 use logicsparse::runtime::{ModelRuntime, SyntheticRuntime, IMG};
+use logicsparse::sparsity::Mask;
 use logicsparse::traffic::{Mix, Traffic};
 use logicsparse::util::bench::{Bencher, BenchLog};
 use logicsparse::util::lstw::Store;
@@ -89,6 +96,7 @@ fn flavour_counts(model: &CompiledModel) -> Vec<(&'static str, f64)> {
         ("layers_unrolled_dense", Style::UnrolledDense),
         ("layers_unrolled_sparse", Style::UnrolledSparse),
         ("layers_partial_sparse", Style::PartialSparse),
+        ("layers_nm_structured", Style::NmStructured),
     ]
     .into_iter()
     .map(|(key, style)| {
@@ -309,6 +317,118 @@ fn native_kernels(log: &mut BenchLog, smoke: bool) {
             "baked sparse backend must beat dense native by >= 1.2x at \
              {:.0}% sparsity; measured {speedup:.2}x",
             sparsity * 100.0
+        );
+    }
+}
+
+/// Auto-selection acceptance (DESIGN.md §14): on a LeNet-5 whose conv1
+/// mask is dense and whose remaining layers are 75% pruned, the
+/// cost-driven compile must never schedule more work than the
+/// fixed-threshold nnz-only compile of the same params — the fixed
+/// threshold bakes a pointless index stream for the dense layer, the
+/// policy must fall back to the dense kernel there — and must serve at
+/// least as fast through the full plane (5% noise band, full runs only).
+/// Rows carry the per-layer chosen flavour and the predicted cost next
+/// to the measured throughput.
+fn auto_vs_fixed(log: &mut BenchLog, smoke: bool) {
+    println!("== cost-driven auto-selection vs fixed-threshold compile ==");
+    let g = lenet5();
+    let mut params = ModelParams::synthetic(&g, 11);
+    params.prune_global(0.75, 0.05).unwrap();
+    let conv1 = params.layers.iter_mut().find(|l| l.name == "conv1").unwrap();
+    conv1.mask = Mask::dense(conv1.w.len());
+    let spec = KernelSpec::default();
+    let fixed = Arc::new(CompiledModel::compile_sparse(&g, &params, &spec).unwrap());
+    let (auto, choice) = CompiledModel::compile_auto(&g, &params, &spec).unwrap();
+    let auto = Arc::new(auto);
+    println!("{}", choice.render());
+
+    // Structural half of the acceptance bound: holds in smoke runs too.
+    assert!(
+        auto.scheduled_macs_per_frame() <= fixed.scheduled_macs_per_frame(),
+        "auto-selected compile schedules more MACs than the fixed threshold: \
+         {} vs {}\n{}",
+        auto.scheduled_macs_per_frame(),
+        fixed.scheduled_macs_per_frame(),
+        choice.render()
+    );
+    let conv1_choice = choice.get("conv1").expect("conv1 is a MAC layer");
+    assert_eq!(
+        conv1_choice.flavour,
+        Flavour::Dense,
+        "policy baked an index stream for a dense-mask layer:\n{}",
+        choice.render()
+    );
+
+    let requests: u64 = if smoke { 120 } else { 1500 };
+    let mut rps = Vec::new();
+    for (name, model) in [("fixed", &fixed), ("auto", &auto)] {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines: 2,
+            admission_capacity: 512,
+            queue_depth: 16,
+            ..ServerOptions::native(Arc::clone(model))
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(requests),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        println!("auto_vs_fixed/{name}: {}", rep.render());
+        assert_eq!(rep.lost, 0, "auto_vs_fixed/{name}: responses dropped in shutdown");
+        assert_eq!(rep.errors, 0, "auto_vs_fixed/{name}: kernel execution failed");
+        assert_eq!(rep.completed, requests, "auto_vs_fixed/{name}: incomplete run");
+        assert_eq!(
+            snap.completed, snap.submitted,
+            "auto_vs_fixed/{name}: admitted requests lost"
+        );
+        // Predicted-vs-measured on one row: the cost model's II/LUT
+        // figures for the whole compile next to the served throughput.
+        let mut ms = metrics(&rep, &snap);
+        ms.extend(flavour_counts(model));
+        ms.push(("predicted_ii_cycles", model.predicted_max_ii() as f64));
+        ms.push(("predicted_luts", model.predicted_luts() as f64));
+        ms.push(("scheduled_macs", model.scheduled_macs_per_frame() as f64));
+        log.push_model(&format!("auto_vs_fixed_{name}"), model.datapath().label(), &ms);
+        rps.push(rep.achieved_rps);
+    }
+
+    // The audit table itself, one row per layer: chosen flavour in the
+    // model column, the numbers it won with as metrics.
+    for l in &choice.layers {
+        log.push_model(
+            "auto_vs_fixed_choice",
+            &format!("{}_{}", l.layer, l.flavour.as_str()),
+            &[
+                ("predicted_ii_cycles", l.predicted_ii as f64),
+                ("predicted_luts", l.predicted_luts as f64),
+                ("packed_bits", l.packed_bits as f64),
+                ("feasible", if l.feasible { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+
+    let ratio = rps[1] / rps[0];
+    println!("auto-selected vs fixed-threshold serving: {ratio:.2}x");
+    log.push(
+        "auto_vs_fixed",
+        &[
+            ("speedup", ratio),
+            ("auto_scheduled_macs", auto.scheduled_macs_per_frame() as f64),
+            ("fixed_scheduled_macs", fixed.scheduled_macs_per_frame() as f64),
+        ],
+    );
+    if !smoke {
+        assert!(
+            ratio >= 0.95,
+            "auto-selected compile served slower than the fixed-threshold \
+             compile it must dominate: {:.0} vs {:.0} req/s ({ratio:.2}x)",
+            rps[1],
+            rps[0]
         );
     }
 }
@@ -612,6 +732,7 @@ fn main() {
     synthetic_scaling(&mut log, smoke);
     synthetic_poisson(&mut log, smoke);
     native_kernels(&mut log, smoke);
+    auto_vs_fixed(&mut log, smoke);
     fleet_heterogeneous(&mut log, smoke);
     fleet_noisy_neighbour(&mut log, smoke);
     artifact_scenarios(&mut log);

@@ -32,7 +32,7 @@ pub fn layer_depth(node: &Node, fold: &LayerFold) -> f64 {
     match fold.style {
         Style::Folded | Style::PartialSparse => FOLDED_DEPTH,
         Style::UnrolledDense => tree_depth(node.fold_in() as f64),
-        Style::UnrolledSparse => {
+        Style::UnrolledSparse | Style::NmStructured => {
             // Surviving fan-in per neuron sets the pruned tree's height.
             let fan_in = (node.fold_in() as f64) * (1.0 - fold.sparsity);
             tree_depth(fan_in)

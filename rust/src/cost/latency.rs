@@ -15,9 +15,10 @@ use super::LayerCost;
 pub fn ii_cycles(node: &Node, fold: &LayerFold) -> u64 {
     match fold.style {
         Style::Folded | Style::UnrolledDense => fold.cycles_per_frame(node),
-        Style::UnrolledSparse => {
+        Style::UnrolledSparse | Style::NmStructured => {
             // Fully unrolled: one window per cycle regardless of sparsity
-            // (all surviving MACs fire in parallel).
+            // (all surviving MACs fire in parallel; the N:M schedule only
+            // changes where the survivors sit, not how many fire at once).
             node.out_pixels() as u64
         }
         Style::PartialSparse => {
@@ -51,7 +52,7 @@ fn per_output_cycles(node: &Node, fold: &LayerFold) -> u64 {
         Style::Folded | Style::UnrolledDense => {
             ((node.fold_in() / fold.simd) * (node.fold_out() / fold.pe)) as u64
         }
-        Style::UnrolledSparse => 1,
+        Style::UnrolledSparse | Style::NmStructured => 1,
         Style::PartialSparse => {
             let live_in = ((node.fold_in() as f64) * (1.0 - fold.sparsity)).ceil() as usize;
             (live_in.div_ceil(fold.simd).max(1) * (node.fold_out() / fold.pe)) as u64

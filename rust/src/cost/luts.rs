@@ -55,7 +55,12 @@ pub fn layer_luts(node: &Node, fold: &LayerFold, wbits: usize, abits: usize) -> 
     let mac = match fold.style {
         Style::Folded => folded_mac_luts(node, fold, wbits, abits),
         Style::UnrolledDense => baked_mac_luts(node, node.weights() as u64, wbits, abits),
-        Style::UnrolledSparse => baked_mac_luts(node, fold.nnz(node), wbits, abits),
+        // N:M costs as a baked sparse unroll over its stored (padded)
+        // rows: fold.sparsity for NmStructured is the *stored*-row
+        // fraction, so nnz() already charges the fixed-slot padding.
+        Style::UnrolledSparse | Style::NmStructured => {
+            baked_mac_luts(node, fold.nnz(node), wbits, abits)
+        }
         Style::PartialSparse => partial_sparse_luts(node, fold, wbits, abits),
     };
 
@@ -99,7 +104,7 @@ fn partial_sparse_luts(node: &Node, fold: &LayerFold, wbits: usize, abits: usize
 /// BRAM36 blocks for weight storage (folded styles only; baked = 0).
 pub fn layer_bram(node: &Node, fold: &LayerFold, wbits: usize) -> u64 {
     match fold.style {
-        Style::UnrolledDense | Style::UnrolledSparse => 0,
+        Style::UnrolledDense | Style::UnrolledSparse | Style::NmStructured => 0,
         Style::Folded => bram_for_bits((node.weights() * wbits) as u64, fold.pe),
         Style::PartialSparse => bram_for_bits((fold.nnz(node) * wbits as u64).max(1), fold.pe),
     }

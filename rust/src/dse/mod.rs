@@ -236,6 +236,7 @@ pub fn run(
 
     folding.check(g)?;
     let cost = cost::evaluate(g, &folding, dev)?;
+    report.mark_servable(&folding);
     report.finish(&cost);
     Ok(DseResult { strategy, folding, cost, report })
 }
@@ -259,6 +260,9 @@ mod tests {
             r.folding.check(&g).unwrap();
             assert!(r.cost.total_luts > 0);
             assert!(r.cost.throughput_fps > 0.0);
+            // Every explored design point is annotated with the kernel
+            // form the baked compile pass would serve it as.
+            assert_eq!(r.report.servable.len(), r.folding.layers.len());
         }
     }
 

@@ -6,6 +6,7 @@
 //! quote real traces.
 
 use crate::cost::ModelCost;
+use crate::folding::FoldingConfig;
 
 /// One DSE decision.
 #[derive(Debug, Clone, PartialEq)]
@@ -60,6 +61,10 @@ pub struct DseReport {
     pub steps: Vec<Step>,
     /// Bottleneck-elimination iterations executed.
     pub iterations: usize,
+    /// Which explored design points the baked-kernel compile pass can
+    /// serve, per layer: `(layer, style name, served description)` —
+    /// set by [`DseReport::mark_servable`].
+    pub servable: Vec<(String, String, String)>,
     /// One-line cost summary, set by [`DseReport::finish`].
     pub final_summary: Option<String>,
 }
@@ -71,6 +76,7 @@ impl DseReport {
             strategy: strategy.to_string(),
             steps: Vec::new(),
             iterations: 0,
+            servable: Vec::new(),
             final_summary: None,
         }
     }
@@ -83,6 +89,26 @@ impl DseReport {
     /// Count one bottleneck-elimination iteration.
     pub fn next_iteration(&mut self) {
         self.iterations += 1;
+    }
+
+    /// Record, for every layer of the chosen folding, how the baked
+    /// kernel compile pass would serve it (every [`crate::folding::Style`]
+    /// maps to a servable kernel form — see
+    /// [`crate::kernel::served_flavour`]). This closes the DSE loop: the
+    /// explored design point is annotated with the concrete schedule that
+    /// serving would execute, not just a cost estimate.
+    pub fn mark_servable(&mut self, folding: &FoldingConfig) {
+        self.servable = folding
+            .layers
+            .iter()
+            .map(|(name, fold)| {
+                (
+                    name.clone(),
+                    fold.style.as_str().to_string(),
+                    crate::kernel::served_flavour(fold.style).to_string(),
+                )
+            })
+            .collect();
     }
 
     /// Record the final cost summary line.
@@ -105,6 +131,12 @@ impl DseReport {
             out.push_str("  ");
             out.push_str(&s.render());
             out.push('\n');
+        }
+        if !self.servable.is_empty() {
+            out.push_str("servable as:\n");
+            for (layer, style, served) in &self.servable {
+                out.push_str(&format!("  {layer:<12} {style:<16} -> {served}\n"));
+            }
         }
         if let Some(sum) = &self.final_summary {
             out.push_str(sum);
@@ -140,5 +172,24 @@ mod tests {
         assert!(text.contains("sparse-unfold conv1"));
         assert!(text.contains("II floor"));
         assert_eq!(r.moves(), 1);
+    }
+
+    #[test]
+    fn servable_section_names_every_layer() {
+        use crate::folding::FoldingConfig;
+        use crate::graph::builder::lenet5;
+
+        let g = lenet5();
+        let mut r = DseReport::new("proposed");
+        assert!(r.servable.is_empty());
+        r.mark_servable(&FoldingConfig::unrolled(&g));
+        assert_eq!(r.servable.len(), 5);
+        let text = r.render();
+        assert!(text.contains("servable as:"));
+        for (layer, style, served) in &r.servable {
+            assert!(text.contains(layer.as_str()), "{layer} missing");
+            assert_eq!(style, "unrolled_dense");
+            assert_eq!(served, "dense kernel");
+        }
     }
 }

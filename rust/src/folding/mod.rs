@@ -29,6 +29,11 @@ pub enum Style {
     UnrolledSparse,
     /// Partially unrolled (PE/SIMD > baseline) with sparse packing.
     PartialSparse,
+    /// Fully unrolled N:M-structured schedule: at most N surviving
+    /// weights in every group of M consecutive input rows, indices
+    /// decoded at a fixed stride (the N and M are derived from the
+    /// layer's mask at compile time).
+    NmStructured,
 }
 
 impl Style {
@@ -39,6 +44,7 @@ impl Style {
             Style::UnrolledDense => "unrolled_dense",
             Style::UnrolledSparse => "unrolled_sparse",
             Style::PartialSparse => "partial_sparse",
+            Style::NmStructured => "nm_structured",
         }
     }
 
@@ -49,18 +55,25 @@ impl Style {
             "unrolled_dense" => Ok(Style::UnrolledDense),
             "unrolled_sparse" => Ok(Style::UnrolledSparse),
             "partial_sparse" => Ok(Style::PartialSparse),
+            "nm_structured" => Ok(Style::NmStructured),
             other => Err(Error::folding(format!("unknown style '{other}'"))),
         }
     }
 
     /// True for the sparse packing styles.
     pub fn is_sparse(&self) -> bool {
-        matches!(self, Style::UnrolledSparse | Style::PartialSparse)
+        matches!(
+            self,
+            Style::UnrolledSparse | Style::PartialSparse | Style::NmStructured
+        )
     }
 
     /// True for the fully unrolled styles.
     pub fn is_unrolled(&self) -> bool {
-        matches!(self, Style::UnrolledDense | Style::UnrolledSparse)
+        matches!(
+            self,
+            Style::UnrolledDense | Style::UnrolledSparse | Style::NmStructured
+        )
     }
 }
 
@@ -359,7 +372,13 @@ mod tests {
 
     #[test]
     fn style_roundtrip() {
-        for st in [Style::Folded, Style::UnrolledDense, Style::UnrolledSparse, Style::PartialSparse] {
+        for st in [
+            Style::Folded,
+            Style::UnrolledDense,
+            Style::UnrolledSparse,
+            Style::PartialSparse,
+            Style::NmStructured,
+        ] {
             assert_eq!(Style::parse(st.as_str()).unwrap(), st);
         }
         assert!(Style::parse("magic").is_err());

@@ -90,6 +90,14 @@ impl NativeSparseBackend {
     pub fn pipeline(&self) -> Option<&StagedExecutor> {
         self.pipeline.as_ref()
     }
+
+    /// Measured per-group occupancy as a [`Calibration`] the kernel
+    /// selection policy can consume, when running in pipeline mode.
+    /// Serial and pooled backends have no stage groups to measure and
+    /// return `None` — callers fall back to `Calibration::default()`.
+    pub fn measured_calibration(&self) -> Option<super::Calibration> {
+        self.pipeline.as_ref().map(|p| super::Calibration::from_stats(&p.stats()))
+    }
 }
 
 impl InferenceBackend for NativeSparseBackend {
@@ -184,6 +192,12 @@ mod tests {
             );
         }
         assert!(piped.infer_padded(&[0.0; 10], 1).is_err());
+        // Only the pipelined mode has stage groups to measure, and
+        // every measured factor is positive once frames have flowed.
+        assert!(serial.measured_calibration().is_none());
+        let cal = piped.measured_calibration().unwrap();
+        assert_eq!(cal.occupancy.len(), 3);
+        assert!(cal.occupancy.iter().all(|(_, f)| *f >= 0.0));
     }
 
     #[test]

@@ -16,7 +16,20 @@
 //!   (the dense-engine baseline the bench compares against);
 //! * `UnrolledSparse`          → a per-output-neuron nnz-only schedule;
 //! * `PartialSparse`           → a block schedule (SIMD-lane granularity):
-//!   all-zero blocks are elided, live blocks run dense.
+//!   all-zero blocks are elided, live blocks run dense;
+//! * `NmStructured`            → an N:M fixed-slot schedule: every group
+//!   of M consecutive input rows carries a fixed number of slots
+//!   (survivors first, sum-neutral code-0 pads after), so the index
+//!   stream decodes at a fixed stride ([`pack::pack_nm_indices`]).
+//!
+//! Flavours can be forced per model
+//! ([`CompiledModel::compile_with_choice`], [`Flavour`]) or chosen per
+//! layer by the cost-driven selection policy ([`KernelChoice`],
+//! [`CompiledModel::compile_auto`]): each layer's candidates are scored
+//! with the [`crate::cost`] latency/LUT models under a per-layer LUT
+//! budget share, and the predictions ride on the compiled stages
+//! (`predicted_ii` / `predicted_luts` on [`MacStage`]) so benches can put
+//! predicted next to measured.
 //!
 //! The datapath is integer end-to-end: activations are quantised codes
 //! (unsigned, ReLU clipped), MACs accumulate in `i32`, and each layer
@@ -61,12 +74,14 @@ pub mod pack;
 pub mod pipeline;
 pub mod pool;
 
+use crate::device::{Device, XCU50};
 use crate::folding::{FoldingConfig, LayerFold, Style};
-use crate::graph::{Graph, Op};
+use crate::graph::{Graph, Node, Op};
 use crate::quant::{quantize_per_channel, QSpec};
+use crate::sparsity::nm::{detect_nm, NmFit};
 use crate::sparsity::{compression_ratio, compression_ratio_csr, ModelSparsity};
 use crate::util::error::{Error, Result};
-use crate::weights::ModelParams;
+use crate::weights::{LayerParams, ModelParams};
 
 pub use backend::NativeSparseBackend;
 pub use pipeline::StagedExecutor;
@@ -136,6 +151,63 @@ impl Datapath {
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             Datapath::Simd => "simd",
         }
+    }
+}
+
+/// Kernel-flavour selector for [`CompiledModel::compile_with_choice`] and
+/// the `serve --kernel` flag: `Auto` runs the cost-driven per-layer
+/// selection policy ([`KernelChoice`]); every other value pins one style
+/// on every MAC layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavour {
+    /// Cost-model-driven per-layer selection.
+    Auto,
+    /// Dense full unroll everywhere ([`Style::UnrolledDense`]).
+    Dense,
+    /// nnz-only sparse unroll everywhere ([`Style::UnrolledSparse`]).
+    Unrolled,
+    /// SIMD-block schedule everywhere ([`Style::PartialSparse`]).
+    Block,
+    /// N:M fixed-stride schedule everywhere ([`Style::NmStructured`]).
+    Nm,
+}
+
+impl Flavour {
+    /// Canonical CLI name of the flavour.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Flavour::Auto => "auto",
+            Flavour::Dense => "dense",
+            Flavour::Unrolled => "unrolled",
+            Flavour::Block => "block",
+            Flavour::Nm => "nm",
+        }
+    }
+
+    /// Parse a canonical flavour name.
+    pub fn parse(s: &str) -> Result<Flavour> {
+        match s {
+            "auto" => Ok(Flavour::Auto),
+            "dense" => Ok(Flavour::Dense),
+            "unrolled" => Ok(Flavour::Unrolled),
+            "block" => Ok(Flavour::Block),
+            "nm" => Ok(Flavour::Nm),
+            other => Err(Error::kernel(format!(
+                "unknown kernel flavour '{other}' (known: auto, dense, unrolled, block, nm)"
+            ))),
+        }
+    }
+}
+
+/// How the serving plane executes a folding style — the description the
+/// DSE report's servable table and the audit logs print.
+pub fn served_flavour(style: Style) -> &'static str {
+    match style {
+        Style::Folded => "dense loop (folded)",
+        Style::UnrolledDense => "dense kernel",
+        Style::UnrolledSparse => "nnz-only baked schedule",
+        Style::PartialSparse => "block schedule",
+        Style::NmStructured => "N:M fixed-stride schedule",
     }
 }
 
@@ -264,6 +336,15 @@ pub struct MacStage {
     pub packed_rel: Vec<u8>,
     /// Index width used by `packed_rel`.
     pub idx_bits: usize,
+    /// `(N, M)` of an `NmStructured` schedule (derived from the layer's
+    /// mask at compile time); `None` for every other style.
+    pub nm: Option<(usize, usize)>,
+    /// Cost-model predicted initiation interval (cycles/frame) under the
+    /// baked fold — the prediction the bench audit columns put next to
+    /// measured software cost.
+    pub predicted_ii: u64,
+    /// Cost-model predicted LUTs under the baked fold.
+    pub predicted_luts: u64,
 }
 
 impl MacStage {
@@ -658,7 +739,15 @@ impl CompiledModel {
                 _ => fold_in,
             };
 
-            let (kernel, block_bases) = match fold.style {
+            // N:M layout derived from the mask: the compile pass and the
+            // selection policy share `detect_nm`, so they always agree on
+            // the (N, M) a given mask bakes under.
+            let nm_fit = match fold.style {
+                Style::NmStructured => Some(detect_nm(&lp.mask.keep, fold_in, cout)?),
+                _ => None,
+            };
+
+            let (kernel, idx_stream) = match fold.style {
                 Style::Folded | Style::UnrolledDense => (
                     Kernel::Dense {
                         codes: codes.clone(),
@@ -672,6 +761,14 @@ impl CompiledModel {
                 Style::PartialSparse => {
                     build_sparse(&codes, &lp.mask.keep, fold_in, cout, fold.simd.max(1), rel_of)
                 }
+                Style::NmStructured => build_nm(
+                    &codes,
+                    &lp.mask.keep,
+                    fold_in,
+                    cout,
+                    nm_fit.expect("fit derived above"),
+                    rel_of,
+                ),
             };
 
             let (packed_codes, packed_rel, idx_bits) = match &kernel {
@@ -683,15 +780,34 @@ impl CompiledModel {
                     // Block schedules: one base-row index per live block —
                     // positions inside a live block are consecutive, so a
                     // loader recomputes per-element offsets from the layer
-                    // geometry (the documented packed layout, §9).
-                    let (bytes, bits) = if *block > 1 {
-                        pack::pack_indices(&block_bases, fold_in)
+                    // geometry (the documented packed layout, §9). N:M
+                    // schedules: one within-group offset per fixed slot at
+                    // index_bits(M) — slot addresses are pure arithmetic
+                    // (§14), no pointer array.
+                    let (bytes, bits) = if let Some(fit) = nm_fit {
+                        pack::pack_nm_indices(&idx_stream, fit.m)
+                    } else if *block > 1 {
+                        pack::pack_indices(&idx_stream, fold_in)
                     } else {
                         pack::pack_indices(rel, addr_space)
                     };
                     (pack::pack_codes(code, spec.weights.bits), bytes, bits)
                 }
             };
+
+            // Cost-model predictions for the audit columns. An N:M fold is
+            // normalised to its stored-row fraction first, so the numbers
+            // charge the fixed-slot padding actually baked.
+            let eff_fold = match nm_fit {
+                Some(fit) => LayerFold {
+                    sparsity: fit.stored_sparsity(fold_in).clamp(0.0, 0.999_999),
+                    ..fold.clone()
+                },
+                None => fold.clone(),
+            };
+            let predicted_ii = crate::cost::latency::ii_cycles(node, &eff_fold);
+            let predicted_luts =
+                crate::cost::luts::layer_luts(node, &eff_fold, spec.weights.bits, spec.act_bits);
 
             let is_output = i == last;
             let in_scale = cur_scale;
@@ -728,6 +844,9 @@ impl CompiledModel {
                 packed_codes,
                 packed_rel,
                 idx_bits,
+                nm: nm_fit.map(|f| (f.n, f.m)),
+                predicted_ii,
+                predicted_luts,
             }));
         }
 
@@ -760,6 +879,66 @@ impl CompiledModel {
             cfg.set(&n.name, LayerFold::unrolled_sparse(n, s));
         }
         Self::compile(g, params, spec, &cfg)
+    }
+
+    /// Cost-driven compile under the default [`ChoicePolicy`] (XCU50,
+    /// full LUT budget, no calibration): run the per-layer selection
+    /// policy and bake the winners. Returns the model plus the
+    /// [`KernelChoice`] audit trail.
+    pub fn compile_auto(
+        g: &Graph,
+        params: &ModelParams,
+        spec: &KernelSpec,
+    ) -> Result<(CompiledModel, KernelChoice)> {
+        Self::compile_auto_with(g, params, spec, &ChoicePolicy::default())
+    }
+
+    /// [`CompiledModel::compile_auto`] under an explicit policy (target
+    /// device, budget fraction, measured occupancy calibration).
+    pub fn compile_auto_with(
+        g: &Graph,
+        params: &ModelParams,
+        spec: &KernelSpec,
+        policy: &ChoicePolicy,
+    ) -> Result<(CompiledModel, KernelChoice)> {
+        let choice = KernelChoice::choose(g, params, spec, policy)?;
+        let model = Self::compile(g, params, spec, &choice.folding())?;
+        Ok((model, choice))
+    }
+
+    /// Compile under a forced flavour override (the `serve --kernel`
+    /// flag): `Auto` delegates to the selection policy, everything else
+    /// pins one style on every MAC layer.
+    pub fn compile_with_choice(
+        g: &Graph,
+        params: &ModelParams,
+        spec: &KernelSpec,
+        flavour: Flavour,
+    ) -> Result<CompiledModel> {
+        let layer = |n: &Node| {
+            params
+                .get(&n.name)
+                .ok_or_else(|| Error::kernel(format!("no params for layer '{}'", n.name)))
+        };
+        match flavour {
+            Flavour::Auto => Ok(Self::compile_auto(g, params, spec)?.0),
+            Flavour::Dense => Self::compile_dense(g, params, spec),
+            Flavour::Unrolled => Self::compile_sparse(g, params, spec),
+            Flavour::Block => {
+                let mut cfg = FoldingConfig::default();
+                for n in g.mac_nodes() {
+                    cfg.set(&n.name, block_fold(n, layer(n)?));
+                }
+                Self::compile(g, params, spec, &cfg)
+            }
+            Flavour::Nm => {
+                let mut cfg = FoldingConfig::default();
+                for n in g.mac_nodes() {
+                    cfg.set(&n.name, nm_fold(n, layer(n)?)?.0);
+                }
+                Self::compile(g, params, spec, &cfg)
+            }
+        }
     }
 
     /// Flattened input length one frame must provide.
@@ -836,6 +1015,17 @@ impl CompiledModel {
         self.mac_stages()
             .map(|m| m.packed_codes.len() + m.packed_rel.len())
             .sum()
+    }
+
+    /// Cost-model predicted bottleneck II (cycles/frame) across the MAC
+    /// stages — the predicted side of the predicted-vs-measured audit.
+    pub fn predicted_max_ii(&self) -> u64 {
+        self.mac_stages().map(|m| m.predicted_ii).max().unwrap_or(0)
+    }
+
+    /// Cost-model predicted LUT total across the MAC stages.
+    pub fn predicted_luts(&self) -> u64 {
+        self.mac_stages().map(|m| m.predicted_luts).sum()
     }
 
     /// One-line description for logs and backend labels.
@@ -972,6 +1162,373 @@ fn build_sparse(
         ptr.push(code.len() as u32);
     }
     (Kernel::Sparse { ptr, rel, code, block, live_blocks }, bases)
+}
+
+/// Build an N:M fixed-slot schedule: per output channel, every group of
+/// `fit.m` consecutive input rows contributes exactly `min(fit.n, group
+/// extent)` entries — surviving rows first (in row order), then
+/// sum-neutral code-0 pads anchored at the group base. The padding keeps
+/// the stream fully fixed-stride (slot addresses are pure arithmetic) at
+/// the price of storing `fit.stored_rows` rows per channel, and
+/// [`Kernel::stored`] charges the pads, keeping `scheduled_macs` honest.
+/// Executes on the existing `Sparse { block: 1 }` datapath — a pad
+/// multiplies by code 0, so bit-identity with the dense compile holds by
+/// construction. Also returns the within-group offset of every slot, the
+/// stream [`pack::pack_nm_indices`] packs at `index_bits(m)` bits.
+fn build_nm(
+    codes: &[i8],
+    keep: &[bool],
+    fold_in: usize,
+    cout: usize,
+    fit: NmFit,
+    rel_of: impl Fn(usize) -> u32,
+) -> (Kernel, Vec<u32>) {
+    let (n, m) = (fit.n, fit.m);
+    let mut ptr = Vec::with_capacity(cout + 1);
+    let mut rel = Vec::new();
+    let mut code = Vec::new();
+    let mut offsets = Vec::new();
+    ptr.push(0u32);
+    for c in 0..cout {
+        let mut base = 0usize;
+        while base < fold_in {
+            let hi = (base + m).min(fold_in);
+            let slots = n.min(hi - base);
+            let mut filled = 0usize;
+            for row in base..hi {
+                // `fit.n` is the worst-case survivor count over every
+                // group (detect_nm on this same mask), so survivors never
+                // exceed `slots`.
+                if keep[row * cout + c] {
+                    debug_assert!(filled < slots, "N:M fit too tight for its own mask");
+                    rel.push(rel_of(row));
+                    code.push(codes[row * cout + c]);
+                    offsets.push((row - base) as u32);
+                    filled += 1;
+                }
+            }
+            for _ in filled..slots {
+                rel.push(rel_of(base));
+                code.push(0);
+                offsets.push(0);
+            }
+            base = hi;
+        }
+        ptr.push(code.len() as u32);
+    }
+    let live_blocks = code.len();
+    (Kernel::Sparse { ptr, rel, code, block: 1, live_blocks }, offsets)
+}
+
+/// Measured per-pipeline-group occupancy (the PR 7 calibration loop):
+/// group names from [`StagedExecutor`] statistics paired with their
+/// busy fraction. The selection policy uses it to re-weight per-layer
+/// LUT-budget shares — measured-hot layers earn more area. The default
+/// is the uncalibrated unit weighting.
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// `(group name, occupancy in [0, 1])` pairs; a group name is the
+    /// "+"-joined stage names of one pipeline group.
+    pub occupancy: Vec<(String, f64)>,
+}
+
+impl Calibration {
+    /// Build from measured pipeline statistics.
+    pub fn from_stats(stats: &pipeline::PipelineStats) -> Self {
+        Calibration { occupancy: stats.occupancy() }
+    }
+
+    /// Occupancy factor for `layer`: the utilisation of the pipeline
+    /// group containing it (exact match against one of the group's
+    /// "+"-joined stage names), floored at 0.05 so a measured-idle layer
+    /// never loses its whole budget share; 1.0 when uncalibrated.
+    pub fn factor(&self, layer: &str) -> f64 {
+        self.occupancy
+            .iter()
+            .find(|(g, _)| g.split('+').any(|s| s == layer))
+            .map(|(_, f)| f.max(0.05))
+            .unwrap_or(1.0)
+    }
+}
+
+/// Tunable inputs of the selection policy ([`KernelChoice::choose`]): the
+/// target device whose LUT budget bounds per-layer feasibility, the
+/// fraction of that budget this model may claim (1.0 = one model per
+/// device, the serving default), and a measured occupancy calibration.
+#[derive(Debug, Clone)]
+pub struct ChoicePolicy {
+    /// Target device.
+    pub device: Device,
+    /// Fraction of the device LUT budget available to this model.
+    pub budget_fraction: f64,
+    /// Measured occupancy re-weighting (default: unit weights).
+    pub calibration: Calibration,
+}
+
+impl Default for ChoicePolicy {
+    fn default() -> Self {
+        ChoicePolicy { device: XCU50, budget_fraction: 1.0, calibration: Calibration::default() }
+    }
+}
+
+/// One layer's audit row: the winning candidate and the numbers it won
+/// with — what the bench JSON and the `serve --kernel auto` log surface.
+#[derive(Debug, Clone)]
+pub struct LayerChoice {
+    /// Layer name.
+    pub layer: String,
+    /// Winning flavour (never `Auto`).
+    pub flavour: Flavour,
+    /// The fold the winner bakes under.
+    pub fold: LayerFold,
+    /// Cost-model predicted II (cycles/frame) of the winner.
+    pub predicted_ii: u64,
+    /// Cost-model predicted LUTs of the winner.
+    pub predicted_luts: u64,
+    /// Packed schedule size (bits) of the winner: codes plus index
+    /// stream, from the same accounting the packer uses.
+    pub packed_bits: u64,
+    /// The LUT-budget share the layer was scored against.
+    pub lut_share: u64,
+    /// Whether the winner fit its share (`false` = every candidate was
+    /// over budget and the smallest-LUT one was kept).
+    pub feasible: bool,
+}
+
+/// The cost-driven selection: one [`LayerChoice`] per MAC layer in
+/// stream order. Pure and deterministic — the same (graph, params, spec,
+/// policy) always produces the same choice (asserted in tests), so the
+/// compile pass and any later audit agree.
+#[derive(Debug, Clone)]
+pub struct KernelChoice {
+    /// Per-layer audit rows in stream order.
+    pub layers: Vec<LayerChoice>,
+}
+
+impl KernelChoice {
+    /// Run the selection policy. Every layer's four candidates (dense
+    /// unroll, nnz-only unroll, SIMD-block schedule, N:M fixed-stride)
+    /// are scored with the [`crate::cost`] models; among candidates
+    /// whose predicted LUTs fit the layer's budget share, the
+    /// lexicographically smallest `(predicted II, predicted LUTs, packed
+    /// bits)` wins, first in candidate order on full ties. If nothing
+    /// fits, the smallest-LUT candidate wins and the row is marked
+    /// infeasible. A layer's share of the policy's LUT pool is
+    /// proportional to its dense weight count re-weighted by measured
+    /// occupancy ([`Calibration::factor`]) — hot layers earn more area.
+    pub fn choose(
+        g: &Graph,
+        params: &ModelParams,
+        spec: &KernelSpec,
+        policy: &ChoicePolicy,
+    ) -> Result<KernelChoice> {
+        g.validate()?;
+        spec.validate()?;
+        if !(policy.budget_fraction > 0.0 && policy.budget_fraction.is_finite()) {
+            return Err(Error::kernel(format!(
+                "budget fraction {} must be positive and finite",
+                policy.budget_fraction
+            )));
+        }
+        let mut nodes = Vec::new();
+        for node in g.mac_nodes() {
+            let lp = params
+                .get(&node.name)
+                .ok_or_else(|| Error::kernel(format!("no params for layer '{}'", node.name)))?;
+            if lp.fold_in != node.fold_in() || lp.cout != node.cout {
+                return Err(Error::kernel(format!(
+                    "'{}': params [{}x{}] vs graph [{}x{}]",
+                    node.name,
+                    lp.fold_in,
+                    lp.cout,
+                    node.fold_in(),
+                    node.cout
+                )));
+            }
+            let w = node.weights() as f64 * policy.calibration.factor(&node.name);
+            nodes.push((node, lp, w));
+        }
+        let pool = policy.device.lut_budget() as f64 * policy.budget_fraction;
+        let total: f64 = nodes.iter().map(|(_, _, w)| w).sum();
+        let mut layers = Vec::new();
+        for (node, lp, w) in nodes {
+            let share = (pool * w / total) as u64;
+            let cands = candidates(node, lp, spec)?;
+            let (win, feasible) = match cands
+                .iter()
+                .filter(|c| c.predicted_luts <= share)
+                .min_by_key(|c| (c.predicted_ii, c.predicted_luts, c.packed_bits))
+            {
+                Some(c) => (c, true),
+                None => (
+                    cands
+                        .iter()
+                        .min_by_key(|c| (c.predicted_luts, c.predicted_ii, c.packed_bits))
+                        .expect("four candidates per layer"),
+                    false,
+                ),
+            };
+            layers.push(LayerChoice {
+                layer: node.name.clone(),
+                flavour: win.flavour,
+                fold: win.fold.clone(),
+                predicted_ii: win.predicted_ii,
+                predicted_luts: win.predicted_luts,
+                packed_bits: win.packed_bits,
+                lut_share: share,
+                feasible,
+            });
+        }
+        Ok(KernelChoice { layers })
+    }
+
+    /// The audit row of layer `name`, if present.
+    pub fn get(&self, name: &str) -> Option<&LayerChoice> {
+        self.layers.iter().find(|l| l.layer == name)
+    }
+
+    /// The chosen folds as a [`FoldingConfig`] — what
+    /// [`CompiledModel::compile`] bakes.
+    pub fn folding(&self) -> FoldingConfig {
+        FoldingConfig {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| (l.layer.clone(), l.fold.clone()))
+                .collect(),
+        }
+    }
+
+    /// Human-readable audit table (one row per layer).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "layer        flavour    style            ii_pred    luts_pred  packed_bits  lut_share  fit\n",
+        );
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<12} {:<10} {:<16} {:>9} {:>10} {:>12} {:>10} {:>4}\n",
+                l.layer,
+                l.flavour.as_str(),
+                l.fold.style.as_str(),
+                l.predicted_ii,
+                l.predicted_luts,
+                l.packed_bits,
+                l.lut_share,
+                if l.feasible { "yes" } else { "over" },
+            ));
+        }
+        out
+    }
+}
+
+/// One scored candidate implementation of a layer.
+struct Candidate {
+    flavour: Flavour,
+    fold: LayerFold,
+    predicted_ii: u64,
+    predicted_luts: u64,
+    packed_bits: u64,
+}
+
+/// The SIMD-block partial-sparse fold both the selection policy and the
+/// forced `block` flavour use: one PE, the widest lane count in
+/// {8, 5, 4, 2} dividing the input axis (1 otherwise), mask-measured
+/// sparsity.
+fn block_fold(node: &Node, lp: &LayerParams) -> LayerFold {
+    let simd = [8usize, 5, 4, 2]
+        .into_iter()
+        .find(|s| node.fold_in() % s == 0)
+        .unwrap_or(1);
+    LayerFold {
+        pe: 1,
+        simd,
+        style: Style::PartialSparse,
+        sparsity: lp.mask.sparsity().min(0.999_999),
+    }
+}
+
+/// The N:M full-unroll fold for `node`'s mask: [`detect_nm`] picks the
+/// group size, and the fold's sparsity annotation is the fit's
+/// *stored*-row fraction (padding counted), so every downstream cost
+/// annotation charges the fixed slots honestly.
+fn nm_fold(node: &Node, lp: &LayerParams) -> Result<(LayerFold, NmFit)> {
+    let fold_in = node.fold_in();
+    let fit = detect_nm(&lp.mask.keep, fold_in, node.cout)?;
+    let fold = LayerFold {
+        pe: node.fold_out(),
+        simd: fold_in,
+        style: Style::NmStructured,
+        sparsity: fit.stored_sparsity(fold_in).clamp(0.0, 0.999_999),
+    };
+    Ok((fold, fit))
+}
+
+/// The four candidate implementations of one layer, scored with the cost
+/// models. Vec order is the full-tie preference (first wins): dense
+/// before the index-carrying flavours, so a dense mask lands on the
+/// plain dense kernel.
+fn candidates(node: &Node, lp: &LayerParams, spec: &KernelSpec) -> Result<Vec<Candidate>> {
+    let wbits = spec.weights.bits as u64;
+    let fold_in = node.fold_in();
+    let cout = node.cout;
+    let addr_space = match node.op {
+        Op::Conv => node.ifm * node.ifm * node.cin,
+        _ => fold_in,
+    };
+    let score = |flavour: Flavour, fold: LayerFold, packed_bits: u64| Candidate {
+        flavour,
+        predicted_ii: crate::cost::latency::ii_cycles(node, &fold),
+        predicted_luts: crate::cost::luts::layer_luts(
+            node,
+            &fold,
+            spec.weights.bits,
+            spec.act_bits,
+        ),
+        packed_bits,
+        fold,
+    };
+
+    let nnz = lp.mask.nnz() as u64;
+    // Dense stores every code, no index stream; the unrolled-sparse
+    // stream carries one full-width input offset per survivor.
+    let dense = score(
+        Flavour::Dense,
+        LayerFold::unrolled(node),
+        node.weights() as u64 * wbits,
+    );
+    let unrolled = score(
+        Flavour::Unrolled,
+        LayerFold::unrolled_sparse(node, lp.mask.sparsity().min(0.999_999)),
+        nnz * (wbits + pack::index_bits(addr_space) as u64),
+    );
+    // Block: exact stored/live counts from the mask (what build_sparse
+    // will bake), one base-row index per live block.
+    let bfold = block_fold(node, lp);
+    let (mut stored, mut live) = (0u64, 0u64);
+    for c in 0..cout {
+        let mut r = 0usize;
+        while r < fold_in {
+            let hi = (r + bfold.simd).min(fold_in);
+            if (r..hi).any(|row| lp.mask.keep[row * cout + c]) {
+                stored += (hi - r) as u64;
+                live += 1;
+            }
+            r = hi;
+        }
+    }
+    let block = score(
+        Flavour::Block,
+        bfold,
+        stored * wbits + live * pack::index_bits(fold_in) as u64,
+    );
+    // N:M: fixed slots (padding included) at narrow within-group offsets.
+    let (nfold, fit) = nm_fold(node, lp)?;
+    let nm = score(
+        Flavour::Nm,
+        nfold,
+        (fit.stored_rows * cout) as u64 * (wbits + pack::index_bits(fit.m) as u64),
+    );
+    Ok(vec![dense, unrolled, block, nm])
 }
 
 #[cfg(test)]
@@ -1253,5 +1810,215 @@ mod tests {
         let mut p2 = ModelParams::synthetic(&g2, 11);
         p2.layers.retain(|l| l.name != "fc2");
         assert!(CompiledModel::compile_dense(&g2, &p2, &KernelSpec::default()).is_err());
+    }
+
+    #[test]
+    fn flavour_roundtrip_and_forced_compiles_are_bit_identical() {
+        for f in [Flavour::Auto, Flavour::Dense, Flavour::Unrolled, Flavour::Block, Flavour::Nm]
+        {
+            assert_eq!(Flavour::parse(f.as_str()).unwrap(), f);
+        }
+        assert!(Flavour::parse("bespoke").is_err());
+        // Every forced flavour computes the same logits as the dense
+        // compile of the same masked params — the PR 2 invariant extended
+        // to N:M and auto.
+        let (g, p) = lenet_params(25, Some(0.6));
+        let spec = KernelSpec::default();
+        let reference = CompiledModel::compile_dense(&g, &p, &spec).unwrap();
+        let img = SyntheticRuntime::stripe_image(2);
+        let want = reference.forward(&img).unwrap();
+        for f in [Flavour::Auto, Flavour::Unrolled, Flavour::Block, Flavour::Nm] {
+            let m = CompiledModel::compile_with_choice(&g, &p, &spec, f).unwrap();
+            assert_eq!(m.forward(&img).unwrap(), want, "flavour {}", f.as_str());
+        }
+    }
+
+    #[test]
+    fn nm_compile_is_bit_identical_and_fixed_stride() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 24);
+        p.prune_nm(2, 8).unwrap();
+        let spec = KernelSpec::default();
+        let nm = CompiledModel::compile_with_choice(&g, &p, &spec, Flavour::Nm).unwrap();
+        let dense = CompiledModel::compile_dense(&g, &p, &spec).unwrap();
+        for img in images(3) {
+            for dp in Datapath::all() {
+                assert_eq!(
+                    nm.forward_with(&img, dp).unwrap(),
+                    dense.forward_with(&img, dp).unwrap(),
+                    "{} datapath diverged on N:M",
+                    dp.label()
+                );
+            }
+        }
+        for mac in nm.mac_stages() {
+            assert_eq!(mac.style, Style::NmStructured);
+            let (n, m) = mac.nm.expect("N:M stage must record its fit");
+            assert!(n <= m && m <= 16, "{}: {n}:{m}", mac.name);
+            let Kernel::Sparse { rel, code, block, .. } = &mac.kernel else {
+                panic!("N:M must bake a sparse schedule");
+            };
+            assert_eq!(*block, 1);
+            // Fixed-stride stream: narrow within-group offsets, length a
+            // pure function of the layer geometry and the fit.
+            assert_eq!(mac.idx_bits, pack::index_bits(m));
+            assert_eq!(mac.packed_rel.len(), (code.len() * mac.idx_bits).div_ceil(8));
+            let rows = pack::unpack_nm_rows(&mac.packed_rel, mac.fold_in, n, m, mac.cout);
+            assert_eq!(rows.len(), code.len());
+            if mac.op == Op::Fc {
+                // fc offsets are absolute rows: the decode must rebuild
+                // the execution table exactly.
+                assert_eq!(&rows, rel);
+            }
+            // The schedule stores fixed slots: at least the survivors,
+            // never more than the dense axis.
+            assert!(code.len() >= mac.nnz && code.len() <= mac.weights);
+        }
+    }
+
+    #[test]
+    fn auto_selection_is_pure_and_audited() {
+        let (g, p) = lenet_params(20, Some(0.75));
+        let spec = KernelSpec::default();
+        let (m1, c1) = CompiledModel::compile_auto(&g, &p, &spec).unwrap();
+        let (m2, c2) = CompiledModel::compile_auto(&g, &p, &spec).unwrap();
+        // Purity: identical inputs, identical choice and model folding.
+        assert_eq!(c1.folding(), c2.folding());
+        assert_eq!(m1.folding, m2.folding);
+        // Audit rows cover every MAC layer in stream order, and the
+        // predictions on the compiled stages match the rows the policy
+        // scored (both sides call the same cost models).
+        assert_eq!(c1.layers.len(), 5);
+        for (l, mac) in c1.layers.iter().zip(m1.mac_stages()) {
+            assert_eq!(l.layer, mac.name);
+            assert_eq!(l.fold.style, mac.style);
+            assert_eq!(l.predicted_ii, mac.predicted_ii);
+            assert_eq!(l.predicted_luts, mac.predicted_luts);
+            assert!(l.feasible, "{} over budget on a full XCU50", l.layer);
+        }
+        assert_eq!(c1.get("conv1").unwrap().layer, "conv1");
+        assert!(c1.render().contains("conv1"));
+        assert!(m1.predicted_max_ii() > 0);
+        assert!(m1.predicted_luts() > 0);
+    }
+
+    #[test]
+    fn auto_picks_dense_for_dense_masks_and_sparse_for_pruned() {
+        let g = lenet5();
+        let spec = KernelSpec::default();
+        let dense_p = ModelParams::synthetic(&g, 21);
+        let (_, choice) = CompiledModel::compile_auto(&g, &dense_p, &spec).unwrap();
+        // Dense masks: the index-free dense kernel wins on packed bits.
+        for l in &choice.layers {
+            assert_eq!(l.flavour, Flavour::Dense, "{}\n{}", l.layer, choice.render());
+        }
+        // Unstructured 75% pruning: the nnz-only unroll ties dense on
+        // predicted II and wins on LUTs.
+        let (_, p75) = lenet_params(21, Some(0.75));
+        let (m, choice) = CompiledModel::compile_auto(&g, &p75, &spec).unwrap();
+        for l in &choice.layers {
+            assert_eq!(l.flavour, Flavour::Unrolled, "{}\n{}", l.layer, choice.render());
+        }
+        assert!(m.total_nnz() < m.total_weights());
+    }
+
+    #[test]
+    fn auto_prefers_nm_on_structured_masks() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 22);
+        p.prune_nm(2, 4).unwrap();
+        let spec = KernelSpec::default();
+        let (m, choice) = CompiledModel::compile_auto(&g, &p, &spec).unwrap();
+        // A genuinely 2:4 mask stores no padding, so the N:M candidate
+        // ties the nnz-only unroll on predicted cost and wins on packed
+        // bits (2-bit offsets vs full-width input indices).
+        for l in &choice.layers {
+            assert_eq!(l.flavour, Flavour::Nm, "{}\n{}", l.layer, choice.render());
+        }
+        // No padding waste: the N:M schedule runs exactly the survivors.
+        let sparse = CompiledModel::compile_sparse(&g, &p, &spec).unwrap();
+        assert_eq!(m.scheduled_macs_per_frame(), sparse.scheduled_macs_per_frame());
+        let dense = CompiledModel::compile_dense(&g, &p, &spec).unwrap();
+        for img in images(2) {
+            assert_eq!(m.forward(&img).unwrap(), dense.forward(&img).unwrap());
+        }
+    }
+
+    #[test]
+    fn choice_is_monotone_in_sparsity() {
+        // Satellite invariant: raising sparsity never flips a layer from
+        // a sparse flavour back to dense. A tiny device + half budget
+        // forces the block/fallback arms so the invariant is exercised
+        // where it could actually break.
+        let g = lenet5();
+        let spec = KernelSpec::default();
+        let policy = ChoicePolicy {
+            device: crate::device::TINY,
+            budget_fraction: 0.5,
+            ..Default::default()
+        };
+        let mut prev: Vec<Flavour> = Vec::new();
+        for s in [0.3, 0.5, 0.7, 0.85, 0.95] {
+            let mut p = ModelParams::synthetic(&g, 23);
+            p.prune_global(s, 0.05).unwrap();
+            let choice = KernelChoice::choose(&g, &p, &spec, &policy).unwrap();
+            choice.folding().check(&g).unwrap();
+            let flavs: Vec<Flavour> = choice.layers.iter().map(|l| l.flavour).collect();
+            if !prev.is_empty() {
+                for (i, (&now, &before)) in flavs.iter().zip(&prev).enumerate() {
+                    if before != Flavour::Dense {
+                        assert_ne!(
+                            now,
+                            Flavour::Dense,
+                            "{} flipped sparse->dense when sparsity rose to {s}\n{}",
+                            choice.layers[i].layer,
+                            choice.render()
+                        );
+                    }
+                }
+            }
+            prev = flavs;
+        }
+        // The constrained policy really exercised the block schedule.
+        assert!(prev.iter().any(|&f| f == Flavour::Block || f == Flavour::Unrolled));
+    }
+
+    #[test]
+    fn calibration_reweights_budget_shares() {
+        let mut cal = Calibration::default();
+        assert_eq!(cal.factor("conv1"), 1.0);
+        cal.occupancy = vec![("conv1+pool1".to_string(), 0.9), ("fc1".to_string(), 0.2)];
+        assert!((cal.factor("conv1") - 0.9).abs() < 1e-12);
+        assert!((cal.factor("fc1") - 0.2).abs() < 1e-12);
+        assert_eq!(cal.factor("fc3"), 1.0);
+        // The floor keeps a measured-idle layer from losing its whole
+        // share.
+        cal.occupancy.push(("fc2".to_string(), 0.0));
+        assert!(cal.factor("fc2") >= 0.05);
+        // A calibrated policy still yields a valid, pure choice.
+        let (g, p) = lenet_params(26, Some(0.75));
+        let spec = KernelSpec::default();
+        let policy = ChoicePolicy { calibration: cal, ..Default::default() };
+        let a = KernelChoice::choose(&g, &p, &spec, &policy).unwrap();
+        let b = KernelChoice::choose(&g, &p, &spec, &policy).unwrap();
+        assert_eq!(a.folding(), b.folding());
+        a.folding().check(&g).unwrap();
+        // Bad policies are rejected.
+        let bad = ChoicePolicy { budget_fraction: 0.0, ..Default::default() };
+        assert!(KernelChoice::choose(&g, &p, &spec, &bad).is_err());
+    }
+
+    #[test]
+    fn served_flavour_names_every_style() {
+        for st in [
+            Style::Folded,
+            Style::UnrolledDense,
+            Style::UnrolledSparse,
+            Style::PartialSparse,
+            Style::NmStructured,
+        ] {
+            assert!(!served_flavour(st).is_empty());
+        }
+        assert_eq!(served_flavour(Style::NmStructured), "N:M fixed-stride schedule");
     }
 }

@@ -90,6 +90,49 @@ pub fn pack_indices(idx: &[u32], extent: usize) -> (Vec<u8>, usize) {
     (pack_bits(idx, bits), bits)
 }
 
+/// Pack an N:M schedule's *within-group* offsets (each in `0..m`) at
+/// `index_bits(m)` bits; returns (bytes, bits). The stream is fully
+/// fixed-stride: with `n` slots per group, slot `j` of group `g` of
+/// channel `c` lives at bit `((c·groups + g)·n + j)·index_bits(m)` — a
+/// pure-arithmetic address, no pointer array. This is the regularity win
+/// an N:M schedule buys over unstructured indices: the decode needs the
+/// group counter and a constant multiply, nothing stored per block.
+pub fn pack_nm_indices(offsets: &[u32], m: usize) -> (Vec<u8>, usize) {
+    let bits = index_bits(m);
+    debug_assert!(
+        offsets.iter().all(|&o| (o as usize) < m),
+        "N:M offset outside its group extent {m}"
+    );
+    (pack_bits(offsets, bits), bits)
+}
+
+/// Decode a [`pack_nm_indices`] stream back to *absolute* input rows in
+/// stream order: `cout` channels × `fold_in.div_ceil(m)` groups × `n`
+/// slots per full group (a tail group of `t = fold_in % m` rows carries
+/// `min(n, t)` slots), each row = `group·m + offset`. The round-trip
+/// counterpart the property tests pin against the mask.
+pub fn unpack_nm_rows(bytes: &[u8], fold_in: usize, n: usize, m: usize, cout: usize) -> Vec<u32> {
+    let bits = index_bits(m);
+    let groups = fold_in.div_ceil(m);
+    let tail = fold_in % m;
+    let slots_per_col: usize = (0..groups)
+        .map(|g| if g + 1 == groups && tail != 0 { n.min(tail) } else { n })
+        .sum();
+    let offsets = unpack_bits(bytes, bits, cout * slots_per_col);
+    let mut rows = Vec::with_capacity(offsets.len());
+    let mut at = 0usize;
+    for _ in 0..cout {
+        for g in 0..groups {
+            let slots = if g + 1 == groups && tail != 0 { n.min(tail) } else { n };
+            for _ in 0..slots {
+                rows.push((g * m) as u32 + offsets[at]);
+                at += 1;
+            }
+        }
+    }
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +190,31 @@ mod tests {
             assert_eq!(packed.len(), (n * bits).div_ceil(8));
             assert_eq!(unpack_codes(&packed, bits, n), codes);
         });
+    }
+
+    #[test]
+    fn nm_stream_is_fixed_stride() {
+        // fold_in = 8, m = 4, n = 2, cout = 2: 2 groups x 2 slots x 2
+        // channels = 8 offsets at index_bits(4) = 2 bits = exactly 2
+        // bytes — the stride is arithmetic, nothing stored per group.
+        let offsets = vec![0u32, 3, 1, 2, 0, 1, 2, 3];
+        let (bytes, bits) = pack_nm_indices(&offsets, 4);
+        assert_eq!(bits, 2);
+        assert_eq!(bytes.len(), 2);
+        let rows = unpack_nm_rows(&bytes, 8, 2, 4, 2);
+        // row = group*m + offset, groups in order per channel.
+        assert_eq!(rows, vec![0, 3, 5, 6, 0, 1, 6, 7]);
+    }
+
+    #[test]
+    fn nm_tail_group_carries_fewer_slots() {
+        // fold_in = 25, m = 8: groups of 8,8,8 and a tail of 1; with
+        // n = 2 the tail holds min(2,1) = 1 slot -> 7 slots per channel.
+        let offsets = vec![1u32, 7, 0, 2, 3, 4, 0];
+        let (bytes, bits) = pack_nm_indices(&offsets, 8);
+        assert_eq!(bits, 3);
+        let rows = unpack_nm_rows(&bytes, 25, 2, 8, 1);
+        assert_eq!(rows, vec![1, 7, 8, 10, 19, 20, 24]);
     }
 
     #[test]

@@ -554,6 +554,17 @@ impl PipelineStats {
         let wall = self.elapsed_s.max(1e-12);
         self.groups.iter().map(|g| g.busy_s / wall).collect()
     }
+
+    /// `(group name, utilisation)` pairs in stream order — the measured
+    /// occupancy the kernel-selection policy consumes
+    /// ([`crate::kernel::Calibration::from_stats`]).
+    pub fn occupancy(&self) -> Vec<(String, f64)> {
+        self.groups
+            .iter()
+            .zip(self.utilisation())
+            .map(|(g, u)| (g.name.clone(), u))
+            .collect()
+    }
 }
 
 #[cfg(test)]

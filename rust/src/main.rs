@@ -19,7 +19,7 @@ use logicsparse::coordinator::{
 use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
 use logicsparse::graph::builder::lenet5;
-use logicsparse::kernel::{CompiledModel, KernelSpec};
+use logicsparse::kernel::{self, CompiledModel, Flavour, KernelSpec};
 use logicsparse::util::cli::{self, Opt};
 use logicsparse::util::error::Result;
 use logicsparse::util::lstw::Store;
@@ -135,11 +135,12 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
     }
     for (name, f) in &result.folding.layers {
         println!(
-            "  {name:<8} {:<16} PE={:<4} SIMD={:<4} s={:.2}",
+            "  {name:<8} {:<16} PE={:<4} SIMD={:<4} s={:.2}  serves as {}",
             f.style.as_str(),
             f.pe,
             f.simd,
-            f.sparsity
+            f.sparsity,
+            kernel::served_flavour(f.style)
         );
     }
     let out = a
@@ -235,6 +236,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
         Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
         Opt { name: "pipeline", takes_value: true, default: None, help: "run native kernels layer-pipelined across this many stage groups ('auto' or 0 = size from the core budget; needs --native-sparsity)" },
+        Opt { name: "kernel", takes_value: true, default: Some("unrolled"), help: "kernel flavour for native kernels: auto (cost-model per-layer selection, prints the audit table)|dense|unrolled|block|nm (needs --native-sparsity)" },
         Opt { name: "model", takes_value: true, default: None, help: "repeatable fleet member 'tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag]': serve a multi-model fleet behind one shared admission gate" },
         Opt { name: "slo", takes_value: true, default: None, help: "repeatable per-tag SLO 'tag=p99_ms[:weight]': partition the shared admission budget by weight (fleet mode)" },
         Opt { name: "autotune", takes_value: false, default: None, help: "enable queue-depth autotuning from queue-full/steal telemetry (fleet mode)" },
@@ -248,7 +250,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if !a.get_all("model").is_empty() {
         // Fleet mode: the single-model backend selectors would be
         // silently ignored, so reject the combination loudly.
-        for conflicting in ["tag", "synthetic-us", "native-sparsity", "pipeline"] {
+        for conflicting in ["tag", "synthetic-us", "native-sparsity", "pipeline", "kernel"] {
             if !a.get_all(conflicting).is_empty() {
                 return Err(logicsparse::Error::config(format!(
                     "--{conflicting} conflicts with --model; put the backend in the \
@@ -283,8 +285,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // labels come from the compiled model itself, so served classes are
     // checked against a local forward pass of the same artifact).
     let (backend, imgs, labels) = if let Some(s) = a.get_f64("native-sparsity")? {
-        let model = compile_native(artifacts, tag, s)?;
-        println!("native kernels: {}", model.summary());
+        let flavour = Flavour::parse(a.req("kernel")?)?;
+        let model = compile_native(artifacts, tag, s, flavour)?;
+        println!("native kernels ({}): {}", flavour.as_str(), model.summary());
         let n = 256usize;
         let (imgs, _) = runtime::SyntheticRuntime::dataset(n);
         let mut labels = Vec::with_capacity(n);
@@ -305,6 +308,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     } else if !a.get_all("pipeline").is_empty() {
         return Err(logicsparse::Error::config(
             "--pipeline needs native kernels: add --native-sparsity",
+        ));
+    } else if !a.get_all("kernel").is_empty() {
+        return Err(logicsparse::Error::config(
+            "--kernel needs native kernels: add --native-sparsity",
         ));
     } else if let Some(us) = a.get_usize("synthetic-us")? {
         let (imgs, labels) = runtime::SyntheticRuntime::dataset(512);
@@ -396,8 +403,14 @@ fn parse_pipeline_opt(a: &cli::Args) -> Result<Option<usize>> {
 
 /// Compile a baked native model for serving: artifact-backed params when
 /// `params_<tag>.lstw` exists, synthetic weights otherwise, pruned to
-/// `sparsity` and compiled to nnz-only kernels.
-fn compile_native(artifacts: &str, tag: &str, sparsity: f64) -> Result<Arc<CompiledModel>> {
+/// `sparsity` and compiled to the requested kernel flavour. `auto` runs
+/// the cost-model selection and prints its per-layer audit table.
+fn compile_native(
+    artifacts: &str,
+    tag: &str,
+    sparsity: f64,
+    flavour: Flavour,
+) -> Result<Arc<CompiledModel>> {
     let g = lenet5();
     let mut params = match ModelParams::load_artifacts(artifacts, tag, &g) {
         Ok(p) => p,
@@ -407,7 +420,16 @@ fn compile_native(artifacts: &str, tag: &str, sparsity: f64) -> Result<Arc<Compi
         }
     };
     params.prune_global(sparsity, 0.05)?;
-    Ok(Arc::new(CompiledModel::compile_sparse(&g, &params, &KernelSpec::default())?))
+    let spec = KernelSpec::default();
+    let model = match flavour {
+        Flavour::Auto => {
+            let (model, choice) = CompiledModel::compile_auto(&g, &params, &spec)?;
+            println!("{}", choice.render());
+            model
+        }
+        forced => CompiledModel::compile_with_choice(&g, &params, &spec, forced)?,
+    };
+    Ok(Arc::new(model))
 }
 
 /// How to check a fleet tag's served classes (None = no local oracle).
@@ -465,7 +487,7 @@ fn parse_model_spec(
                 }
                 None => (0.75, tag),
             };
-            let model = compile_native(artifacts, atag, sparsity)?;
+            let model = compile_native(artifacts, atag, sparsity, Flavour::Unrolled)?;
             println!("[{tag}] native kernels: {}", model.summary());
             let backend = EngineBackend::Native { model: Arc::clone(&model) };
             Ok((tag.to_string(), backend, Oracle::Native(model)))

@@ -47,6 +47,87 @@ pub fn nm_sparsity(n: usize, m: usize) -> f64 {
     1.0 - n as f64 / m as f64
 }
 
+/// The tightest N:M description of an existing mask at group size `m`:
+/// how a fixed-stride schedule would store it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NmFit {
+    /// Max surviving weights in any m-group of any column (>= 1).
+    pub n: usize,
+    /// Group size along the input axis.
+    pub m: usize,
+    /// Rows a fixed n-slot-per-group schedule stores per column,
+    /// padding included: `(fold_in / m)·n + min(n, fold_in % m)`.
+    pub stored_rows: usize,
+}
+
+impl NmFit {
+    /// Fraction of the input axis a fixed-stride schedule *skips* —
+    /// the sparsity annotation an `NmStructured` fold carries (padding
+    /// slots count as stored, so this is honest about the schedule, not
+    /// the mask).
+    pub fn stored_sparsity(&self, fold_in: usize) -> f64 {
+        1.0 - self.stored_rows as f64 / fold_in as f64
+    }
+}
+
+/// Fit an existing `keep` mask (`[fold_in, cout]` row-major, same layout
+/// as [`nm_mask`]) to group size `m`: `n` is the worst-case survivor
+/// count over every m-group of every column (tail group included),
+/// clamped to >= 1 so the schedule always has a slot to carry a
+/// sum-neutral pad.
+pub fn nm_fit(keep: &[bool], fold_in: usize, cout: usize, m: usize) -> Result<NmFit> {
+    if m == 0 {
+        return Err(Error::lstw("N:M fit needs m >= 1"));
+    }
+    if fold_in * cout != keep.len() {
+        return Err(Error::lstw(format!(
+            "mask len {} != fold_in {fold_in} * cout {cout}",
+            keep.len()
+        )));
+    }
+    let mut n = 1usize;
+    for c in 0..cout {
+        let mut r = 0;
+        while r < fold_in {
+            let hi = (r + m).min(fold_in);
+            let survivors = (r..hi).filter(|&row| keep[row * cout + c]).count();
+            n = n.max(survivors);
+            r = hi;
+        }
+    }
+    let tail = fold_in % m;
+    let stored_rows = (fold_in / m) * n + n.min(tail);
+    Ok(NmFit { n, m, stored_rows })
+}
+
+/// Candidate group sizes [`detect_nm`] scans, smallest first.
+const NM_CANDIDATE_M: [usize; 4] = [2, 4, 8, 16];
+
+/// Pick the group size that stores an existing mask most compactly as a
+/// fixed-stride N:M schedule: scan m in {2, 4, 8, 16} (filtered to
+/// m <= fold_in, falling back to m = fold_in when none fit), fit each
+/// with [`nm_fit`], and keep the fit with the fewest stored rows —
+/// ties to the smaller m (narrower offsets). Deterministic: the same
+/// mask always yields the same fit, so the compile pass and the
+/// selection policy can both call this and agree.
+pub fn detect_nm(keep: &[bool], fold_in: usize, cout: usize) -> Result<NmFit> {
+    let mut candidates: Vec<usize> = NM_CANDIDATE_M
+        .into_iter()
+        .filter(|&m| m <= fold_in)
+        .collect();
+    if candidates.is_empty() {
+        candidates.push(fold_in.max(1));
+    }
+    let mut best: Option<NmFit> = None;
+    for m in candidates {
+        let fit = nm_fit(keep, fold_in, cout, m)?;
+        if best.map(|b| fit.stored_rows < b.stored_rows).unwrap_or(true) {
+            best = Some(fit);
+        }
+    }
+    Ok(best.expect("at least one candidate m"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +181,53 @@ mod tests {
         assert!(nm_mask(&w, 4, 2, 0, 4).is_err());
         assert!(nm_mask(&w, 4, 2, 5, 4).is_err());
         assert!(nm_mask(&w, 3, 2, 2, 4).is_err());
+        assert!(nm_fit(&[true; 8], 4, 2, 0).is_err());
+        assert!(nm_fit(&[true; 7], 4, 2, 4).is_err());
+    }
+
+    #[test]
+    fn fit_recovers_the_generating_nm() {
+        // A mask generated as 2:4 on divisible fold_in fits back as n=2
+        // at m=4 with no padding waste.
+        let fold_in = 16;
+        let cout = 3;
+        let mut rng = Pcg32::seeded(99);
+        let w: Vec<f32> = (0..fold_in * cout).map(|_| rng.normal() as f32).collect();
+        let mask = nm_mask(&w, fold_in, cout, 2, 4).unwrap();
+        let fit = nm_fit(&mask.keep, fold_in, cout, 4).unwrap();
+        assert_eq!(fit, NmFit { n: 2, m: 4, stored_rows: 8 });
+        assert!((fit.stored_sparsity(fold_in) - 0.5).abs() < 1e-12);
+        // detect_nm scans group sizes and lands on a fit at least as
+        // compact as the generating one.
+        let det = detect_nm(&mask.keep, fold_in, cout).unwrap();
+        assert!(det.stored_rows <= fit.stored_rows);
+    }
+
+    #[test]
+    fn fit_counts_tail_groups() {
+        // fold_in = 25 pruned 2:8: worst group holds 2, tail of 1 holds
+        // min(2, 1) = 1 -> stored = 3*2 + 1 = 7 rows.
+        let fold_in = 25;
+        let mut rng = Pcg32::seeded(41);
+        let w: Vec<f32> = (0..fold_in).map(|_| rng.normal() as f32).collect();
+        let mask = nm_mask(&w, fold_in, 1, 2, 8).unwrap();
+        let fit = nm_fit(&mask.keep, fold_in, 1, 8).unwrap();
+        assert_eq!(fit, NmFit { n: 2, m: 8, stored_rows: 7 });
+    }
+
+    #[test]
+    fn detect_is_deterministic_and_clamps_n() {
+        // A fully dense mask fits as n = m everywhere; a fully pruned
+        // mask clamps n to 1 (a slot must exist to carry the pad).
+        let dense = vec![true; 32];
+        let d1 = detect_nm(&dense, 32, 1).unwrap();
+        assert_eq!(d1, detect_nm(&dense, 32, 1).unwrap());
+        assert_eq!(d1.stored_rows, 32);
+        let empty = vec![false; 32];
+        let e = detect_nm(&empty, 32, 1).unwrap();
+        assert_eq!(e.n, 1);
+        // Tiny fold_in falls back to a single whole-axis group.
+        let tiny = detect_nm(&[true], 1, 1).unwrap();
+        assert_eq!((tiny.n, tiny.m), (1, 1));
     }
 }

@@ -152,6 +152,18 @@ impl ModelParams {
         Ok(())
     }
 
+    /// Re-mask every layer with an N:M structured mask: keep the `n`
+    /// largest of every `m` consecutive input rows per output column
+    /// (`sparsity::nm::nm_mask` on each layer's own [fold_in, cout]
+    /// layout). Masks only — weights stay untouched, like
+    /// [`Self::prune_global`].
+    pub fn prune_nm(&mut self, n: usize, m: usize) -> Result<()> {
+        for l in self.layers.iter_mut() {
+            l.mask = crate::sparsity::nm::nm_mask(&l.w, l.fold_in, l.cout, n, m)?;
+        }
+        Ok(())
+    }
+
     /// Export to an LSTW store (`<layer>.w/.b/.mask` — byte-compatible
     /// with the python exporter, so [`Self::load`] round-trips).
     pub fn to_store(&self) -> Store {
@@ -264,6 +276,22 @@ mod tests {
             assert_eq!(a.bias, b.bias);
             assert_eq!(a.mask, b.mask);
         }
+    }
+
+    #[test]
+    fn prune_nm_masks_every_layer() {
+        let g = lenet5();
+        let mut mp = ModelParams::synthetic(&g, 13);
+        mp.prune_nm(2, 4).unwrap();
+        for l in &mp.layers {
+            // Divisible fold_in on every LeNet-5 layer at m=4 except
+            // conv1 (25): full groups keep exactly 2 of 4, the tail
+            // keeps min(2, tail).
+            let fit = crate::sparsity::nm::nm_fit(&l.mask.keep, l.fold_in, l.cout, 4).unwrap();
+            assert_eq!(fit.n, 2, "{}", l.name);
+        }
+        assert!(mp.sparsity().global_sparsity() > 0.45);
+        assert!(mp.prune_nm(5, 4).is_err());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Differential lock-down for cost-driven kernel selection (DESIGN.md
+//! §14): every kernel flavour — auto-selected or forced — must be
+//! bit-identical to the forced-dense compile of the same masked params,
+//! across every datapath and every stage grouping, on lane-friendly and
+//! awkward shapes alike. The i32 MAC schedules make this exact: pruned
+//! entries quantize to code 0 and code-0 entries are sum-neutral, so any
+//! schedule over the surviving weights (nnz-only, block, or padded N:M
+//! fixed-stride) must land on the same logits bit for bit. This extends
+//! the PR-2 flavour-identity invariant to the N:M flavour and to the
+//! selection policy itself.
+
+use logicsparse::graph::builder::{lenet5, mlp, ChainBuilder};
+use logicsparse::graph::Graph;
+use logicsparse::kernel::{
+    ChoicePolicy, CompiledModel, Datapath, Flavour, KernelChoice, KernelSpec, StagedExecutor,
+};
+use logicsparse::weights::ModelParams;
+use std::sync::Arc;
+
+/// Every selectable flavour, auto included.
+const FLAVOURS: [Flavour; 5] =
+    [Flavour::Auto, Flavour::Dense, Flavour::Unrolled, Flavour::Block, Flavour::Nm];
+
+/// Deterministic input stream of `n` frames for `model`.
+fn stream_for(model: &CompiledModel, n: usize) -> Vec<f32> {
+    let px = model.input_pixels();
+    (0..n)
+        .flat_map(|i| (0..px).map(move |j| (((i * 29 + j * 13) % 89) as f32) / 89.0))
+        .collect()
+}
+
+/// The full differential grid for one (graph, params): every flavour x
+/// every datapath x serial and pipelined groupings, all against the
+/// forced-dense scalar reference on the same masked params.
+fn assert_grid(g: &Graph, params: &ModelParams, label: &str) {
+    let spec = KernelSpec::default();
+    let n = 5usize;
+    let dense = CompiledModel::compile_with_choice(g, params, &spec, Flavour::Dense).unwrap();
+    let px = dense.input_pixels();
+    let x = stream_for(&dense, n);
+    let want: Vec<f32> = (0..n)
+        .flat_map(|i| dense.forward_with(&x[i * px..(i + 1) * px], Datapath::Scalar).unwrap())
+        .collect();
+
+    for flavour in FLAVOURS {
+        let model =
+            Arc::new(CompiledModel::compile_with_choice(g, params, &spec, flavour).unwrap());
+        // A sparse schedule never executes more MACs than the dense one.
+        assert!(
+            model.scheduled_macs_per_frame() <= dense.scheduled_macs_per_frame(),
+            "{label}: {} schedules more MACs than dense",
+            flavour.as_str()
+        );
+        let n_stages = model.stages().len();
+        for dp in Datapath::all() {
+            let got: Vec<f32> = (0..n)
+                .flat_map(|i| model.forward_with(&x[i * px..(i + 1) * px], dp).unwrap())
+                .collect();
+            assert_eq!(
+                got,
+                want,
+                "{label}: {} x {} diverged from the forced-dense reference",
+                flavour.as_str(),
+                dp.label()
+            );
+            // 1 = degenerate serial-on-a-worker, 2 = uneven cut,
+            // n_stages = one worker per stage.
+            for groups in [1usize, 2, n_stages] {
+                let exec = StagedExecutor::with_config(Arc::clone(&model), groups, 2, dp).unwrap();
+                assert_eq!(
+                    exec.infer_batch(&x, n).unwrap(),
+                    want,
+                    "{label}: {} x {} pipelined at {groups} groups diverged",
+                    flavour.as_str(),
+                    dp.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flavour_grid_matches_dense_on_unstructured_lenet() {
+    let g = lenet5();
+    let mut p = ModelParams::synthetic(&g, 61);
+    p.prune_global(0.7, 0.05).unwrap();
+    assert_grid(&g, &p, "lenet5 @0.7 unstructured");
+}
+
+#[test]
+fn flavour_grid_matches_dense_on_nm_structured_lenet() {
+    let g = lenet5();
+    let mut p = ModelParams::synthetic(&g, 62);
+    p.prune_nm(2, 4).unwrap();
+    assert_grid(&g, &p, "lenet5 2:4 structured");
+    // On exactly-N:M masks the policy itself lands on the N:M flavour
+    // for every layer — the structured schedule stores no padding waste,
+    // so it ties the nnz-only kernel on cost and wins on index width.
+    let choice =
+        KernelChoice::choose(&g, &p, &KernelSpec::default(), &ChoicePolicy::default()).unwrap();
+    for l in &choice.layers {
+        assert_eq!(l.flavour, Flavour::Nm, "{}: expected N:M, got {:?}", l.layer, l.flavour);
+        assert!(l.feasible, "{}: N:M choice marked infeasible", l.layer);
+    }
+}
+
+#[test]
+fn flavour_grid_matches_dense_on_dense_masks() {
+    // Dense masks are the degenerate sparsity: forced sparse flavours
+    // must still agree (every weight survives, nothing is skipped).
+    let g = lenet5();
+    let p = ModelParams::synthetic(&g, 63);
+    assert_grid(&g, &p, "lenet5 dense masks");
+}
+
+#[test]
+fn flavour_grid_covers_non_lane_multiple_shapes() {
+    // fold_ins 19 / 13 / 13 and couts 13 / 13 / 10: no lane multiple
+    // anywhere, so every remainder path runs under every flavour.
+    let g = mlp(19, 13, 10);
+    let mut p = ModelParams::synthetic(&g, 64);
+    p.prune_global(0.6, 0.05).unwrap();
+    assert_grid(&g, &p, "mlp(19,13,10) @0.6");
+}
+
+#[test]
+fn flavour_grid_covers_single_layer_degenerate_graph() {
+    // One fc layer, prime shapes: the shortest possible stage chain,
+    // where the grouping clamp and the tail-group N:M path both hit.
+    let g = ChainBuilder::input(7, 1).fc("only", 5).build("one_fc", vec![1, 7], 4, 4);
+    g.validate().unwrap();
+    let dense = ModelParams::synthetic(&g, 65);
+    assert_grid(&g, &dense, "one_fc dense");
+    let mut pruned = ModelParams::synthetic(&g, 65);
+    pruned.prune_nm(1, 2).unwrap();
+    assert_grid(&g, &pruned, "one_fc 1:2 structured");
+}
+
+#[test]
+fn auto_selection_is_deterministic_across_compiles() {
+    // The compile-facing purity guarantee at the integration seam: two
+    // auto compiles of the same inputs produce the same per-layer
+    // flavours and the same packed bytes (summary covers sizes).
+    let g = lenet5();
+    let mut p = ModelParams::synthetic(&g, 66);
+    p.prune_global(0.8, 0.05).unwrap();
+    let spec = KernelSpec::default();
+    let (m1, c1) = CompiledModel::compile_auto(&g, &p, &spec).unwrap();
+    let (m2, c2) = CompiledModel::compile_auto(&g, &p, &spec).unwrap();
+    assert_eq!(m1.summary(), m2.summary());
+    let f1: Vec<_> = c1.layers.iter().map(|l| (l.layer.clone(), l.flavour)).collect();
+    let f2: Vec<_> = c2.layers.iter().map(|l| (l.layer.clone(), l.flavour)).collect();
+    assert_eq!(f1, f2);
+    let x = stream_for(&m1, 3);
+    assert_eq!(m1.infer_batch(&x, 3).unwrap(), m2.infer_batch(&x, 3).unwrap());
+}

@@ -8,9 +8,14 @@
 //! (half-to-even) vs f32::round (half-away-from-zero) difference cannot
 //! bite — on such inputs both paths agree exactly.
 
+use logicsparse::graph::builder::ChainBuilder;
+use logicsparse::kernel::{pack, CompiledModel, Flavour, Kernel, KernelSpec};
 use logicsparse::quant::{quantize_per_channel, QSpec};
 use logicsparse::sparsity::nm::{nm_mask, nm_sparsity};
 use logicsparse::sparsity::Mask;
+use logicsparse::util::propcheck::check;
+use logicsparse::util::rng::Pcg32;
+use logicsparse::weights::ModelParams;
 
 /// python: q, scale = quantize_weight_int(w, bits=4, per_channel=True)
 /// with w of shape [cout=2, fold_in=4] transposed into our
@@ -108,6 +113,118 @@ fn mask_f32_round_trip() {
     let mut w = vec![1.5f32; 6];
     mask.apply(&mut w).unwrap();
     assert_eq!(Mask::from_f32(&w), mask);
+}
+
+/// A single-fc graph of the given shape with the given weights and an
+/// N:M mask — the smallest vehicle for baking one N:M kernel.
+fn one_fc_params(fold_in: usize, cout: usize, w: Vec<f32>, n: usize, m: usize) -> (logicsparse::graph::Graph, ModelParams) {
+    let g = ChainBuilder::input(fold_in, 1)
+        .fc("fc1", cout)
+        .build("one_fc", vec![1, fold_in], 4, 4);
+    let mut p = ModelParams::synthetic(&g, 1);
+    p.layers[0].w = w;
+    p.layers[0].mask = nm_mask(&p.layers[0].w, fold_in, cout, n, m).unwrap();
+    (g, p)
+}
+
+/// The fixed-stride N:M index stream round-trips exactly for every
+/// (N, M) with N <= M <= 16: baking an `nm_mask`-generated mask into an
+/// N:M kernel and decoding the packed offsets reproduces, per channel
+/// and group, the surviving rows in row order followed by sum-neutral
+/// code-0 pads at the group base. The decode is cross-checked against
+/// the kernel's own rel stream (row == rel for fc layers), so the
+/// packed bytes — not just the in-memory schedule — carry the mask.
+#[test]
+fn prop_nm_kernel_round_trips_indices_for_all_nm() {
+    check("N:M bake/decode round trip", 60, |g| {
+        let m = g.usize(1, 16);
+        let n = g.usize(1, m);
+        let fold_in = g.usize(m, 48);
+        let cout = g.usize(1, 6);
+        let mut rng = Pcg32::seeded(g.case + 19);
+        let w: Vec<f32> = (0..fold_in * cout).map(|_| rng.normal() as f32).collect();
+        let (graph, params) = one_fc_params(fold_in, cout, w, n, m);
+        let keep = params.layers[0].mask.keep.clone();
+        let model =
+            CompiledModel::compile_with_choice(&graph, &params, &KernelSpec::default(), Flavour::Nm)
+                .unwrap();
+        let stage = model.mac_stages().next().unwrap();
+        // The compile derives its own (N', M') from the mask; the
+        // generating (n, m) is only an upper bound on the fit.
+        let (n2, m2) = stage.nm.expect("N:M stage carries its fit");
+        assert!(n2 <= m2, "fit {n2}:{m2} inverted");
+        assert!(m2 <= 16, "fit group size {m2} escaped the candidate set");
+        assert_eq!(stage.idx_bits, pack::index_bits(m2));
+        let rows = pack::unpack_nm_rows(&stage.packed_rel, fold_in, n2, m2, cout);
+        let Kernel::Sparse { rel, code, block, .. } = &stage.kernel else {
+            panic!("N:M kernel is not a sparse schedule");
+        };
+        assert_eq!(*block, 1);
+        // The packed stream IS the schedule: decode == rel, bit for bit.
+        assert_eq!(&rows, rel, "packed N:M stream diverged from the baked schedule");
+        // Per channel and group: survivors in row order, then pads at
+        // the group base carrying code 0.
+        let mut at = 0usize;
+        for c in 0..cout {
+            let mut base = 0usize;
+            while base < fold_in {
+                let hi = (base + m2).min(fold_in);
+                let slots = n2.min(hi - base);
+                let survivors: Vec<u32> = (base..hi)
+                    .filter(|&row| keep[row * cout + c])
+                    .map(|row| row as u32)
+                    .collect();
+                assert!(survivors.len() <= slots, "fit too tight for its own mask");
+                assert_eq!(&rows[at..at + survivors.len()], &survivors[..]);
+                for pad in survivors.len()..slots {
+                    assert_eq!(rows[at + pad], base as u32, "pad not at group base");
+                    assert_eq!(code[at + pad], 0, "pad slot carries a live code");
+                }
+                at += slots;
+                base = hi;
+            }
+        }
+        assert_eq!(at, rows.len(), "slot count mismatch");
+    });
+}
+
+/// Golden N:M requant vectors pinned against `python/compile/quant.py`,
+/// on the same weights as `golden_per_channel_codes_match_python` but
+/// 2:4-masked before quantisation:
+///
+/// col 0 keeps {0.70, -0.23} -> amax 0.70, scale 0.1, codes [7, -2]
+/// col 1 keeps {-1.40, 0.63} -> amax 1.40, scale 0.2, codes [-7, 3]
+///
+/// The baked kernel stream is channel-major: [7, -2, -7, 3] at rows
+/// [0, 1, 0, 2] — exactly 2 slots per channel, no pads (the mask is
+/// exactly 2:4).
+#[test]
+fn golden_nm_requant_matches_python() {
+    let w = vec![
+        0.70f32, -1.40, //
+        -0.23, 0.35, //
+        0.14, 0.63, //
+        0.06, -0.07,
+    ];
+    let (graph, params) = one_fc_params(4, 2, w, 2, 4);
+    assert_eq!(
+        params.layers[0].mask.keep,
+        vec![true, true, true, false, false, true, false, false]
+    );
+    let model =
+        CompiledModel::compile_with_choice(&graph, &params, &KernelSpec::default(), Flavour::Nm)
+            .unwrap();
+    let stage = model.mac_stages().next().unwrap();
+    assert_eq!(stage.nm, Some((2, 4)));
+    let Kernel::Sparse { rel, code, .. } = &stage.kernel else {
+        panic!("N:M kernel is not a sparse schedule");
+    };
+    assert_eq!(code, &vec![7i8, -2, -7, 3]);
+    assert_eq!(rel, &vec![0u32, 1, 0, 2]);
+    // The packed byte streams carry the same values.
+    assert_eq!(pack::unpack_codes(&stage.packed_codes, 4, 4), vec![7, -2, -7, 3]);
+    assert_eq!(stage.idx_bits, 2);
+    assert_eq!(pack::unpack_nm_rows(&stage.packed_rel, 4, 2, 4, 2), vec![0, 1, 0, 2]);
 }
 
 /// The quant error bound python's QAT relies on: |w - dq| <= scale/2 for
