@@ -8,16 +8,21 @@
 //! name the chosen style).
 //!
 //! Writes `BENCH_kernels.json` with one row per `flavour@path`, e.g.
-//! `block_partial_sparse@vector` or `dense@pipeline` (the staged
-//! layer-pipelined executor, DESIGN.md §13). Identity assertions
-//! (vector, pooled, and pipelined outputs bit-identical to scalar) and
-//! the pipeline's zero-dropped-frames check run on **every** invocation,
-//! smoke included — they are cheap and they are the contract. Timing
-//! assertions (vector >= 1.5x scalar on the block partial-sparse
-//! flavour; pool >= 1.5x serial at batch >= 8 on >= 4 cores; pipeline
-//! >= 1.3x serial on a >= 32-request dense stream on >= 4 cores) only
-//! run on full runs, since smoke runs and starved CI runners measure
-//! noise.
+//! `block_partial_sparse@vector`, `dense@pipeline` (the staged
+//! layer-pipelined executor, DESIGN.md §13), or
+//! `dense@pipeline_x2+vector` (the same pipeline with the costliest
+//! group replicated, DESIGN.md §15 — the row key carries the
+//! replication factor and the datapath label, and the metrics carry
+//! `bottleneck_replicas`/`workers`). Identity assertions (vector,
+//! pooled, pipelined, and replicated-pipelined outputs bit-identical to
+//! scalar, in submit order) and the pipelines' zero-dropped-frames
+//! checks run on **every** invocation, smoke included — they are cheap
+//! and they are the contract. Timing assertions (vector >= 1.5x scalar
+//! on the block partial-sparse flavour; pool >= 1.5x serial at batch
+//! >= 8 on >= 4 cores; pipeline >= 1.3x serial on a >= 32-request dense
+//! stream on >= 4 cores; replicated pipeline >= 1.25x the unreplicated
+//! pipeline on >= 6 cores) only run on full runs, since smoke runs and
+//! starved CI runners measure noise.
 //!
 //! Set `BENCH_SMOKE=1` for a fast low-fidelity pass.
 
@@ -255,6 +260,54 @@ fn main() {
             ],
         );
 
+        // Replicated pipeline (DESIGN.md §15): the same 4 groups with
+        // the costliest pinned to 2 workers — round-robin dispatch,
+        // in-order recombination. Identity (bit-identical, submit
+        // order) and zero-drop are asserted on every run; the ≥ 1.25x
+        // floor over the unreplicated pipeline is acceptance-gated
+        // below.
+        let rexec = StagedExecutor::with_bottleneck_replication(
+            Arc::clone(&model),
+            4,
+            2,
+            logicsparse::kernel::pipeline::DEFAULT_FIFO_DEPTH,
+            model.datapath(),
+        )
+        .unwrap();
+        assert_eq!(
+            rexec.infer_batch(&stream, stream_n).unwrap(),
+            model.infer_batch(&stream, stream_n).unwrap(),
+            "{name}: replicated pipelined stream diverged from serial"
+        );
+        let e = &rexec;
+        let rep_label = format!(
+            "pipeline_x{}+{}",
+            rexec.max_replication(),
+            model.datapath().label()
+        );
+        let rep_stats = bencher.run(&format!("{name}@{rep_label}"), move || {
+            e.infer_batch(s, sn).unwrap()
+        });
+        assert_eq!(
+            rexec.stats().in_flight(),
+            0,
+            "{name}: replicated pipeline dropped frames"
+        );
+        let rep_fps = rep_stats.throughput() * sn as f64;
+        log.push_model(
+            name,
+            &rep_label,
+            &[
+                ("frames_per_s", rep_fps),
+                ("median_us", rep_stats.median() * 1e6),
+                ("speedup_vs_pipeline_x", rep_fps / pipe_fps),
+                ("stage_groups", rexec.groups() as f64),
+                ("bottleneck_replicas", rexec.max_replication() as f64),
+                ("workers", rexec.worker_count() as f64),
+                ("stream", sn as f64),
+            ],
+        );
+
         // Acceptance (full runs only; smoke fidelity is too low to
         // judge):
         // block partial-sparse was *designed* for lanes — the vector
@@ -299,6 +352,23 @@ fn main() {
                 "{name}: layer pipeline must be >= 1.3x serial on {cores} \
                  cores over a {sn}-request stream (got {:.2}x)",
                 pipe_fps / serial_stream_fps
+            );
+        }
+        // Replicating the costliest group must lift the II floor: the
+        // 4-group LeNet-5 bottleneck (conv2) at 2 workers halves its
+        // effective cost, so the replicated pipeline must clear 1.25x
+        // the unreplicated one when the 5 workers all have cores to
+        // live on. Dense only, same robustness argument as above; the
+        // stream is >= 32 requests so the pipeline is actually full.
+        if !smoke && cores >= 6 && name == "dense" {
+            assert!(sn >= 32, "replication acceptance needs a saturating stream");
+            assert!(
+                rep_fps >= 1.25 * pipe_fps,
+                "{name}: replicated pipeline (x{}) must be >= 1.25x the \
+                 unreplicated pipeline on {cores} cores over a {sn}-request \
+                 stream (got {:.2}x)",
+                rexec.max_replication(),
+                rep_fps / pipe_fps
             );
         }
     }

@@ -297,6 +297,54 @@ fn native_kernels(log: &mut BenchLog, smoke: bool) {
         log.push_model("native_sparse_pipelined", sparse.datapath().label(), &ms);
     }
 
+    // Replicated pipeline (DESIGN.md §15): the same sparse model with
+    // the costliest of 3 stage groups pinned to 2 workers. The plane
+    // clamps the pin to the per-engine core budget, so on starved hosts
+    // this degenerates to the unreplicated (even single-group) pipeline
+    // and must still be lossless; the ≥ 1.25x replication throughput
+    // claim lives in benches/kernel_perf.rs. The row carries the
+    // requested shape plus the datapath label so end-to-end rows and
+    // micro-bench rows name the same configuration.
+    {
+        let (groups_req, replicas_req) = (3usize, 2usize);
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines: 2,
+            admission_capacity: 512,
+            queue_depth: 16,
+            ..ServerOptions::native_pipelined_replicated(
+                Arc::clone(&sparse),
+                groups_req,
+                replicas_req,
+            )
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(requests),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        println!("native/sparse-pipelined-x{replicas_req}: {}", rep.render());
+        assert_eq!(rep.lost, 0, "replicated pipeline: responses dropped in shutdown");
+        assert_eq!(rep.errors, 0, "replicated pipeline: kernel execution failed");
+        assert_eq!(rep.completed, requests, "replicated pipeline: incomplete run");
+        assert_eq!(
+            snap.completed, snap.submitted,
+            "replicated pipeline: admitted requests lost"
+        );
+        let mut ms = metrics(&rep, &snap);
+        ms.extend(flavour_counts(&sparse));
+        ms.push(("stage_groups_requested", groups_req as f64));
+        ms.push(("replicas_requested", replicas_req as f64));
+        log.push_model(
+            "native_sparse_pipelined_replicated",
+            &format!("pipeline_x{replicas_req}+{}", sparse.datapath().label()),
+            &ms,
+        );
+    }
+
     let speedup = rps[1] / rps[0];
     println!(
         "baked sparse vs dense native: {speedup:.2}x at {:.1}% unstructured sparsity",

@@ -123,15 +123,21 @@ pub enum EngineBackend {
     },
     /// Baked native kernels executed as a layer pipeline
     /// ([`kernel::StagedExecutor`](crate::kernel::StagedExecutor)):
-    /// stages split into cost-balanced groups, one worker per group,
-    /// bounded rings between them — request k's layer N overlaps
-    /// request k+1's layer N−1 (DESIGN.md §13). Spare cores budget
-    /// stage groups instead of batch-pool workers.
+    /// stages split into cost-balanced groups with one or more workers
+    /// per group, bounded rings between them — request k's layer N
+    /// overlaps request k+1's layer N−1 (DESIGN.md §13). Spare cores
+    /// budget stage groups, and any slack beyond one worker per group
+    /// replicates the costliest groups to lift the II floor
+    /// (DESIGN.md §15).
     NativePipelined {
         /// The compiled model every replica executes.
         model: Arc<CompiledModel>,
         /// Requested stage groups; 0 = auto (per-engine core budget).
         stages: usize,
+        /// Requested bottleneck replication; 0 = auto (spend budget
+        /// slack via the water-filling plan), r ≥ 1 pins the costliest
+        /// group's worker count (clamped to the core budget).
+        replicas: usize,
     },
 }
 
@@ -193,9 +199,25 @@ impl ServerOptions {
 
     /// Engine-free serving with baked native kernels running as a layer
     /// pipeline (`stages` groups; 0 = auto from the core budget).
+    /// Replication is auto: budget slack beyond one worker per group is
+    /// spent on the costliest groups.
     pub fn native_pipelined(model: Arc<CompiledModel>, stages: usize) -> Self {
         ServerOptions {
-            backend: EngineBackend::NativePipelined { model, stages },
+            backend: EngineBackend::NativePipelined { model, stages, replicas: 0 },
+            ..Default::default()
+        }
+    }
+
+    /// Engine-free pipelined serving with the costliest group pinned to
+    /// `replicas` workers (clamped to the per-engine core budget;
+    /// `replicas` = 0 falls back to the auto plan).
+    pub fn native_pipelined_replicated(
+        model: Arc<CompiledModel>,
+        stages: usize,
+        replicas: usize,
+    ) -> Self {
+        ServerOptions {
+            backend: EngineBackend::NativePipelined { model, stages, replicas },
             ..Default::default()
         }
     }
@@ -300,16 +322,37 @@ impl Plane {
                             }
                         }
                     }
-                    EngineBackend::NativePipelined { model, stages } => {
+                    EngineBackend::NativePipelined { model, stages, replicas } => {
                         // Spare cores become stage-group workers instead of
                         // batch-pool workers (1 group on saturated hosts →
-                        // the serial walk on a single worker).
+                        // the serial walk on a single worker). Budget slack
+                        // beyond one worker per group replicates bottleneck
+                        // groups — auto via the water-filling plan, or pinned
+                        // on the costliest group when `replicas` ≥ 1.
                         let groups = shard::pipeline_groups_per_engine(
                             engines,
                             *stages,
                             model.stages().len(),
                         );
-                        match NativeSparseBackend::with_pipeline(Arc::clone(model), groups) {
+                        let built = if *replicas == 0 {
+                            let workers =
+                                shard::pipeline_workers_per_engine(engines, groups);
+                            NativeSparseBackend::with_pipeline_budget(
+                                Arc::clone(model),
+                                groups,
+                                workers,
+                            )
+                        } else {
+                            let r = shard::pipeline_replicas_per_engine(
+                                engines, groups, *replicas,
+                            );
+                            NativeSparseBackend::with_pipeline_replicated(
+                                Arc::clone(model),
+                                groups,
+                                r,
+                            )
+                        };
+                        match built {
                             Ok(b) => {
                                 let _ = ready.send(Ok(()));
                                 Box::new(b)

@@ -58,6 +58,33 @@ pub(crate) fn pipeline_groups_per_engine(
     want.min(budget).min(n_stages.max(1)).max(1)
 }
 
+/// Total worker threads each engine's staged executor may spend across
+/// its `groups` stage groups — the same per-engine core budget as
+/// [`workers_per_engine`], but never below one worker per group (the
+/// pipeline's liveness floor). The slack beyond `groups` is what the
+/// executor's replication plan grants to the costliest group(s); when
+/// the stage count capped `groups` below the budget, that surplus
+/// becomes replication headroom instead of being wasted.
+pub(crate) fn pipeline_workers_per_engine(engines: usize, groups: usize) -> usize {
+    workers_per_engine(engines).max(1).max(groups)
+}
+
+/// Clamp an explicit `--pipeline NxR` replication request to the same
+/// per-engine budget: the pipeline runs `groups - 1` singleton workers
+/// plus `R` on the bottleneck group, so `R` may spend at most the
+/// budget's slack beyond one worker per group (+1 for the bottleneck's
+/// own baseline worker). Always ≥ 1 — an oversubscribed request
+/// degrades to the unreplicated pipeline, never to a dead group.
+pub(crate) fn pipeline_replicas_per_engine(
+    engines: usize,
+    groups: usize,
+    requested: usize,
+) -> usize {
+    let budget = workers_per_engine(engines).max(1);
+    let slack = budget.saturating_sub(groups);
+    requested.clamp(1, slack + 1)
+}
+
 /// The shared state of the sharded plane: one ring + unparker per engine.
 pub(crate) struct ExecutionPlane {
     queues: Vec<Arc<RingQueue<Batch>>>,
@@ -269,6 +296,23 @@ mod tests {
         assert_eq!(pipeline_groups_per_engine(cores + 7, 4, 7), 1);
         // A stage-less count never produces 0 groups.
         assert_eq!(pipeline_groups_per_engine(1, 0, 0), 1);
+    }
+
+    #[test]
+    fn pipeline_replication_spends_budget_slack() {
+        let budget = workers_per_engine(1).max(1);
+        let groups = pipeline_groups_per_engine(1, 3, 7);
+        // Auto: the whole per-engine budget, never below one worker per
+        // group — the slack becomes bottleneck replication.
+        assert_eq!(pipeline_workers_per_engine(1, groups), budget.max(groups));
+        // Explicit NxR clamps to the slack beyond one worker per group.
+        let slack = budget.saturating_sub(groups);
+        assert_eq!(pipeline_replicas_per_engine(1, groups, 1), 1);
+        assert_eq!(pipeline_replicas_per_engine(1, groups, 99), slack + 1);
+        // Saturated hosts degrade to the unreplicated pipeline.
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        assert_eq!(pipeline_replicas_per_engine(cores + 7, 1, 5), 1);
+        assert_eq!(pipeline_workers_per_engine(cores + 7, 1), 1);
     }
 
     #[test]

@@ -53,6 +53,50 @@ impl NativeSparseBackend {
         Ok(NativeSparseBackend { model, pool: None, pipeline })
     }
 
+    /// Layer-pipelined mode with a worker budget: like
+    /// [`NativeSparseBackend::with_pipeline`], but up to `workers`
+    /// total threads are spent across the groups — every group gets
+    /// one, and the slack replicates the costliest group(s)
+    /// (`StagedExecutor::with_budget`). The coordinator budgets
+    /// `workers` from the host core count via
+    /// `shard::pipeline_workers_per_engine`.
+    pub fn with_pipeline_budget(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        Self::validate(&model)?;
+        let dp = model.datapath();
+        let pipeline = Some(StagedExecutor::with_budget(
+            Arc::clone(&model),
+            groups,
+            workers,
+            super::pipeline::DEFAULT_FIFO_DEPTH,
+            dp,
+        )?);
+        Ok(NativeSparseBackend { model, pool: None, pipeline })
+    }
+
+    /// Layer-pipelined mode with pinned bottleneck replication: `r`
+    /// worker threads on the single costliest group, one everywhere
+    /// else (`serve --pipeline NxR`).
+    pub fn with_pipeline_replicated(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        r: usize,
+    ) -> Result<Self> {
+        Self::validate(&model)?;
+        let dp = model.datapath();
+        let pipeline = Some(StagedExecutor::with_bottleneck_replication(
+            Arc::clone(&model),
+            groups,
+            r,
+            super::pipeline::DEFAULT_FIFO_DEPTH,
+            dp,
+        )?);
+        Ok(NativeSparseBackend { model, pool: None, pipeline })
+    }
+
     fn validate(model: &CompiledModel) -> Result<()> {
         if model.input_pixels() != IMG * IMG {
             return Err(Error::kernel(format!(
@@ -85,6 +129,12 @@ impl NativeSparseBackend {
         self.pipeline.as_ref().map_or(0, StagedExecutor::groups)
     }
 
+    /// Largest per-group replica count when pipelined (1 = unreplicated
+    /// or not in pipeline mode).
+    pub fn pipeline_replication(&self) -> usize {
+        self.pipeline.as_ref().map_or(1, StagedExecutor::max_replication)
+    }
+
     /// The staged executor, when running in pipeline mode (occupancy
     /// stats and the calibration sim hang off it).
     pub fn pipeline(&self) -> Option<&StagedExecutor> {
@@ -113,7 +163,13 @@ impl InferenceBackend for NativeSparseBackend {
 
     fn label(&self) -> String {
         if let Some(pipe) = &self.pipeline {
-            return format!("native+pipe{}/{}", pipe.groups(), self.model.summary());
+            // Replication shows as `pipe3x2` (3 groups, bottleneck x2);
+            // the unreplicated label keeps the PR 7 `pipe3` shape.
+            let rep = match pipe.max_replication() {
+                1 => String::new(),
+                r => format!("x{r}"),
+            };
+            return format!("native+pipe{}{rep}/{}", pipe.groups(), self.model.summary());
         }
         match self.workers() {
             0 => format!("native/{}", self.model.summary()),
@@ -198,6 +254,38 @@ mod tests {
         let cal = piped.measured_calibration().unwrap();
         assert_eq!(cal.occupancy.len(), 3);
         assert!(cal.occupancy.iter().all(|(_, f)| *f >= 0.0));
+    }
+
+    #[test]
+    fn replicated_pipeline_backend_matches_serial_and_labels_replication() {
+        let g = lenet5();
+        let mut p = ModelParams::synthetic(&g, 41);
+        p.prune_global(0.7, 0.05).unwrap();
+        let model =
+            Arc::new(CompiledModel::compile_sparse(&g, &p, &KernelSpec::default()).unwrap());
+        let serial = NativeSparseBackend::new(Arc::clone(&model)).unwrap();
+        // Pinned bottleneck replication: 3 groups, x2 on the costliest.
+        let pinned = NativeSparseBackend::with_pipeline_replicated(Arc::clone(&model), 3, 2)
+            .unwrap();
+        assert_eq!(pinned.stage_groups(), 3);
+        assert_eq!(pinned.pipeline_replication(), 2);
+        assert!(pinned.label().starts_with("native+pipe3x2/"));
+        // Budgeted: 3 groups + 2 spare workers also replicate.
+        let budgeted =
+            NativeSparseBackend::with_pipeline_budget(Arc::clone(&model), 3, 5).unwrap();
+        assert_eq!(budgeted.stage_groups(), 3);
+        assert!(budgeted.pipeline_replication() >= 2);
+        // A budget with no slack stays unreplicated and keeps the PR 7
+        // label shape.
+        let flat = NativeSparseBackend::with_pipeline_budget(Arc::clone(&model), 3, 3).unwrap();
+        assert_eq!(flat.pipeline_replication(), 1);
+        assert!(flat.label().starts_with("native+pipe3/"));
+        for n in [1usize, 2, 8, 11] {
+            let x: Vec<f32> = (0..n).flat_map(SyntheticRuntime::stripe_image).collect();
+            let want = serial.infer_padded(&x, n).unwrap();
+            assert_eq!(pinned.infer_padded(&x, n).unwrap(), want, "pinned batch {n}");
+            assert_eq!(budgeted.infer_padded(&x, n).unwrap(), want, "budgeted batch {n}");
+        }
     }
 
     #[test]

@@ -116,15 +116,30 @@ pub enum Datapath {
     /// part of the x86_64 baseline, so no runtime detection is needed.
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     Simd,
+    /// Explicit `std::arch` x86_64 AVX2 intrinsics: the same
+    /// `madd_epi16` schedule as [`Datapath::Simd`] but over 256-bit
+    /// registers — 16-entry sparse chunks and 16-channel dense passes.
+    /// Compiled behind the same `simd` feature, but AVX2 is *not* part
+    /// of the x86_64 baseline, so selection is gated on runtime
+    /// `is_x86_feature_detected!("avx2")`; pinning it on a CPU without
+    /// AVX2 falls back to the SSE2 path (bit-identical anyway).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2,
 }
 
 impl Datapath {
-    /// The fastest datapath compiled into this build — what
-    /// [`CompiledModel::forward`] executes by default.
+    /// The fastest datapath available to this build *on this CPU* —
+    /// what [`CompiledModel::forward`] executes by default. With the
+    /// `simd` feature on, AVX2 is picked when the CPU reports it
+    /// (runtime dispatch), else the SSE2 baseline.
     pub fn best() -> Datapath {
         #[cfg(all(feature = "simd", target_arch = "x86_64"))]
         {
-            Datapath::Simd
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Datapath::Avx2
+            } else {
+                Datapath::Simd
+            }
         }
         #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
         {
@@ -132,15 +147,20 @@ impl Datapath {
         }
     }
 
-    /// Every datapath compiled into this build, reference first (the
-    /// grid benches and bit-identity tests iterate this).
+    /// Every datapath runnable in this build on this CPU, reference
+    /// first (the grid benches and bit-identity tests iterate this).
+    /// AVX2 appears only when the CPU reports it, so the list is always
+    /// safe to execute.
     pub fn all() -> Vec<Datapath> {
-        vec![
-            Datapath::Scalar,
-            Datapath::Vector,
-            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-            Datapath::Simd,
-        ]
+        let mut all = vec![Datapath::Scalar, Datapath::Vector];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            all.push(Datapath::Simd);
+            if std::arch::is_x86_feature_detected!("avx2") {
+                all.push(Datapath::Avx2);
+            }
+        }
+        all
     }
 
     /// Short label for bench rows and logs.
@@ -150,6 +170,8 @@ impl Datapath {
             Datapath::Vector => "vector",
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             Datapath::Simd => "simd",
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Datapath::Avx2 => "avx2",
         }
     }
 }
@@ -369,6 +391,8 @@ impl MacStage {
             Datapath::Vector => self.accumulate_vector(act, base, acc),
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             Datapath::Simd => self.accumulate_simd(act, base, acc),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Datapath::Avx2 => self.accumulate_avx2(act, base, acc),
         }
     }
 
@@ -464,6 +488,43 @@ impl MacStage {
         }
     }
 
+    /// AVX2 datapath: the widened twin of [`MacStage::accumulate_simd`].
+    /// Soundness gate: the `avx2`-target-feature kernels may only run
+    /// on a CPU that reports AVX2, so a pinned [`Datapath::Avx2`] on
+    /// older silicon degrades to the SSE2 path (the detection macro
+    /// caches, so the per-call check is one relaxed atomic load).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn accumulate_avx2(&self, act: &[u8], base: usize, acc: &mut [i32]) {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return self.accumulate_simd(act, base, acc);
+        }
+        match &self.kernel {
+            Kernel::Dense { codes, rel } => {
+                acc.fill(0);
+                for (r, &off) in rel.iter().enumerate() {
+                    let a = act[base + off as usize] as i32;
+                    // SAFETY: AVX2 availability checked above.
+                    unsafe {
+                        simd::dense_row_madd_avx2(
+                            &codes[r * self.cout..(r + 1) * self.cout],
+                            a,
+                            acc,
+                        );
+                    }
+                }
+            }
+            Kernel::Sparse { ptr, rel, code, .. } => {
+                for (c, slot) in acc.iter_mut().enumerate() {
+                    let lo = ptr[c] as usize;
+                    let hi = ptr[c + 1] as usize;
+                    // SAFETY: AVX2 availability checked above.
+                    *slot =
+                        unsafe { simd::dot_sparse_avx2(&code[lo..hi], &rel[lo..hi], act, base) };
+                }
+            }
+        }
+    }
+
     fn patch_base(&self, oh: usize, ow: usize) -> usize {
         match self.op {
             Op::Conv => (oh * self.ifm + ow) * self.cin,
@@ -526,12 +587,13 @@ fn dot_sparse_lanes(code: &[i8], rel: &[u32], act: &[u8], base: usize) -> i32 {
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod simd {
-    //! SSE2 intrinsics datapath (`simd` feature). SSE2 is part of the
-    //! x86_64 baseline, so no runtime feature detection is needed. Every
-    //! i16 product fits: |code| ≤ 127 (W8 worst case) and activation
-    //! codes ≤ 255 (A8 worst case) give |product| ≤ 32385 < 32767, and
+    //! Intrinsics datapaths (`simd` feature): an SSE2 tier (part of the
+    //! x86_64 baseline — no runtime detection needed) and an AVX2 tier
+    //! (runtime-dispatched via `is_x86_feature_detected!`). Every i16
+    //! product fits: |code| ≤ 127 (W8 worst case) and activation codes
+    //! ≤ 255 (A8 worst case) give |product| ≤ 32385 < 32767, and
     //! accumulation is exact in i32 — results are bit-identical to the
-    //! scalar datapath.
+    //! scalar datapath on both tiers.
 
     use std::arch::x86_64::*;
 
@@ -594,6 +656,73 @@ mod simd {
             }
         }
         for c in chunks * 8..cout {
+            acc[c] += row[c] as i32 * a;
+        }
+    }
+
+    /// AVX2 sparse dot product over 16-entry chunks: scalar gathers fill
+    /// two 256-bit i16 registers, `_mm256_madd_epi16` multiplies and
+    /// pair-sums into eight i32 lanes, which accumulate exactly; the
+    /// tail runs scalar.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_sparse_avx2(code: &[i8], rel: &[u32], act: &[u8], base: usize) -> i32 {
+        let chunks = code.len() / 16;
+        // All loads and stores go through 32-byte stack arrays of
+        // exactly 16 i16 / 8 i32, via unaligned ops.
+        let mut acc = _mm256_setzero_si256();
+        for k in 0..chunks {
+            let o = k * 16;
+            let mut w = [0i16; 16];
+            let mut a = [0i16; 16];
+            for l in 0..16 {
+                w[l] = code[o + l] as i16;
+                a[l] = act[base + rel[o + l] as usize] as i16;
+            }
+            let wv = _mm256_loadu_si256(w.as_ptr() as *const __m256i);
+            let av = _mm256_loadu_si256(a.as_ptr() as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wv, av));
+        }
+        let mut out = [0i32; 8];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc);
+        let mut s = out.iter().sum::<i32>();
+        for j in chunks * 16..code.len() {
+            s += code[j] as i32 * act[base + rel[j] as usize] as i32;
+        }
+        s
+    }
+
+    /// AVX2 dense row update `acc[c] += row[c] * a` over 16 channels per
+    /// pass: 16 i8 codes sign-extend to i16 in one `vpmovsxbw`, multiply
+    /// against the broadcast activation in i16 (products fit, see module
+    /// docs), widen each half to i32 with `vpmovsxwd`, and accumulate in
+    /// place; the tail runs scalar.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_row_madd_avx2(row: &[i8], a: i32, acc: &mut [i32]) {
+        let cout = acc.len();
+        let chunks = cout / 16;
+        let av = _mm256_set1_epi16(a as i16);
+        for k in 0..chunks {
+            let o = k * 16;
+            // 16 i8 codes → 16 sign-extended i16 lanes.
+            let w8 = _mm_loadu_si128(row.as_ptr().add(o) as *const __m128i);
+            let w16 = _mm256_cvtepi8_epi16(w8);
+            let p = _mm256_mullo_epi16(w16, av);
+            // i16 products → i32, half a register at a time (lane order
+            // is preserved: elements 0..8 sit in the low 128 bits).
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256(p, 1));
+            let acc_lo = acc.as_mut_ptr().add(o) as *mut __m256i;
+            _mm256_storeu_si256(acc_lo, _mm256_add_epi32(_mm256_loadu_si256(acc_lo), lo));
+            let acc_hi = acc.as_mut_ptr().add(o + 8) as *mut __m256i;
+            _mm256_storeu_si256(acc_hi, _mm256_add_epi32(_mm256_loadu_si256(acc_hi), hi));
+        }
+        for c in chunks * 16..cout {
             acc[c] += row[c] as i32 * a;
         }
     }
@@ -1738,6 +1867,21 @@ mod tests {
         assert!(all.contains(&Datapath::best()));
         assert_eq!(Datapath::Scalar.label(), "scalar");
         assert_eq!(Datapath::Vector.label(), "vector");
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            assert_eq!(Datapath::Simd.label(), "simd");
+            assert_eq!(Datapath::Avx2.label(), "avx2");
+            // AVX2 is runtime-dispatched: it is listed (and wins best())
+            // exactly when the CPU reports it, so `all()` never hands a
+            // test or bench a datapath it cannot execute.
+            if std::arch::is_x86_feature_detected!("avx2") {
+                assert_eq!(Datapath::best(), Datapath::Avx2);
+                assert!(all.contains(&Datapath::Avx2));
+            } else {
+                assert_eq!(Datapath::best(), Datapath::Simd);
+                assert!(!all.contains(&Datapath::Avx2));
+            }
+        }
         // A compiled model defaults to the best datapath and can be
         // pinned without changing results.
         let (g, p) = lenet_params(13, Some(0.6));

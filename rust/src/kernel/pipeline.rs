@@ -1,20 +1,31 @@
 //! [`StagedExecutor`]: layer-pipelined execution of a [`CompiledModel`]
 //! — the serving-side realisation of the pipeline the cycle simulator
-//! predicts (DESIGN.md §13).
+//! predicts (DESIGN.md §13, §15).
 //!
 //! The model's [`Stage`] list is partitioned into contiguous,
 //! cost-balanced **stage groups** (per-stage cost =
 //! [`MacStage::scheduled_macs`](super::MacStage::scheduled_macs) for MAC
 //! layers, window ops for pools; exact min-max linear partitioning).
-//! Each group gets one persistent worker thread, and neighbouring groups
-//! are connected by bounded [`RingQueue`] FIFOs carrying **activation
-//! frames** — so request k's layer N runs concurrently with request
-//! k+1's layer N−1, the HPIPE-style inter-request parallelism batch
-//! pools cannot express. This is the third native execution mode,
-//! alongside the serial walk and the data-parallel
-//! [`BatchPool`](super::BatchPool)
+//! Each group gets one or more persistent worker threads — **replicas**
+//! — and neighbouring groups are connected by bounded [`RingQueue`]
+//! FIFOs carrying **activation frames** — so request k's layer N runs
+//! concurrently with request k+1's layer N−1, the HPIPE-style
+//! inter-request parallelism batch pools cannot express. This is the
+//! third native execution mode, alongside the serial walk and the
+//! data-parallel [`BatchPool`](super::BatchPool)
 //! ([`NativeSparseBackend::with_pipeline`](super::NativeSparseBackend::with_pipeline),
 //! `serve --pipeline`).
+//!
+//! **Replication.** One worker per group floors the served initiation
+//! interval at the costliest group. When the core budget has slack,
+//! [`replication_plan`] grants extra workers to the group(s) with the
+//! highest *effective* cost (cost / replicas), so the bottleneck
+//! group's service rate scales with R. Frames carry a submit-side
+//! sequence number; dispatch into a replicated group is round-robin by
+//! `seq mod R` into per-replica rings, and a reorder **boundary**
+//! between neighbouring groups re-establishes sequence order before
+//! round-robin dispatch into the next group — outputs stay bit-identical
+//! and in order no matter how replicas race (DESIGN.md §15).
 //!
 //! **Identity.** A frame is quantised once at the submit side with the
 //! exact expression [`CompiledModel::forward_with`] uses, then walks the
@@ -22,32 +33,35 @@
 //! `MacStage::run_hidden` / `run_output`) in the same order — the group
 //! boundaries move work between threads, never between operations, so
 //! outputs are bit-identical to the serial forward on every
-//! [`Datapath`] (asserted in `tests/kernel_pipeline.rs`).
+//! [`Datapath`] and every replication shape (asserted in
+//! `tests/kernel_pipeline.rs`).
 //!
 //! **Lossless shutdown.** [`StagedExecutor::close`] closes the submit
-//! ring only; [`RingQueue`] pops keep draining after a close, so each
-//! worker finishes every queued frame, then cascades the close to the
-//! next ring and exits. Every frame accepted by
-//! [`StagedExecutor::submit`] therefore still delivers its logits;
-//! submissions after the close fail fast with
+//! rings only; [`RingQueue`] pops keep draining after a close, so each
+//! worker finishes every queued frame, and the *last* replica of a
+//! group to exit cascades the close to the next group's rings. Every
+//! frame accepted by [`StagedExecutor::submit`] therefore still
+//! delivers its logits; submissions after the close fail fast with
 //! [`Error::QueueClosed`]. Dropping the executor closes and joins.
 //!
 //! **Calibration.** [`StagedExecutor::sim_specs`] exports the *same*
 //! grouping as [`sim::stage::StageSpec`]s (one "cycle" per
-//! MAC-equivalent op, whole frames as tokens, same FIFO depth), so a
-//! [`sim::Pipeline`](crate::sim::Pipeline) built from them predicts
-//! which group bottlenecks the served pipeline — and the measured
-//! per-group occupancy ([`StagedExecutor::stats`]) must agree (asserted
-//! in `tests/kernel_pipeline.rs`).
+//! MAC-equivalent op, whole frames as tokens, same FIFO depth, same
+//! replica counts), so a [`sim::Pipeline`](crate::sim::Pipeline) built
+//! from them predicts which group bottlenecks the served pipeline — and
+//! the measured per-group occupancy ([`StagedExecutor::stats`], busy
+//! time normalised by replica count) must agree (asserted in
+//! `tests/kernel_pipeline.rs`).
 
 use super::{CompiledModel, Datapath, Stage};
 use crate::sim::stage::{Kind, StageSpec};
 use crate::sim::Pipeline as SimPipeline;
 use crate::util::error::{Error, Result};
 use crate::util::ring::{PopError, PushError, RingQueue};
+use std::collections::BTreeMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -64,17 +78,83 @@ const POLL: Duration = Duration::from_millis(50);
 /// One in-flight frame between stage groups: the activation codes
 /// leaving the previous group (input codes for group 0) plus the channel
 /// the final group answers on. The sender rides the frame end to end, so
-/// interleaved submitters can never receive each other's logits.
+/// interleaved submitters can never receive each other's logits. `seq`
+/// is the submit-side sequence number — accepted frames are numbered
+/// contiguously from 0, which is what lets a reorder boundary detect
+/// "next frame in stream order" by counting.
 struct Frame {
+    seq: u64,
     act: Vec<u8>,
     tx: mpsc::Sender<Vec<f32>>,
 }
 
-/// Per-group occupancy counters, written by the group's worker.
+/// Per-replica occupancy counters, written by one worker thread.
 #[derive(Default)]
 struct GroupMeter {
     frames: AtomicU64,
     busy_ns: AtomicU64,
+}
+
+/// In-order recombination state between two stage groups: frames from
+/// the upstream group's replicas arrive in any order; they are buffered
+/// by sequence number and flushed downstream in contiguous `seq` order.
+struct Reorder {
+    /// The next sequence number to release downstream.
+    next_seq: u64,
+    /// Out-of-order frames waiting for their predecessors.
+    held: BTreeMap<u64, Frame>,
+}
+
+/// The boundary between group g and group g+1: the reorder buffer plus
+/// the downstream group's per-replica rings. All upstream replicas emit
+/// through [`Boundary::emit`]; the flush runs under the mutex so frames
+/// enter each downstream ring in strictly increasing `seq` order.
+struct Boundary {
+    reorder: Mutex<Reorder>,
+    /// `rings[r]` feeds replica r of the downstream group.
+    rings: Vec<Arc<RingQueue<Frame>>>,
+    high_water: Vec<Arc<AtomicUsize>>,
+}
+
+impl Boundary {
+    fn new(rings: Vec<Arc<RingQueue<Frame>>>, high_water: Vec<Arc<AtomicUsize>>) -> Self {
+        Boundary {
+            reorder: Mutex::new(Reorder { next_seq: 0, held: BTreeMap::new() }),
+            rings,
+            high_water,
+        }
+    }
+
+    /// Hand one finished frame downstream, releasing every consecutive
+    /// frame that is now unblocked, in order, round-robin by
+    /// `seq mod R`. A blocking push under the mutex is deliberate: it
+    /// stalls sibling replicas exactly when the downstream group is the
+    /// bottleneck (ordinary backpressure — downstream consumers never
+    /// take this lock, so the rings always drain). A closed downstream
+    /// ring (consumer died) drops the frame; its sender drops with it,
+    /// so the submitter observes a clean channel-closed error.
+    fn emit(&self, frame: Frame) {
+        let mut rd = self.reorder.lock().expect("boundary mutex poisoned");
+        rd.held.insert(frame.seq, frame);
+        loop {
+            let seq = rd.next_seq;
+            let Some(f) = rd.held.remove(&seq) else { break };
+            let r = (seq % self.rings.len() as u64) as usize;
+            if push_frame(&self.rings[r], f).is_ok() {
+                self.high_water[r].fetch_max(self.rings[r].len(), Ordering::Relaxed);
+            }
+            rd.next_seq += 1;
+        }
+    }
+
+    /// Close every downstream ring (the cascade step of a lossless
+    /// shutdown — called by the *last* upstream replica to exit, after
+    /// every upstream frame has been emitted and therefore flushed).
+    fn close(&self) {
+        for q in &self.rings {
+            q.close();
+        }
+    }
 }
 
 /// Execution cost proxy of one stage, in MAC-equivalent operations —
@@ -139,6 +219,32 @@ fn partition(costs: &[u64], groups: usize) -> Vec<Range<usize>> {
     bounds.windows(2).map(|w| w[0]..w[1]).collect()
 }
 
+/// Greedy worker assignment: start every group at one replica, then
+/// grant each spare worker (up to `workers` total) to the group with
+/// the highest *effective* cost — cost divided by the replicas it
+/// already has; earliest group wins ties. This is water-filling on the
+/// served initiation interval: each grant lowers the current II floor
+/// (or, once groups equalise, spreads the slack evenly).
+fn replication_plan(costs: &[u64], workers: usize) -> Vec<usize> {
+    let mut reps = vec![1usize; costs.len()];
+    if costs.is_empty() {
+        return reps;
+    }
+    let mut spare = workers.saturating_sub(costs.len());
+    while spare > 0 {
+        let mut pick = 0usize;
+        for g in 1..costs.len() {
+            // costs[g] / reps[g] > costs[pick] / reps[pick], exactly.
+            if (costs[g] as u128 * reps[pick] as u128) > (costs[pick] as u128 * reps[g] as u128) {
+                pick = g;
+            }
+        }
+        reps[pick] += 1;
+        spare -= 1;
+    }
+    reps
+}
+
 /// Blocking push with bounded-ring backpressure: spin briefly, then
 /// sleep — the ring ahead only stays full while the downstream group is
 /// the bottleneck, in which case throughput is its service rate and the
@@ -165,19 +271,19 @@ fn push_frame(q: &RingQueue<Frame>, mut f: Frame) -> std::result::Result<(), ()>
     }
 }
 
-/// One stage group's worker: drain the input ring, run the group's
-/// stages on each frame, hand off downstream (or answer, for the final
-/// group). Exits when the input ring is closed **and** empty — the
-/// drain-friendly contract [`RingQueue`] guarantees — then cascades the
-/// close so the next group can wind down the same way.
-#[allow(clippy::too_many_arguments)]
+/// One replica of a stage group: drain its input ring, run the group's
+/// stages on each frame, hand off through the downstream boundary (or
+/// answer, for the final group). Exits when the input ring is closed
+/// **and** empty — the drain-friendly contract [`RingQueue`] guarantees.
+/// The last replica of the group to exit cascades the close through the
+/// boundary so the next group can wind down the same way.
 fn group_worker(
     model: Arc<CompiledModel>,
     dp: Datapath,
     span: Range<usize>,
     inq: Arc<RingQueue<Frame>>,
-    outq: Option<Arc<RingQueue<Frame>>>,
-    out_high_water: Option<Arc<AtomicUsize>>,
+    boundary: Option<Arc<Boundary>>,
+    live: Arc<AtomicUsize>,
     meter: Arc<GroupMeter>,
 ) {
     let qmax = model.spec.act_qmax();
@@ -206,43 +312,49 @@ fn group_worker(
             .busy_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         meter.frames.fetch_add(1, Ordering::Relaxed);
-        match (logits, &outq) {
+        match (logits, &boundary) {
             // The output MAC is the model's last stage, so only the
-            // final group produces logits.
+            // final group produces logits. Ordering needs no boundary
+            // here: the per-frame sender already routes each answer to
+            // its own submitter.
             (Some(v), _) => {
                 // A dropped receiver (caller gave up) is not an error.
                 let _ = frame.tx.send(v);
             }
-            (None, Some(q)) => {
-                if push_frame(q, Frame { act, tx: frame.tx }).is_ok() {
-                    if let Some(hw) = &out_high_water {
-                        hw.fetch_max(q.len(), Ordering::Relaxed);
-                    }
-                }
-            }
+            (None, Some(b)) => b.emit(Frame { seq: frame.seq, act, tx: frame.tx }),
             (None, None) => unreachable!("compile validated the graph ends in an output MAC"),
         }
     }
-    if let Some(q) = outq {
-        q.close();
+    // Cascade-close: only the last replica out may close downstream —
+    // sibling replicas may still hold frames for the next group.
+    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+        if let Some(b) = boundary {
+            b.close();
+        }
     }
 }
 
-/// A compiled model executing as a staged layer pipeline: one worker
-/// thread per cost-balanced stage group, bounded rings between groups.
-/// See the module docs for the identity / shutdown / calibration
-/// contracts.
+/// A compiled model executing as a staged layer pipeline: one or more
+/// worker threads per cost-balanced stage group, bounded rings between
+/// groups, in-order recombination at every group boundary. See the
+/// module docs for the identity / shutdown / calibration contracts.
 pub struct StagedExecutor {
     model: Arc<CompiledModel>,
     dp: Datapath,
     spans: Vec<Range<usize>>,
     costs: Vec<u64>,
     names: Vec<String>,
+    replicas: Vec<usize>,
     fifo_depth: usize,
-    /// `fifos[g]` feeds group g; `fifos[0]` is the submit ring.
-    fifos: Vec<Arc<RingQueue<Frame>>>,
-    high_water: Vec<Arc<AtomicUsize>>,
-    meters: Vec<Arc<GroupMeter>>,
+    /// `fifos[g][r]` feeds replica r of group g; `fifos[0]` are the
+    /// submit rings.
+    fifos: Vec<Vec<Arc<RingQueue<Frame>>>>,
+    high_water: Vec<Vec<Arc<AtomicUsize>>>,
+    meters: Vec<Vec<Arc<GroupMeter>>>,
+    /// Serialises sequence-number assignment with the submit-side push,
+    /// so accepted frames are numbered contiguously from 0 — the gap
+    /// freedom every reorder boundary relies on.
+    submit_seq: Mutex<u64>,
     submitted: AtomicU64,
     started: Instant,
     workers: Vec<JoinHandle<()>>,
@@ -250,23 +362,71 @@ pub struct StagedExecutor {
 
 impl StagedExecutor {
     /// Pipeline `model` across (at most) `groups` stage groups with the
-    /// default FIFO depth, executing the model's pinned datapath.
-    /// `groups` is clamped to the stage count; `groups == 1` is the
-    /// degenerate pipeline — the whole serial walk on one worker,
-    /// correct but not concurrent.
+    /// default FIFO depth, one worker per group, executing the model's
+    /// pinned datapath. `groups` is clamped to the stage count;
+    /// `groups == 1` is the degenerate pipeline — the whole serial walk
+    /// on one worker, correct but not concurrent.
     pub fn new(model: Arc<CompiledModel>, groups: usize) -> Result<Self> {
         let dp = model.datapath();
         Self::with_config(model, groups, DEFAULT_FIFO_DEPTH, dp)
     }
 
-    /// Full-control constructor: explicit FIFO depth and [`Datapath`]
+    /// Unreplicated constructor: explicit FIFO depth and [`Datapath`]
     /// override (the identity tests sweep every compiled-in datapath
-    /// without recompiling the model).
+    /// without recompiling the model), one worker per group.
     pub fn with_config(
         model: Arc<CompiledModel>,
         groups: usize,
         fifo_depth: usize,
         dp: Datapath,
+    ) -> Result<Self> {
+        Self::build(model, groups, fifo_depth, dp, |costs| vec![1; costs.len()])
+    }
+
+    /// Budgeted constructor: partition into (at most) `groups` groups,
+    /// then spend up to `workers` total worker threads via
+    /// [`replication_plan`] — every group gets one, and the slack goes
+    /// to the costliest group(s). `workers <= groups` degenerates to
+    /// [`StagedExecutor::with_config`].
+    pub fn with_budget(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        workers: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+    ) -> Result<Self> {
+        Self::build(model, groups, fifo_depth, dp, |costs| {
+            replication_plan(costs, workers)
+        })
+    }
+
+    /// Pinned-replication constructor: partition into (at most)
+    /// `groups` groups and run `r` replicas on the single costliest
+    /// group (1 everywhere else) — the `--pipeline NxR` shape.
+    pub fn with_bottleneck_replication(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        r: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+    ) -> Result<Self> {
+        Self::build(model, groups, fifo_depth, dp, |costs| {
+            let mut reps = vec![1usize; costs.len()];
+            if let Some((g, _)) = costs.iter().enumerate().max_by_key(|(_, c)| **c) {
+                reps[g] = r.max(1);
+            }
+            reps
+        })
+    }
+
+    /// Shared constructor core: `plan` maps the partitioned group costs
+    /// to per-group replica counts (each ≥ 1).
+    fn build(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+        plan: impl FnOnce(&[u64]) -> Vec<usize>,
     ) -> Result<Self> {
         if model.stages().is_empty() {
             return Err(Error::kernel("cannot pipeline a model with no stages"));
@@ -293,26 +453,53 @@ impl StagedExecutor {
                     .join("+")
             })
             .collect();
+        let replicas = plan(&costs);
+        if replicas.len() != spans.len() || replicas.iter().any(|&r| r == 0) {
+            return Err(Error::config(format!(
+                "replication plan {replicas:?} does not cover {} groups",
+                spans.len()
+            )));
+        }
 
-        let fifos: Vec<Arc<RingQueue<Frame>>> = (0..spans.len())
-            .map(|_| Arc::new(RingQueue::new(fifo_depth)))
+        let fifos: Vec<Vec<Arc<RingQueue<Frame>>>> = replicas
+            .iter()
+            .map(|&r| (0..r).map(|_| Arc::new(RingQueue::new(fifo_depth))).collect())
             .collect();
-        let high_water: Vec<Arc<AtomicUsize>> =
-            (0..spans.len()).map(|_| Arc::new(AtomicUsize::new(0))).collect();
-        let meters: Vec<Arc<GroupMeter>> =
-            (0..spans.len()).map(|_| Arc::new(GroupMeter::default())).collect();
+        let high_water: Vec<Vec<Arc<AtomicUsize>>> = replicas
+            .iter()
+            .map(|&r| (0..r).map(|_| Arc::new(AtomicUsize::new(0))).collect())
+            .collect();
+        let meters: Vec<Vec<Arc<GroupMeter>>> = replicas
+            .iter()
+            .map(|&r| (0..r).map(|_| Arc::new(GroupMeter::default())).collect())
+            .collect();
+        // boundaries[g] recombines group g's output and feeds group g+1.
+        let boundaries: Vec<Arc<Boundary>> = (0..spans.len().saturating_sub(1))
+            .map(|g| {
+                Arc::new(Boundary::new(
+                    fifos[g + 1].clone(),
+                    high_water[g + 1].clone(),
+                ))
+            })
+            .collect();
+        let live: Vec<Arc<AtomicUsize>> = replicas
+            .iter()
+            .map(|&r| Arc::new(AtomicUsize::new(r)))
+            .collect();
 
-        let mut workers = Vec::with_capacity(spans.len());
+        let mut workers = Vec::with_capacity(replicas.iter().sum());
         for (g, span) in spans.iter().enumerate() {
-            let m = Arc::clone(&model);
-            let span = span.clone();
-            let inq = Arc::clone(&fifos[g]);
-            let outq = fifos.get(g + 1).map(Arc::clone);
-            let hw = high_water.get(g + 1).map(Arc::clone);
-            let meter = Arc::clone(&meters[g]);
-            workers.push(std::thread::spawn(move || {
-                group_worker(m, dp, span, inq, outq, hw, meter);
-            }));
+            for r in 0..replicas[g] {
+                let m = Arc::clone(&model);
+                let span = span.clone();
+                let inq = Arc::clone(&fifos[g][r]);
+                let boundary = boundaries.get(g).map(Arc::clone);
+                let live = Arc::clone(&live[g]);
+                let meter = Arc::clone(&meters[g][r]);
+                workers.push(std::thread::spawn(move || {
+                    group_worker(m, dp, span, inq, boundary, live, meter);
+                }));
+            }
         }
         Ok(StagedExecutor {
             model,
@@ -320,10 +507,12 @@ impl StagedExecutor {
             spans,
             costs,
             names,
+            replicas,
             fifo_depth,
             fifos,
             high_water,
             meters,
+            submit_seq: Mutex::new(0),
             submitted: AtomicU64::new(0),
             started: Instant::now(),
             workers,
@@ -340,7 +529,7 @@ impl StagedExecutor {
         self.dp
     }
 
-    /// Number of stage groups (== worker threads).
+    /// Number of stage groups.
     pub fn groups(&self) -> usize {
         self.spans.len()
     }
@@ -360,15 +549,31 @@ impl StagedExecutor {
         &self.names
     }
 
-    /// Inter-group FIFO capacity, in frames.
+    /// Worker-thread (replica) count of each group, in stream order.
+    pub fn group_replicas(&self) -> &[usize] {
+        &self.replicas
+    }
+
+    /// Total worker threads across all groups (Σ replicas).
+    pub fn worker_count(&self) -> usize {
+        self.replicas.iter().sum()
+    }
+
+    /// Largest per-group replica count — 1 means unreplicated.
+    pub fn max_replication(&self) -> usize {
+        self.replicas.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Inter-group FIFO capacity, in frames (per replica ring).
     pub fn fifo_depth(&self) -> usize {
         self.fifo_depth
     }
 
     /// Quantise one image and enqueue it; the receiver yields the
     /// frame's logits once it drains out of the final group. Frames
-    /// flow in FIFO order end to end. Fails with [`Error::QueueClosed`]
-    /// once [`StagedExecutor::close`] has run.
+    /// flow in sequence order end to end (reorder boundaries
+    /// re-establish it behind every replicated group). Fails with
+    /// [`Error::QueueClosed`] once [`StagedExecutor::close`] has run.
     pub fn submit(&self, image: &[f32]) -> Result<mpsc::Receiver<Vec<f32>>> {
         if image.len() != self.model.input_pixels() {
             return Err(Error::kernel(format!(
@@ -385,8 +590,18 @@ impl StagedExecutor {
             .map(|&x| ((x / in_scale).round() as i32).clamp(0, qmax) as u8)
             .collect();
         let (tx, rx) = mpsc::channel();
-        push_frame(&self.fifos[0], Frame { act, tx }).map_err(|_| Error::QueueClosed)?;
-        self.high_water[0].fetch_max(self.fifos[0].len(), Ordering::Relaxed);
+        // Sequence assignment and push are one critical section, and the
+        // counter only advances on success: accepted frames carry the
+        // contiguous numbers 0..submitted, with no gaps for the reorder
+        // boundaries to stall on — even when a concurrent close() lands
+        // between two submissions.
+        let mut seq_guard = self.submit_seq.lock().expect("submit mutex poisoned");
+        let seq = *seq_guard;
+        let r = (seq % self.fifos[0].len() as u64) as usize;
+        push_frame(&self.fifos[0][r], Frame { seq, act, tx }).map_err(|_| Error::QueueClosed)?;
+        *seq_guard += 1;
+        drop(seq_guard);
+        self.high_water[0][r].fetch_max(self.fifos[0][r].len(), Ordering::Relaxed);
         self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(rx)
     }
@@ -423,31 +638,53 @@ impl StagedExecutor {
     }
 
     /// Stop accepting frames and let the pipeline drain: closes the
-    /// submit ring only; each worker finishes every queued frame, then
-    /// cascades the close downstream and exits. Receivers returned by
-    /// earlier [`StagedExecutor::submit`] calls still deliver.
-    /// Idempotent; [`Drop`] calls it and joins the workers.
+    /// submit rings only; each worker finishes every queued frame, and
+    /// the last replica of each group cascades the close downstream and
+    /// exits. Receivers returned by earlier [`StagedExecutor::submit`]
+    /// calls still deliver. Idempotent; [`Drop`] calls it and joins the
+    /// workers.
     pub fn close(&self) {
-        self.fifos[0].close();
+        for q in &self.fifos[0] {
+            q.close();
+        }
     }
 
     /// Measured per-group occupancy since start (the calibration
-    /// counterpart of the simulator's per-stage utilisation).
+    /// counterpart of the simulator's per-stage utilisation), with
+    /// per-replica counters rolled up per group.
     pub fn stats(&self) -> PipelineStats {
         PipelineStats {
             groups: (0..self.spans.len())
-                .map(|g| GroupStats {
-                    name: self.names[g].clone(),
-                    stages: self.spans[g].clone(),
-                    cost: self.costs[g],
-                    frames: self.meters[g].frames.load(Ordering::Relaxed),
-                    busy_s: self.meters[g].busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                .map(|g| {
+                    let replica_frames: Vec<u64> = self.meters[g]
+                        .iter()
+                        .map(|m| m.frames.load(Ordering::Relaxed))
+                        .collect();
+                    let replica_busy_s: Vec<f64> = self.meters[g]
+                        .iter()
+                        .map(|m| m.busy_ns.load(Ordering::Relaxed) as f64 / 1e9)
+                        .collect();
+                    GroupStats {
+                        name: self.names[g].clone(),
+                        stages: self.spans[g].clone(),
+                        cost: self.costs[g],
+                        replicas: self.replicas[g],
+                        frames: replica_frames.iter().sum(),
+                        busy_s: replica_busy_s.iter().sum(),
+                        replica_frames,
+                        replica_busy_s,
+                    }
                 })
                 .collect(),
             fifo_high_water: self
                 .high_water
                 .iter()
-                .map(|hw| hw.load(Ordering::Relaxed))
+                .map(|hws| {
+                    hws.iter()
+                        .map(|hw| hw.load(Ordering::Relaxed))
+                        .max()
+                        .unwrap_or(0)
+                })
                 .collect(),
             fifo_capacity: self.fifo_depth,
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -458,7 +695,9 @@ impl StagedExecutor {
     /// The simulator's view of this exact pipeline: one [`StageSpec`]
     /// per stage group in stream order, II = the group's MAC-equivalent
     /// cost (one simulated cycle per op), whole activation frames as
-    /// tokens. Feed them to [`StagedExecutor::calibration_sim`] (or
+    /// tokens, replica counts mirrored — the simulator models R workers
+    /// as R compute units with an effective II of cost/R. Feed them to
+    /// [`StagedExecutor::calibration_sim`] (or
     /// [`sim::Pipeline`](crate::sim::Pipeline) directly) to predict the
     /// bottleneck group of the served pipeline.
     pub fn sim_specs(&self) -> Vec<StageSpec> {
@@ -470,14 +709,16 @@ impl StagedExecutor {
                 in_tokens_per_frame: 1,
                 ii_cycles_per_frame: self.costs[g].max(1),
                 fill_cycles: 0,
+                replicas: self.replicas[g] as u64,
             })
             .collect()
     }
 
-    /// Build the calibration pipeline: the same grouping, group costs
-    /// and FIFO depth as the served executor, as a cycle simulation at
-    /// `f_mhz`. Its [`SimReport`](crate::sim::SimReport) must identify
-    /// the same bottleneck group as [`StagedExecutor::stats`] measures.
+    /// Build the calibration pipeline: the same grouping, group costs,
+    /// replica counts and FIFO depth as the served executor, as a cycle
+    /// simulation at `f_mhz`. Its
+    /// [`SimReport`](crate::sim::SimReport) must identify the same
+    /// bottleneck group as [`StagedExecutor::stats`] measures.
     pub fn calibration_sim(&self, f_mhz: f64) -> SimPipeline {
         SimPipeline::new(self.sim_specs(), self.fifo_depth, f_mhz)
     }
@@ -501,10 +742,17 @@ pub struct GroupStats {
     pub stages: Range<usize>,
     /// MAC-equivalent cost (the partitioning input).
     pub cost: u64,
-    /// Frames this group finished.
+    /// Worker threads serving this group.
+    pub replicas: usize,
+    /// Frames this group finished (summed across replicas).
     pub frames: u64,
-    /// Wall time the group's worker spent executing stages, seconds.
+    /// Wall time the group's workers spent executing stages, seconds
+    /// (summed across replicas).
     pub busy_s: f64,
+    /// Frames finished by each replica.
+    pub replica_frames: Vec<u64>,
+    /// Busy seconds of each replica.
+    pub replica_busy_s: Vec<f64>,
 }
 
 /// Measured pipeline occupancy: the served-side counterpart of the
@@ -513,10 +761,11 @@ pub struct GroupStats {
 pub struct PipelineStats {
     /// Per-group occupancy, in stream order.
     pub groups: Vec<GroupStats>,
-    /// High-water occupancy of each ring (`[g]` feeds group g; `[0]` is
-    /// the submit ring).
+    /// High-water occupancy of each group's rings (`[g]` feeds group g;
+    /// `[0]` are the submit rings; the max across the group's replica
+    /// rings).
     pub fifo_high_water: Vec<usize>,
-    /// Ring capacity, in frames.
+    /// Ring capacity, in frames (per replica ring).
     pub fifo_capacity: usize,
     /// Frames accepted at the submit side.
     pub submitted: u64,
@@ -536,23 +785,32 @@ impl PipelineStats {
         self.submitted - self.completed()
     }
 
-    /// Index of the measured bottleneck group: the one that spent the
-    /// most wall time executing (all groups see the same frame stream,
-    /// so busy-time order is service-time order).
+    /// Index of the measured bottleneck group: the one whose *per
+    /// replica* busy time is largest (all groups see the same frame
+    /// stream, so normalised busy-time order is service-rate order —
+    /// a group running R replicas serves frames R times faster than its
+    /// summed busy time suggests).
     pub fn bottleneck_group(&self) -> usize {
         self.groups
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.busy_s.total_cmp(&b.1.busy_s))
+            .max_by(|a, b| {
+                (a.1.busy_s / a.1.replicas.max(1) as f64)
+                    .total_cmp(&(b.1.busy_s / b.1.replicas.max(1) as f64))
+            })
             .map(|(i, _)| i)
             .expect("non-empty pipeline")
     }
 
-    /// Per-group utilisation over the elapsed wall time (comparable to
-    /// the simulator's per-stage utilisation in steady state).
+    /// Per-group utilisation over the elapsed wall time × replicas
+    /// (per-worker occupancy, comparable to the simulator's per-stage
+    /// utilisation in steady state).
     pub fn utilisation(&self) -> Vec<f64> {
         let wall = self.elapsed_s.max(1e-12);
-        self.groups.iter().map(|g| g.busy_s / wall).collect()
+        self.groups
+            .iter()
+            .map(|g| g.busy_s / (wall * g.replicas.max(1) as f64))
+            .collect()
     }
 
     /// `(group name, utilisation)` pairs in stream order — the measured
@@ -612,6 +870,21 @@ mod tests {
     }
 
     #[test]
+    fn replication_plan_spends_slack_on_the_costliest() {
+        // No slack: everyone gets exactly one worker.
+        assert_eq!(replication_plan(&[10, 100, 10], 3), vec![1, 1, 1]);
+        assert_eq!(replication_plan(&[10, 100, 10], 0), vec![1, 1, 1]);
+        // Slack goes to the dominant group first…
+        assert_eq!(replication_plan(&[10, 100, 10], 4), vec![1, 2, 1]);
+        assert_eq!(replication_plan(&[10, 100, 10], 5), vec![1, 3, 1]);
+        // …and water-fills once effective costs cross: 100/2 = 50 < 60,
+        // so the fifth worker lands on the first group.
+        assert_eq!(replication_plan(&[60, 100, 10], 5), vec![2, 2, 1]);
+        // Ties break toward the earliest group.
+        assert_eq!(replication_plan(&[50, 50], 3), vec![2, 1]);
+    }
+
+    #[test]
     fn pipelined_forward_is_bit_identical() {
         let g = lenet5();
         let p = ModelParams::synthetic(&g, 31);
@@ -619,10 +892,50 @@ mod tests {
             Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
         let exec = StagedExecutor::new(Arc::clone(&model), 3).unwrap();
         assert_eq!(exec.groups(), 3);
+        assert_eq!(exec.group_replicas(), &[1, 1, 1]);
         for seed in 0..4u64 {
             let img = crate::runtime::SyntheticRuntime::stripe_image(seed as usize);
             assert_eq!(exec.infer(&img).unwrap(), model.forward(&img).unwrap());
         }
+    }
+
+    #[test]
+    fn replicated_pipeline_is_bit_identical_and_lossless() {
+        let g = lenet5();
+        let p = ModelParams::synthetic(&g, 37);
+        let model =
+            Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
+        let exec = StagedExecutor::with_bottleneck_replication(
+            Arc::clone(&model),
+            3,
+            2,
+            2,
+            model.datapath(),
+        )
+        .unwrap();
+        assert_eq!(exec.groups(), 3);
+        assert_eq!(exec.max_replication(), 2);
+        assert_eq!(exec.worker_count(), 4);
+        let imgs: Vec<Vec<f32>> = (0..10)
+            .map(crate::runtime::SyntheticRuntime::stripe_image)
+            .collect();
+        let rxs: Vec<_> = imgs.iter().map(|i| exec.submit(i).unwrap()).collect();
+        for (img, rx) in imgs.iter().zip(rxs) {
+            assert_eq!(rx.recv().unwrap(), model.forward(img).unwrap());
+        }
+        exec.close();
+        let stats = exec.stats();
+        assert_eq!(stats.submitted, 10);
+        assert_eq!(stats.completed(), 10);
+        assert_eq!(stats.in_flight(), 0);
+        // The replicated group's frames split across its two workers.
+        let replicated = stats
+            .groups
+            .iter()
+            .find(|g| g.replicas == 2)
+            .expect("one group carries two replicas");
+        assert_eq!(replicated.replica_frames.iter().sum::<u64>(), 10);
+        assert_eq!(replicated.replica_frames.len(), 2);
     }
 
     #[test]
@@ -671,6 +984,7 @@ mod tests {
             assert_eq!(&spec.name, name);
             assert_eq!(spec.ii_cycles_per_frame, (*cost).max(1));
             assert_eq!(spec.tokens_per_frame, 1);
+            assert_eq!(spec.replicas, 1);
         }
         // The predicted bottleneck is the costliest group by definition
         // of the spec II — the serving-side agreement is asserted with
@@ -687,5 +1001,51 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(rep.bottleneck_stage().name, exec.group_names()[costliest]);
+    }
+
+    #[test]
+    fn sim_specs_mirror_replication_and_move_the_predicted_bottleneck() {
+        let g = lenet5();
+        let p = ModelParams::synthetic(&g, 35);
+        let model =
+            Arc::new(CompiledModel::compile_dense(&g, &p, &KernelSpec::default()).unwrap());
+        // Enough replicas on the costliest group that its effective cost
+        // drops well below the runner-up's.
+        let exec = StagedExecutor::with_bottleneck_replication(
+            Arc::clone(&model),
+            3,
+            3,
+            DEFAULT_FIFO_DEPTH,
+            model.datapath(),
+        )
+        .unwrap();
+        let costliest = exec
+            .group_costs()
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap()
+            .0;
+        assert_eq!(exec.group_replicas()[costliest], 3);
+        let specs = exec.sim_specs();
+        assert_eq!(specs[costliest].replicas, 3);
+        // Predicted bottleneck = argmax of cost / replicas, which is no
+        // longer the costliest group.
+        let mut sim = exec.calibration_sim(100.0);
+        let rep = sim
+            .try_run(&crate::sim::Workload::parse("saturated", 32).unwrap())
+            .unwrap();
+        let expected = exec
+            .group_costs()
+            .iter()
+            .zip(exec.group_replicas())
+            .enumerate()
+            .max_by(|(_, (ca, ra)), (_, (cb, rb))| {
+                (**ca as f64 / **ra as f64).total_cmp(&(**cb as f64 / **rb as f64))
+            })
+            .unwrap()
+            .0;
+        assert_ne!(expected, costliest, "replication should move the floor");
+        assert_eq!(rep.bottleneck_stage().name, exec.group_names()[expected]);
     }
 }

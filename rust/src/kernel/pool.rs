@@ -5,7 +5,12 @@
 //! (so a pool is never slower than serial on tiny batches) while
 //! persistent worker threads pull the remaining chunks from a bounded
 //! [`RingQueue`] — the same first-party substrate the sharded execution
-//! plane is built on (crossbeam/rayon are unavailable offline).
+//! plane is built on (crossbeam/rayon are unavailable offline). This is
+//! one of the two ways an engine spends its spare-core budget; the other
+//! is the layer pipeline (`kernel::pipeline`), whose stage-group workers
+//! — and, when slack remains, replicated bottleneck-group workers
+//! (DESIGN.md §15) — draw from the same per-engine budget
+//! (`coordinator::shard::workers_per_engine`).
 //!
 //! ## Identity guarantee
 //!

@@ -235,7 +235,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "queue-depth", takes_value: true, default: Some("16"), help: "per-engine work-ring depth (batches)" },
         Opt { name: "synthetic-us", takes_value: true, default: None, help: "use the synthetic backend at this per-image cost (us) instead of artifacts" },
         Opt { name: "native-sparsity", takes_value: true, default: None, help: "serve baked native kernels at this unstructured sparsity (engine-free: no artifacts, no XLA)" },
-        Opt { name: "pipeline", takes_value: true, default: None, help: "run native kernels layer-pipelined across this many stage groups ('auto' or 0 = size from the core budget; needs --native-sparsity)" },
+        Opt { name: "pipeline", takes_value: true, default: None, help: "run native kernels layer-pipelined: 'auto' (groups + replication from the core budget), N (N stage groups, budget slack replicates bottlenecks), or NxR (N groups, costliest pinned to R workers); needs --native-sparsity" },
         Opt { name: "kernel", takes_value: true, default: Some("unrolled"), help: "kernel flavour for native kernels: auto (cost-model per-layer selection, prints the audit table)|dense|unrolled|block|nm (needs --native-sparsity)" },
         Opt { name: "model", takes_value: true, default: None, help: "repeatable fleet member 'tag=synthetic[:us]|native[:sparsity[:atag]]|artifacts[:atag]': serve a multi-model fleet behind one shared admission gate" },
         Opt { name: "slo", takes_value: true, default: None, help: "repeatable per-tag SLO 'tag=p99_ms[:weight]': partition the shared admission budget by weight (fleet mode)" },
@@ -287,7 +287,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let (backend, imgs, labels) = if let Some(s) = a.get_f64("native-sparsity")? {
         let flavour = Flavour::parse(a.req("kernel")?)?;
         let model = compile_native(artifacts, tag, s, flavour)?;
-        println!("native kernels ({}): {}", flavour.as_str(), model.summary());
+        println!(
+            "native kernels ({}, datapath {}): {}",
+            flavour.as_str(),
+            model.datapath().label(),
+            model.summary()
+        );
         let n = 256usize;
         let (imgs, _) = runtime::SyntheticRuntime::dataset(n);
         let mut labels = Vec::with_capacity(n);
@@ -295,12 +300,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             labels.push(model.classify(&imgs[i * px..(i + 1) * px])? as i32);
         }
         let backend = match parse_pipeline_opt(&a)? {
-            Some(stages) => {
-                match stages {
-                    0 => println!("pipeline: auto stage groups (core budget)"),
-                    n => println!("pipeline: {n} stage groups"),
+            Some((stages, replicas)) => {
+                match (stages, replicas) {
+                    (0, _) => println!("pipeline: auto stage groups + replication (core budget)"),
+                    (n, 0) => println!("pipeline: {n} stage groups (budget slack replicates bottlenecks)"),
+                    (n, r) => println!("pipeline: {n} stage groups, costliest pinned to {r} workers"),
                 }
-                EngineBackend::NativePipelined { model, stages }
+                EngineBackend::NativePipelined { model, stages, replicas }
             }
             None => EngineBackend::Native { model },
         };
@@ -386,19 +392,34 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--pipeline auto|<n>` into `Some(stage_groups)` (0 = auto, the
-/// coordinator sizes it from the per-engine core budget), or `None` when
-/// the flag was not given.
-fn parse_pipeline_opt(a: &cli::Args) -> Result<Option<usize>> {
+/// Parse `--pipeline auto|N[xR]` into `Some((stage_groups, replicas))`,
+/// or `None` when the flag was not given. `auto` → `(0, 0)`: the
+/// coordinator sizes groups from the per-engine core budget and spends
+/// any slack on bottleneck replication. `N` → `(N, 0)`: N groups, auto
+/// replication. `NxR` → `(N, R)`: N groups with the costliest group
+/// pinned to R workers (clamped to the core budget downstream).
+fn parse_pipeline_opt(a: &cli::Args) -> Result<Option<(usize, usize)>> {
     let Some(v) = a.get_all("pipeline").last() else {
         return Ok(None);
     };
     if v == "auto" {
-        return Ok(Some(0));
+        return Ok(Some((0, 0)));
     }
-    v.parse::<usize>().map(Some).map_err(|_| {
-        logicsparse::Error::config(format!("--pipeline expects 'auto' or a stage-group count, got '{v}'"))
-    })
+    let bad = || {
+        logicsparse::Error::config(format!(
+            "--pipeline expects 'auto', a stage-group count N, or NxR \
+             (N groups, R workers on the costliest), got '{v}'"
+        ))
+    };
+    if let Some((n, r)) = v.split_once('x') {
+        let n = n.parse::<usize>().map_err(|_| bad())?;
+        let r = r.parse::<usize>().map_err(|_| bad())?;
+        if n == 0 || r == 0 {
+            return Err(bad());
+        }
+        return Ok(Some((n, r)));
+    }
+    v.parse::<usize>().map(|n| Some((n, 0))).map_err(|_| bad())
 }
 
 /// Compile a baked native model for serving: artifact-backed params when
@@ -425,6 +446,7 @@ fn compile_native(
         Flavour::Auto => {
             let (model, choice) = CompiledModel::compile_auto(&g, &params, &spec)?;
             println!("{}", choice.render());
+            println!("datapath: {} (inner-loop tier, all rows)", model.datapath().label());
             model
         }
         forced => CompiledModel::compile_with_choice(&g, &params, &spec, forced)?,
@@ -838,12 +860,14 @@ fn cmd_bench_compare(argv: &[String]) -> Result<()> {
 
     let mut regressions = 0usize;
     let mut missing_files = 0usize;
+    let mut dropped_series = 0usize;
     for (file, base_doc) in benches {
         match json::parse_file(file) {
             Ok(current) => {
                 let rep = bench::compare(base_doc, &current, noise);
                 print!("{}", rep.render(file));
                 regressions += rep.regressions().len();
+                dropped_series += rep.missing_metrics.len();
             }
             Err(_) => {
                 println!("{file}: not present in this run (baseline has it)");
@@ -852,14 +876,20 @@ fn cmd_bench_compare(argv: &[String]) -> Result<()> {
         }
     }
     println!(
-        "bench-compare: {} regressions, {} baseline benches missing (noise band {:.0}%)",
+        "bench-compare: {} regressions, {} baseline benches missing, {} tracked \
+         series dropped (noise band {:.0}%)",
         regressions,
         missing_files,
+        dropped_series,
         noise * 100.0
     );
-    if a.flag("strict") && (regressions > 0 || missing_files > 0) {
+    // New series (current-only metrics, e.g. p99_ms before a baseline
+    // refresh) are reported per-bench above but never gate: there is no
+    // baseline value to judge them against.
+    if a.flag("strict") && (regressions > 0 || missing_files > 0 || dropped_series > 0) {
         return Err(logicsparse::Error::config(format!(
-            "strict mode: {regressions} regressions, {missing_files} missing benches"
+            "strict mode: {regressions} regressions, {missing_files} missing benches, \
+             {dropped_series} tracked series dropped"
         )));
     }
     Ok(())

@@ -12,9 +12,13 @@ pub struct StageStats {
     pub name: String,
     /// Output tokens the stage produced.
     pub emitted_tokens: u64,
-    /// Cycles the stage spent computing.
+    /// Cycles the stage spent computing (summed across replicas).
     pub busy_cycles: u64,
-    /// busy_cycles over the run length.
+    /// Parallel compute units serving the stage (≥ 1).
+    pub replicas: u64,
+    /// busy_cycles over the run length × replicas: the per-unit
+    /// occupancy, so a replicated stage stays comparable to the served
+    /// executor's per-replica roll-up.
     pub utilization: f64,
 }
 
@@ -108,7 +112,9 @@ impl SimReport {
                     name: s.spec.name.clone(),
                     emitted_tokens: s.emitted,
                     busy_cycles: s.busy_cycles,
-                    utilization: s.busy_cycles as f64 / end_cycle.max(1) as f64,
+                    replicas: s.spec.replicas.max(1),
+                    utilization: s.busy_cycles as f64
+                        / (end_cycle.max(1) as f64 * s.spec.replicas.max(1) as f64),
                 })
                 .collect(),
             fifo_max_occupancy: fifos.iter().map(|f| f.max_occupancy()).collect(),
@@ -168,8 +174,13 @@ impl SimReport {
             self.throughput_fps,
         );
         for st in &self.stages {
+            let rep = if st.replicas > 1 {
+                format!("  x{}", st.replicas)
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
-                "  {:<12} util {:>5.1}%  tokens {}\n",
+                "  {:<12} util {:>5.1}%  tokens {}{rep}\n",
                 st.name,
                 st.utilization * 100.0,
                 st.emitted_tokens
@@ -201,6 +212,7 @@ mod tests {
             in_tokens_per_frame: 1,
             ii_cycles_per_frame: 10,
             fill_cycles: 5,
+            replicas: 1,
         };
         let mut st = StageState::new(spec);
         st.emitted = 10;
@@ -248,6 +260,7 @@ mod tests {
             in_tokens_per_frame: 1,
             ii_cycles_per_frame: 10,
             fill_cycles: 0,
+            replicas: 1,
         };
         let r = SimReport::build(&[0], &[10], &[StageState::new(spec)], &[fifo], 100.0, 10);
         assert_eq!(r.fifos.len(), 1);

@@ -71,6 +71,7 @@ impl Pipeline {
             in_tokens_per_frame: 0,
             ii_cycles_per_frame: in_tokens.div_ceil(link_tokens_per_cycle).max(1),
             fill_cycles: 0,
+            replicas: 1,
         };
         let fifos = (0..=specs.len()).map(|_| Fifo::new(fifo_depth)).collect();
         Pipeline {
@@ -220,7 +221,7 @@ impl Pipeline {
             }
             let arrival = arrivals[st.frame as usize];
             if !st.frame_base_set {
-                let base = now.max(arrival).max(st.prev_frame_end);
+                let base = now.max(arrival).max(st.next_start_floor());
                 if base > now {
                     act.wake_at = Some(base);
                     break;
@@ -294,7 +295,7 @@ impl Pipeline {
                 let st = &mut self.stages[i];
                 if !st.frame_base_set {
                     let ready = st.input_ready_at.unwrap_or(now);
-                    st.frame_base = ready.max(st.prev_frame_end);
+                    st.frame_base = ready.max(st.next_start_floor());
                     st.frame_base_set = true;
                 }
                 let emit_t = st.frame_base + st.spec.emit_offset(st.token);
@@ -408,6 +409,40 @@ mod tests {
         for (c, a) in rep.completions.iter().zip(&arr) {
             assert!(c > a);
         }
+    }
+
+    #[test]
+    fn replicated_stage_lifts_the_ii_floor() {
+        // Two Fc stages; the second is the costlier one. Unreplicated it
+        // floors the steady rate at its own II; with two replicas its
+        // effective II halves and the bottleneck moves to the first
+        // stage — the model mirrored by StagedExecutor::sim_specs.
+        let spec = |name: &str, ii: u64, replicas: u64| StageSpec {
+            name: name.into(),
+            kind: Kind::Fc,
+            tokens_per_frame: 1,
+            in_tokens_per_frame: 1,
+            ii_cycles_per_frame: ii,
+            fill_cycles: 0,
+            replicas,
+        };
+        let run = |reps: u64| {
+            let mut p =
+                Pipeline::new(vec![spec("light", 100, 1), spec("heavy", 150, reps)], 4, 200.0);
+            p.run(&Workload::Saturated { frames: 64 })
+        };
+        let base = run(1);
+        assert!((base.steady_cycles_per_frame - 150.0).abs() < 5.0);
+        assert_eq!(base.bottleneck_stage().name, "heavy");
+        let replicated = run(2);
+        // Effective II of "heavy" drops to 75; "light" now floors at 100.
+        assert!((replicated.steady_cycles_per_frame - 100.0).abs() < 5.0);
+        assert_eq!(replicated.bottleneck_stage().name, "light");
+        // Per-unit occupancy: each of the two replicas is busy 150 of
+        // every 200 cycles, so utilisation reports ~0.75, not ~1.5.
+        let heavy = &replicated.stages[1];
+        assert_eq!(heavy.replicas, 2);
+        assert!(heavy.utilization < 1.0 + 1e-9);
     }
 
     #[test]

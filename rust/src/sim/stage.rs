@@ -45,6 +45,12 @@ pub struct StageSpec {
     pub ii_cycles_per_frame: u64,
     /// Pipeline fill cycles before the first token of a frame.
     pub fill_cycles: u64,
+    /// Parallel compute units serving this stage (≥ 1). Frame f runs on
+    /// unit f mod R: per-frame service time stays `ii_cycles_per_frame`,
+    /// but a unit only floors the start of frame f+R, so the *effective*
+    /// initiation interval is II / R — the simulator's model of the
+    /// served executor's replicated stage-group workers.
+    pub replicas: u64,
 }
 
 impl StageSpec {
@@ -75,6 +81,7 @@ impl StageSpec {
             in_tokens_per_frame: in_tokens,
             ii_cycles_per_frame: ii.max(1),
             fill_cycles: fill,
+            replicas: 1,
         }
     }
 
@@ -128,8 +135,11 @@ pub struct StageState {
     /// Same, tracked ahead for frame f+1 while f still drains (prefetch
     /// crosses the next frame's first window long before f completes).
     pub next_input_ready_at: Option<u64>,
-    /// frame_base(f-1) + II.
-    pub prev_frame_end: u64,
+    /// Per-replica frame-end times: slot r holds frame_base(f) + II of
+    /// the last frame f with f mod R == r. With R == 1 this is the
+    /// classic "frame_base(f-1) + II" floor; with R > 1 frame f only
+    /// waits for frame f−R (its unit's previous occupant).
+    pub prev_frame_ends: Vec<u64>,
     /// Total tokens emitted (across frames).
     pub emitted: u64,
     /// Busy-cycle accumulator for utilisation reporting.
@@ -139,6 +149,7 @@ pub struct StageState {
 impl StageState {
     /// Fresh run state at t=0.
     pub fn new(spec: StageSpec) -> Self {
+        let slots = spec.replicas.max(1) as usize;
         StageState {
             spec,
             frame: 0,
@@ -148,10 +159,16 @@ impl StageState {
             frame_base_set: false,
             input_ready_at: None,
             next_input_ready_at: None,
-            prev_frame_end: 0,
+            prev_frame_ends: vec![0; slots],
             emitted: 0,
             busy_cycles: 0,
         }
+    }
+
+    /// Earliest cycle the *current* frame may start on its compute unit:
+    /// the recorded end of frame f−R (0 if that unit never ran).
+    pub fn next_start_floor(&self) -> u64 {
+        self.prev_frame_ends[(self.frame % self.prev_frame_ends.len() as u64) as usize]
     }
 
     /// Has this stage emitted every token of `frames` frames?
@@ -162,7 +179,8 @@ impl StageState {
     /// Advance the frame counters after emitting the last token.
     /// `consumed` is cumulative and deliberately NOT reset.
     pub fn complete_frame(&mut self) {
-        self.prev_frame_end = self.frame_base + self.spec.ii_cycles_per_frame;
+        let slot = (self.frame % self.prev_frame_ends.len() as u64) as usize;
+        self.prev_frame_ends[slot] = self.frame_base + self.spec.ii_cycles_per_frame;
         self.frame += 1;
         self.token = 0;
         self.frame_base_set = false;
@@ -251,10 +269,34 @@ mod tests {
         st.frame_base_set = true;
         st.complete_frame();
         assert_eq!(st.frame, 1);
-        assert_eq!(st.prev_frame_end, 10 + 576);
+        assert_eq!(st.next_start_floor(), 10 + 576);
         assert!(!st.frame_base_set);
         assert!(!st.done(2));
         st.complete_frame();
         assert!(st.done(2));
+    }
+
+    #[test]
+    fn replicated_stage_floors_on_frame_f_minus_r() {
+        let mut s = spec("conv1"); // II = 576
+        s.replicas = 2;
+        let mut st = StageState::new(s);
+        // Frame 0 on unit 0.
+        st.frame_base = 10;
+        st.frame_base_set = true;
+        st.complete_frame();
+        // Frame 1 runs on unit 1, which has never run: floor is 0, not
+        // frame 0's end — the replicated units overlap frames.
+        assert_eq!(st.next_start_floor(), 0);
+        st.frame_base = 12;
+        st.frame_base_set = true;
+        st.complete_frame();
+        // Frame 2 reuses unit 0 and must wait for frame 0's end.
+        assert_eq!(st.next_start_floor(), 10 + 576);
+        st.frame_base = 586;
+        st.frame_base_set = true;
+        st.complete_frame();
+        // Frame 3 reuses unit 1 (frame 1 ended at 12 + 576).
+        assert_eq!(st.next_start_floor(), 12 + 576);
     }
 }

@@ -141,6 +141,16 @@ pub struct CompareReport {
     pub deltas: Vec<MetricDelta>,
     /// Baseline scenarios absent from the current run.
     pub missing: Vec<String>,
+    /// Direction-classified baseline metrics absent from the current
+    /// run's row (`scenario.metric`). A judged series (e.g. `p99_ms`)
+    /// silently disappearing is drift, not noise, so it is surfaced
+    /// instead of skipped.
+    pub missing_metrics: Vec<String>,
+    /// Direction-classified metrics present in the current run but not
+    /// in the baseline: `(scenario.metric, value)`. Not judged (there is
+    /// nothing to diff against), but listed so a new tracked series is
+    /// visible until the baseline is refreshed to include it.
+    pub new_series: Vec<(String, f64)>,
 }
 
 impl CompareReport {
@@ -172,12 +182,21 @@ impl CompareReport {
         for m in &self.missing {
             out.push_str(&format!("  {m:<52} missing from current run\n"));
         }
+        for m in &self.missing_metrics {
+            out.push_str(&format!("  {m:<52} tracked metric missing from current run\n"));
+        }
+        for (m, v) in &self.new_series {
+            out.push_str(&format!(
+                "  {m:<52} {v:>12.3} new series (not in baseline; refresh to track)\n"
+            ));
+        }
         let n_reg = self.regressions().len();
         out.push_str(&format!(
-            "{bench}: {} metrics judged, {} regressed, {} missing\n",
+            "{bench}: {} metrics judged, {} regressed, {} missing, {} new\n",
             self.deltas.len(),
             n_reg,
-            self.missing.len()
+            self.missing.len() + self.missing_metrics.len(),
+            self.new_series.len()
         ));
         out
     }
@@ -186,10 +205,15 @@ impl CompareReport {
 /// Diff `current` (a `BENCH_*.json` document) against `baseline` (the
 /// same `results` shape). A metric regresses when it is worse than the
 /// baseline by more than `noise` (fractional, e.g. 0.3 = 30%) in its
-/// [`metric_direction`]; direction-less counters are skipped. Scenarios
-/// present only in the current run are ignored (new benches are not
-/// drift), while baseline scenarios absent from the current run are
-/// reported in `missing`.
+/// [`metric_direction`]; direction-less counters are skipped. Whole
+/// scenarios present only in the current run are ignored (new benches
+/// are not drift), while baseline scenarios absent from the current run
+/// are reported in `missing`. Within a shared scenario, judged series
+/// that appear on only one side are surfaced rather than skipped: a
+/// baseline metric the current row dropped lands in `missing_metrics`,
+/// and a current metric the baseline predates (e.g. `p99_ms` added to a
+/// bench after the baseline was captured) lands in `new_series` so the
+/// latency trajectory is visible until the baseline is refreshed.
 pub fn compare(baseline: &Value, current: &Value, noise: f64) -> CompareReport {
     let mut report = CompareReport::default();
     let empty: &[(String, Value)] = &[];
@@ -205,11 +229,24 @@ pub fn compare(baseline: &Value, current: &Value, noise: f64) -> CompareReport {
             continue;
         };
         let Some(base_metrics) = base_row.as_obj() else { continue };
+        // Judged series the baseline predates: visible, not judged.
+        for (metric, cur_val) in cur_row.as_obj().unwrap_or(empty) {
+            if metric_direction(metric).is_some()
+                && base_metrics.iter().all(|(k, _)| k != metric)
+            {
+                if let Some(v) = cur_val.as_f64() {
+                    report.new_series.push((format!("{scenario}.{metric}"), v));
+                }
+            }
+        }
         for (metric, base_val) in base_metrics {
             let Some(dir) = metric_direction(metric) else { continue };
             let (Some(base), Some(current)) =
                 (base_val.as_f64(), cur_row.get(metric).and_then(Value::as_f64))
             else {
+                if base_val.as_f64().is_some() {
+                    report.missing_metrics.push(format!("{scenario}.{metric}"));
+                }
                 continue;
             };
             let ratio = if base != 0.0 { current / base } else { 0.0 };
@@ -487,6 +524,41 @@ mod tests {
         let fast = doc(vec![("t", vec![("rps", 2000.0), ("p99_ms", 2.0)])]);
         let rep = compare(&base, &fast, 0.3);
         assert!(rep.deltas.iter().all(|d| d.improved && !d.regressed));
+    }
+
+    #[test]
+    fn compare_tracks_series_added_or_dropped_within_a_scenario() {
+        // The baseline predates p99 tracking; the current run both adds
+        // p99_ms (new series, listed but unjudged) and drops median_us
+        // (tracked metric gone — drift, surfaced loudly). Counters that
+        // appear or vanish stay silent either way.
+        let base = doc(vec![(
+            "serve",
+            vec![("rps", 1000.0), ("median_us", 800.0), ("shed", 1.0)],
+        )]);
+        let cur = doc(vec![(
+            "serve",
+            vec![("rps", 1010.0), ("p99_ms", 7.5), ("workers", 4.0)],
+        )]);
+        let rep = compare(&base, &cur, 0.3);
+        assert_eq!(rep.deltas.len(), 1, "only rps is judged on both sides");
+        assert!(rep.regressions().is_empty());
+        assert_eq!(rep.missing_metrics, vec!["serve.median_us".to_string()]);
+        assert_eq!(rep.new_series, vec![("serve.p99_ms".to_string(), 7.5)]);
+        let rendered = rep.render("unit");
+        assert!(rendered.contains("serve.median_us"));
+        assert!(rendered.contains("tracked metric missing"));
+        assert!(rendered.contains("serve.p99_ms"));
+        assert!(rendered.contains("new series"));
+        assert!(rendered.contains("1 missing, 1 new"));
+        // Once the baseline is refreshed to carry p99_ms, it is judged
+        // like any latency series: a doubled p99 regresses.
+        let refreshed = doc(vec![("serve", vec![("rps", 1000.0), ("p99_ms", 7.5)])]);
+        let slow = doc(vec![("serve", vec![("rps", 1000.0), ("p99_ms", 16.0)])]);
+        let rep = compare(&refreshed, &slow, 0.3);
+        let p99 = rep.deltas.iter().find(|d| d.metric == "p99_ms").unwrap();
+        assert!(p99.regressed, "doubled p99_ms must regress: {p99:?}");
+        assert!(rep.new_series.is_empty() && rep.missing_metrics.is_empty());
     }
 
     #[test]

@@ -1,10 +1,10 @@
 //! Batched-forward identity: `infer_batch` (serial and pooled) must be
 //! bit-identical to per-image `forward` across all three kernel flavours
 //! and every compiled-in datapath — including layer shapes that are not
-//! multiples of the dense 4-row fuse width or the 8-wide sparse lanes.
-//! This is the test-side half of the PR-6 acceptance criteria (benches
-//! measure the speedups; identity lives here, where `cargo test` runs
-//! it).
+//! multiples of the dense 4-row fuse width, the 8-wide sparse lanes, or
+//! the AVX2 tier's 16-wide chunks (DESIGN.md §15). This is the
+//! test-side half of the PR-6 acceptance criteria (benches measure the
+//! speedups; identity lives here, where `cargo test` runs it).
 
 use logicsparse::folding::{FoldingConfig, LayerFold, Style};
 use logicsparse::graph::builder::{lenet5, mlp};
@@ -109,6 +109,48 @@ fn infer_batch_matches_on_non_lane_multiple_shapes() {
                     dp.label()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn infer_batch_matches_on_sixteen_lane_remainder_shapes() {
+    // Shapes sized against the AVX2 tier's 16-lane chunks: fold_ins
+    // 131 / 67 / 67 give sparse channels tens of nnz entries (full
+    // 16-entry madd chunks plus a ragged tail), and couts 67 / 67 / 10
+    // make every dense row one-or-more 16-channel passes plus a 3- or
+    // 10-wide scalar tail. `Datapath::all()` includes the AVX2 tier
+    // exactly when the host CPU reports it, so on AVX2 hardware this
+    // pins the intrinsics against the scalar reference bit for bit; the
+    // SSE2 and portable tiers cover the same remainders everywhere else.
+    for (name, model) in flavours(&mlp(131, 67, 10), 46) {
+        for n in [1usize, 3] {
+            let x = batch_for(&model, n);
+            let want = per_image_scalar(&model, &x, n);
+            for dp in Datapath::all() {
+                assert_eq!(
+                    model.infer_batch_with(&x, n, dp).unwrap(),
+                    want,
+                    "{name}: {} diverged on 16-lane-remainder shapes at n={n}",
+                    dp.label()
+                );
+            }
+        }
+    }
+    // The AVX2 selector itself is safe to pin on any x86_64 host: when
+    // the CPU lacks AVX2 it falls back to the SSE2 tier instead of
+    // executing unsupported instructions, so the identity contract
+    // holds regardless of detection.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        for (name, model) in flavours(&mlp(131, 67, 10), 46) {
+            let n = 3usize;
+            let x = batch_for(&model, n);
+            assert_eq!(
+                model.infer_batch_with(&x, n, Datapath::Avx2).unwrap(),
+                per_image_scalar(&model, &x, n),
+                "{name}: pinned avx2 datapath diverged"
+            );
         }
     }
 }

@@ -4,13 +4,18 @@
 //! degenerate), drain losslessly mid-stream, and — the sim-vs-reality
 //! loop — the cycle simulator built from the *served* stage grouping
 //! must identify the same bottleneck group the measured per-group
-//! occupancy does (DESIGN.md §13). The throughput floor lives in
-//! `benches/kernel_perf.rs`; correctness lives here, where `cargo test`
-//! runs it.
+//! occupancy does (DESIGN.md §13). Replicated groups (DESIGN.md §15)
+//! carry the same contract: round-robin dispatch across replica rings
+//! must recombine in submit order bit-identically, drain losslessly on
+//! a mid-stream close, degenerate to the single-worker executor at
+//! R = 1, and keep the calibration loop closed with replication
+//! factors ≥ 2. The throughput floors live in `benches/kernel_perf.rs`;
+//! correctness lives here, where `cargo test` runs it.
 
 use logicsparse::folding::{FoldingConfig, LayerFold, Style};
 use logicsparse::graph::builder::{lenet5, mlp};
 use logicsparse::graph::Graph;
+use logicsparse::kernel::pipeline::DEFAULT_FIFO_DEPTH;
 use logicsparse::kernel::{
     CompiledModel, Datapath, KernelSpec, NativeSparseBackend, StagedExecutor,
 };
@@ -154,6 +159,128 @@ fn mid_stream_close_is_lossless() {
 }
 
 #[test]
+fn replicated_pipeline_delivers_in_submit_order_bit_identically() {
+    // Round-robin dispatch sprays consecutive frames across the
+    // bottleneck group's replica rings; the recombination boundary must
+    // hand them to the next group in seq order, so the delivered stream
+    // is the per-image scalar reference exactly — per flavour and per
+    // compiled-in datapath, at shallow FIFOs where backpressure and the
+    // reorder buffer both engage.
+    for (name, model) in flavours(&lenet5(), 57) {
+        let px = model.input_pixels();
+        let n = 16usize;
+        let x = stream_for(&model, n);
+        let want = per_image_scalar(&model, &x, n);
+        for dp in Datapath::all() {
+            let exec = StagedExecutor::with_bottleneck_replication(
+                Arc::clone(&model),
+                4,
+                2,
+                2,
+                dp,
+            )
+            .unwrap();
+            assert_eq!(exec.max_replication(), 2, "{name}: pin did not replicate");
+            let rxs: Vec<_> = (0..n)
+                .map(|i| exec.submit(&x[i * px..(i + 1) * px]).unwrap())
+                .collect();
+            let got: Vec<f32> =
+                rxs.into_iter().flat_map(|rx| rx.recv().unwrap()).collect();
+            assert_eq!(
+                got,
+                want,
+                "{name}: {} replicated pipeline broke order or bits",
+                dp.label()
+            );
+            let st = exec.stats();
+            assert_eq!(st.in_flight(), 0, "{name}: replicated pipeline lost frames");
+            // Round-robin actually fed both replicas of the pinned
+            // group: with 16 sequential frames at seq % 2 dispatch,
+            // each replica of the replicated group served exactly half.
+            let g = exec
+                .group_replicas()
+                .iter()
+                .position(|&r| r == 2)
+                .expect("one group is replicated");
+            let per_replica = &st.groups[g].replica_frames;
+            assert_eq!(
+                per_replica,
+                &vec![8u64, 8],
+                "{name}: dispatch was not round-robin"
+            );
+        }
+    }
+}
+
+#[test]
+fn replicated_mid_stream_close_is_lossless_with_uneven_replicas() {
+    // Close while frames are still spread across both replicas of the
+    // bottleneck group (depth-1 rings keep many in flight, and thread
+    // scheduling makes one replica run behind the other): the cascade
+    // close must still deliver every accepted frame, in order, bit
+    // identically — the last replica out closes the downstream rings.
+    let (_, model) = flavours(&lenet5(), 58).swap_remove(2);
+    let exec = StagedExecutor::with_bottleneck_replication(
+        Arc::clone(&model),
+        3,
+        2,
+        1,
+        model.datapath(),
+    )
+    .unwrap();
+    let px = model.input_pixels();
+    let n = 32usize;
+    let x = stream_for(&model, n);
+    let want = per_image_scalar(&model, &x, n);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| exec.submit(&x[i * px..(i + 1) * px]).unwrap())
+        .collect();
+    exec.close();
+    let got: Vec<f32> = rxs.into_iter().flat_map(|rx| rx.recv().unwrap()).collect();
+    assert_eq!(got, want, "mid-stream close lost or corrupted replicated frames");
+    let st = exec.stats();
+    assert_eq!(st.submitted, n as u64);
+    assert_eq!(st.completed(), n as u64);
+    assert_eq!(st.in_flight(), 0, "drain left frames in flight");
+    assert!(exec.submit(&x[..px]).is_err(), "submit must stay closed");
+}
+
+#[test]
+fn pinned_r1_replication_degenerates_to_the_plain_executor() {
+    // `with_bottleneck_replication(.., r = 1, ..)` is the PR 7 executor:
+    // same grouping, one worker per group, one ring per boundary, and
+    // bit-identical output.
+    let (_, model) = flavours(&lenet5(), 59).swap_remove(0);
+    let plain =
+        StagedExecutor::with_config(Arc::clone(&model), 3, 2, model.datapath()).unwrap();
+    let pinned = StagedExecutor::with_bottleneck_replication(
+        Arc::clone(&model),
+        3,
+        1,
+        2,
+        model.datapath(),
+    )
+    .unwrap();
+    assert_eq!(pinned.group_spans(), plain.group_spans());
+    assert_eq!(pinned.group_costs(), plain.group_costs());
+    assert_eq!(pinned.group_replicas(), &[1, 1, 1]);
+    assert_eq!(pinned.worker_count(), plain.worker_count());
+    assert_eq!(pinned.max_replication(), 1);
+    let n = 8usize;
+    let x = stream_for(&model, n);
+    assert_eq!(
+        pinned.infer_batch(&x, n).unwrap(),
+        plain.infer_batch(&x, n).unwrap(),
+        "R=1 pinned executor diverged from the plain one"
+    );
+    // A budget of exactly one worker per group is the same degenerate
+    // plan.
+    let budgeted =
+        StagedExecutor::with_budget(Arc::clone(&model), 3, 3, 2, model.datapath()).unwrap();
+    assert_eq!(budgeted.group_replicas(), &[1, 1, 1]);
+}
+
+#[test]
 fn single_group_pipeline_degenerates_to_serial() {
     let (_, model) = flavours(&lenet5(), 54).swap_remove(0);
     let exec = StagedExecutor::with_config(Arc::clone(&model), 1, 2, model.datapath()).unwrap();
@@ -227,4 +354,79 @@ fn calibration_sim_agrees_with_measured_bottleneck() {
     assert_eq!(rep.fifos.len(), exec.groups() + 1);
     assert!(rep.fifos.iter().all(|f| f.capacity == exec.fifo_depth()));
     assert!(rep.fifos.iter().any(|f| f.total_tokens > 0));
+}
+
+#[test]
+fn calibration_sim_agrees_with_measured_bottleneck_under_replication() {
+    // The same loop with the costliest group replicated 3x: predicted
+    // and measured bottleneck must both move off the costliest group.
+    // Dense LeNet-5 at 3 groups costs [89856, 153600, 42664]; conv2 at
+    // 3 workers serves an effective 51200 cycles/frame, so the floor
+    // moves to group 0 with a 1.75x margin over it — and total busy
+    // time per group is proportional to cost however the OS schedules
+    // the worker threads, so the measured argmax(busy / replicas) is
+    // robust even on starved single-core runners.
+    let g = lenet5();
+    let params = ModelParams::synthetic(&g, 60);
+    let model =
+        Arc::new(CompiledModel::compile_dense(&g, &params, &KernelSpec::default()).unwrap());
+    let exec = StagedExecutor::with_bottleneck_replication(
+        Arc::clone(&model),
+        3,
+        3,
+        DEFAULT_FIFO_DEPTH,
+        Datapath::Scalar,
+    )
+    .unwrap();
+    assert!(exec.max_replication() >= 2, "test needs a replicated group");
+
+    let costliest = exec
+        .group_costs()
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .unwrap()
+        .0;
+    assert_eq!(exec.group_replicas()[costliest], 3);
+
+    let mut sim = exec.calibration_sim(100.0);
+    let rep = sim.try_run(&Workload::parse("saturated", 64).unwrap()).unwrap();
+    let predicted = rep.bottleneck_stage().name.clone();
+    assert_ne!(
+        predicted, exec.group_names()[costliest],
+        "replication did not move the predicted floor"
+    );
+
+    let n = 64usize;
+    let x = stream_for(&model, n);
+    exec.infer_batch(&x, n).unwrap();
+    let st = exec.stats();
+    let measured = st.groups[st.bottleneck_group()].name.clone();
+
+    assert_eq!(
+        predicted, measured,
+        "simulator predicted '{predicted}' but measured occupancy says '{measured}' \
+         (costs {:?}, replicas {:?}, busy {:?})",
+        exec.group_costs(),
+        exec.group_replicas(),
+        st.groups.iter().map(|g| g.busy_s).collect::<Vec<_>>()
+    );
+
+    // Replica counts round-trip into the sim specs, and the replicated
+    // group's frames were actually spread across its workers.
+    for (spec, &r) in sim_replicas_of(&exec).iter().zip(exec.group_replicas()) {
+        assert_eq!(*spec, r as u64);
+    }
+    let rg = &st.groups[costliest];
+    assert_eq!(rg.replica_frames.iter().sum::<u64>(), n as u64);
+    assert!(
+        rg.replica_frames.iter().all(|&f| f > 0),
+        "a replica served nothing: {:?}",
+        rg.replica_frames
+    );
+}
+
+/// The `replicas` field of each sim spec, in group order.
+fn sim_replicas_of(exec: &StagedExecutor) -> Vec<u64> {
+    exec.sim_specs().iter().map(|s| s.replicas).collect()
 }
