@@ -8,7 +8,11 @@
 //!     4-engine throughput must be >= 2x the 1-engine figure, with zero
 //!     dropped responses across graceful shutdown);
 //!   * Poisson traffic below capacity (latency percentiles + shed counts
-//!     under the *same arrival process* the cycle simulator uses).
+//!     under the *same arrival process* the cycle simulator uses);
+//!   * an observer-overhead pair (dark vs traced at full sample rate
+//!     with a metrics registry attached): full runs assert the traced
+//!     plane holds >= 0.9x the dark throughput, and the traced row
+//!     carries the trace-derived stage-latency means.
 //!
 //! Part 2 serves **baked native kernels** (`kernel::CompiledModel`): real
 //! LeNet-5-shaped integer inference with no engine at all. It compiles a
@@ -52,6 +56,7 @@ use logicsparse::coordinator::{
 use logicsparse::experiments::headline;
 use logicsparse::graph::builder::lenet5;
 use logicsparse::kernel::{CompiledModel, Flavour, KernelSpec};
+use logicsparse::obs::ObsConfig;
 use logicsparse::runtime::{ModelRuntime, SyntheticRuntime, IMG};
 use logicsparse::sparsity::Mask;
 use logicsparse::traffic::{Mix, Traffic};
@@ -196,6 +201,82 @@ fn synthetic_poisson(log: &mut BenchLog, smoke: bool) {
         "accepted requests unaccounted for"
     );
     record(log, "synthetic_poisson_open_loop", &rep, &snap);
+}
+
+/// Observer overhead: the same saturated synthetic workload served dark
+/// and served with full-rate tracing plus an attached metrics registry.
+/// Full runs assert the traced plane holds >= 0.9x the dark throughput;
+/// smoke runs record the trajectory only (shared runners are noisy).
+/// The traced row also carries the trace-derived stage-latency means
+/// (queue/exec/total), so BenchLog rows and the trace agree on where
+/// request time went.
+fn traced_overhead(log: &mut BenchLog, smoke: bool) {
+    use logicsparse::obs::{metrics::Registry, trace::Tracer, ObsConfig};
+    println!("== observer overhead: dark vs traced serving ==");
+    let per_image = Duration::from_micros(150);
+    let requests: u64 = if smoke { 200 } else { 3000 };
+    let run = |obs: ObsConfig| {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            engines: 2,
+            admission_capacity: 512,
+            queue_depth: 16,
+            obs,
+            ..ServerOptions::synthetic(per_image)
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::saturated(requests),
+            synth_image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        assert_eq!(rep.lost, 0, "responses dropped across graceful shutdown");
+        assert_eq!(rep.completed, requests, "saturated Retry run must complete all");
+        (rep, snap)
+    };
+
+    let (dark_rep, dark_snap) = run(ObsConfig::default());
+    record(log, "observer_dark", &dark_rep, &dark_snap);
+
+    let tracer = Tracer::new(1.0);
+    let registry = Registry::new();
+    let (traced_rep, traced_snap) = run(ObsConfig {
+        tracer: Some(Arc::clone(&tracer)),
+        metrics: Some(Arc::clone(&registry)),
+    });
+    assert_eq!(
+        tracer.dropped_events(),
+        0,
+        "default ring capacity must hold a full-rate capture of this run"
+    );
+    let b = tracer.stage_breakdown();
+    assert_eq!(
+        b.spans as u64, requests,
+        "sample rate 1.0 must assemble a complete span per request"
+    );
+    let mut row = metrics(&traced_rep, &traced_snap);
+    row.push(("trace_spans", b.spans as f64));
+    row.push(("trace_queue_us", b.queue_us));
+    row.push(("trace_exec_us", b.exec_us));
+    row.push(("trace_total_us", b.total_us));
+    log.push("observer_traced", &row);
+
+    let ratio = traced_rep.achieved_rps / dark_rep.achieved_rps;
+    println!(
+        "observer overhead: dark {:.0} req/s, traced {:.0} req/s ({ratio:.2}x) | \
+         {} spans, mean queue {:.0}us exec {:.0}us total {:.0}us",
+        dark_rep.achieved_rps, traced_rep.achieved_rps, b.spans, b.queue_us, b.exec_us,
+        b.total_us
+    );
+    log.push("observer_overhead", &[("traced_over_dark_ratio", ratio)]);
+    if !smoke {
+        assert!(
+            ratio >= 0.9,
+            "tracing overhead regressed: traced plane at {ratio:.2}x of dark throughput"
+        );
+    }
 }
 
 /// The tentpole scenario: baked sparse kernels vs the dense native
@@ -562,6 +643,7 @@ fn fleet_heterogeneous(log: &mut BenchLog, smoke: bool) {
             .collect(),
         admission_capacity: 512,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let mut mix = Mix::new();
@@ -643,6 +725,7 @@ fn fleet_noisy_neighbour(log: &mut BenchLog, smoke: bool) {
             ],
             admission_capacity: 63,
             autotune: None,
+        obs: ObsConfig::default(),
         })
         .unwrap();
         let mix = Mix::new()
@@ -779,6 +862,7 @@ fn main() {
     let mut log = BenchLog::new("serve_perf");
     synthetic_scaling(&mut log, smoke);
     synthetic_poisson(&mut log, smoke);
+    traced_overhead(&mut log, smoke);
     native_kernels(&mut log, smoke);
     auto_vs_fixed(&mut log, smoke);
     fleet_heterogeneous(&mut log, smoke);

@@ -21,6 +21,7 @@ use super::shard::ExecutionPlane;
 use super::{Batch, Request};
 use crate::coordinator::queue::PlaneGates;
 use crate::coordinator::stats::ServerStats;
+use crate::obs::trace::{EventKind, TraceHandle};
 use crate::runtime::NUM_CLASSES;
 
 /// Batch formation policy.
@@ -69,6 +70,7 @@ pub(crate) fn run(
     policy: BatchPolicy,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    trace: Option<(TraceHandle, u16)>,
 ) {
     let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
     let mut oldest: Option<Instant> = None;
@@ -80,6 +82,11 @@ pub(crate) fn run(
             }
             let batch = Batch { requests: std::mem::take(pending) };
             stats.on_dispatch(batch.requests.len());
+            if let Some((h, t)) = &trace {
+                for r in &batch.requests {
+                    h.request(EventKind::Dispatched, r.id, *t);
+                }
+            }
             *oldest = None;
             match plane.dispatch(batch) {
                 Ok(()) => true,
@@ -106,6 +113,9 @@ pub(crate) fn run(
                 if oldest.is_none() {
                     oldest = Some(req.enqueued);
                 }
+                if let Some((h, t)) = &trace {
+                    h.request(EventKind::Enqueued, req.id, *t);
+                }
                 pending.push(req);
                 if pending.len() >= policy.max_batch {
                     if !flush(&mut pending, &mut oldest) {
@@ -123,6 +133,9 @@ pub(crate) fn run(
                 if shutdown.load(Ordering::SeqCst) {
                     // Drain whatever remains, then exit.
                     while let Ok(req) = rx.try_recv() {
+                        if let Some((h, t)) = &trace {
+                            h.request(EventKind::Enqueued, req.id, *t);
+                        }
                         pending.push(req);
                         if pending.len() >= policy.max_batch
                             && !flush(&mut pending, &mut oldest)
@@ -198,7 +211,7 @@ mod tests {
         let p = Arc::clone(&plane);
         let g = Arc::clone(&gates);
         let handle =
-            std::thread::spawn(move || run(in_rx, p, g, policy, stats, sd));
+            std::thread::spawn(move || run(in_rx, p, g, policy, stats, sd, None));
         Harness { tx, plane, gates, shutdown, handle }
     }
 

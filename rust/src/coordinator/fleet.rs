@@ -54,6 +54,7 @@ use super::policy::{
 };
 use super::queue::AdmissionGate;
 use super::{BatchPolicy, EngineBackend, Plane, PlaneConfig, Response, StatsSnapshot};
+use crate::obs::ObsConfig;
 use crate::util::error::{Error, Result};
 
 /// Configuration of one fleet member: a model tag plus the per-plane
@@ -119,13 +120,15 @@ impl ModelSpec {
         self
     }
 
-    fn plane_config(&self) -> PlaneConfig {
+    fn plane_config(&self, obs: ObsConfig) -> PlaneConfig {
         PlaneConfig {
             policy: self.policy.clone(),
             engines: self.engines,
             backend: self.backend.clone(),
             queue_depth: self.queue_depth,
             slo: self.slo,
+            tag: self.tag.clone(),
+            obs,
         }
     }
 }
@@ -143,11 +146,19 @@ pub struct FleetOptions {
     /// When set, [`Fleet::tick`] additionally runs the queue-depth
     /// autotuner with these bounds (weighted admission always runs).
     pub autotune: Option<AutotuneConfig>,
+    /// Observability wiring shared by every plane (each plane prefixes
+    /// its rings and metrics with its tag); default off.
+    pub obs: ObsConfig,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        FleetOptions { models: Vec::new(), admission_capacity: 1024, autotune: None }
+        FleetOptions {
+            models: Vec::new(),
+            admission_capacity: 1024,
+            autotune: None,
+            obs: ObsConfig::default(),
+        }
     }
 }
 
@@ -176,8 +187,11 @@ pub struct Fleet {
     controller: Mutex<Controller>,
     /// Host-gate sheds attributed to tags that have since retired, kept
     /// so the gate-total vs per-tag reconciliation survives membership
-    /// churn.
-    retired_shed: AtomicU64,
+    /// churn. Shared (`Arc`) so a fleet-level gauge can read it.
+    retired_shed: Arc<AtomicU64>,
+    /// Observability wiring handed to every plane — kept so planes
+    /// registered live ([`Fleet::register`]) wire up the same sinks.
+    obs: ObsConfig,
 }
 
 /// Live `(index, slot, plane)` triples of one locked slot vector.
@@ -211,14 +225,30 @@ impl Fleet {
         }
         let mut slots = Vec::with_capacity(opts.models.len());
         for spec in &opts.models {
-            let plane = Plane::start(spec.plane_config(), Arc::clone(&gate))?;
+            let plane = Plane::start(spec.plane_config(opts.obs.clone()), Arc::clone(&gate))?;
             slots.push(Slot { tag: spec.tag.clone(), plane: Some(plane), slo: spec.slo });
+        }
+        let retired_shed = Arc::new(AtomicU64::new(0));
+        // Fleet-level gauges: the shared gate's state plus the retired
+        // shed attribution (per-plane state is registered by each plane).
+        if let Some(reg) = &opts.obs.metrics {
+            let g = Arc::clone(&gate);
+            reg.gauge_fn("fleet.in_flight", move || g.depth() as f64);
+            let g = Arc::clone(&gate);
+            reg.gauge_fn("fleet.capacity", move || g.capacity() as f64);
+            let g = Arc::clone(&gate);
+            reg.gauge_fn("fleet.shed_host", move || g.shed_total() as f64);
+            let rs = Arc::clone(&retired_shed);
+            reg.gauge_fn("fleet.shed_retired", move || {
+                rs.load(Ordering::Relaxed) as f64
+            });
         }
         let fleet = Fleet {
             slots: RwLock::new(slots),
             gate,
             controller: Mutex::new(controller),
-            retired_shed: AtomicU64::new(0),
+            retired_shed,
+            obs: opts.obs,
         };
         // First control tick: applies the weighted budgets (and baselines
         // the autotuner) before any traffic arrives.
@@ -310,7 +340,7 @@ impl Fleet {
         if live(&self.slots()).any(|(_, s, _)| s.tag == spec.tag) {
             return Err(duplicate());
         }
-        let plane = Plane::start(spec.plane_config(), Arc::clone(&self.gate))?;
+        let plane = Plane::start(spec.plane_config(self.obs.clone()), Arc::clone(&self.gate))?;
         {
             let mut slots = self.slots.write().expect("fleet membership poisoned");
             if live(&slots).any(|(_, s, _)| s.tag == spec.tag) {
@@ -593,6 +623,7 @@ mod tests {
             ],
             admission_capacity: admission,
             autotune: None,
+            obs: ObsConfig::default(),
         })
         .unwrap()
     }
@@ -607,12 +638,14 @@ mod tests {
             ],
             admission_capacity: 16,
             autotune: None,
+            obs: ObsConfig::default(),
         };
         assert!(Fleet::start(dup).is_err());
         let zero_cap = FleetOptions {
             models: vec![ModelSpec::new("a", synthetic(0))],
             admission_capacity: 0,
             autotune: None,
+            obs: ObsConfig::default(),
         };
         assert!(Fleet::start(zero_cap).is_err());
     }
@@ -655,6 +688,7 @@ mod tests {
             ],
             admission_capacity: 256,
             autotune: None,
+            obs: ObsConfig::default(),
         })
         .unwrap();
         for i in 0..6u64 {
@@ -687,6 +721,7 @@ mod tests {
             ],
             admission_capacity: 63,
             autotune: None,
+            obs: ObsConfig::default(),
         })
         .unwrap();
         let snap = fleet.stats();
@@ -805,6 +840,7 @@ mod tests {
                 cooldown_ticks: 2,
                 steal_fraction: 0.5,
             }),
+            obs: ObsConfig::default(),
         })
         .unwrap();
         let rxs: Vec<_> = (0..3u64)

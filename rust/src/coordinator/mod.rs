@@ -43,7 +43,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::kernel::{CompiledModel, NativeSparseBackend};
+use crate::kernel::{CompiledModel, NativeSparseBackend, PipeObs};
+use crate::obs::trace::{EventKind, TraceHandle};
+use crate::obs::ObsConfig;
 use crate::runtime::{InferenceBackend, ModelRuntime, SyntheticRuntime, IMG, NUM_CLASSES};
 use crate::util::error::{Error, Result};
 
@@ -155,6 +157,8 @@ pub struct ServerOptions {
     pub admission_capacity: usize,
     /// Per-engine work-ring depth, in batches.
     pub queue_depth: usize,
+    /// Observability wiring (tracer + metrics registry); default off.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServerOptions {
@@ -168,6 +172,7 @@ impl Default for ServerOptions {
             },
             admission_capacity: 1024,
             queue_depth: 16,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -239,6 +244,11 @@ pub(crate) struct PlaneConfig {
     pub queue_depth: usize,
     /// The tag's SLO, when one is configured (fleet planes only).
     pub slo: Option<policy::SloSpec>,
+    /// Plane label: the model tag (fleet) or `"serve"` (single-model).
+    /// Prefixes this plane's trace rings and metric names.
+    pub tag: String,
+    /// Observability wiring; default off costs nothing anywhere.
+    pub obs: ObsConfig,
 }
 
 /// One per-model serving plane: batcher thread + sharded engines, gated
@@ -260,13 +270,15 @@ pub(crate) struct Plane {
     engines: Option<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
     slo: Option<policy::SloSpec>,
+    /// Submit-path trace ring + interned tag id, when tracing is on.
+    trace_submit: Option<(TraceHandle, u16)>,
 }
 
 impl Plane {
     /// Start one plane; fails fast if the backend cannot be built (each
     /// engine verifies its backend before the plane is returned).
     pub(crate) fn start(cfg: PlaneConfig, gate: Arc<AdmissionGate>) -> Result<Plane> {
-        let PlaneConfig { policy, engines, backend, queue_depth, slo } = cfg;
+        let PlaneConfig { policy, engines, backend, queue_depth, slo, tag, obs } = cfg;
         if engines == 0 {
             return Err(Error::config("engines must be >= 1"));
         }
@@ -274,8 +286,21 @@ impl Plane {
             return Err(Error::config("queue_depth must be >= 1"));
         }
         let gates = Arc::new(PlaneGates::new(gate, Arc::new(queue::TagBudget::unlimited())));
-        let stats = Arc::new(ServerStats::new());
+        // With a registry attached the plane's counters are the scrape's
+        // cells (one write path); detached planes use private atomics.
+        let stats = Arc::new(match &obs.metrics {
+            Some(reg) => ServerStats::new_in(reg, &format!("{tag}.")),
+            None => ServerStats::new(),
+        });
         let shutdown = Arc::new(AtomicBool::new(false));
+        // Trace rings: one shared MPSC ring on the submit path (clients
+        // are many), one per batcher, one per engine worker. Registration
+        // locks; recording through the handles never does.
+        let tag_id = obs.tracer.as_ref().map(|t| t.intern(&tag)).unwrap_or(0);
+        let trace_submit =
+            obs.tracer.as_ref().map(|t| (t.register(&format!("{tag}.submit")), tag_id));
+        let trace_batcher =
+            obs.tracer.as_ref().map(|t| (t.register(&format!("{tag}.batcher")), tag_id));
 
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (plane, mailboxes) = shard::ExecutionPlane::new(engines, queue_depth);
@@ -283,12 +308,23 @@ impl Plane {
         // Engines: verify backends build before declaring the plane up.
         let mut engine_handles = Vec::with_capacity(engines);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for mailbox in mailboxes {
+        for (k, mailbox) in mailboxes.into_iter().enumerate() {
             let plane = Arc::clone(&plane);
             let st = Arc::clone(&stats);
             let g = Arc::clone(&gates);
             let spec = backend.clone();
             let ready = ready_tx.clone();
+            let etr =
+                obs.tracer.as_ref().map(|t| (t.register(&format!("{tag}.e{k}")), tag_id));
+            let pobs = if obs.is_off() {
+                PipeObs::default()
+            } else {
+                PipeObs {
+                    tracer: obs.tracer.clone(),
+                    metrics: obs.metrics.clone(),
+                    label: format!("{tag}.e{k}.pipe"),
+                }
+            };
             engine_handles.push(std::thread::spawn(move || {
                 let backend: Box<dyn InferenceBackend> = match &spec {
                     EngineBackend::Artifacts { dir, tag } => {
@@ -337,19 +373,21 @@ impl Plane {
                         let built = if *replicas == 0 {
                             let workers =
                                 shard::pipeline_workers_per_engine(engines, groups);
-                            NativeSparseBackend::with_pipeline_budget(
+                            NativeSparseBackend::with_pipeline_budget_obs(
                                 Arc::clone(model),
                                 groups,
                                 workers,
+                                pobs,
                             )
                         } else {
                             let r = shard::pipeline_replicas_per_engine(
                                 engines, groups, *replicas,
                             );
-                            NativeSparseBackend::with_pipeline_replicated(
+                            NativeSparseBackend::with_pipeline_replicated_obs(
                                 Arc::clone(model),
                                 groups,
                                 r,
+                                pobs,
                             )
                         };
                         match built {
@@ -367,8 +405,12 @@ impl Plane {
                 shard::worker_loop(&plane, &mailbox, |batch, stolen| {
                     if stolen {
                         st.on_steal();
+                        if let Some((h, t)) = &etr {
+                            let id = batch.requests.first().map(|r| r.id).unwrap_or(0);
+                            h.record(EventKind::Stolen, id, *t, 0, 0);
+                        }
                     }
-                    execute_batch(backend.as_ref(), batch, &st, &g);
+                    execute_batch(backend.as_ref(), batch, &st, &g, etr.as_ref());
                 });
             }));
         }
@@ -399,8 +441,21 @@ impl Plane {
         let p = Arc::clone(&plane);
         let g = Arc::clone(&gates);
         let batcher = std::thread::spawn(move || {
-            batcher::run(submit_rx, p, g, policy, st, sd);
+            batcher::run(submit_rx, p, g, policy, st, sd, trace_batcher);
         });
+
+        // Plane-state gauges: polled at scrape time, zero hot-path cost
+        // (the closures read the same state `augment` samples).
+        if let Some(reg) = &obs.metrics {
+            let g = Arc::clone(&gates);
+            reg.gauge_fn(&format!("{tag}.in_flight"), move || g.budget().depth() as f64);
+            let p = Arc::clone(&plane);
+            reg.gauge_fn(&format!("{tag}.ring_depth"), move || p.depth() as f64);
+            let p = Arc::clone(&plane);
+            reg.gauge_fn(&format!("{tag}.ring_full_backoffs"), move || {
+                p.full_backoffs() as f64
+            });
+        }
 
         Ok(Plane {
             submit_tx: Some(submit_tx),
@@ -412,6 +467,7 @@ impl Plane {
             engines: Some(engine_handles),
             next_id: AtomicU64::new(0),
             slo,
+            trace_submit,
         })
     }
 
@@ -434,10 +490,17 @@ impl Plane {
         match self.gates.try_enter() {
             Entry::ShedBudget => {
                 self.stats.on_shed_budget();
+                if let Some((h, t)) = &self.trace_submit {
+                    // Sheds have no request id yet; stamp the would-be id.
+                    h.request(EventKind::ShedBudget, self.next_id.load(Ordering::Relaxed), *t);
+                }
                 return Err(Error::Overloaded);
             }
             Entry::ShedHost => {
                 self.stats.on_shed();
+                if let Some((h, t)) = &self.trace_submit {
+                    h.request(EventKind::ShedHost, self.next_id.load(Ordering::Relaxed), *t);
+                }
                 return Err(Error::Overloaded);
             }
             Entry::Admitted => {}
@@ -450,6 +513,9 @@ impl Plane {
             resp: resp_tx,
         };
         self.stats.on_submit();
+        if let Some((h, t)) = &self.trace_submit {
+            h.request(EventKind::Admitted, req.id, *t);
+        }
         if tx.send(req).is_err() {
             self.gates.exit();
             return Err(Error::QueueClosed);
@@ -550,6 +616,8 @@ impl Server {
                 backend: opts.backend,
                 queue_depth: opts.queue_depth,
                 slo: None,
+                tag: "serve".into(),
+                obs: opts.obs,
             },
             Arc::clone(&gate),
         )?;
@@ -589,12 +657,14 @@ impl Server {
 
 /// Execute one batch on `backend` and complete its requests. Admission
 /// (both scopes: tag budget + host gate) is released per request, after
-/// its response is sent.
+/// its response is sent. `trace`, when present, records a completion
+/// (or failure) event per sampled request on the engine's ring.
 fn execute_batch(
     backend: &dyn InferenceBackend,
     batch: Batch,
     stats: &ServerStats,
     gates: &PlaneGates,
+    trace: Option<&(TraceHandle, u16)>,
 ) {
     let n = batch.requests.len();
     if n == 0 {
@@ -624,6 +694,9 @@ fn execute_batch(
             for (i, req) in batch.requests.into_iter().enumerate() {
                 let latency_s = req.enqueued.elapsed().as_secs_f64();
                 stats.on_complete(latency_s);
+                if let Some((h, t)) = trace {
+                    h.request(EventKind::Completed, req.id, *t);
+                }
                 let resp = Response {
                     id: req.id,
                     logits: logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec(),
@@ -635,6 +708,11 @@ fn execute_batch(
         }
         Err(e) => {
             eprintln!("engine [{}]: batch of {n} failed: {e}", backend.label());
+            if let Some((h, t)) = trace {
+                for req in &batch.requests {
+                    h.request(EventKind::Failed, req.id, *t);
+                }
+            }
             // Completes every request with NaN logits (clients unblock and
             // can distinguish failure via `Response::is_error`) and
             // releases admission — same protocol as an undispatchable

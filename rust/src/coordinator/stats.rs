@@ -21,27 +21,38 @@
 //! see; `ServerStats::snapshot` leaves them at their inert defaults and
 //! the owning plane fills them in.
 
+use crate::obs::metrics::{Histogram, Registry};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Live server statistics.
+///
+/// Counters are `Arc<AtomicU64>` cells so a plane built with an
+/// [`crate::obs::metrics::Registry`] attached shares the *same* atomics
+/// with the metrics scrape ([`ServerStats::new_in`]): incrementing here
+/// is the single write path, registration only names the cell. A
+/// detached plane ([`ServerStats::new`]) pays one pointer indirection
+/// and nothing else.
 pub struct ServerStats {
     started: Instant,
-    submitted: AtomicU64,
-    dispatched_batches: AtomicU64,
-    dispatched_requests: AtomicU64,
-    completed: AtomicU64,
-    errors: AtomicU64,
+    submitted: Arc<AtomicU64>,
+    dispatched_batches: Arc<AtomicU64>,
+    dispatched_requests: Arc<AtomicU64>,
+    completed: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
     /// Batches an idle engine stole from a neighbour's work ring.
-    steals: AtomicU64,
+    steals: Arc<AtomicU64>,
     /// Requests admission control rejected at this plane's submit path.
-    shed: AtomicU64,
+    shed: Arc<AtomicU64>,
     /// Requests rejected by this plane's **own** tag budget (DESIGN.md
     /// §11) — never counted on the shared host gate.
-    shed_budget: AtomicU64,
-    exec_time_us: AtomicU64,
+    shed_budget: Arc<AtomicU64>,
+    exec_time_us: Arc<AtomicU64>,
     latencies: Mutex<LatencyBuf>,
+    /// Scrape-visible latency histogram (µs), fed alongside the
+    /// reservoir on the same once-per-completion path.
+    latency_hist: Option<Arc<Histogram>>,
 }
 
 const RESERVOIR: usize = 100_000;
@@ -90,18 +101,43 @@ enum LatencySource {
 impl ServerStats {
     /// Fresh counters; the wall-clock epoch for throughput starts now.
     pub fn new() -> Self {
+        let cell = || Arc::new(AtomicU64::new(0));
         ServerStats {
             started: Instant::now(),
-            submitted: AtomicU64::new(0),
-            dispatched_batches: AtomicU64::new(0),
-            dispatched_requests: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            steals: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            shed_budget: AtomicU64::new(0),
-            exec_time_us: AtomicU64::new(0),
+            submitted: cell(),
+            dispatched_batches: cell(),
+            dispatched_requests: cell(),
+            completed: cell(),
+            errors: cell(),
+            steals: cell(),
+            shed: cell(),
+            shed_budget: cell(),
+            exec_time_us: cell(),
             latencies: Mutex::new(LatencyBuf::default()),
+            latency_hist: None,
+        }
+    }
+
+    /// Fresh counters registered in `registry` under `prefix` (e.g.
+    /// `"serve.a."`): the registry scrape and the hot path share the
+    /// same atomic cells, so re-plumbing adds no second write path. The
+    /// latency reservoir additionally feeds a `{prefix}latency_us`
+    /// histogram on the existing once-per-completion lock.
+    pub fn new_in(registry: &Registry, prefix: &str) -> Self {
+        let c = |name: &str| registry.counter(&format!("{prefix}{name}"));
+        ServerStats {
+            started: Instant::now(),
+            submitted: c("submitted"),
+            dispatched_batches: c("dispatched_batches"),
+            dispatched_requests: c("dispatched_requests"),
+            completed: c("completed"),
+            errors: c("errors"),
+            steals: c("steals"),
+            shed: c("shed_host"),
+            shed_budget: c("shed_budget"),
+            exec_time_us: c("exec_time_us"),
+            latencies: Mutex::new(LatencyBuf::default()),
+            latency_hist: Some(registry.histogram(&format!("{prefix}latency_us"))),
         }
     }
 
@@ -126,10 +162,11 @@ impl ServerStats {
     /// (into both the full-run reservoir and the recent window).
     pub fn on_complete(&self, latency_s: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latencies
-            .lock()
-            .expect("stats poisoned")
-            .record((latency_s * 1e6) as u64);
+        let us = (latency_s * 1e6) as u64;
+        if let Some(h) = &self.latency_hist {
+            h.record(us);
+        }
+        self.latencies.lock().expect("stats poisoned").record(us);
     }
 
     /// Count one request answered with an engine error.
@@ -431,6 +468,28 @@ mod tests {
         assert_eq!(sampled.completed, full.completed);
         // And the counters-only variant still skips the work entirely.
         assert_eq!(s.snapshot_counters().p99_latency_s, 0.0);
+    }
+
+    #[test]
+    fn registry_backed_counters_share_cells() {
+        let reg = Registry::new();
+        let s = ServerStats::new_in(&reg, "t.");
+        s.on_submit();
+        s.on_complete(0.002);
+        s.on_shed();
+        s.on_shed_budget();
+        // The scrape reads the very cells the hot path incremented.
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("t.submitted"), Some(1));
+        assert_eq!(snap.counter("t.completed"), Some(1));
+        assert_eq!(snap.counter("t.shed_host"), Some(1));
+        assert_eq!(snap.counter("t.shed_budget"), Some(1));
+        let (_, h) = snap.hists.iter().find(|(n, _)| n == "t.latency_us").unwrap();
+        assert_eq!(h.count, 1);
+        assert!((h.mean() - 2000.0).abs() < 1.0, "mean is exact: {}", h.mean());
+        assert!(h.quantile(0.99) >= 2000.0, "bucket upper bound covers the obs");
+        // And the plane's own snapshot agrees.
+        assert_eq!(s.snapshot().submitted, 1);
     }
 
     #[test]

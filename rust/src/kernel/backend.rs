@@ -65,14 +65,28 @@ impl NativeSparseBackend {
         groups: usize,
         workers: usize,
     ) -> Result<Self> {
+        Self::with_pipeline_budget_obs(model, groups, workers, super::PipeObs::default())
+    }
+
+    /// [`NativeSparseBackend::with_pipeline_budget`] with observability
+    /// attached: the executor's group workers record trace events and
+    /// the executor registers occupancy gauges (see
+    /// [`PipeObs`](super::PipeObs)).
+    pub fn with_pipeline_budget_obs(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        workers: usize,
+        obs: super::PipeObs,
+    ) -> Result<Self> {
         Self::validate(&model)?;
         let dp = model.datapath();
-        let pipeline = Some(StagedExecutor::with_budget(
+        let pipeline = Some(StagedExecutor::with_budget_obs(
             Arc::clone(&model),
             groups,
             workers,
             super::pipeline::DEFAULT_FIFO_DEPTH,
             dp,
+            obs,
         )?);
         Ok(NativeSparseBackend { model, pool: None, pipeline })
     }
@@ -85,14 +99,26 @@ impl NativeSparseBackend {
         groups: usize,
         r: usize,
     ) -> Result<Self> {
+        Self::with_pipeline_replicated_obs(model, groups, r, super::PipeObs::default())
+    }
+
+    /// [`NativeSparseBackend::with_pipeline_replicated`] with
+    /// observability attached (see [`PipeObs`](super::PipeObs)).
+    pub fn with_pipeline_replicated_obs(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        r: usize,
+        obs: super::PipeObs,
+    ) -> Result<Self> {
         Self::validate(&model)?;
         let dp = model.datapath();
-        let pipeline = Some(StagedExecutor::with_bottleneck_replication(
+        let pipeline = Some(StagedExecutor::with_bottleneck_replication_obs(
             Arc::clone(&model),
             groups,
             r,
             super::pipeline::DEFAULT_FIFO_DEPTH,
             dp,
+            obs,
         )?);
         Ok(NativeSparseBackend { model, pool: None, pipeline })
     }

@@ -84,7 +84,7 @@ use crate::util::error::{Error, Result};
 use crate::weights::{LayerParams, ModelParams};
 
 pub use backend::NativeSparseBackend;
-pub use pipeline::StagedExecutor;
+pub use pipeline::{PipeObs, StagedExecutor};
 pub use pool::BatchPool;
 
 /// Independent accumulator lanes the chunked datapaths use (eight i32

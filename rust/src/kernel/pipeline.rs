@@ -54,6 +54,8 @@
 //! `tests/kernel_pipeline.rs`).
 
 use super::{CompiledModel, Datapath, Stage};
+use crate::obs::metrics::Registry;
+use crate::obs::trace::{EventKind, TraceHandle, Tracer};
 use crate::sim::stage::{Kind, StageSpec};
 use crate::sim::Pipeline as SimPipeline;
 use crate::util::error::{Error, Result};
@@ -74,6 +76,32 @@ pub const DEFAULT_FIFO_DEPTH: usize = 4;
 /// Idle-consumer poll period — the same drain-friendly timeout idiom the
 /// batch pool and the sharded plane use.
 const POLL: Duration = Duration::from_millis(50);
+
+/// Observability wiring for a staged pipeline: when a tracer is
+/// attached, every group worker records `GroupEnter`/`GroupExit`
+/// events (frame sequence, group, replica) on its own lock-free ring;
+/// when a registry is attached, the executor registers polled gauges
+/// (in-flight frames, FIFO high-water, per-group utilisation) under
+/// `label`. The default is fully off and costs nothing per frame.
+#[derive(Clone, Default)]
+pub struct PipeObs {
+    /// Event-ring tracer; `None` records nothing.
+    pub tracer: Option<Arc<Tracer>>,
+    /// Metrics registry; `None` registers nothing.
+    pub metrics: Option<Arc<Registry>>,
+    /// Name prefix for this executor's rings and gauges.
+    pub label: String,
+}
+
+/// Per-worker observability context: identity of the worker plus its
+/// (optional) trace ring, bundled so the worker signature stays small.
+struct WorkerCtx {
+    live: Arc<AtomicUsize>,
+    meter: Arc<GroupMeter>,
+    trace: Option<TraceHandle>,
+    group: u16,
+    replica: u16,
+}
 
 /// One in-flight frame between stage groups: the activation codes
 /// leaving the previous group (input codes for group 0) plus the channel
@@ -283,9 +311,9 @@ fn group_worker(
     span: Range<usize>,
     inq: Arc<RingQueue<Frame>>,
     boundary: Option<Arc<Boundary>>,
-    live: Arc<AtomicUsize>,
-    meter: Arc<GroupMeter>,
+    ctx: WorkerCtx,
 ) {
+    let WorkerCtx { live, meter, trace, group, replica } = ctx;
     let qmax = model.spec.act_qmax();
     loop {
         let frame = match inq.pop_timeout(POLL) {
@@ -293,6 +321,13 @@ fn group_worker(
             Err(PopError::Empty) => continue,
             Err(PopError::Closed) => break,
         };
+        // Group span events share the tracer's per-request sampling
+        // predicate, keyed by frame sequence (positional — the plane's
+        // request ids live one layer up; DESIGN.md §16).
+        let traced = trace.as_ref().filter(|h| h.sampled(frame.seq));
+        if let Some(h) = traced {
+            h.record(EventKind::GroupEnter, frame.seq, 0, group, replica);
+        }
         let t0 = Instant::now();
         let mut act = frame.act;
         let mut logits: Option<Vec<f32>> = None;
@@ -312,6 +347,9 @@ fn group_worker(
             .busy_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         meter.frames.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = traced {
+            h.record(EventKind::GroupExit, frame.seq, 0, group, replica);
+        }
         match (logits, &boundary) {
             // The output MAC is the model's last stage, so only the
             // final group produces logits. Ordering needs no boundary
@@ -355,7 +393,7 @@ pub struct StagedExecutor {
     /// so accepted frames are numbered contiguously from 0 — the gap
     /// freedom every reorder boundary relies on.
     submit_seq: Mutex<u64>,
-    submitted: AtomicU64,
+    submitted: Arc<AtomicU64>,
     started: Instant,
     workers: Vec<JoinHandle<()>>,
 }
@@ -380,7 +418,9 @@ impl StagedExecutor {
         fifo_depth: usize,
         dp: Datapath,
     ) -> Result<Self> {
-        Self::build(model, groups, fifo_depth, dp, |costs| vec![1; costs.len()])
+        Self::build(model, groups, fifo_depth, dp, PipeObs::default(), |costs| {
+            vec![1; costs.len()]
+        })
     }
 
     /// Budgeted constructor: partition into (at most) `groups` groups,
@@ -395,7 +435,20 @@ impl StagedExecutor {
         fifo_depth: usize,
         dp: Datapath,
     ) -> Result<Self> {
-        Self::build(model, groups, fifo_depth, dp, |costs| {
+        Self::with_budget_obs(model, groups, workers, fifo_depth, dp, PipeObs::default())
+    }
+
+    /// [`StagedExecutor::with_budget`] with observability attached: see
+    /// [`PipeObs`] for what each sink records.
+    pub fn with_budget_obs(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        workers: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+        obs: PipeObs,
+    ) -> Result<Self> {
+        Self::build(model, groups, fifo_depth, dp, obs, |costs| {
             replication_plan(costs, workers)
         })
     }
@@ -410,7 +463,21 @@ impl StagedExecutor {
         fifo_depth: usize,
         dp: Datapath,
     ) -> Result<Self> {
-        Self::build(model, groups, fifo_depth, dp, |costs| {
+        Self::with_bottleneck_replication_obs(model, groups, r, fifo_depth, dp, PipeObs::default())
+    }
+
+    /// [`StagedExecutor::with_bottleneck_replication`] with
+    /// observability attached: see [`PipeObs`] for what each sink
+    /// records.
+    pub fn with_bottleneck_replication_obs(
+        model: Arc<CompiledModel>,
+        groups: usize,
+        r: usize,
+        fifo_depth: usize,
+        dp: Datapath,
+        obs: PipeObs,
+    ) -> Result<Self> {
+        Self::build(model, groups, fifo_depth, dp, obs, |costs| {
             let mut reps = vec![1usize; costs.len()];
             if let Some((g, _)) = costs.iter().enumerate().max_by_key(|(_, c)| **c) {
                 reps[g] = r.max(1);
@@ -426,6 +493,7 @@ impl StagedExecutor {
         groups: usize,
         fifo_depth: usize,
         dp: Datapath,
+        obs: PipeObs,
         plan: impl FnOnce(&[u64]) -> Vec<usize>,
     ) -> Result<Self> {
         if model.stages().is_empty() {
@@ -487,6 +555,8 @@ impl StagedExecutor {
             .map(|&r| Arc::new(AtomicUsize::new(r)))
             .collect();
 
+        let submitted = Arc::new(AtomicU64::new(0));
+        let started = Instant::now();
         let mut workers = Vec::with_capacity(replicas.iter().sum());
         for (g, span) in spans.iter().enumerate() {
             for r in 0..replicas[g] {
@@ -494,11 +564,50 @@ impl StagedExecutor {
                 let span = span.clone();
                 let inq = Arc::clone(&fifos[g][r]);
                 let boundary = boundaries.get(g).map(Arc::clone);
-                let live = Arc::clone(&live[g]);
-                let meter = Arc::clone(&meters[g][r]);
+                let ctx = WorkerCtx {
+                    live: Arc::clone(&live[g]),
+                    meter: Arc::clone(&meters[g][r]),
+                    trace: obs
+                        .tracer
+                        .as_ref()
+                        .map(|t| t.register(&format!("{}.g{g}r{r}", obs.label))),
+                    group: g as u16,
+                    replica: r as u16,
+                };
                 workers.push(std::thread::spawn(move || {
-                    group_worker(m, dp, span, inq, boundary, live, meter);
+                    group_worker(m, dp, span, inq, boundary, ctx);
                 }));
+            }
+        }
+        if let Some(reg) = &obs.metrics {
+            let label = obs.label.clone();
+            // In-flight frames: accepted minus drained out of the final
+            // group (both single-writer counters, read racily — a gauge,
+            // not an invariant).
+            let sub = Arc::clone(&submitted);
+            let last: Vec<Arc<GroupMeter>> = meters.last().cloned().unwrap_or_default();
+            reg.gauge_fn(&format!("{label}.in_flight"), move || {
+                let done: u64 = last
+                    .iter()
+                    .map(|m| m.frames.load(Ordering::Relaxed))
+                    .sum();
+                sub.load(Ordering::Relaxed).saturating_sub(done) as f64
+            });
+            let hw: Vec<Arc<AtomicUsize>> = high_water.iter().flatten().cloned().collect();
+            reg.gauge_fn(&format!("{label}.fifo_high_water"), move || {
+                hw.iter()
+                    .map(|h| h.load(Ordering::Relaxed))
+                    .max()
+                    .unwrap_or(0) as f64
+            });
+            for (g, gm) in meters.iter().enumerate() {
+                let gm = gm.clone();
+                let reps = gm.len().max(1) as f64;
+                reg.gauge_fn(&format!("{label}.g{g}.util"), move || {
+                    let busy: u64 = gm.iter().map(|m| m.busy_ns.load(Ordering::Relaxed)).sum();
+                    let wall = started.elapsed().as_secs_f64().max(1e-12);
+                    busy as f64 / 1e9 / (wall * reps)
+                });
             }
         }
         Ok(StagedExecutor {
@@ -513,8 +622,8 @@ impl StagedExecutor {
             high_water,
             meters,
             submit_seq: Mutex::new(0),
-            submitted: AtomicU64::new(0),
-            started: Instant::now(),
+            submitted,
+            started,
             workers,
         })
     }

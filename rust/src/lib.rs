@@ -32,6 +32,10 @@
 //!   admission budget, dynamic register/retire membership), and the
 //!   [`coordinator::policy`] control plane (per-tag SLO admission
 //!   weights, queue-depth autotuning from queue-full/steal telemetry);
+//! * [`obs`] — first-party observability plane: lock-free per-request
+//!   event-ring tracing (Chrome trace-event export, arrival capture →
+//!   [`traffic`] replay) and an atomics-only metrics registry the
+//!   serving stats plumb onto;
 //! * [`weights`] — LSTW tensor store shared with the python exporter;
 //! * [`util`] — offline substrates (JSON, RNG, property testing, CLI,
 //!   tables, micro-bench harness) — crates.io is not reachable in this
@@ -51,6 +55,7 @@ pub mod experiments;
 pub mod folding;
 pub mod graph;
 pub mod kernel;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -10,6 +10,9 @@
 //! logicsparse serve    serve the AOT artifacts through the coordinator
 //! logicsparse pareto   sweep budgets -> Pareto frontier ablation
 //! ```
+//!
+//! Observability (`serve --trace`, `serve --metrics-interval`,
+//! `trace-validate`) is documented in the README's operator guide.
 
 use logicsparse::config::{PolicyConfig, PruneProfile};
 use logicsparse::coordinator::{
@@ -20,6 +23,7 @@ use logicsparse::dse::{self, DseOptions, Strategy};
 use logicsparse::experiments::{fig2, headline, table1, Accuracies};
 use logicsparse::graph::builder::lenet5;
 use logicsparse::kernel::{self, CompiledModel, Flavour, KernelSpec};
+use logicsparse::obs::{metrics::Registry, trace::Tracer, ObsConfig};
 use logicsparse::util::cli::{self, Opt};
 use logicsparse::util::error::Result;
 use logicsparse::util::lstw::Store;
@@ -41,7 +45,7 @@ fn main() {
 }
 
 const GLOBAL_USAGE: &str =
-    "logicsparse <dse|table1|fig2|sim|serve|pareto|bench-compare> [options]
+    "logicsparse <dse|table1|fig2|sim|serve|pareto|bench-compare|trace-validate> [options]
 Run `logicsparse <cmd> --help` for per-command options.";
 
 fn run(args: &[String]) -> Result<()> {
@@ -58,6 +62,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "pareto" => cmd_pareto(rest),
         "bench-compare" => cmd_bench_compare(rest),
+        "trace-validate" => cmd_trace_validate(rest),
         "--help" | "-h" | "help" => {
             println!("{GLOBAL_USAGE}");
             Ok(())
@@ -241,6 +246,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Opt { name: "slo", takes_value: true, default: None, help: "repeatable per-tag SLO 'tag=p99_ms[:weight]': partition the shared admission budget by weight (fleet mode)" },
         Opt { name: "autotune", takes_value: false, default: None, help: "enable queue-depth autotuning from queue-full/steal telemetry (fleet mode)" },
         Opt { name: "churn", takes_value: true, default: None, help: "live-membership demo: retire this tag halfway through the run and re-register it at 3/4 (fleet mode)" },
+        Opt { name: "trace", takes_value: true, default: None, help: "record per-request trace events and write Chrome trace JSON to PATH[:sample_rate] at shutdown (rate in (0,1], default 1.0; sheds always recorded)" },
+        Opt { name: "metrics-interval", takes_value: true, default: None, help: "attach the metrics registry and print a scrape every MS milliseconds (plus a final scrape at shutdown)" },
     ]);
     let a = cli::parse(argv, &opts)?;
     if a.flag("help") {
@@ -337,6 +344,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let n_avail = labels.len();
 
+    let setup = parse_obs_opts(&a)?;
     let server = Server::start(ServerOptions {
         policy: BatchPolicy {
             max_batch: a.get_usize("max-batch")?.unwrap_or(32),
@@ -346,39 +354,55 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         backend,
         admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
         queue_depth: a.get_usize("queue-depth")?.unwrap_or(16),
+        obs: setup.obs.clone(),
     })?;
     println!("serving tag '{tag}' from {artifacts} ({n_avail} test images)");
 
     let mut correct = 0usize;
-    let mut pending = Vec::new();
     let t0 = std::time::Instant::now();
-    for i in 0..n_req {
-        let j = i % n_avail;
-        // Closed-loop client: when admission sheds, back off and retry.
-        let rx = loop {
-            match server.submit(imgs[j * px..(j + 1) * px].to_vec()) {
-                Ok(rx) => break rx,
-                Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
-                Err(e) => return Err(e),
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let served: Result<()> = std::thread::scope(|s| {
+        setup.spawn_scraper(s, &stop);
+        // Run the client loop in a closure so every exit path — errors
+        // included — still stops the scraper before the scope joins it.
+        let run = (|| -> Result<()> {
+            let mut pending = Vec::new();
+            for i in 0..n_req {
+                let j = i % n_avail;
+                // Closed-loop client: when admission sheds, back off and
+                // retry.
+                let rx = loop {
+                    match server.submit(imgs[j * px..(j + 1) * px].to_vec()) {
+                        Ok(rx) => break rx,
+                        Err(logicsparse::Error::Overloaded) => std::thread::yield_now(),
+                        Err(e) => return Err(e),
+                    }
+                };
+                pending.push((rx, labels[j]));
+                // Keep a bounded in-flight window, like a real client
+                // pool.
+                if pending.len() >= 256 {
+                    for (rx, label) in pending.drain(..) {
+                        let resp =
+                            rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
+                        if resp.class() == label as usize {
+                            correct += 1;
+                        }
+                    }
+                }
             }
-        };
-        pending.push((rx, labels[j]));
-        // Keep a bounded in-flight window, like a real client pool.
-        if pending.len() >= 256 {
             for (rx, label) in pending.drain(..) {
                 let resp = rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
                 if resp.class() == label as usize {
                     correct += 1;
                 }
             }
-        }
-    }
-    for (rx, label) in pending.drain(..) {
-        let resp = rx.recv().map_err(|_| logicsparse::Error::QueueClosed)?;
-        if resp.class() == label as usize {
-            correct += 1;
-        }
-    }
+            Ok(())
+        })();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        run
+    });
+    served?;
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.shutdown();
     println!("{}", snap.render());
@@ -389,7 +413,100 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         wall,
         n_req as f64 / wall
     );
-    Ok(())
+    setup.finish()
+}
+
+/// Observability wiring parsed from `serve`'s `--trace` /
+/// `--metrics-interval` flags: the [`ObsConfig`] handed to the serving
+/// plane plus the CLI-side halves (trace output path, scrape period).
+struct ObsSetup {
+    obs: ObsConfig,
+    trace_path: Option<String>,
+    metrics_interval: Option<Duration>,
+}
+
+/// Parse `--trace PATH[:sample_rate]` and `--metrics-interval MS` into
+/// an [`ObsSetup`]. A `:suffix` that parses as f64 is the sample rate
+/// (clamped to (0, 1]); otherwise the whole value is the path.
+fn parse_obs_opts(a: &cli::Args) -> Result<ObsSetup> {
+    let mut setup = ObsSetup {
+        obs: ObsConfig::default(),
+        trace_path: None,
+        metrics_interval: None,
+    };
+    if let Some(v) = a.get("trace") {
+        let (path, rate) = match v.rsplit_once(':') {
+            Some((p, r)) if !p.is_empty() => match r.parse::<f64>() {
+                Ok(rate) => (p.to_string(), rate),
+                Err(_) => (v.to_string(), 1.0),
+            },
+            _ => (v.to_string(), 1.0),
+        };
+        if !(rate > 0.0 && rate <= 1.0) {
+            return Err(logicsparse::Error::config(format!(
+                "--trace sample rate must be in (0, 1], got {rate}"
+            )));
+        }
+        setup.obs.tracer = Some(Tracer::new(rate));
+        setup.trace_path = Some(path);
+    }
+    if let Some(ms) = a.get_usize("metrics-interval")? {
+        if ms == 0 {
+            return Err(logicsparse::Error::config(
+                "--metrics-interval must be >= 1 ms",
+            ));
+        }
+        setup.obs.metrics = Some(Registry::new());
+        setup.metrics_interval = Some(Duration::from_millis(ms as u64));
+    }
+    Ok(setup)
+}
+
+impl ObsSetup {
+    /// Spawn the periodic scrape printer inside `scope` (no-op without
+    /// `--metrics-interval`); it stops when `stop` is set.
+    fn spawn_scraper<'s, 'e: 's>(
+        &'e self,
+        scope: &'s std::thread::Scope<'s, 'e>,
+        stop: &'e std::sync::atomic::AtomicBool,
+    ) {
+        use std::sync::atomic::Ordering;
+        let (Some(reg), Some(iv)) = (&self.obs.metrics, self.metrics_interval) else {
+            return;
+        };
+        scope.spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(iv);
+                println!("[metrics]\n{}", reg.snapshot().render());
+            }
+        });
+    }
+
+    /// Shutdown-time reporting: the final metrics scrape, the Chrome
+    /// trace file, and the trace-derived per-stage latency breakdown.
+    fn finish(&self) -> Result<()> {
+        if let Some(reg) = &self.obs.metrics {
+            println!("[metrics] final scrape\n{}", reg.snapshot().render());
+        }
+        if let (Some(tracer), Some(path)) = (&self.obs.tracer, &self.trace_path) {
+            tracer.write_chrome(path)?;
+            println!(
+                "trace: {} events recorded, {} dropped (sample rate {:.3}) -> {path}",
+                tracer.recorded_events(),
+                tracer.dropped_events(),
+                tracer.sample_rate(),
+            );
+            let b = tracer.stage_breakdown();
+            if b.spans > 0 {
+                println!(
+                    "trace: {} completed spans | mean queue {:.0}us | exec {:.0}us | \
+                     total {:.0}us",
+                    b.spans, b.queue_us, b.exec_us, b.total_us
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Parse `--pipeline auto|N[xR]` into `Some((stage_groups, replicas))`,
@@ -591,10 +708,12 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     };
 
     let autotune_on = pcfg.autotune.is_some();
+    let setup = parse_obs_opts(a)?;
     let fleet = Fleet::start(FleetOptions {
         models,
         admission_capacity: a.get_usize("admission")?.unwrap_or(1024),
         autotune: pcfg.autotune,
+        obs: setup.obs.clone(),
     })?;
     println!(
         "fleet: {} models ({}) | shared admission {} | {} engines/plane{}{}",
@@ -676,6 +795,7 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
     let stop = std::sync::atomic::AtomicBool::new(false);
     let served = std::thread::scope(|s| -> Result<()> {
         use std::sync::atomic::Ordering;
+        setup.spawn_scraper(s, &stop);
         if autotune_on {
             let (fleet, stop) = (&fleet, &stop);
             s.spawn(move || {
@@ -769,7 +889,7 @@ fn cmd_serve_fleet(a: &cli::Args) -> Result<()> {
         wall,
         n_req as f64 / wall
     );
-    Ok(())
+    setup.finish()
 }
 
 /// Diff the `BENCH_*.json` files of the current run against the
@@ -845,11 +965,22 @@ fn cmd_bench_compare(argv: &[String]) -> Result<()> {
         Some(n) => n,
         None => baseline.get("noise").and_then(Value::as_f64).unwrap_or(0.3),
     };
-    if let Some(p) = baseline.get("provenance").and_then(Value::as_str) {
+    let provenance = baseline.get("provenance").and_then(Value::as_str);
+    if let Some(p) = provenance {
         println!("baseline: {p}");
     }
     let empty: &[(String, Value)] = &[];
     let benches = baseline.get("benches").and_then(Value::as_obj).unwrap_or(empty);
+    if provenance.is_some_and(bench::is_unmeasured_baseline) {
+        // One-line verdict for the seed placeholder: nothing to diff
+        // against, nothing judged, and strict mode must not gate on it.
+        println!(
+            "bench-compare: baseline is the UNMEASURED placeholder — current \
+             numbers reported as-is, 0 regressions judged; run `make bench` then \
+             `make bench-baseline` on a machine with a Rust toolchain"
+        );
+        return Ok(());
+    }
     if benches.is_empty() {
         println!(
             "baseline holds no measured benches yet; run `make bench` then \
@@ -892,6 +1023,93 @@ fn cmd_bench_compare(argv: &[String]) -> Result<()> {
              {dropped_series} tracked series dropped"
         )));
     }
+    Ok(())
+}
+
+/// Validate a Chrome trace-event file written by `serve --trace`:
+/// `traceEvents` must be a well-formed array (every event an object with
+/// `name`/`ph`, and `ts`/`pid`/`tid` on timed events), timestamps must
+/// be monotone per thread lane in array order (the writer sorts by
+/// `(tid, ts)`), and `otherData.dropped_events` must be reported.
+/// Violations exit nonzero — the CI trace-smoke step gates on this.
+fn cmd_trace_validate(argv: &[String]) -> Result<()> {
+    use logicsparse::util::json::{self, Value};
+
+    let opts = vec![Opt {
+        name: "help",
+        takes_value: false,
+        default: None,
+        help: "show usage",
+    }];
+    let a = cli::parse(argv, &opts)?;
+    if a.flag("help") || a.positional.is_empty() {
+        println!("usage: logicsparse trace-validate <TRACE.json>");
+        return if a.flag("help") {
+            Ok(())
+        } else {
+            Err(logicsparse::Error::config("trace-validate needs a trace file path"))
+        };
+    }
+    let path = &a.positional[0];
+    let doc = json::parse_file(path)?;
+    let bad = |msg: String| logicsparse::Error::config(format!("{path}: {msg}"));
+
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| bad("no traceEvents array".into()))?;
+    // Per-lane monotonicity: the writer sorts by (tid, ts), so within
+    // one tid the timestamps must never step backwards in array order.
+    let mut last: Vec<(u64, f64)> = Vec::new();
+    let mut timed = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| bad(format!("event {i} has no name")))?;
+        let ph = e
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| bad(format!("event {i} ('{name}') has no ph")))?;
+        if ph == "M" {
+            continue; // metadata events carry no timestamp
+        }
+        let ts = e
+            .get("ts")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| bad(format!("event {i} ('{name}', ph {ph}) has no ts")))?;
+        let tid = e
+            .get("tid")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| bad(format!("event {i} ('{name}') has no tid")))?;
+        e.get("pid")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| bad(format!("event {i} ('{name}') has no pid")))?;
+        timed += 1;
+        match last.iter_mut().find(|(t, _)| *t == tid) {
+            Some((_, prev)) => {
+                if ts < *prev {
+                    return Err(bad(format!(
+                        "event {i} ('{name}') on tid {tid}: ts {ts} < previous {prev} \
+                         (per-thread timestamps must be monotone)"
+                    )));
+                }
+                *prev = ts;
+            }
+            None => last.push((tid, ts)),
+        }
+    }
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(Value::as_f64)
+        .ok_or_else(|| bad("otherData.dropped_events missing".into()))?;
+    println!(
+        "trace-validate: {path} OK — {} events ({timed} timed) across {} thread \
+         lanes, {dropped} dropped",
+        events.len(),
+        last.len(),
+    );
     Ok(())
 }
 

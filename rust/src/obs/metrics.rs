@@ -1,0 +1,280 @@
+//! Atomics-only metrics registry: counters, polled gauges and
+//! log-bucketed histograms behind one scrape.
+//!
+//! The design keeps the hot path free of observer cost:
+//!
+//! - **Counters** are plain `Arc<AtomicU64>`s handed out by
+//!   [`Registry::counter`]. The serving-plane stats structs hold the
+//!   same `Arc` they always incremented — registering a counter adds a
+//!   name to the scrape, not a write to the hot path.
+//! - **Gauges** are closures evaluated at scrape time
+//!   ([`Registry::gauge_fn`]): in-flight, ring depth, pipeline
+//!   occupancy etc. are *read* when somebody asks, never *pushed*.
+//! - **Histograms** are fixed arrays of power-of-two latency buckets
+//!   ([`Histogram`]): one `fetch_add` per observation, no locks, no
+//!   allocation, quantiles reconstructed from bucket upper bounds.
+//! - **Labels** are static strings (kernel flavour per layer, datapath
+//!   tier) attached once at wiring time.
+//!
+//! [`Registry::snapshot`] freezes everything into a
+//! [`MetricsSnapshot`] that renders as sorted `name value` text or as
+//! a JSON object — the single scrape surface the CLI's
+//! `--metrics-interval` thread prints.
+
+use crate::util::json::{self, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of power-of-two histogram buckets: bucket `i` holds
+/// observations with `value < 2^i` µs (cap ~ 2^39 µs ≈ 9 days).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Lock-free log₂-bucketed histogram of `u64` observations (µs by
+/// convention). One `fetch_add` per record.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        let mut buckets = Vec::with_capacity(HIST_BUCKETS);
+        for _ in 0..HIST_BUCKETS {
+            buckets.push(AtomicU64::new(0));
+        }
+        Histogram { buckets, count: AtomicU64::new(0), sum: AtomicU64::new(0) }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, value: u64) {
+        let idx = (64 - value.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    /// Freeze the current bucket counts.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable view of a [`Histogram`] at one instant.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts; bucket `i` holds values `< 2^i`.
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// q-th observation. Resolution is one power of two — good enough
+    /// to spot order-of-magnitude latency shifts from a scrape.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return (1u64 << i.min(63)) as f64;
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64
+    }
+}
+
+/// Polled gauge: evaluated at scrape time, zero hot-path cost.
+type GaugeFn = Arc<dyn Fn() -> f64 + Send + Sync>;
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Vec<(String, Arc<AtomicU64>)>,
+    gauges: Vec<(String, GaugeFn)>,
+    hists: Vec<(String, Arc<Histogram>)>,
+    labels: Vec<(String, String)>,
+}
+
+/// Unified metrics registry. Registration (get-or-create by name)
+/// takes a lock — wiring time only; all recording afterwards is
+/// straight atomics on the handed-out `Arc`s.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    /// Fresh empty registry.
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get or create the counter `name`. The returned `Arc` is the
+    /// live cell: incrementing it is the single write path, the scrape
+    /// reads the same atomic.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        inner.counters.push((name.to_string(), Arc::clone(&c)));
+        c
+    }
+
+    /// Register (or replace) the polled gauge `name`. The closure runs
+    /// on the scraping thread at snapshot time.
+    pub fn gauge_fn(&self, name: &str, f: impl Fn() -> f64 + Send + Sync + 'static) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, g)) = inner.gauges.iter_mut().find(|(n, _)| n == name) {
+            *g = Arc::new(f);
+            return;
+        }
+        inner.gauges.push((name.to_string(), Arc::new(f)));
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, h)) = inner.hists.iter().find(|(n, _)| n == name) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(Histogram::new());
+        inner.hists.push((name.to_string(), Arc::clone(&h)));
+        h
+    }
+
+    /// Attach (or overwrite) a static text label, e.g. the kernel
+    /// flavour chosen for a layer or the active datapath tier.
+    pub fn label(&self, name: &str, value: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, v)) = inner.labels.iter_mut().find(|(n, _)| n == name) {
+            *v = value.to_string();
+            return;
+        }
+        inner.labels.push((name.to_string(), value.to_string()));
+    }
+
+    /// One scrape: counters and labels copied, gauges evaluated,
+    /// histograms frozen. Sorted by name for stable output.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let mut counters: Vec<(String, u64)> = inner
+            .counters
+            .iter()
+            .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        let mut gauges: Vec<(String, f64)> =
+            inner.gauges.iter().map(|(n, g)| (n.clone(), g())).collect();
+        let mut hists: Vec<(String, HistogramSnapshot)> =
+            inner.hists.iter().map(|(n, h)| (n.clone(), h.snapshot())).collect();
+        let mut labels: Vec<(String, String)> = inner.labels.clone();
+        drop(inner);
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        labels.sort_by(|a, b| a.0.cmp(&b.0));
+        MetricsSnapshot { counters, gauges, hists, labels }
+    }
+}
+
+/// Frozen scrape of a [`Registry`].
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// Gauge values (closures evaluated at snapshot), name-sorted.
+    pub gauges: Vec<(String, f64)>,
+    /// Histogram snapshots, name-sorted.
+    pub hists: Vec<(String, HistogramSnapshot)>,
+    /// Static labels, name-sorted.
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricsSnapshot {
+    /// Plain-text scrape: one `name value` line per series, suitable
+    /// for the `--metrics-interval` console feed.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (n, v) in &self.counters {
+            out.push_str(&format!("{n} {v}\n"));
+        }
+        for (n, v) in &self.gauges {
+            out.push_str(&format!("{n} {v:.3}\n"));
+        }
+        for (n, h) in &self.hists {
+            out.push_str(&format!(
+                "{n}_count {} | mean {:.0} | p50 {:.0} | p99 {:.0}\n",
+                h.count,
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99)
+            ));
+        }
+        for (n, v) in &self.labels {
+            out.push_str(&format!("{n} {v}\n"));
+        }
+        out
+    }
+
+    /// JSON scrape mirroring [`MetricsSnapshot::render`].
+    pub fn to_json(&self) -> Value {
+        let counters: Vec<(String, Value)> =
+            self.counters.iter().map(|(n, v)| (n.clone(), Value::Num(*v as f64))).collect();
+        let gauges: Vec<(String, Value)> =
+            self.gauges.iter().map(|(n, v)| (n.clone(), Value::Num(*v))).collect();
+        let hists: Vec<(String, Value)> = self
+            .hists
+            .iter()
+            .map(|(n, h)| {
+                (
+                    n.clone(),
+                    json::obj(vec![
+                        ("count", Value::Num(h.count as f64)),
+                        ("mean", Value::Num(h.mean())),
+                        ("p50", Value::Num(h.quantile(0.5))),
+                        ("p99", Value::Num(h.quantile(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        let labels: Vec<(String, Value)> =
+            self.labels.iter().map(|(n, v)| (n.clone(), json::s(v.as_str()))).collect();
+        json::obj(vec![
+            ("counters", Value::Obj(counters)),
+            ("gauges", Value::Obj(gauges)),
+            ("hists", Value::Obj(hists)),
+            ("labels", Value::Obj(labels)),
+        ])
+    }
+
+    /// Look up a counter by exact name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Look up a gauge by exact name.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}

@@ -1,0 +1,50 @@
+//! First-party observability plane: tracing + metrics, zero dependencies.
+//!
+//! Two layers, both built so the serving hot path never blocks on an
+//! observer:
+//!
+//! - [`trace`] — per-request lifecycle events (admitted / shed /
+//!   enqueued / dispatched / stolen / pipeline group enter+exit /
+//!   completed) recorded into bounded lock-free event rings
+//!   (drop-oldest, with an explicit dropped-event count), assembled
+//!   post-hoc into spans and exported as Chrome trace-event JSON plus a
+//!   compact arrival-schedule capture that round-trips through
+//!   [`crate::traffic::Traffic::replay`].
+//! - [`metrics`] — an atomics-only registry of counters, polled gauges
+//!   and log-bucketed histograms that the serving-plane stats structs
+//!   plumb onto, so one scrape covers sheds, ring depth/backoffs/steals,
+//!   pipeline occupancy and latency in a single snapshot.
+//!
+//! [`ObsConfig`] bundles both behind `Option`s: the default config is
+//! fully off and costs nothing on any path.
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::Arc;
+
+/// Observability wiring for a serving plane: both members optional,
+/// default fully off. Cloning shares the underlying sinks.
+#[derive(Clone, Default)]
+pub struct ObsConfig {
+    /// Event-ring tracer; `None` disables all event recording.
+    pub tracer: Option<Arc<trace::Tracer>>,
+    /// Metrics registry; `None` leaves stats on private atomics.
+    pub metrics: Option<Arc<metrics::Registry>>,
+}
+
+impl ObsConfig {
+    /// True when neither a tracer nor a registry is attached.
+    pub fn is_off(&self) -> bool {
+        self.tracer.is_none() && self.metrics.is_none()
+    }
+}
+
+impl std::fmt::Debug for ObsConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsConfig")
+            .field("tracer", &self.tracer.is_some())
+            .field("metrics", &self.metrics.is_some())
+            .finish()
+    }
+}

@@ -1,0 +1,602 @@
+//! Per-request lifecycle tracing on bounded lock-free event rings.
+//!
+//! Recording is three relaxed atomic stores plus one `fetch_add` — no
+//! locks, no allocation, no branches on ring state. Each ring is a
+//! fixed-capacity array of 3-word slots claimed by a monotone head
+//! counter; when the ring wraps, the oldest events are overwritten and
+//! counted in [`EventRing::dropped_events`]. The hot path therefore
+//! never blocks and never grows memory, at the price of best-effort
+//! retention under overload (drops are explicit, never silent).
+//!
+//! Assembly is strictly post-hoc: [`Tracer::events`] decodes every
+//! ring after the serving threads have quiesced (join = happens-before,
+//! so no torn reads on live slots), [`Tracer::chrome_trace`] turns the
+//! decoded stream into Chrome trace-event JSON, and
+//! [`Tracer::arrival_schedule`] projects the admitted events into the
+//! per-tag offset vectors that [`crate::traffic::Traffic::replay`]
+//! consumes — live capture → deterministic replay.
+//!
+//! Sampling is a pure function of the request id (a multiplicative
+//! hash modulo 1000 against the configured permille), so every ring
+//! makes the same keep/drop decision for a request without shared
+//! state. Shed events are always recorded regardless of the sample
+//! rate: overload is precisely when observability matters most.
+
+use crate::util::error::Result;
+use crate::util::json::{self, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Validation marker stored in the top byte of a slot's packed word.
+const MARKER: u64 = 0xA5;
+
+/// What happened to a request (or pipeline frame) at one instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Admission gate accepted the request.
+    Admitted = 1,
+    /// Admission gate shed the request at the shared host bound.
+    ShedHost = 2,
+    /// Admission gate shed the request at its per-tag budget.
+    ShedBudget = 3,
+    /// Batcher pulled the request off the submit channel.
+    Enqueued = 4,
+    /// Batcher flushed the request to an engine work ring.
+    Dispatched = 5,
+    /// An idle engine stole the batch holding this request.
+    Stolen = 6,
+    /// A pipeline-group worker started a frame (group/replica set).
+    GroupEnter = 7,
+    /// A pipeline-group worker finished a frame (group/replica set).
+    GroupExit = 8,
+    /// Response delivered back to the client.
+    Completed = 9,
+    /// Engine failed the batch holding this request.
+    Failed = 10,
+}
+
+impl EventKind {
+    fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Admitted,
+            2 => EventKind::ShedHost,
+            3 => EventKind::ShedBudget,
+            4 => EventKind::Enqueued,
+            5 => EventKind::Dispatched,
+            6 => EventKind::Stolen,
+            7 => EventKind::GroupEnter,
+            8 => EventKind::GroupExit,
+            9 => EventKind::Completed,
+            10 => EventKind::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Short lowercase name used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::ShedHost => "shed_host",
+            EventKind::ShedBudget => "shed_budget",
+            EventKind::Enqueued => "enqueued",
+            EventKind::Dispatched => "dispatched",
+            EventKind::Stolen => "stolen",
+            EventKind::GroupEnter => "group_enter",
+            EventKind::GroupExit => "group_exit",
+            EventKind::Completed => "completed",
+            EventKind::Failed => "failed",
+        }
+    }
+}
+
+/// Bounded lock-free MPSC event ring: 3 `u64` words per slot
+/// (request id, timestamp in µs from the tracer origin, packed
+/// marker/kind/tag/group/replica), drop-oldest on wrap.
+pub struct EventRing {
+    words: Vec<AtomicU64>,
+    head: AtomicU64,
+    capacity: u64,
+}
+
+impl EventRing {
+    fn new(capacity: usize) -> EventRing {
+        let capacity = capacity.max(16);
+        let mut words = Vec::with_capacity(capacity * 3);
+        for _ in 0..capacity * 3 {
+            words.push(AtomicU64::new(0));
+        }
+        EventRing { words, head: AtomicU64::new(0), capacity: capacity as u64 }
+    }
+
+    /// Record one event. Never blocks: a full ring overwrites its
+    /// oldest slot and the loss shows up in [`EventRing::dropped_events`].
+    pub fn record(&self, kind: EventKind, req_id: u64, ts_us: u64, tag: u16, group: u16, replica: u16) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed) % self.capacity;
+        let base = (idx * 3) as usize;
+        let packed = (MARKER << 56)
+            | ((kind as u64) << 48)
+            | ((tag as u64) << 32)
+            | ((group as u64) << 16)
+            | replica as u64;
+        self.words[base].store(req_id, Ordering::Relaxed);
+        self.words[base + 1].store(ts_us, Ordering::Relaxed);
+        self.words[base + 2].store(packed, Ordering::Relaxed);
+    }
+
+    /// Events recorded over the ring's lifetime (including dropped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to drop-oldest overwrite.
+    pub fn dropped_events(&self) -> u64 {
+        self.recorded().saturating_sub(self.capacity)
+    }
+
+    /// Decode the retained slots. Call only after the writing threads
+    /// have quiesced: during a wrap two writers may interleave on one
+    /// slot, so the decoder validates the marker byte and kind and
+    /// skips anything implausible rather than trusting every word.
+    fn decode(&self, out: &mut Vec<RawEvent>, ring: usize) {
+        let head = self.recorded();
+        let live = head.min(self.capacity);
+        for i in 0..live {
+            let base = (i * 3) as usize;
+            let packed = self.words[base + 2].load(Ordering::Relaxed);
+            if packed >> 56 != MARKER {
+                continue;
+            }
+            let Some(kind) = EventKind::from_u8((packed >> 48) as u8) else {
+                continue;
+            };
+            out.push(RawEvent {
+                ring,
+                req_id: self.words[base].load(Ordering::Relaxed),
+                ts_us: self.words[base + 1].load(Ordering::Relaxed),
+                kind,
+                tag: (packed >> 32) as u16,
+                group: (packed >> 16) as u16,
+                replica: packed as u16,
+            });
+        }
+    }
+}
+
+/// One decoded event, with the index of the ring that recorded it.
+#[derive(Clone, Copy, Debug)]
+pub struct RawEvent {
+    /// Index of the recording ring in registration order.
+    pub ring: usize,
+    /// Request id (or pipeline frame sequence for group events).
+    pub req_id: u64,
+    /// Microseconds since the tracer origin.
+    pub ts_us: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Interned model-tag id ([`Tracer::tag_name`] resolves it).
+    pub tag: u16,
+    /// Pipeline group index (group events only).
+    pub group: u16,
+    /// Pipeline replica index (group events only).
+    pub replica: u16,
+}
+
+/// Cloneable recording endpoint bound to one ring. Cheap to clone and
+/// to pass into worker threads; all clones share the ring.
+#[derive(Clone)]
+pub struct TraceHandle {
+    ring: Arc<EventRing>,
+    origin: Instant,
+    sample_permille: u32,
+}
+
+impl TraceHandle {
+    /// Deterministic sampling predicate: same answer for the same id on
+    /// every ring, no shared state. 1000 permille keeps everything.
+    pub fn sampled(&self, req_id: u64) -> bool {
+        if self.sample_permille >= 1000 {
+            return true;
+        }
+        // Multiplicative hash so consecutive ids spread uniformly.
+        let h = req_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        (h % 1000) as u32 < self.sample_permille
+    }
+
+    /// Record a full event now (timestamps itself).
+    pub fn record(&self, kind: EventKind, req_id: u64, tag: u16, group: u16, replica: u16) {
+        let ts = self.origin.elapsed().as_micros() as u64;
+        self.ring.record(kind, req_id, ts, tag, group, replica);
+    }
+
+    /// Record a request-lifecycle event if the request is sampled.
+    /// Sheds are always recorded: overload is when traces matter.
+    pub fn request(&self, kind: EventKind, req_id: u64, tag: u16) {
+        let always = matches!(kind, EventKind::ShedHost | EventKind::ShedBudget);
+        if always || self.sampled(req_id) {
+            self.record(kind, req_id, tag, 0, 0);
+        }
+    }
+}
+
+/// Trace collector: owns the rings, the tag interner and the export
+/// logic. Create one per `serve` run and share it via `Arc`.
+pub struct Tracer {
+    origin: Instant,
+    sample_permille: u32,
+    ring_capacity: usize,
+    rings: Mutex<Vec<(String, Arc<EventRing>)>>,
+    tags: Mutex<Vec<String>>,
+}
+
+/// Default per-ring capacity in events (3 words each).
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+impl Tracer {
+    /// Tracer keeping `sample_rate` (0.0..=1.0) of requests, with the
+    /// default per-ring capacity.
+    pub fn new(sample_rate: f64) -> Arc<Tracer> {
+        Tracer::with_capacity(sample_rate, DEFAULT_RING_CAPACITY)
+    }
+
+    /// Tracer with an explicit per-ring event capacity (min 16).
+    pub fn with_capacity(sample_rate: f64, ring_capacity: usize) -> Arc<Tracer> {
+        let permille = (sample_rate.clamp(0.0, 1.0) * 1000.0).round() as u32;
+        Arc::new(Tracer {
+            origin: Instant::now(),
+            sample_permille: permille,
+            ring_capacity: ring_capacity.max(16),
+            rings: Mutex::new(Vec::new()),
+            tags: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The configured sample rate, as a fraction.
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_permille as f64 / 1000.0
+    }
+
+    /// Register a new ring (one per recording thread or shared MPSC
+    /// point). Registration takes a lock — do it at wiring time, not on
+    /// the hot path; recording through the returned handle is lock-free.
+    pub fn register(&self, label: &str) -> TraceHandle {
+        let ring = Arc::new(EventRing::new(self.ring_capacity));
+        self.rings.lock().unwrap().push((label.to_string(), Arc::clone(&ring)));
+        TraceHandle { ring, origin: self.origin, sample_permille: self.sample_permille }
+    }
+
+    /// Intern a model tag, returning its compact id for event words.
+    pub fn intern(&self, tag: &str) -> u16 {
+        let mut tags = self.tags.lock().unwrap();
+        if let Some(i) = tags.iter().position(|t| t == tag) {
+            return i as u16;
+        }
+        tags.push(tag.to_string());
+        (tags.len() - 1) as u16
+    }
+
+    /// Resolve an interned tag id back to its name.
+    pub fn tag_name(&self, id: u16) -> String {
+        self.tags
+            .lock()
+            .unwrap()
+            .get(id as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("tag{id}"))
+    }
+
+    /// Total events lost to drop-oldest overwrite across all rings.
+    pub fn dropped_events(&self) -> u64 {
+        self.rings.lock().unwrap().iter().map(|(_, r)| r.dropped_events()).sum()
+    }
+
+    /// Total events recorded across all rings (including dropped).
+    pub fn recorded_events(&self) -> u64 {
+        self.rings.lock().unwrap().iter().map(|(_, r)| r.recorded()).sum()
+    }
+
+    /// Decode every ring into one time-sorted event stream. Post-hoc
+    /// only: call after the serving plane has shut down.
+    pub fn events(&self) -> Vec<RawEvent> {
+        let rings = self.rings.lock().unwrap();
+        let mut out = Vec::new();
+        for (i, (_, ring)) in rings.iter().enumerate() {
+            ring.decode(&mut out, i);
+        }
+        out.sort_by_key(|e| (e.ts_us, e.ring, e.req_id));
+        out
+    }
+
+    /// Per-tag arrival schedule captured from the admitted events:
+    /// `(tag, offsets_s)` with offsets relative to the first admission
+    /// overall (so inter-tag phasing survives the round trip). Feed
+    /// each vector to [`crate::traffic::Traffic::replay`].
+    pub fn arrival_schedule(&self) -> Vec<(String, Vec<f64>)> {
+        let events = self.events();
+        let t0 = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Admitted)
+            .map(|e| e.ts_us)
+            .min()
+            .unwrap_or(0);
+        let mut per_tag: Vec<(u16, Vec<f64>)> = Vec::new();
+        for e in &events {
+            if e.kind != EventKind::Admitted {
+                continue;
+            }
+            let off = (e.ts_us - t0) as f64 / 1e6;
+            match per_tag.iter_mut().find(|(t, _)| *t == e.tag) {
+                Some((_, v)) => v.push(off),
+                None => per_tag.push((e.tag, vec![off])),
+            }
+        }
+        per_tag
+            .into_iter()
+            .map(|(t, mut v)| {
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (self.tag_name(t), v)
+            })
+            .collect()
+    }
+
+    /// Latency breakdown over the sampled requests that completed:
+    /// mean queue (enqueued→dispatched), exec (dispatched→completed)
+    /// and total (admitted→completed) in µs, plus the span count.
+    pub fn stage_breakdown(&self) -> StageBreakdown {
+        let mut spans: Vec<(u64, Span)> = Vec::new();
+        for e in self.events() {
+            let span = match spans.iter_mut().find(|(id, _)| *id == e.req_id) {
+                Some((_, s)) => s,
+                None => {
+                    spans.push((e.req_id, Span::default()));
+                    &mut spans.last_mut().unwrap().1
+                }
+            };
+            match e.kind {
+                EventKind::Admitted => span.admitted = Some(e.ts_us),
+                EventKind::Enqueued => span.enqueued = Some(e.ts_us),
+                EventKind::Dispatched => span.dispatched = Some(e.ts_us),
+                EventKind::Completed => span.completed = Some(e.ts_us),
+                _ => {}
+            }
+        }
+        let mut b = StageBreakdown::default();
+        for (_, s) in &spans {
+            let (Some(a), Some(c)) = (s.admitted, s.completed) else { continue };
+            b.spans += 1;
+            b.total_us += c.saturating_sub(a) as f64;
+            if let (Some(e), Some(d)) = (s.enqueued, s.dispatched) {
+                b.queue_us += d.saturating_sub(e) as f64;
+            }
+            if let Some(d) = s.dispatched {
+                b.exec_us += c.saturating_sub(d) as f64;
+            }
+        }
+        if b.spans > 0 {
+            let n = b.spans as f64;
+            b.queue_us /= n;
+            b.exec_us /= n;
+            b.total_us /= n;
+        }
+        b
+    }
+
+    /// Build the Chrome trace-event document (`chrome://tracing` /
+    /// Perfetto "JSON object format"): per-request `X` spans for
+    /// request/queue/exec on per-request lanes, `i` instants for sheds
+    /// and steals, pipeline group/replica `X` spans on the recording
+    /// worker's lane, and ring accounting under `otherData`
+    /// (including `dropped_events` and the arrival capture).
+    pub fn chrome_trace(&self) -> Value {
+        let events = self.events();
+        let rings = self.rings.lock().unwrap();
+        // Lane map: 0..n_rings are the recording threads (pipeline +
+        // instant events), REQ_LANES lanes above that carry request
+        // spans so concurrent requests don't visually overlap.
+        const REQ_BASE: u64 = 1000;
+        const REQ_LANES: u64 = 32;
+        let mut out: Vec<Value> = Vec::new();
+        for (i, (label, _)) in rings.iter().enumerate() {
+            push_meta(&mut out, i as u64, format!("ring:{label}"));
+        }
+        for lane in 0..REQ_LANES {
+            push_meta(&mut out, REQ_BASE + lane, format!("requests[{lane}]"));
+        }
+        drop(rings);
+
+        // Request spans: one pass groups the lifecycle per req id.
+        let mut spans: Vec<(u64, u16, Span)> = Vec::new();
+        // Pipeline group spans: keyed by (ring, seq, group, replica);
+        // enter/exit pair up in ring order.
+        let mut opens: Vec<(usize, u64, u16, u16, u64)> = Vec::new();
+        for e in &events {
+            match e.kind {
+                EventKind::Admitted
+                | EventKind::Enqueued
+                | EventKind::Dispatched
+                | EventKind::Completed
+                | EventKind::Failed => {
+                    let s = match spans.iter_mut().find(|(id, _, _)| *id == e.req_id) {
+                        Some((_, _, s)) => s,
+                        None => {
+                            spans.push((e.req_id, e.tag, Span::default()));
+                            &mut spans.last_mut().unwrap().2
+                        }
+                    };
+                    match e.kind {
+                        EventKind::Admitted => s.admitted = Some(e.ts_us),
+                        EventKind::Enqueued => s.enqueued = Some(e.ts_us),
+                        EventKind::Dispatched => s.dispatched = Some(e.ts_us),
+                        EventKind::Completed => s.completed = Some(e.ts_us),
+                        EventKind::Failed => s.failed = true,
+                        _ => unreachable!(),
+                    }
+                }
+                EventKind::ShedHost | EventKind::ShedBudget | EventKind::Stolen => {
+                    out.push(json::obj(vec![
+                        ("name", json::s(e.kind.name())),
+                        ("cat", json::s("overload")),
+                        ("ph", json::s("i")),
+                        ("s", json::s("t")),
+                        ("ts", Value::Num(e.ts_us as f64)),
+                        ("pid", Value::Num(0.0)),
+                        ("tid", Value::Num(e.ring as f64)),
+                        (
+                            "args",
+                            json::obj(vec![
+                                ("req", Value::Num(e.req_id as f64)),
+                                ("tag", json::s(self.tag_name(e.tag))),
+                            ]),
+                        ),
+                    ]));
+                }
+                EventKind::GroupEnter => {
+                    opens.push((e.ring, e.req_id, e.group, e.replica, e.ts_us));
+                }
+                EventKind::GroupExit => {
+                    if let Some(i) = opens.iter().position(|&(r, s, g, rep, _)| {
+                        r == e.ring && s == e.req_id && g == e.group && rep == e.replica
+                    }) {
+                        let (_, seq, g, rep, t0) = opens.remove(i);
+                        push_x(
+                            &mut out,
+                            format!("g{g}/r{rep}"),
+                            "pipeline",
+                            e.ring as u64,
+                            t0,
+                            e.ts_us,
+                            vec![
+                                ("frame", Value::Num(seq as f64)),
+                                ("group", Value::Num(g as f64)),
+                                ("replica", Value::Num(rep as f64)),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+        for (id, tag, s) in &spans {
+            let Some(t_adm) = s.admitted else { continue };
+            let Some(t_done) = s.completed else { continue };
+            let lane = REQ_BASE + id % REQ_LANES;
+            let tag = self.tag_name(*tag);
+            push_x(
+                &mut out,
+                format!("request {tag}#{id}"),
+                if s.failed { "request-failed" } else { "request" },
+                lane,
+                t_adm,
+                t_done,
+                vec![("tag", json::s(&*tag))],
+            );
+            if let (Some(e), Some(d)) = (s.enqueued, s.dispatched) {
+                push_x(&mut out, "queue".to_string(), "stage", lane, e, d, vec![]);
+            }
+            if let Some(d) = s.dispatched {
+                push_x(&mut out, "exec".to_string(), "stage", lane, d, t_done, vec![]);
+            }
+        }
+        // chrome://tracing tolerates any order, but the CI validator
+        // (and humans reading the file) want per-lane monotone time.
+        out.sort_by(|a, b| {
+            let key = |v: &Value| {
+                let tid = v.get("tid").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+                let ts = v.get("ts").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+                (tid, ts)
+            };
+            key(a).cmp(&key(b))
+        });
+
+        let rings = self.rings.lock().unwrap();
+        let ring_info: Vec<Value> = rings
+            .iter()
+            .map(|(label, r)| {
+                json::obj(vec![
+                    ("label", json::s(label.as_str())),
+                    ("recorded", Value::Num(r.recorded() as f64)),
+                    ("dropped", Value::Num(r.dropped_events() as f64)),
+                ])
+            })
+            .collect();
+        drop(rings);
+        let arrivals: Vec<(String, Value)> = self
+            .arrival_schedule()
+            .into_iter()
+            .map(|(tag, offs)| (tag, Value::Arr(offs.into_iter().map(Value::Num).collect())))
+            .collect();
+        json::obj(vec![
+            ("traceEvents", Value::Arr(out)),
+            ("displayTimeUnit", json::s("ms")),
+            (
+                "otherData",
+                json::obj(vec![
+                    ("dropped_events", Value::Num(self.dropped_events() as f64)),
+                    ("sample_rate", Value::Num(self.sample_rate())),
+                    ("rings", Value::Arr(ring_info)),
+                    ("arrivals", Value::Obj(arrivals)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the Chrome trace-event document to `path`.
+    pub fn write_chrome(&self, path: &str) -> Result<()> {
+        json::write_file(path, &self.chrome_trace())
+    }
+}
+
+/// Append a Chrome `M` thread-name metadata event.
+fn push_meta(out: &mut Vec<Value>, tid: u64, name: String) {
+    out.push(json::obj(vec![
+        ("name", json::s("thread_name")),
+        ("ph", json::s("M")),
+        ("pid", Value::Num(0.0)),
+        ("tid", Value::Num(tid as f64)),
+        ("args", json::obj(vec![("name", json::s(name))])),
+    ]));
+}
+
+/// Append a Chrome `X` complete event spanning `t0..t1` µs.
+fn push_x(
+    out: &mut Vec<Value>,
+    name: String,
+    cat: &str,
+    tid: u64,
+    t0: u64,
+    t1: u64,
+    args: Vec<(&str, Value)>,
+) {
+    out.push(json::obj(vec![
+        ("name", json::s(name)),
+        ("cat", json::s(cat)),
+        ("ph", json::s("X")),
+        ("ts", Value::Num(t0 as f64)),
+        ("dur", Value::Num(t1.saturating_sub(t0) as f64)),
+        ("pid", Value::Num(0.0)),
+        ("tid", Value::Num(tid as f64)),
+        ("args", json::obj(args)),
+    ]));
+}
+
+/// Per-request lifecycle timestamps assembled from the event stream.
+#[derive(Clone, Copy, Default)]
+struct Span {
+    admitted: Option<u64>,
+    enqueued: Option<u64>,
+    dispatched: Option<u64>,
+    completed: Option<u64>,
+    failed: bool,
+}
+
+/// Mean per-stage latency over the completed sampled requests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageBreakdown {
+    /// Completed request spans the means were taken over.
+    pub spans: usize,
+    /// Mean enqueued→dispatched wait in the batcher, µs.
+    pub queue_us: f64,
+    /// Mean dispatched→completed engine time, µs.
+    pub exec_us: f64,
+    /// Mean admitted→completed end-to-end latency, µs.
+    pub total_us: f64,
+}

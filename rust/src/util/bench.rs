@@ -97,6 +97,19 @@ pub enum Direction {
     LowerBetter,
 }
 
+/// Marker prefix a committed-but-unmeasured baseline carries in its
+/// top-level `provenance` string (`BENCH_baseline.json` was seeded in
+/// an environment with no Rust toolchain, so it holds no rows).
+pub const UNMEASURED_MARKER: &str = "UNMEASURED";
+
+/// True when a baseline's provenance string marks it as the unmeasured
+/// placeholder. `bench-compare` downgrades to a one-line report-only
+/// verdict in that case: there is nothing to diff against, and strict
+/// mode must not fail a run for drift that cannot exist yet.
+pub fn is_unmeasured_baseline(provenance: &str) -> bool {
+    provenance.trim_start().starts_with(UNMEASURED_MARKER)
+}
+
 /// Classify a metric name by suffix/stem convention; `None` means the
 /// metric is a descriptive counter (shed counts, worker counts, model
 /// sparsity, ...) that a regression diff should skip rather than judge.
@@ -399,6 +412,14 @@ mod tests {
         assert!(stats.median() > 0.0);
         assert!(stats.median() < 0.01, "1k sum should be far below 10ms");
         assert_eq!(stats.samples.len(), 4);
+    }
+
+    #[test]
+    fn unmeasured_marker_detected_only_as_prefix() {
+        assert!(is_unmeasured_baseline("UNMEASURED seed baseline committed with PR 6"));
+        assert!(is_unmeasured_baseline("  UNMEASURED"));
+        assert!(!is_unmeasured_baseline("measured snapshot written by bench-compare"));
+        assert!(!is_unmeasured_baseline("snapshot replacing the UNMEASURED seed"));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use logicsparse::coordinator::{
 };
 use logicsparse::graph::builder::lenet5;
 use logicsparse::kernel::{CompiledModel, KernelSpec};
+use logicsparse::obs::ObsConfig;
 use logicsparse::runtime::SyntheticRuntime;
 use logicsparse::traffic::{Mix, Traffic};
 use logicsparse::weights::ModelParams;
@@ -320,6 +321,7 @@ fn fleet_slow_tag_does_not_stall_other_planes() {
         ],
         admission_capacity: 4096,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
 
@@ -365,6 +367,7 @@ fn fleet_unknown_model_is_rejected_without_side_effects() {
         models: vec![ModelSpec::new("only", synth_backend(Duration::ZERO))],
         admission_capacity: 8,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     for _ in 0..16 {
@@ -402,6 +405,7 @@ fn fleet_shutdown_loses_no_requests_across_three_tags() {
         ],
         admission_capacity: 4096,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let tags = ["a", "b", "c"];
@@ -446,6 +450,7 @@ fn fleet_shared_admission_shed_accounting_sums_across_tags() {
         ],
         admission_capacity: 8,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
 
@@ -498,6 +503,7 @@ fn fleet_mixed_open_loop_replays_per_tag_traffic() {
         ],
         admission_capacity: 1024,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let mix = Mix::new()
@@ -547,6 +553,7 @@ fn fleet_budgeted_admission_reconciles_under_burst() {
         ],
         admission_capacity: 12,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     // Weighted partition of 12 by 3:1 -> gold 9, bulk 3.
@@ -599,6 +606,7 @@ fn fleet_retire_mid_burst_is_lossless_and_invalidates_handles() {
         ],
         admission_capacity: 4096,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let doomed_idx = fleet.resolve("doomed").unwrap();
@@ -651,6 +659,7 @@ fn phase_shift_run_replays_membership_and_offset_streams() {
         models: vec![ModelSpec::new("base", synth_backend(Duration::from_micros(50)))],
         admission_capacity: 1024,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let phases = vec![
@@ -695,6 +704,7 @@ fn weighted_tag_keeps_headroom_while_noisy_neighbour_sheds() {
         ],
         admission_capacity: 63,
         autotune: None,
+        obs: ObsConfig::default(),
     })
     .unwrap();
     // Saturate the noisy tag far beyond its 7-slot budget.
@@ -737,4 +747,75 @@ fn synthetic_oracle_matches_served_classes() {
         assert_eq!(server.infer_blocking(img).unwrap().class(), expect);
     }
     let _ = server.shutdown();
+}
+
+#[test]
+fn observability_never_changes_acceptance_accounting() {
+    // The observer must be a read-only plane: the same workload served
+    // dark and served with tracing at sample_rate < 1.0 plus a
+    // concurrent metrics scraper must produce identical acceptance
+    // accounting. Retry mode makes the counts workload-determined
+    // (every offered request is eventually admitted and completed), so
+    // any observer-induced drop or double-count shows up exactly.
+    use logicsparse::obs::{metrics::Registry, trace::Tracer, ObsConfig};
+
+    let run = |obs: ObsConfig| {
+        let server = Server::start(ServerOptions {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(300) },
+            engines: 2,
+            admission_capacity: 256,
+            queue_depth: 8,
+            obs,
+            ..ServerOptions::synthetic(Duration::from_micros(100))
+        })
+        .unwrap();
+        let rep = loadgen::run_open_loop(
+            &server,
+            &Traffic::poisson(200, 4000.0, 17),
+            image,
+            ShedMode::Retry,
+        );
+        let snap = server.shutdown();
+        (rep, snap)
+    };
+
+    let (dark_rep, dark_snap) = run(ObsConfig::default());
+
+    let tracer = Tracer::new(0.25);
+    let registry = Registry::new();
+    let obs = ObsConfig {
+        tracer: Some(Arc::clone(&tracer)),
+        metrics: Some(Arc::clone(&registry)),
+    };
+    // Scrape aggressively while the traced run is in flight.
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let (obs_rep, obs_snap) = std::thread::scope(|s| {
+        s.spawn(|| {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let _ = registry.snapshot().render();
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        });
+        let out = run(obs);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        out
+    });
+
+    assert_eq!(obs_rep.completed, dark_rep.completed);
+    assert_eq!(obs_rep.errors, dark_rep.errors);
+    assert_eq!(obs_rep.lost, 0);
+    assert_eq!(obs_snap.completed, dark_snap.completed);
+    assert_eq!(obs_snap.errors, dark_snap.errors);
+    assert_eq!(obs_snap.completed, obs_snap.submitted);
+
+    // The registry's view is the same cells the snapshot read.
+    let scrape = registry.snapshot();
+    assert_eq!(scrape.counter("serve.completed"), Some(obs_snap.completed));
+    assert_eq!(scrape.counter("serve.submitted"), Some(obs_snap.submitted));
+    // Sub-unit sampling recorded a strict subset of request lifecycles.
+    assert!(tracer.recorded_events() > 0, "0.25 sampling captured nothing");
+    assert!(
+        tracer.stage_breakdown().spans <= obs_snap.completed as usize,
+        "sampled spans exceed completed requests"
+    );
 }
